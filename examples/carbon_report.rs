@@ -1,0 +1,83 @@
+//! Carbon analysis report: embodied-carbon breakdowns across nodes,
+//! integration styles and multiplier choices, plus the multiplier library's
+//! Pareto view — the data behind the paper's §III motivation.
+//!
+//! Run: `cargo run --release --example carbon_report`
+
+use carbon3d::approx::{library, EXACT_ID};
+use carbon3d::area::die::Integration;
+use carbon3d::area::mac::{mac_area_um2, multiplier_area_fraction};
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::carbon::embodied_carbon;
+use carbon3d::dataflow::arch::AccelConfig;
+use carbon3d::util::{table, Table};
+
+fn main() -> anyhow::Result<()> {
+    let lib = library();
+
+    // ---- multiplier Pareto view -------------------------------------------
+    println!("== approximate-multiplier library: area vs error (the GA's menu) ==");
+    let mut t = Table::new(vec!["mult", "area@45nm", "area@14nm", "area@7nm", "sig_MRED", "rel_area_%"]);
+    let exact45 = lib[EXACT_ID].hw_cost(carbon3d::TechNode::N45).area_um2;
+    for m in &lib {
+        t.row(vec![
+            m.name(),
+            format!("{:.0}", m.hw_cost(carbon3d::TechNode::N45).area_um2),
+            format!("{:.1}", m.hw_cost(carbon3d::TechNode::N14).area_um2),
+            format!("{:.2}", m.hw_cost(carbon3d::TechNode::N7).area_um2),
+            format!("{:.5}", m.error.sig_mred),
+            format!("{:.0}", m.hw_cost(carbon3d::TechNode::N45).area_um2 / exact45 * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- MAC composition (paper §III-C) -----------------------------------
+    println!("== MAC composition: the multiplier dominates (paper §III-C) ==");
+    for &node in &ALL_NODES {
+        println!(
+            "{}: MAC {:.1} um^2, multiplier share {:.0}%",
+            node.name(),
+            mac_area_um2(&lib[EXACT_ID], node),
+            multiplier_area_fraction(&lib[EXACT_ID], node) * 100.0
+        );
+    }
+
+    // ---- embodied-carbon breakdowns ---------------------------------------
+    println!("\n== embodied carbon: 2D vs 3D, exact vs approximate ==");
+    let mut t = Table::new(vec![
+        "node", "integration", "mult", "logic_g", "memory_g", "bond_g", "pkg_g", "total_g",
+    ]);
+    let t2p3 = lib.iter().find(|m| m.name() == "T2P3").unwrap();
+    for &node in &ALL_NODES {
+        for (integration, label) in
+            [(Integration::TwoD, "2D"), (Integration::ThreeD, "3D")]
+        {
+            for mult in [&lib[EXACT_ID], t2p3] {
+                let cfg = AccelConfig {
+                    px: 32,
+                    py: 32,
+                    rf_bytes: 128,
+                    sram_bytes: 512 << 10,
+                    node,
+                    integration,
+                    mult_id: mult.id,
+                };
+                let areas = cfg.die_areas(mult);
+                let c = embodied_carbon(&areas, node, integration);
+                t.row(vec![
+                    node.name().to_string(),
+                    label.to_string(),
+                    mult.name(),
+                    table::fmt(c.logic_die_g),
+                    table::fmt(c.memory_die_g),
+                    table::fmt(c.bonding_g),
+                    table::fmt(c.packaging_g),
+                    table::fmt(c.total_g()),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!("carbon_report OK");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Reproduce the paper's Figure 2: normalized inference delay and embodied
+//! carbon across technology nodes (45/14/7nm) and accuracy-drop thresholds
+//! (1/2/3%) for the five CNNs, GA-APPX-CDP vs the GA-CDP-EXACT baseline [6].
+//!
+//! Writes results/fig2.csv + results/fig2.txt and prints the table.
+//!
+//! Run: `cargo run --release --example fig2_repro [-- --quick]`
+
+use carbon3d::approx::library;
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::coordinator::fig2::{run_fig2, FIG2_DELTAS, FIG2_MODELS};
+use carbon3d::ga::GaParams;
+use carbon3d::util::{table, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let params = if quick {
+        GaParams { population: 32, generations: 20, patience: 8, ..Default::default() }
+    } else {
+        GaParams::default()
+    };
+    let lib = library();
+    let (r, secs) = carbon3d::util::timer::time_once(|| run_fig2(&lib, &FIG2_MODELS, params));
+    println!("{}", r.render());
+
+    // Per-node aggregates (the paper's headline "up to X%" values).
+    let mut agg = Table::new(vec!["node", "delta", "mean_cut_%", "max_cut_%"]);
+    for &node in &ALL_NODES {
+        for &d in &FIG2_DELTAS {
+            agg.row(vec![
+                node.name().to_string(),
+                format!("{d}%"),
+                format!("{:.1}", r.mean_carbon_cut_pct(node, d)),
+                format!(
+                    "{:.1}",
+                    r.cells
+                        .iter()
+                        .filter(|c| c.node == node && c.delta_pct == d)
+                        .map(|c| (1.0 - c.norm_carbon) * 100.0)
+                        .fold(f64::NEG_INFINITY, f64::max)
+                ),
+            ]);
+        }
+    }
+    println!("{}", agg.render());
+    println!("fig2 grid completed in {}", carbon3d::util::timer::human_time(secs));
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = Table::new(vec![
+        "node", "model", "delta_pct", "norm_delay", "norm_carbon", "mult",
+    ]);
+    for c in &r.cells {
+        csv.row(vec![
+            c.node.name().to_string(),
+            c.model.clone(),
+            format!("{}", c.delta_pct),
+            table::fmt(c.norm_delay),
+            table::fmt(c.norm_carbon),
+            c.mult_name.clone(),
+        ]);
+    }
+    std::fs::write("results/fig2.csv", csv.to_csv())?;
+    std::fs::write("results/fig2.txt", r.render())?;
+    println!("wrote results/fig2.csv, results/fig2.txt");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Reproduce the paper's Figure 3: embodied-carbon efficiency (gCO2/mm^2)
+//! vs performance (FPS) for VGG16 across nodes — 2D-Exact / 3D-Exact /
+//! 3D-Appx NVDLA-like sweeps (64..2048 PEs) plus GA-APPX-CDP points at the
+//! FPS targets {10, 15, 20, 30, 40}.
+//!
+//! Writes results/fig3.csv + results/fig3.txt and prints the headline
+//! §IV-B comparisons.
+//!
+//! Run: `cargo run --release --example fig3_sweep [-- --quick]`
+
+use carbon3d::approx::library;
+use carbon3d::area::TechNode;
+use carbon3d::coordinator::baselines::Approach;
+use carbon3d::coordinator::fig3::run_fig3;
+use carbon3d::ga::GaParams;
+use carbon3d::util::stats::pct_change;
+use carbon3d::util::{table, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let params = if quick {
+        GaParams { population: 32, generations: 20, patience: 8, ..Default::default() }
+    } else {
+        GaParams::default()
+    };
+    let lib = library();
+    let (r, secs) = carbon3d::util::timer::time_once(|| run_fig3(&lib, "vgg16", params));
+    println!("{}", r.render());
+
+    // §IV-B headline: @7nm / 20 FPS.
+    let node = TechNode::N7;
+    let fps = 20.0;
+    if let (Some(ga), Some(e3), Some(e2)) = (
+        r.best_meeting_fps(node, Approach::GaAppxCdp, fps),
+        r.best_meeting_fps(node, Approach::ThreeDExact, fps),
+        r.best_meeting_fps(node, Approach::TwoDExact, fps),
+    ) {
+        println!(
+            "@7nm 20FPS: GA {:.2} g vs 3D-Exact {:.2} g  -> {:.1}% carbon cut (paper: 32%)",
+            ga.carbon_g,
+            e3.carbon_g,
+            -pct_change(e3.carbon_g, ga.carbon_g)
+        );
+        println!(
+            "@7nm 20FPS: GA {:.2} g/mm^2 vs 2D {:.2} g/mm^2 -> {:.1}% lower (paper: 7%)",
+            ga.carbon_per_mm2,
+            e2.carbon_per_mm2,
+            -pct_change(e2.carbon_per_mm2, ga.carbon_per_mm2)
+        );
+    }
+    println!("fig3 sweeps completed in {}", carbon3d::util::timer::human_time(secs));
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = Table::new(vec![
+        "node", "approach", "n_pes", "fps", "gco2_per_mm2", "gco2", "fps_target",
+    ]);
+    for p in &r.points {
+        csv.row(vec![
+            p.node.name().to_string(),
+            p.approach.name().to_string(),
+            p.n_pes.to_string(),
+            table::fmt(p.fps),
+            table::fmt(p.carbon_per_mm2),
+            table::fmt(p.carbon_g),
+            p.fps_target.map(|f| format!("{f}")).unwrap_or_default(),
+        ]);
+    }
+    std::fs::write("results/fig3.csv", csv.to_csv())?;
+    std::fs::write("results/fig3.txt", r.render())?;
+    println!("wrote results/fig3.csv, results/fig3.txt");
+    Ok(())
+}

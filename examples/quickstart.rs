@@ -1,0 +1,73 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. Load the AOT-compiled approximate-matmul artifact (Pallas kernel,
+//!    lowered by `make artifacts`) on the PJRT CPU client.
+//! 2. Run it with the exact LUT and with an approximate multiplier's LUT;
+//!    compare numerics.
+//! 3. Price a small 3D accelerator in embodied carbon with both multipliers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use carbon3d::approx::{library, lut_f32, EXACT_ID};
+use carbon3d::area::die::Integration;
+use carbon3d::area::TechNode;
+use carbon3d::carbon::embodied_carbon;
+use carbon3d::dataflow::arch::AccelConfig;
+use carbon3d::runtime::pjrt::PjrtClient;
+use carbon3d::runtime::Artifacts;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. PJRT + artifact -------------------------------------------------
+    let artifacts = Artifacts::load(Path::new("artifacts"))?;
+    let client = PjrtClient::cpu()?;
+    let exe = client.compile_hlo_text("matmul_approx", &artifacts.hlo_path("matmul_approx"))?;
+    println!("loaded matmul_approx on {}", client.platform());
+
+    // --- 2. exact vs approximate LUT ---------------------------------------
+    let lib = library();
+    let trunc3 = lib.iter().find(|m| m.name() == "TRUNC3").unwrap();
+    let mut a = vec![0f32; 64 * 64];
+    let mut b = vec![0f32; 64 * 64];
+    for i in 0..64 * 64 {
+        a[i] = ((i % 53) as f32 - 26.0) * 0.09;
+        b[i] = ((i % 47) as f32 - 23.0) * 0.06;
+    }
+    let lut_exact = lut_f32(&lib[EXACT_ID]);
+    let lut_appx = lut_f32(trunc3);
+    let exact = exe.run_f32(&[(&a, &[64, 64]), (&b, &[64, 64]), (&lut_exact, &[128, 128])])?;
+    let appx = exe.run_f32(&[(&a, &[64, 64]), (&b, &[64, 64]), (&lut_appx, &[128, 128])])?;
+    let mean_abs: f32 = exact.iter().map(|x| x.abs()).sum::<f32>() / exact.len() as f32;
+    let mean_err: f32 =
+        exact.iter().zip(&appx).map(|(x, y)| (x - y).abs()).sum::<f32>() / exact.len() as f32;
+    println!(
+        "TRUNC3 vs EXACT over a 64x64x64 matmul: mean |err| = {:.4} ({:.2}% of mean |value|)",
+        mean_err,
+        mean_err / mean_abs * 100.0
+    );
+
+    // --- 3. embodied carbon of a small 3D accelerator ----------------------
+    for mult in [&lib[EXACT_ID], trunc3] {
+        let cfg = AccelConfig {
+            px: 16,
+            py: 16,
+            rf_bytes: 128,
+            sram_bytes: 512 << 10,
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            mult_id: mult.id,
+        };
+        let areas = cfg.die_areas(mult);
+        let carbon = embodied_carbon(&areas, cfg.node, cfg.integration);
+        println!(
+            "{:<22} logic {:.3} mm^2, memory {:.3} mm^2 -> {:.2} gCO2 embodied",
+            cfg.describe(mult),
+            areas.logic_mm2,
+            areas.memory_mm2,
+            carbon.total_g()
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT pipeline: train the tiny CNN, export HLO-text artifacts + data files.
+
+Runs ONCE at build time (`make artifacts`); Python is never on the request
+path. Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all consumed by rust/src/runtime + rust/src/accuracy):
+  matmul_approx.hlo.txt  (a[64,64], b[64,64], lut[128,128]) -> (c[64,64],)
+  matmul_exact.hlo.txt   (a[64,64], b[64,64])               -> (c[64,64],)
+  cnn_approx.hlo.txt     (images[64,16,16,1], lut[128,128]) -> (logits[64,5],)
+  cnn_exact.hlo.txt      (images[64,16,16,1])               -> (logits[64,5],)
+  weights.f32            trained parameters, flat f32 LE, PARAM_SPECS order
+  testset_images.f32     [512,16,16,1] f32 LE
+  testset_labels.u8      [512] u8
+  trainset_*.f32/u8      training split (for rust-side experiments)
+  manifest.json          shapes, counts, exact-path accuracy, provenance
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model
+from .kernels import approx_matmul as am
+from .kernels import ref
+
+BATCH = 64
+N_TRAIN = 2048
+N_TEST = 512
+SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the rust
+    side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    # Guards against the two known HLO-text round-trip corruptions in the
+    # xla_extension 0.5.1 parser the Rust runtime links (see DESIGN.md
+    # §AOT-gotchas):
+    #  1. jnp.pad lowers through a `_pad` HLO call whose routed parameters
+    #     silently read as zeros -> use lax.pad (model._pad_same).
+    #  2. Large array constants are elided by the printer as `{...}` and
+    #     parse as garbage -> keep weights as runtime parameters.
+    # The functional check is `carbon3d selfcheck`, which compares PJRT
+    # accuracy against this manifest.
+    assert "to_apply=_pad" not in text, (
+        f"{path}: lowered HLO pads via a `call` — use model._pad_same "
+        "(lax.pad) instead of jnp.pad"
+    )
+    assert "{..." not in text, (
+        f"{path}: lowered HLO contains an elided large constant — pass big "
+        "arrays as runtime parameters instead of baking them in"
+    )
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--steps", type=int, default=400)
+    p.add_argument("--quick", action="store_true", help="fewer train steps (CI)")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+    steps = 120 if args.quick else args.steps
+
+    # ---- data + training (exact path) ------------------------------------
+    train_x, train_y = dataset.generate(N_TRAIN, seed=SEED)
+    test_x, test_y = dataset.generate(N_TEST, seed=SEED + 1)
+    params = model.init_params(seed=SEED)
+    params, hist = model.train(
+        params, jnp.asarray(train_x), jnp.asarray(train_y), steps=steps, log=print
+    )
+    acc_exact = model.accuracy(params, jnp.asarray(test_x), jnp.asarray(test_y))
+    print(f"exact-path test accuracy: {acc_exact:.4f}  (loss {hist[0]:.3f} -> {hist[-1]:.3f})")
+
+    # sanity: the exact LUT through the approximate datapath must not move
+    # accuracy (bf16 rounding only).
+    lut = jnp.asarray(ref.exact_lut())
+    acc_lut = model.accuracy(
+        params, jnp.asarray(test_x[:128]), jnp.asarray(test_y[:128]), lut=lut
+    )
+    print(f"exact-LUT approximate-datapath accuracy (128 imgs): {acc_lut:.4f}")
+
+    # ---- HLO exports ------------------------------------------------------
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    sizes = {}
+    sizes["matmul_approx"] = export(
+        lambda a, b, l: (am.approx_matmul(a, b, l),),
+        (spec((64, 64), f32), spec((64, 64), f32), spec((128, 128), f32)),
+        os.path.join(args.out_dir, "matmul_approx.hlo.txt"),
+    )
+    sizes["matmul_exact"] = export(
+        lambda a, b: (ref.exact_matmul_ref(a, b),),
+        (spec((64, 64), f32), spec((64, 64), f32)),
+        os.path.join(args.out_dir, "matmul_exact.hlo.txt"),
+    )
+    # CNN artifacts take the *trained* weights as runtime parameters in
+    # PARAM_SPECS order (baking them as constants trips the large-constant
+    # elision in the HLO-text round-trip — see `export`); the Rust engine
+    # feeds them from weights.f32. The LUT stays a runtime input so one
+    # artifact serves all multipliers.
+    wspecs = [spec(shape, f32) for _, shape in model.PARAM_SPECS]
+
+    def rebuild(ws):
+        return {name: w for (name, _), w in zip(model.PARAM_SPECS, ws)}
+
+    sizes["cnn_approx"] = export(
+        lambda imgs, l, *ws: (model.forward(rebuild(ws), imgs, lut=l),),
+        (spec((BATCH, 16, 16, 1), f32), spec((128, 128), f32), *wspecs),
+        os.path.join(args.out_dir, "cnn_approx.hlo.txt"),
+    )
+    sizes["cnn_exact"] = export(
+        lambda imgs, *ws: (model.forward(rebuild(ws), imgs),),
+        (spec((BATCH, 16, 16, 1), f32), *wspecs),
+        os.path.join(args.out_dir, "cnn_exact.hlo.txt"),
+    )
+
+    # ---- binary data ------------------------------------------------------
+    flat = np.concatenate(
+        [np.asarray(params[name], np.float32).reshape(-1) for name, _ in model.PARAM_SPECS]
+    )
+    flat.astype("<f4").tofile(os.path.join(args.out_dir, "weights.f32"))
+    test_x.astype("<f4").tofile(os.path.join(args.out_dir, "testset_images.f32"))
+    test_y.astype(np.uint8).tofile(os.path.join(args.out_dir, "testset_labels.u8"))
+    train_x.astype("<f4").tofile(os.path.join(args.out_dir, "trainset_images.f32"))
+    train_y.astype(np.uint8).tofile(os.path.join(args.out_dir, "trainset_labels.u8"))
+
+    manifest = {
+        "batch": BATCH,
+        "img": model.IMG,
+        "num_classes": model.NUM_CLASSES,
+        "n_train": N_TRAIN,
+        "n_test": N_TEST,
+        "seed": SEED,
+        "train_steps": steps,
+        "final_train_loss": hist[-1],
+        "exact_test_accuracy": acc_exact,
+        "exact_lut_accuracy_128": acc_lut,
+        "params": [[name, list(shape)] for name, shape in model.PARAM_SPECS],
+        "hlo_chars": sizes,
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"artifacts written to {args.out_dir} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Synthetic-shapes image dataset (ImageNet stand-in; see DESIGN.md §6.3).
+
+Five classes of 16x16 grayscale images with positional jitter, random
+stroke intensity and additive Gaussian noise:
+
+  0: horizontal bar      1: vertical bar     2: cross (plus sign)
+  3: square outline      4: main diagonal
+
+The classes are chosen so a small CNN reaches high exact-path accuracy and
+the margin is tight enough that approximate-multiplier error produces a
+measurable, monotone-in-MRED accuracy drop — the property the paper's
+multiplier-selection stage (Eq. 7) actually consumes.
+"""
+
+import numpy as np
+
+IMG = 16
+NUM_CLASSES = 5
+
+
+def _render(cls: int, rng: np.random.Generator) -> np.ndarray:
+    img = np.zeros((IMG, IMG), dtype=np.float32)
+    c = int(rng.integers(5, IMG - 5))      # center with jitter
+    r = int(rng.integers(5, IMG - 5))
+    half = int(rng.integers(3, 6))         # stroke half-length
+    lo_r, hi_r = max(0, r - half), min(IMG, r + half + 1)
+    lo_c, hi_c = max(0, c - half), min(IMG, c + half + 1)
+    amp = float(rng.uniform(0.35, 0.8))
+    if cls == 0:      # horizontal bar
+        img[r, lo_c:hi_c] = amp
+    elif cls == 1:    # vertical bar
+        img[lo_r:hi_r, c] = amp
+    elif cls == 2:    # cross
+        img[r, lo_c:hi_c] = amp
+        img[lo_r:hi_r, c] = amp
+    elif cls == 3:    # square outline
+        img[lo_r, lo_c:hi_c] = amp
+        img[hi_r - 1, lo_c:hi_c] = amp
+        img[lo_r:hi_r, lo_c] = amp
+        img[lo_r:hi_r, hi_c - 1] = amp
+    elif cls == 4:    # main diagonal
+        n = min(hi_r - lo_r, hi_c - lo_c)
+        for t in range(n):
+            img[lo_r + t, lo_c + t] = amp
+    else:
+        raise ValueError(f"bad class {cls}")
+    return img
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (images [n,IMG,IMG,1] f32 in ~[0,1]+noise, labels [n] i32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    imgs = np.stack([_render(int(c), rng) for c in labels])
+    imgs += rng.normal(0.0, 0.18, size=imgs.shape).astype(np.float32)
+    return imgs[..., None].astype(np.float32), labels

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: LUT-based approximate bfloat16 matmul.
+
+Emulates the paper's approximate MAC datapath (exact sign/exponent/accumulate,
+approximate 8x8 significand multiplier via a 128x128 LUT) as a tiled Pallas
+kernel. `interpret=True` is mandatory on this CPU-only image — real-TPU
+lowering would emit a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the LUT is the stationary
+operand (constant BlockSpec index_map → resident in VMEM across grid steps,
+mirroring Eyeriss's weight-stationary register file); output is gridded over
+(M/bm, N/bn) tiles with the full K panel streamed per program instance; the
+accumulator lives in f32 (TPU-native bf16xbf16→f32, and the paper's exact
+24-bit accumulator).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(a_ref, b_ref, lut_ref, o_ref, *, block_k: int):
+    """One (bm, bn) output tile: accumulate LUT outer products over K."""
+    lut = lut_ref[...]
+
+    def body(kk, acc):
+        a = a_ref[:, pl.dslice(kk * block_k, block_k)]      # [bm, bk]
+        b = b_ref[pl.dslice(kk * block_k, block_k), :]      # [bk, bn]
+        sa, ea, ma = ref.decompose(a)
+        sb, eb, mb = ref.decompose(b)
+        # Gather the approximate significand products for every (m,k)x(k,n)
+        # pair of this K-slab: [bm, bk, bn].
+        sig = lut[ma[:, :, None], mb[None, :, :]]
+        scale = ref.pow2_exact((ea[:, :, None] + eb[None, :, :]).astype(jnp.int32) - 268)
+        prod = (sa[:, :, None] * sb[None, :, :]) * (sig * scale)
+        nonzero = (ea[:, :, None] > 0) & (eb[None, :, :] > 0)
+        prod = jnp.where(nonzero, prod, 0.0)
+        return acc + jnp.sum(prod, axis=1)
+
+    nk = a_ref.shape[1] // block_k
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, nk, body, acc)
+
+
+def approx_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+) -> jnp.ndarray:
+    """[M,K] x [K,N] approximate bf16 matmul with f32 accumulation.
+
+    M, N, K must be divisible by the respective block sizes (callers pad).
+    `lut` is f32[128,128]: significand products of the approximate multiplier,
+    indexed by the two 7-bit stored mantissas. A *runtime input*, so one AOT
+    artifact serves every multiplier in the library.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shape ({m},{k},{n}) not divisible by blocks ({block_m},{block_k},{block_n})"
+    )
+    assert lut.shape == (128, 128)
+
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((128, 128), lambda i, j: (0, 0)),  # stationary LUT
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-only image; Mosaic lowering unavailable
+    )(a.astype(jnp.float32), b.astype(jnp.float32), lut.astype(jnp.float32))
+
+
+def pad_to(x: jnp.ndarray, mult_r: int, mult_c: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array so both dims are multiples of the given blocks.
+    Zero rows/cols contribute exactly zero under the flush-to-zero datapath.
+
+    Pads via the lax.pad primitive, NOT jnp.pad (lowers through an HLO
+    `call`) and NOT zero-concat (materializes large zero constants): both
+    corrupt the xla_extension 0.5.1 HLO-text round-trip used by the Rust
+    runtime (see model._pad_same and aot.export)."""
+    r, c = x.shape
+    pr = (-r) % mult_r
+    pc = (-c) % mult_c
+    if pr == 0 and pc == 0:
+        return x
+    return jax.lax.pad(
+        x.astype(jnp.float32), jnp.float32(0), [(0, pr, 0), (0, pc, 0)]
+    )
+
+
+def approx_matmul_padded(
+    a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray, **kw
+) -> jnp.ndarray:
+    """approx_matmul for arbitrary shapes: pad inputs, crop the result."""
+    m, k = a.shape
+    _, n = b.shape
+    bm = kw.get("block_m", 32)
+    bn = kw.get("block_n", 32)
+    bk = kw.get("block_k", 32)
+    ap = pad_to(a, bm, bk)
+    bp = pad_to(b, bk, bn)
+    out = approx_matmul(ap, bp, lut, **kw)
+    return out[:m, :n]

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for LUT-based approximate bfloat16 matmul.
+
+This module defines the *semantics* that both the Pallas kernel
+(`approx_matmul.py`) and the native Rust evaluator must match bit-for-bit:
+
+  1. Inputs are rounded f32 -> bf16 (round-to-nearest-even).
+  2. Each scalar product is computed as the approximate MAC datapath does:
+       sign     : exact XOR
+       exponent : exact 8-bit addition (two exact 8-bit adders in the paper)
+       mantissa : 8x8 significand product looked up in a 128x128 LUT
+                  (the approximate multiplier under evaluation; index = the
+                  two 7-bit stored mantissas)
+       zeros / denormals are flushed to zero (exp field == 0).
+  3. Accumulation over K is exact f32 (the paper's exact 24-bit accumulator).
+
+With the *exact* LUT (lut[i,j] = (128+i)*(128+j)) the result equals
+float32(bf16(a)) @ float32(bf16(b)) exactly, which is the main test oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def exact_lut() -> np.ndarray:
+    """128x128 f32 LUT of exact 8-bit significand products."""
+    i = np.arange(128, dtype=np.uint32) + 128
+    return (i[:, None] * i[None, :]).astype(np.float32)
+
+
+def truncated_lut(k: int) -> np.ndarray:
+    """LUT for a multiplier whose k LSBs of each operand are zeroed (DRUM-like
+    truncation). Mirrors `ApproxKind::Truncate` on the Rust side."""
+    i = np.arange(128, dtype=np.uint32) + 128
+    mask = np.uint32(0xFFFFFFFF) ^ np.uint32((1 << k) - 1)
+    it = i & mask
+    return (it[:, None] * it[None, :]).astype(np.float32)
+
+
+def perforated_lut(p: int) -> np.ndarray:
+    """LUT for a multiplier with the p least-significant partial products
+    perforated (EvoApprox-style PP perforation): drops the contribution of
+    b's p low bits. Mirrors `ApproxKind::Perforate`."""
+    i = (np.arange(128, dtype=np.uint32) + 128).astype(np.uint64)
+    bl = i & np.uint64((1 << p) - 1)
+    return (i[:, None] * (i - bl)[None, :]).astype(np.float32)
+
+
+def bf16_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round f32 -> bf16 (RNE) and return as f32 with the low 16 bits zero."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    lsb = (bits >> 16) & jnp.uint32(1)
+    rounded = (bits + jnp.uint32(0x7FFF) + lsb) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(rounded, jnp.float32)
+
+
+def decompose(x: jnp.ndarray):
+    """Split bf16-rounded f32 values into (sign_factor f32, exp u32, mant u32).
+
+    sign_factor is +-1.0; exp is the raw 8-bit biased exponent; mant is the
+    7-bit stored mantissa.
+    """
+    bits = jax.lax.bitcast_convert_type(bf16_round(x), jnp.uint32)
+    sign = jnp.where((bits >> 31) != 0, -1.0, 1.0).astype(jnp.float32)
+    exp = (bits >> 23) & jnp.uint32(0xFF)
+    mant = (bits >> 16) & jnp.uint32(0x7F)
+    return sign, exp, mant
+
+
+def pow2_exact(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact f32 2^e for integer e (i32 array), via exponent-field bit
+    construction. XLA lowers `exp2` to an inexact polynomial, which breaks
+    bit-exactness of the emulated datapath; this does not. A 3-factor chain
+    covers e in [-378, 381] (each factor a representable power of two, and
+    products of powers of two are exact — including the denormal range)."""
+    e = e.astype(jnp.int32)
+
+    def factor(ei):
+        return jax.lax.bitcast_convert_type(
+            ((ei + 127) << 23).astype(jnp.uint32), jnp.float32
+        )
+
+    e1 = jnp.clip(e, -126, 127)
+    r = e - e1
+    e2 = jnp.clip(r, -126, 127)
+    e3 = r - e2
+    return factor(e1) * factor(e2) * factor(jnp.clip(e3, -126, 127))
+
+
+def approx_mul_elementwise(a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise approximate bf16 product of broadcast-compatible arrays."""
+    sa, ea, ma = decompose(a)
+    sb, eb, mb = decompose(b)
+    sig = lut[ma, mb]  # f32; exact LUT values lie in [16384, 65025]
+    # value = sig * 2^(ea-127-7) * 2^(eb-127-7) = sig * 2^(ea+eb-268)
+    scale = pow2_exact((ea + eb).astype(jnp.int32) - 268)
+    prod = sa * sb * (sig * scale)
+    nonzero = (ea > 0) & (eb > 0)
+    return jnp.where(nonzero, prod, 0.0)
+
+
+def approx_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """[M,K] x [K,N] approximate matmul, f32 accumulation. Oracle — O(M*K*N)
+    memory; use only at test sizes."""
+    prods = approx_mul_elementwise(a[:, :, None], b[None, :, :], lut)
+    return jnp.sum(prods, axis=1)
+
+
+def exact_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """bf16-quantized exact matmul with f32 accumulation (what the exact-LUT
+    approximate path must reproduce)."""
+    return jnp.matmul(bf16_round(a), bf16_round(b), preferred_element_type=jnp.float32)

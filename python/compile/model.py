@@ -1,0 +1,152 @@
+"""L2: JAX CNN forward pass (exact + approximate-MAC variants) and training.
+
+The CNN is the accuracy-evaluation workload of the ApproxTrain stand-in
+(DESIGN.md §6.3): a small conv net over the synthetic-shapes dataset. Every
+multiply in conv/fc layers runs through the approximate bf16 MAC datapath
+(kernels.approx_matmul) when a LUT is supplied; the exact path uses plain f32
+matmul. Training always uses the exact path (the paper evaluates *inference*
+accuracy drop of post-trained networks).
+
+Architecture (16x16x1 input, 5 classes):
+  conv 3x3x1->8 (same) + ReLU + maxpool2   -> 8x8x8
+  conv 3x3x8->16 (same) + ReLU + maxpool2  -> 4x4x16
+  fc 256->5
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import approx_matmul as am
+
+IMG = 16
+NUM_CLASSES = 5
+
+# (name, shape) in canonical flattening order — mirrored by the Rust native
+# evaluator (rust/src/accuracy/native.rs) and artifacts/weights.manifest.json.
+PARAM_SPECS = [
+    ("conv1_w", (3, 3, 1, 8)),
+    ("conv1_b", (8,)),
+    ("conv2_w", (3, 3, 8, 16)),
+    ("conv2_b", (16,)),
+    ("fc_w", (256, NUM_CLASSES)),
+    ("fc_b", (NUM_CLASSES,)),
+]
+
+
+def init_params(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in PARAM_SPECS:
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / fan_in))
+            params[name] = jnp.asarray(
+                rng.normal(0.0, std, size=shape).astype(np.float32)
+            )
+    return params
+
+
+def _pad_same(x: jnp.ndarray, ph: int, pw: int) -> jnp.ndarray:
+    """Zero-pad H/W via the lax.pad primitive. Deliberately NOT jnp.pad and
+    NOT concatenate-with-zeros: jnp.pad lowers through an HLO `call` and
+    zero-concat materializes large zero constants — both of which the
+    xla_extension 0.5.1 HLO-text round-trip (used by the Rust runtime)
+    corrupts (the printer elides big constants as `{...}`). lax.pad lowers
+    to a single `pad` op with a scalar. See DESIGN.md §AOT-gotchas."""
+    cfg = [(0, 0, 0), (ph, ph, 0), (pw, pw, 0), (0, 0, 0)]
+    return jax.lax.pad(x, jnp.float32(0), cfg)
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """NHWC 'same'-padded patch extraction.
+
+    [B,H,W,C] -> [B*H*W, kh*kw*C], patch order (dy, dx, c) — matched exactly
+    by the Rust native evaluator.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = _pad_same(x, ph, pw)
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    patches = jnp.concatenate(cols, axis=-1)  # [B,H,W,kh*kw*C]
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def _mm(a, b, lut, interpret_blocks):
+    """Matmul through the approximate datapath when a LUT is given."""
+    if lut is None:
+        return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    bm, bn, bk = interpret_blocks
+    return am.approx_matmul_padded(a, b, lut, block_m=bm, block_n=bn, block_k=bk)
+
+
+def conv2d(x, w, bias, lut=None, blocks=(256, 16, 8)):
+    # Block shapes from the measured interpret-mode sweep (EXPERIMENTS.md
+    # §Perf): large M tiles amortize the grid loop for im2col matmuls whose
+    # M = B*H*W is huge while K,N are small; bk=8 avoids padding K=9 4x.
+    """'same' 3x3 conv via im2col + (approximate) matmul."""
+    kh, kw, cin, cout = w.shape
+    b, h, wd, _ = x.shape
+    cols = im2col(x, kh, kw)                      # [B*H*W, kh*kw*cin]
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = _mm(cols, wmat, lut, blocks)            # [B*H*W, cout]
+    return out.reshape(b, h, wd, cout) + bias
+
+
+def maxpool2(x):
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def forward(params: dict, images: jnp.ndarray, lut=None) -> jnp.ndarray:
+    """Logits [B, NUM_CLASSES]. `lut=None` -> exact f32; else approx MAC."""
+    x = conv2d(images, params["conv1_w"], params["conv1_b"], lut)
+    x = maxpool2(jax.nn.relu(x))
+    x = conv2d(x, params["conv2_w"], params["conv2_b"], lut)
+    x = maxpool2(jax.nn.relu(x))
+    x = x.reshape(x.shape[0], -1)                 # [B, 256]
+    return _mm(x, params["fc_w"], lut, (32, 8, 32)) + params["fc_b"]
+
+
+def loss_fn(params, images, labels):
+    logits = forward(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+@jax.jit
+def train_step(params, images, labels, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, images, labels)
+    new = {k: v - lr * grads[k] for k, v in params.items()}
+    return new, loss
+
+
+def train(params, images, labels, *, steps=400, batch=64, lr=0.08, seed=1, log=None):
+    """Plain SGD on the exact path. Returns (params, loss_history)."""
+    rng = np.random.default_rng(seed)
+    n = images.shape[0]
+    hist = []
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, loss = train_step(
+            params, images[idx], labels[idx], jnp.float32(lr)
+        )
+        hist.append(float(loss))
+        if log and step % 50 == 0:
+            log(f"step {step:4d} loss {float(loss):.4f}")
+    return params, hist
+
+
+def accuracy(params, images, labels, lut=None, batch=64) -> float:
+    """Top-1 accuracy, batched to bound interpret-mode memory."""
+    n = images.shape[0]
+    correct = 0
+    for s in range(0, n, batch):
+        logits = forward(params, images[s : s + batch], lut)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == labels[s : s + batch]))
+    return correct / n

@@ -1,0 +1,94 @@
+"""AOT export pipeline: HLO text round-trips and manifest consistency.
+
+These run the lowering path (not the trained 400-step pipeline) so the suite
+stays fast; the full pipeline is exercised by `make artifacts`.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import approx_matmul as am
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_entry_computation():
+    lowered = jax.jit(lambda a, b: (ref.exact_matmul_ref(a, b),)).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32), jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[8,8]" in text
+
+
+def test_to_hlo_text_pallas_lowering():
+    """The pallas kernel (interpret=True) must lower to plain HLO — no
+    custom-calls that the CPU PJRT client can't run."""
+    lowered = jax.jit(lambda a, b, l: (am.approx_matmul(a, b, l),)).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_export_writes_file(tmp_path):
+    path = str(tmp_path / "m.hlo.txt")
+    n = aot.export(
+        lambda a: (a + 1.0,), (jax.ShapeDtypeStruct((4,), jnp.float32),), path
+    )
+    assert n > 0 and os.path.getsize(path) == n
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_fields(self, manifest):
+        assert manifest["batch"] == 64
+        assert manifest["num_classes"] == 5
+        assert manifest["exact_test_accuracy"] > 0.85
+
+    def test_all_hlo_files_exist(self, manifest):
+        for name in ("matmul_approx", "matmul_exact", "cnn_approx", "cnn_exact"):
+            p = os.path.join(ART, f"{name}.hlo.txt")
+            assert os.path.exists(p), name
+            assert os.path.getsize(p) == manifest["hlo_chars"][name]
+
+    def test_weights_size_matches_specs(self, manifest):
+        n_params = sum(int(np.prod(shape)) for _, shape in manifest["params"])
+        assert os.path.getsize(os.path.join(ART, "weights.f32")) == 4 * n_params
+
+    def test_testset_sizes(self, manifest):
+        n = manifest["n_test"]
+        assert os.path.getsize(os.path.join(ART, "testset_images.f32")) == 4 * n * 16 * 16
+        assert os.path.getsize(os.path.join(ART, "testset_labels.u8")) == n
+
+    def test_weights_reload_reproduce_accuracy(self, manifest):
+        """Rebuild params from the flat file and check exact accuracy matches
+        the manifest (this is exactly what the Rust native evaluator does)."""
+        flat = np.fromfile(os.path.join(ART, "weights.f32"), dtype="<f4")
+        params, off = {}, 0
+        for name, shape in manifest["params"]:
+            size = int(np.prod(shape))
+            params[name] = jnp.asarray(flat[off : off + size].reshape(shape))
+            off += size
+        assert off == flat.size
+        imgs = np.fromfile(os.path.join(ART, "testset_images.f32"), dtype="<f4").reshape(
+            manifest["n_test"], 16, 16, 1
+        )
+        labels = np.fromfile(os.path.join(ART, "testset_labels.u8"), dtype=np.uint8)
+        acc = model.accuracy(params, jnp.asarray(imgs), jnp.asarray(labels.astype(np.int32)))
+        assert abs(acc - manifest["exact_test_accuracy"]) < 1e-6

@@ -1,0 +1,156 @@
+"""L2 correctness: CNN shapes, im2col semantics, training, approx-path wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    x, y = dataset.generate(128, seed=42)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=3)
+
+
+# ----------------------------------------------------------------- dataset
+def test_dataset_shapes_and_ranges():
+    x, y = dataset.generate(64, seed=0)
+    assert x.shape == (64, 16, 16, 1) and x.dtype == np.float32
+    assert y.shape == (64,) and y.min() >= 0 and y.max() < dataset.NUM_CLASSES
+
+
+def test_dataset_deterministic_per_seed():
+    x1, y1 = dataset.generate(32, seed=9)
+    x2, y2 = dataset.generate(32, seed=9)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_dataset_differs_across_seeds():
+    x1, _ = dataset.generate(32, seed=1)
+    x2, _ = dataset.generate(32, seed=2)
+    assert not np.array_equal(x1, x2)
+
+
+def test_dataset_all_classes_present():
+    _, y = dataset.generate(256, seed=5)
+    assert set(np.unique(y)) == set(range(dataset.NUM_CLASSES))
+
+
+# ----------------------------------------------------------------- im2col
+def test_im2col_shape():
+    x = jnp.zeros((2, 8, 8, 3))
+    cols = model.im2col(x, 3, 3)
+    assert cols.shape == (2 * 8 * 8, 9 * 3)
+
+
+def test_im2col_center_tap_identity():
+    """The (dy=1,dx=1) column of a 3x3 im2col is the input itself."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1, 6, 6, 2)).astype(np.float32)
+    cols = np.asarray(model.im2col(jnp.asarray(x), 3, 3))
+    center = cols[:, 4 * 2 : 4 * 2 + 2].reshape(6, 6, 2)
+    np.testing.assert_array_equal(center, x[0])
+
+
+def test_conv2d_matches_lax_conv():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(2, 8, 8, 3)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 3, 5)).astype(np.float32)
+    b = rng.normal(size=(5,)).astype(np.float32)
+    ours = model.conv2d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    got = np.asarray(model.maxpool2(x))[0, :, :, 0]
+    np.testing.assert_array_equal(got, [[5, 7], [13, 15]])
+
+
+# ----------------------------------------------------------------- forward
+def test_forward_shape(params, tiny_data):
+    x, _ = tiny_data
+    logits = model.forward(params, x[:8])
+    assert logits.shape == (8, model.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_forward_exact_lut_close_to_exact(params, tiny_data):
+    """Exact LUT through the approx datapath = bf16-rounded forward pass;
+    logits should be close to the f32 exact path (quantization only)."""
+    x, _ = tiny_data
+    exact = np.asarray(model.forward(params, x[:16]))
+    lut = np.asarray(model.forward(params, x[:16], lut=jnp.asarray(ref.exact_lut())))
+    denom = np.abs(exact).max()
+    assert np.abs(exact - lut).max() / denom < 0.05
+
+
+def test_forward_batch_consistency(params, tiny_data):
+    """Per-image results must not depend on batch composition."""
+    x, _ = tiny_data
+    full = np.asarray(model.forward(params, x[:8]))
+    halves = np.concatenate(
+        [np.asarray(model.forward(params, x[:4])), np.asarray(model.forward(params, x[4:8]))]
+    )
+    np.testing.assert_allclose(full, halves, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 6))
+@settings(max_examples=7, deadline=None)
+def test_forward_monotone_degradation_in_perforation(p):
+    """More perforation -> logits drift further from exact (weak monotonicity:
+    error at p must be >= error at 0, and large p must exceed small p)."""
+    x, _ = dataset.generate(8, seed=11)
+    prm = model.init_params(seed=3)
+    exact = np.asarray(model.forward(prm, jnp.asarray(x)))
+    lut = jnp.asarray(ref.perforated_lut(p))
+    approx = np.asarray(model.forward(prm, jnp.asarray(x), lut=lut))
+    err = np.abs(exact - approx).mean()
+    base = np.abs(exact - np.asarray(model.forward(prm, jnp.asarray(x), lut=jnp.asarray(ref.exact_lut())))).mean()
+    assert err >= base - 1e-6
+
+
+# ----------------------------------------------------------------- training
+def test_training_reduces_loss():
+    x, y = dataset.generate(512, seed=21)
+    p = model.init_params(seed=2)
+    p, hist = model.train(p, jnp.asarray(x), jnp.asarray(y), steps=60, lr=0.08)
+    assert np.mean(hist[-10:]) < np.mean(hist[:10]) * 0.7
+
+
+def test_training_improves_accuracy():
+    x, y = dataset.generate(512, seed=22)
+    vx, vy = dataset.generate(128, seed=23)
+    p0 = model.init_params(seed=2)
+    acc0 = model.accuracy(p0, jnp.asarray(vx), jnp.asarray(vy))
+    p1, _ = model.train(p0, jnp.asarray(x), jnp.asarray(y), steps=120, lr=0.08)
+    acc1 = model.accuracy(p1, jnp.asarray(vx), jnp.asarray(vy))
+    assert acc1 > max(acc0, 0.5)
+
+
+def test_accuracy_batching_invariance(params, tiny_data):
+    x, y = tiny_data
+    a1 = model.accuracy(params, x, y, batch=32)
+    a2 = model.accuracy(params, x, y, batch=128)
+    assert a1 == a2
+
+
+def test_param_specs_cover_params():
+    p = model.init_params(0)
+    assert set(p.keys()) == {name for name, _ in model.PARAM_SPECS}
+    for name, shape in model.PARAM_SPECS:
+        assert tuple(p[name].shape) == shape

@@ -1,0 +1,105 @@
+//! Bench ABLATION: design choices DESIGN.md calls out.
+//!
+//!  A. CDP scalarization vs true Pareto (NSGA-style front) — what does the
+//!     scalar objective give up?
+//!  B. Poisson vs Murphy yield — sensitivity of the carbon ranking.
+//!  C. 3D vertical bandwidth sweep — how much of the 3D delay win comes
+//!     from the interconnect model.
+//!  D. FPS-floor penalty strength — constraint-handling robustness.
+
+use carbon3d::approx::{library, EXACT_ID};
+use carbon3d::area::die::Integration;
+use carbon3d::area::TechNode;
+use carbon3d::carbon::yield_model::{die_yield, die_yield_murphy};
+use carbon3d::coordinator::ga_appx_cdp;
+use carbon3d::dataflow::arch::AccelConfig;
+use carbon3d::dataflow::mapper::map_network;
+use carbon3d::dataflow::workloads::workload;
+use carbon3d::ga::fitness::FitnessCtx;
+use carbon3d::ga::nsga::pareto_front;
+use carbon3d::ga::{GaParams, SearchSpace};
+use carbon3d::util::Rng;
+
+fn main() {
+    let lib = library();
+    let w = workload("vgg16").unwrap();
+
+    // ---- A. scalar CDP vs Pareto front ------------------------------------
+    println!("== A. CDP scalarization vs Pareto front (vgg16@14nm, δ=3%) ==");
+    let mut ctx = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, None);
+    let space = SearchSpace::standard((0..lib.len()).collect());
+    let mut rng = Rng::new(77);
+    let samples: Vec<_> = (0..600).map(|_| space.sample(&mut rng)).collect();
+    let evals: Vec<_> = samples.iter().map(|c| ctx.eval(c)).collect();
+    let pts: Vec<(f64, f64)> = evals.iter().map(|e| (e.carbon_g, e.delay_s)).collect();
+    let front = pareto_front(&pts);
+    let ga = ga_appx_cdp(&w, TechNode::N14, &lib, 3.0, None, GaParams::default());
+    // Is the GA's CDP optimum on (or near) the sampled Pareto front?
+    let best_front_cdp = front
+        .iter()
+        .map(|&i| evals[i].cdp)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "sampled front size {} of {}; best front CDP {:.4}; GA CDP {:.4} ({:.1}% of front best)",
+        front.len(),
+        samples.len(),
+        best_front_cdp,
+        ga.best_eval.cdp,
+        ga.best_eval.cdp / best_front_cdp * 100.0
+    );
+
+    // ---- B. yield model sensitivity ----------------------------------------
+    println!("\n== B. Poisson vs Murphy yield (carbon ranking stability) ==");
+    for node in [TechNode::N45, TechNode::N7] {
+        for a in [5.0, 50.0, 200.0] {
+            println!(
+                "{} {:>5.0} mm^2: Poisson {:.4}, Murphy {:.4}",
+                node.name(),
+                a,
+                die_yield(node, a),
+                die_yield_murphy(node, a)
+            );
+        }
+    }
+
+    // ---- C. 3D bandwidth contribution --------------------------------------
+    println!("\n== C. 2D vs 3D delay across array sizes (vgg16@14nm) ==");
+    for n in [8usize, 16, 32, 64] {
+        let mk = |integration| AccelConfig {
+            px: n,
+            py: n,
+            rf_bytes: 128,
+            sram_bytes: 512 << 10,
+            node: TechNode::N14,
+            integration,
+            mult_id: EXACT_ID,
+        };
+        let c2 = mk(Integration::TwoD);
+        let c3 = mk(Integration::ThreeD);
+        let d2 = map_network(&w, &c2).delay_s(&c2);
+        let d3 = map_network(&w, &c3).delay_s(&c3);
+        println!(
+            "{n:>2}x{n:<2}: 2D {:7.2} ms, 3D {:7.2} ms, 3D speedup {:.2}x",
+            d2 * 1e3,
+            d3 * 1e3,
+            d2 / d3
+        );
+    }
+
+    // ---- D. FPS floor behaviour --------------------------------------------
+    println!("\n== D. FPS-floor constraint handling (vgg16@7nm, δ=3%) ==");
+    for target in [10.0, 20.0, 40.0, 80.0] {
+        let r = ga_appx_cdp(
+            &w,
+            TechNode::N7,
+            &lib,
+            3.0,
+            Some(target),
+            GaParams::default(),
+        );
+        println!(
+            "target {:>5.0} fps: got {:>6.1} fps, carbon {:>6.2} g, feasible={}",
+            target, r.best_eval.fps, r.best_eval.carbon_g, r.best_eval.feasible
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench CARBON: Eq. (1)-(5) evaluation cost + full-library LUT/error
+//! precomputation cost (both amortized once per process).
+
+use carbon3d::approx::{library, lut_f32, EXACT_ID};
+use carbon3d::area::die::Integration;
+use carbon3d::area::TechNode;
+use carbon3d::carbon::embodied_carbon;
+use carbon3d::dataflow::arch::AccelConfig;
+use carbon3d::util::timer::{bench, time_once};
+
+fn main() {
+    println!("== CARBON model benches ==");
+    let (lib, t_lib) = time_once(library);
+    println!(
+        "library(): {} designs, exhaustive error characterization in {:.3}s",
+        lib.len(),
+        t_lib
+    );
+
+    let cfg = AccelConfig {
+        px: 32,
+        py: 32,
+        rf_bytes: 128,
+        sram_bytes: 512 << 10,
+        node: TechNode::N7,
+        integration: Integration::ThreeD,
+        mult_id: EXACT_ID,
+    };
+    let res = bench("die_areas + embodied_carbon (one config)", 100, 10_000, || {
+        let areas = cfg.die_areas(&lib[EXACT_ID]);
+        embodied_carbon(&areas, cfg.node, cfg.integration)
+    });
+    println!("{}", res.line());
+
+    let res = bench("lut_f32 (128x128 LUT generation)", 10, 1000, || lut_f32(&lib[5]));
+    println!("{}", res.line());
+}

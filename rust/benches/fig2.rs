@@ -1,0 +1,44 @@
+//! Bench FIG2: regenerates the paper's Figure 2 rows (normalized delay +
+//! embodied carbon per node/model/δ) and times the pipeline.
+//!
+//! Run: `cargo bench --bench fig2 [-- --full]`
+//! Default uses a reduced GA budget per cell so the whole grid stays fast;
+//! `--full` uses the paper-scale budget (same results shape).
+
+use carbon3d::approx::library;
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::coordinator::fig2::{run_fig2, FIG2_MODELS};
+use carbon3d::ga::GaParams;
+use carbon3d::util::timer::{bench, time_once};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let params = if full {
+        GaParams::default()
+    } else {
+        GaParams { population: 32, generations: 20, patience: 8, ..Default::default() }
+    };
+    let lib = library();
+
+    // One full-grid run: the figure itself.
+    let (r, secs) = time_once(|| run_fig2(&lib, &FIG2_MODELS, params));
+    println!("== FIG2 ({} cells in {:.2}s) ==", r.cells.len(), secs);
+    println!("{}", r.render());
+    for &node in &ALL_NODES {
+        println!("{}: max carbon cut {:.1}%", node.name(), r.max_carbon_cut_pct(node));
+    }
+
+    // Timing: single (node, model) cell — the unit of GA work.
+    let res = bench("fig2: one GA cell (vgg16@14nm, δ=3%)", 1, 5, || {
+        carbon3d::coordinator::ga_appx_min_carbon(
+            &carbon3d::dataflow::workloads::workload("vgg16").unwrap(),
+            carbon3d::TechNode::N14,
+            &lib,
+            3.0,
+            1.0, // fps floor far below reach: unconstrained-ish
+            params,
+            None,
+        )
+    });
+    println!("{}", res.line());
+}

@@ -1,0 +1,49 @@
+//! Bench FIG3: regenerates the paper's Figure 3 series (gCO2/mm^2 vs FPS,
+//! VGG16, three nodes, four approaches) and times sweep vs GA-point cost.
+//!
+//! Run: `cargo bench --bench fig3 [-- --full]`
+
+use carbon3d::approx::library;
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::area::TechNode;
+use carbon3d::coordinator::baselines::{sweep_nvdla, Approach};
+use carbon3d::coordinator::fig3::run_fig3;
+use carbon3d::dataflow::workloads::workload;
+use carbon3d::ga::GaParams;
+use carbon3d::util::stats::pct_change;
+use carbon3d::util::timer::{bench, time_once};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let params = if full {
+        GaParams::default()
+    } else {
+        GaParams { population: 32, generations: 20, patience: 8, ..Default::default() }
+    };
+    let lib = library();
+
+    let (r, secs) = time_once(|| run_fig3(&lib, "vgg16", params));
+    println!("== FIG3 ({} points in {:.2}s) ==", r.points.len(), secs);
+    println!("{}", r.render());
+
+    // Headline §IV-B numbers.
+    for &node in &ALL_NODES {
+        if let (Some(ga), Some(e3)) = (
+            r.best_meeting_fps(node, Approach::GaAppxCdp, 20.0),
+            r.best_meeting_fps(node, Approach::ThreeDExact, 20.0),
+        ) {
+            println!(
+                "{} @20FPS: GA vs 3D-Exact carbon cut {:.1}%",
+                node.name(),
+                -pct_change(e3.carbon_g, ga.carbon_g)
+            );
+        }
+    }
+
+    // Timing units.
+    let w = workload("vgg16").unwrap();
+    let res = bench("fig3: one NVDLA sweep (6 points, 3D-Exact@7nm)", 1, 10, || {
+        sweep_nvdla(Approach::ThreeDExact, &w, TechNode::N7, &lib)
+    });
+    println!("{}", res.line());
+}

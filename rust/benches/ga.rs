@@ -1,0 +1,56 @@
+//! Bench GA: full GA-run cost at the paper's budget, fitness-eval cost with
+//! cold/warm cache, and convergence statistics over seeds.
+
+use carbon3d::approx::library;
+use carbon3d::area::die::Integration;
+use carbon3d::area::TechNode;
+use carbon3d::coordinator::ga_appx_cdp;
+use carbon3d::dataflow::workloads::workload;
+use carbon3d::ga::fitness::FitnessCtx;
+use carbon3d::ga::{GaParams, SearchSpace};
+use carbon3d::util::timer::bench;
+use carbon3d::util::Rng;
+
+fn main() {
+    println!("== GA benches ==");
+    let lib = library();
+    let w = workload("resnet50").unwrap();
+
+    // Cold fitness evaluations (cache thrash via fresh ctx each iter).
+    let space = SearchSpace::standard((0..lib.len()).collect());
+    let mut rng = Rng::new(1);
+    let samples: Vec<_> = (0..64).map(|_| space.sample(&mut rng)).collect();
+    let res = bench("64 cold fitness evals (resnet50@14nm)", 2, 20, || {
+        let mut ctx = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, None);
+        for c in &samples {
+            std::hint::black_box(ctx.eval(c));
+        }
+    });
+    println!("{}", res.line());
+
+    // Full paper-budget GA run.
+    let res = bench("GA-APPX-CDP full run (pop 64, <=48 gens)", 0, 5, || {
+        ga_appx_cdp(&w, TechNode::N14, &lib, 3.0, None, GaParams::default())
+    });
+    println!("{}", res.line());
+
+    // Convergence robustness over seeds.
+    let mut finals = Vec::new();
+    for seed in 0..10u64 {
+        let r = ga_appx_cdp(
+            &w,
+            TechNode::N14,
+            &lib,
+            3.0,
+            None,
+            GaParams { seed, ..Default::default() },
+        );
+        finals.push(r.best_eval.cdp);
+    }
+    let s = carbon3d::util::Summary::of(&finals);
+    println!(
+        "CDP across 10 seeds: mean {:.5}, spread (max-min)/mean {:.2}%",
+        s.mean,
+        (s.max - s.min) / s.mean * 100.0
+    );
+}

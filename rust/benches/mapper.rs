@@ -1,0 +1,53 @@
+//! Bench MAPPER: the nn-dataflow-stand-in hot path — per-layer and
+//! per-network mapping cost for every workload, 2D vs 3D.
+//!
+//! This is the innermost loop of every GA fitness evaluation, so its cost
+//! bounds the whole DSE (see EXPERIMENTS.md §Perf).
+
+use carbon3d::approx::EXACT_ID;
+use carbon3d::area::die::Integration;
+use carbon3d::area::TechNode;
+use carbon3d::dataflow::arch::AccelConfig;
+use carbon3d::dataflow::mapper::map_network;
+use carbon3d::dataflow::workloads::{workload, workload_names};
+use carbon3d::util::timer::bench;
+
+fn cfg(integration: Integration) -> AccelConfig {
+    AccelConfig {
+        px: 32,
+        py: 32,
+        rf_bytes: 128,
+        sram_bytes: 512 << 10,
+        node: TechNode::N14,
+        integration,
+        mult_id: EXACT_ID,
+    }
+}
+
+fn main() {
+    println!("== MAPPER benches (GA inner loop) ==");
+    for name in workload_names() {
+        let w = workload(name).unwrap();
+        let c = cfg(Integration::ThreeD);
+        let res = bench(
+            &format!("map_network {name} ({} layers, 3D)", w.layers.len()),
+            3,
+            50,
+            || map_network(&w, &c),
+        );
+        println!("{}", res.line());
+    }
+    let w = workload("vgg16").unwrap();
+    let c2 = cfg(Integration::TwoD);
+    let res = bench("map_network vgg16 (2D NoC)", 3, 50, || map_network(&w, &c2));
+    println!("{}", res.line());
+
+    // Sanity: print the mapped fps so the bench doubles as a smoke check.
+    let c3 = cfg(Integration::ThreeD);
+    let m = map_network(&w, &c3);
+    println!(
+        "vgg16@14nm 32x32 3D: {:.1} fps, utilization {:.2}",
+        m.fps(&c3),
+        m.mean_utilization()
+    );
+}

@@ -1,0 +1,66 @@
+//! Bench RUNTIME: PJRT compile + execute latency for every artifact — the
+//! L3 hot path of the accuracy-evaluation service. Skips gracefully when
+//! artifacts are absent (run `make artifacts`).
+
+use std::path::Path;
+
+use carbon3d::approx::{library, lut_f32, EXACT_ID};
+use carbon3d::runtime::{Artifacts, Engine};
+use carbon3d::util::timer::{bench, time_once};
+
+fn main() {
+    println!("== RUNTIME (PJRT) benches ==");
+    let artifacts = match Artifacts::load(Path::new("artifacts")) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let (engine, t) = time_once(|| Engine::new(artifacts));
+    let engine = match engine {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP: {e:#}");
+            return;
+        }
+    };
+    println!("engine init (4 artifact compiles) in {t:.2}s on {}", engine.platform());
+
+    let lib = library();
+    let lut = lut_f32(&lib[EXACT_ID]);
+    let imgs = &engine.native().testset.images[..64 * 256];
+
+    let res = bench("matmul_approx execute (64x64x64 + LUT)", 5, 100, || {
+        let a = vec![0.5f32; 64 * 64];
+        let b = vec![0.25f32; 64 * 64];
+        engine
+            .executable("matmul_approx")
+            .unwrap()
+            .run_f32(&[(&a, &[64, 64]), (&b, &[64, 64]), (&lut, &[128, 128])])
+            .unwrap()
+    });
+    println!("{}", res.line());
+
+    let res = bench("cnn_exact execute (batch 64)", 3, 50, || {
+        engine.cnn_logits_exact(imgs).unwrap()
+    });
+    println!("{}", res.line());
+
+    let res = bench("cnn_approx execute (batch 64 + LUT)", 3, 50, || {
+        engine.cnn_logits_approx(imgs, &lut).unwrap()
+    });
+    println!("{}", res.line());
+
+    let res = bench("accuracy_pjrt full test set (512 imgs)", 1, 10, || {
+        engine.accuracy_pjrt(Some(&lut)).unwrap()
+    });
+    println!("{}", res.line());
+
+    // Native (non-PJRT) path for comparison — same datapath in pure rust.
+    let dp = carbon3d::accuracy::native::ApproxDatapath::new(&lib[EXACT_ID]);
+    let res = bench("accuracy_native full test set (512 imgs)", 1, 10, || {
+        engine.native().accuracy(&dp)
+    });
+    println!("{}", res.line());
+}

@@ -1,0 +1,63 @@
+//! Accuracy-drop evaluation ΔA(M_approx) — the paper's Eq. (7) constraint.
+//!
+//! Three paths (DESIGN.md §6.3):
+//!  1. `native`: a bit-faithful Rust reimplementation of the approximate bf16
+//!     MAC datapath running the trained tiny CNN on the held-out test set
+//!     (fast, no PJRT) — semantics identical to python/compile/kernels/ref.py.
+//!  2. `runtime::pjrt` (see runtime/): the SAME network through the AOT
+//!     JAX/Pallas artifact on the PJRT CPU client — cross-checks (1).
+//!  3. `model`: an MRED-calibrated analytical ΔA model extrapolating the
+//!     measured curve to the five ImageNet-scale paper CNNs, where offline
+//!     retraining/inference is infeasible.
+
+pub mod model;
+pub mod native;
+
+pub use model::{feasible_multipliers, predicted_drop_pct};
+pub use native::{ApproxDatapath, NativeEvaluator};
+
+use std::collections::BTreeMap;
+
+/// Measured or predicted accuracy per multiplier id.
+#[derive(Debug, Clone, Default)]
+pub struct AccuracyTable {
+    /// multiplier id -> top-1 accuracy in [0,1].
+    pub accuracy: BTreeMap<usize, f64>,
+    /// Exact-path reference accuracy.
+    pub exact: f64,
+}
+
+impl AccuracyTable {
+    /// Accuracy drop (percentage points) for a multiplier.
+    pub fn drop_pct(&self, mult_id: usize) -> Option<f64> {
+        self.accuracy.get(&mult_id).map(|a| (self.exact - a) * 100.0)
+    }
+
+    /// Multiplier ids whose measured drop fits the threshold δ (pct points).
+    pub fn feasible(&self, delta_pct: f64) -> Vec<usize> {
+        self.accuracy
+            .iter()
+            .filter(|(_, &a)| (self.exact - a) * 100.0 <= delta_pct + 1e-9)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_and_feasible_consistent() {
+        let mut t = AccuracyTable { exact: 0.95, ..Default::default() };
+        t.accuracy.insert(0, 0.95);
+        t.accuracy.insert(1, 0.93);
+        t.accuracy.insert(2, 0.89);
+        assert_eq!(t.drop_pct(0), Some(0.0));
+        assert!((t.drop_pct(1).unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(t.feasible(1.0), vec![0]);
+        assert_eq!(t.feasible(2.0), vec![0, 1]);
+        assert_eq!(t.feasible(10.0), vec![0, 1, 2]);
+        assert_eq!(t.drop_pct(99), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! MRED-calibrated analytical ΔA model for ImageNet-scale CNNs.
+//!
+//! ImageNet inference for the five paper CNNs is infeasible offline, so we
+//! extrapolate the *measured* tiny-CNN ΔA(multiplier) curve (native/PJRT
+//! paths) with a two-parameter model:
+//!
+//!   ΔA% (mult, net) = A_SCALE * 100 * tanh( K * e_eff * depth_factor )
+//!   depth_factor    = 1 + 0.15 * ln(depth / 3)
+//!
+//! where e_eff = sig_MRED + |sig_bias|/E[sig product] captures both the
+//! spread and the systematic bias of the multiplier on the significand
+//! domain, and depth = number of MAC layers. The depth dependence is mild:
+//! per-layer perturbations largely average out (the paper's §III-D "errors
+//! tend to cancel rather than propagate destructively"), but systematic
+//! bias compounds slowly with depth. K is calibrated once against the
+//! measured tiny-CNN table (see `calibrate_k`); the model preserves the
+//! ordering the GA consumes: ΔA is strictly monotone in e_eff for a fixed
+//! network.
+
+use super::AccuracyTable;
+use crate::approx::Multiplier;
+use crate::dataflow::workloads::Workload;
+
+/// Mean exact significand product over [128,255]^2 (~ (191.5)^2).
+const MEAN_SIG_PRODUCT: f64 = 36672.25;
+
+/// Default calibration constant (fit against the measured tiny-CNN table at
+/// artifact-build time; `calibrate_k` recomputes it from live data).
+pub const DEFAULT_K: f64 = 0.45;
+
+/// Saturation ceiling: a fully broken multiplier drives a 5-class net to
+/// chance (80% drop), an ImageNet net to ~ top-1 loss.
+const A_SCALE: f64 = 0.8;
+
+/// Effective arithmetic error of a multiplier on the MAC's input domain.
+pub fn effective_error(m: &Multiplier) -> f64 {
+    m.error.sig_mred + m.error.sig_bias.abs() / MEAN_SIG_PRODUCT
+}
+
+/// Mild depth amplification (1.0 for the 3-MAC-layer tiny CNN).
+fn depth_factor(w: &Workload) -> f64 {
+    let depth = w.n_conv_fc().max(1) as f64;
+    1.0 + 0.15 * (depth / 3.0).max(1.0).ln()
+}
+
+/// Predicted accuracy drop in percentage points for a workload.
+pub fn predicted_drop_pct(m: &Multiplier, w: &Workload, k: f64) -> f64 {
+    A_SCALE * 100.0 * (k * effective_error(m) * depth_factor(w)).tanh()
+}
+
+/// Calibrate K by least squares against a measured accuracy table on the
+/// tiny CNN (minimizes sum (pred - measured)^2 over multipliers with
+/// measurable drops). Returns `DEFAULT_K` when no informative points exist.
+pub fn calibrate_k(lib: &[Multiplier], tiny: &Workload, measured: &AccuracyTable) -> f64 {
+    let depth = depth_factor(tiny);
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for m in lib {
+        if let Some(drop) = measured.drop_pct(m.id) {
+            let e = effective_error(m);
+            if e > 1e-9 && drop > 0.05 {
+                pts.push((e * depth, (drop / 100.0 / A_SCALE).clamp(0.0, 0.999)));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return DEFAULT_K;
+    }
+    // tanh(K x) = y  ->  K = atanh(y)/x ; robust aggregate = median.
+    let mut ks: Vec<f64> = pts.iter().map(|&(x, y)| y.atanh() / x).collect();
+    ks.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ks[ks.len() / 2].clamp(0.5, 200.0)
+}
+
+/// Multiplier ids predicted to satisfy ΔA <= δ for a workload (Eq. 7).
+/// The exact multiplier always qualifies.
+pub fn feasible_multipliers(
+    lib: &[Multiplier],
+    w: &Workload,
+    delta_pct: f64,
+    k: f64,
+) -> Vec<usize> {
+    lib.iter()
+        .filter(|m| predicted_drop_pct(m, w, k) <= delta_pct + 1e-9)
+        .map(|m| m.id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{library, EXACT_ID};
+    use crate::dataflow::workloads::workload;
+
+    #[test]
+    fn exact_has_zero_predicted_drop() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        assert_eq!(predicted_drop_pct(&lib[EXACT_ID], &w, DEFAULT_K), 0.0);
+    }
+
+    #[test]
+    fn drop_monotone_in_mred_within_family() {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let drops: Vec<f64> = (1..=5)
+            .map(|k| {
+                let m = lib.iter().find(|m| m.name() == format!("TRUNC{k}")).unwrap();
+                predicted_drop_pct(m, &w, DEFAULT_K)
+            })
+            .collect();
+        for w2 in drops.windows(2) {
+            assert!(w2[1] > w2[0], "{drops:?}");
+        }
+    }
+
+    #[test]
+    fn deeper_nets_degrade_more() {
+        let lib = library();
+        let m = lib.iter().find(|m| m.name() == "PERF3").unwrap();
+        let shallow = workload("tinycnn").unwrap();
+        let deep = workload("densenet121").unwrap();
+        assert!(
+            predicted_drop_pct(m, &deep, DEFAULT_K) > predicted_drop_pct(m, &shallow, DEFAULT_K)
+        );
+    }
+
+    #[test]
+    fn drop_bounded_by_scale() {
+        let lib = library();
+        let w = workload("densenet121").unwrap();
+        for m in &lib {
+            let d = predicted_drop_pct(m, &w, DEFAULT_K);
+            assert!((0.0..=A_SCALE * 100.0).contains(&d), "{}: {d}", m.name());
+        }
+    }
+
+    #[test]
+    fn feasible_sets_nested_in_delta() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let f1 = feasible_multipliers(&lib, &w, 1.0, DEFAULT_K);
+        let f2 = feasible_multipliers(&lib, &w, 2.0, DEFAULT_K);
+        let f3 = feasible_multipliers(&lib, &w, 3.0, DEFAULT_K);
+        assert!(f1.len() <= f2.len() && f2.len() <= f3.len());
+        for id in &f1 {
+            assert!(f2.contains(id));
+        }
+        for id in &f2 {
+            assert!(f3.contains(id));
+        }
+        assert!(f1.contains(&EXACT_ID));
+        // Looser δ must admit at least one non-exact design.
+        assert!(f3.len() > 1, "3% admits only the exact multiplier");
+    }
+
+    #[test]
+    fn calibration_recovers_k_from_synthetic_table() {
+        let lib = library();
+        let tiny = workload("tinycnn").unwrap();
+        let k_true = 12.0;
+        let mut table = AccuracyTable { exact: 0.95, ..Default::default() };
+        for m in &lib {
+            let drop = predicted_drop_pct(m, &tiny, k_true) / 100.0;
+            table.accuracy.insert(m.id, 0.95 - drop);
+        }
+        let k_fit = calibrate_k(&lib, &tiny, &table);
+        assert!((k_fit - k_true).abs() / k_true < 0.05, "k_fit {k_fit}");
+    }
+
+    #[test]
+    fn calibration_empty_table_falls_back() {
+        let lib = library();
+        let tiny = workload("tinycnn").unwrap();
+        let table = AccuracyTable { exact: 0.95, ..Default::default() };
+        assert_eq!(calibrate_k(&lib, &tiny, &table), DEFAULT_K);
+    }
+}

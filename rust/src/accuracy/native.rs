@@ -1,0 +1,421 @@
+//! Native bit-faithful evaluator: the trained tiny CNN through the
+//! approximate bf16 MAC datapath, entirely in Rust.
+//!
+//! Semantics mirror python/compile/kernels/ref.py exactly:
+//!   bf16 RNE rounding -> sign/exp/mant decompose -> LUT significand product
+//!   -> exact power-of-two scale -> f32 accumulation; zeros/denormals flush.
+//! Layer plumbing mirrors python/compile/model.py (im2col patch order
+//! (dy,dx,c), 'same' padding, maxpool2, fc).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::approx::Multiplier;
+use crate::runtime::artifacts::Artifacts;
+
+/// bf16 round-to-nearest-even, result as f32 with low 16 bits zero.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let lsb = (bits >> 16) & 1;
+    f32::from_bits(bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000)
+}
+
+/// Exact f32 2^e for integer e (3-factor clamped chain; matches
+/// ref.pow2_exact).
+#[inline]
+fn pow2_exact(e: i32) -> f32 {
+    let factor = |ei: i32| f32::from_bits(((ei + 127) as u32) << 23);
+    let e1 = e.clamp(-126, 127);
+    let r = e - e1;
+    let e2 = r.clamp(-126, 127);
+    let e3 = (r - e2).clamp(-126, 127);
+    factor(e1) * factor(e2) * factor(e3)
+}
+
+/// The approximate MAC datapath for one multiplier LUT.
+pub struct ApproxDatapath {
+    /// 128x128 significand products (u16 range), f32 for parity with the
+    /// AOT kernel input.
+    lut: Vec<f32>,
+}
+
+impl ApproxDatapath {
+    pub fn new(mult: &Multiplier) -> Self {
+        Self { lut: crate::approx::lut_f32(mult) }
+    }
+
+    pub fn from_lut(lut: Vec<f32>) -> Self {
+        assert_eq!(lut.len(), 128 * 128);
+        Self { lut }
+    }
+
+    /// One approximate product (ref.approx_mul_elementwise semantics).
+    #[inline]
+    pub fn mul(&self, a: f32, b: f32) -> f32 {
+        let ab = bf16_round(a).to_bits();
+        let bb = bf16_round(b).to_bits();
+        let ea = (ab >> 23) & 0xFF;
+        let eb = (bb >> 23) & 0xFF;
+        if ea == 0 || eb == 0 {
+            return 0.0;
+        }
+        let ma = (ab >> 16) & 0x7F;
+        let mb = (bb >> 16) & 0x7F;
+        let sig = self.lut[(ma * 128 + mb) as usize];
+        let scale = pow2_exact(ea as i32 + eb as i32 - 268);
+        let sign = if (ab ^ bb) & 0x8000_0000 != 0 { -1.0f32 } else { 1.0f32 };
+        sign * (sig * scale)
+    }
+
+    /// [M,K] x [K,N] matmul with f32 accumulation over ascending k.
+    ///
+    /// Hot path of the native evaluator (EXPERIMENTS.md §Perf): operands are
+    /// decomposed to (sign|mant, exp) *once* up front instead of re-rounding
+    /// + re-decoding both scalars on every one of the M*K*N products.
+    pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        // Pre-decode: pack (mant<<1 | signbit) and keep exp separately;
+        // exp == 0 marks zero/denormal (flushed).
+        #[inline]
+        fn decode(x: f32) -> (u32, i32) {
+            let bits = bf16_round(x).to_bits();
+            let exp = ((bits >> 23) & 0xFF) as i32;
+            let key = ((bits >> 16) & 0x7F) << 1 | (bits >> 31);
+            (key, exp)
+        }
+        let da: Vec<(u32, i32)> = a.iter().map(|&x| decode(x)).collect();
+        let db: Vec<(u32, i32)> = b.iter().map(|&x| decode(x)).collect();
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let (ka, ea) = da[i * k + kk];
+                if ea == 0 {
+                    continue;
+                }
+                let row_a_base = ((ka >> 1) * 128) as usize;
+                let sign_a = ka & 1;
+                let out_row = &mut out[i * n..(i + 1) * n];
+                let b_row = &db[kk * n..(kk + 1) * n];
+                for (o, &(kb, eb)) in out_row.iter_mut().zip(b_row) {
+                    if eb == 0 {
+                        continue;
+                    }
+                    let sig = self.lut[row_a_base + (kb >> 1) as usize];
+                    let scale = pow2_exact(ea + eb - 268);
+                    let v = sig * scale;
+                    *o += if (sign_a ^ (kb & 1)) != 0 { -v } else { v };
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Trained tiny-CNN weights (PARAM_SPECS order, see python/compile/model.py).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub conv1_w: Vec<f32>, // [3,3,1,8]
+    pub conv1_b: Vec<f32>, // [8]
+    pub conv2_w: Vec<f32>, // [3,3,8,16]
+    pub conv2_b: Vec<f32>, // [16]
+    pub fc_w: Vec<f32>,    // [256,5]
+    pub fc_b: Vec<f32>,    // [5]
+}
+
+/// Test-set images + labels.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub images: Vec<f32>, // [n,16,16,1]
+    pub labels: Vec<u8>,
+    pub n: usize,
+}
+
+/// The native evaluator: weights + test set + forward pass.
+pub struct NativeEvaluator {
+    pub weights: Weights,
+    pub testset: TestSet,
+    pub exact_accuracy: f64,
+}
+
+pub const IMG: usize = 16;
+pub const NUM_CLASSES: usize = 5;
+
+impl NativeEvaluator {
+    /// Load from the artifacts directory (weights.f32, testset_*, manifest).
+    pub fn load(artifacts: &Artifacts) -> Result<Self> {
+        let dir = &artifacts.dir;
+        let w = read_f32(&dir.join("weights.f32"))?;
+        let sizes = [3 * 3 * 8, 8, 3 * 3 * 8 * 16, 16, 256 * 5, 5];
+        ensure!(
+            w.len() == sizes.iter().sum::<usize>(),
+            "weights.f32 has {} floats, want {}",
+            w.len(),
+            sizes.iter().sum::<usize>()
+        );
+        let mut off = 0;
+        let mut take = |n: usize| {
+            let v = w[off..off + n].to_vec();
+            off += n;
+            v
+        };
+        let weights = Weights {
+            conv1_w: take(sizes[0]),
+            conv1_b: take(sizes[1]),
+            conv2_w: take(sizes[2]),
+            conv2_b: take(sizes[3]),
+            fc_w: take(sizes[4]),
+            fc_b: take(sizes[5]),
+        };
+        let images = read_f32(&dir.join("testset_images.f32"))?;
+        let labels = std::fs::read(dir.join("testset_labels.u8"))
+            .context("read testset_labels.u8")?;
+        let n = labels.len();
+        ensure!(images.len() == n * IMG * IMG, "testset images/labels mismatch");
+        Ok(Self {
+            weights,
+            testset: TestSet { images, labels, n },
+            exact_accuracy: artifacts.exact_test_accuracy,
+        })
+    }
+
+    /// Forward pass for a batch of images through the approximate datapath.
+    /// `images` is [b,16,16,1] row-major. Returns logits [b,NUM_CLASSES].
+    pub fn forward(&self, dp: &ApproxDatapath, images: &[f32], b: usize) -> Vec<f32> {
+        let w = &self.weights;
+        // conv1: 16x16x1 -> 16x16x8, relu, pool -> 8x8x8
+        let c1 = conv2d_same(dp, images, b, IMG, IMG, 1, &w.conv1_w, &w.conv1_b, 8);
+        let p1 = maxpool2(&relu(c1), b, IMG, IMG, 8);
+        // conv2: 8x8x8 -> 8x8x16, relu, pool -> 4x4x16
+        let c2 = conv2d_same(dp, &p1, b, 8, 8, 8, &w.conv2_w, &w.conv2_b, 16);
+        let p2 = maxpool2(&relu(c2), b, 8, 8, 16);
+        // fc: 256 -> 5
+        let mut logits = dp.matmul(&p2, &w.fc_w, b, 256, NUM_CLASSES);
+        for row in logits.chunks_mut(NUM_CLASSES) {
+            for (x, bias) in row.iter_mut().zip(&w.fc_b) {
+                *x += bias;
+            }
+        }
+        logits
+    }
+
+    /// Top-1 accuracy of a multiplier datapath over the whole test set.
+    pub fn accuracy(&self, dp: &ApproxDatapath) -> f64 {
+        let n = self.testset.n;
+        let mut correct = 0usize;
+        // Batch to keep im2col buffers small.
+        let bs = 64;
+        for start in (0..n).step_by(bs) {
+            let b = bs.min(n - start);
+            let imgs = &self.testset.images[start * IMG * IMG..(start + b) * IMG * IMG];
+            let logits = self.forward(dp, imgs, b);
+            for i in 0..b {
+                let row = &logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == self.testset.labels[start + i] as usize {
+                    correct += 1;
+                }
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+fn relu(mut v: Vec<f32>) -> Vec<f32> {
+    for x in &mut v {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+    v
+}
+
+/// 'same' 3x3 conv via im2col + approx matmul; patch order (dy,dx,c) matches
+/// model.im2col.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_same(
+    dp: &ApproxDatapath,
+    x: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    weights: &[f32], // [3,3,cin,cout]
+    bias: &[f32],
+    cout: usize,
+) -> Vec<f32> {
+    let k = 3usize;
+    let pad = 1usize;
+    let patch = k * k * cin;
+    let mut cols = vec![0f32; b * h * wd * patch];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..wd {
+                let row = ((bi * h + y) * wd + xx) * patch;
+                let mut p = 0usize;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let sy = y as isize + dy as isize - pad as isize;
+                        let sx = xx as isize + dx as isize - pad as isize;
+                        for c in 0..cin {
+                            cols[row + p] = if sy >= 0
+                                && sy < h as isize
+                                && sx >= 0
+                                && sx < wd as isize
+                            {
+                                x[((bi * h + sy as usize) * wd + sx as usize) * cin + c]
+                            } else {
+                                0.0
+                            };
+                            p += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // weights [3,3,cin,cout] flatten to [patch, cout] in the same (dy,dx,c)
+    // order — the natural row-major flattening.
+    let mut out = dp.matmul(&cols, weights, b * h * wd, patch, cout);
+    for row in out.chunks_mut(cout) {
+        for (v, bb) in row.iter_mut().zip(bias) {
+            *v += bb;
+        }
+    }
+    out
+}
+
+/// 2x2 max pooling, NHWC.
+fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    for bi in 0..b {
+        for y in 0..oh {
+            for xx in 0..ow {
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let v = x[((bi * h + 2 * y + dy) * w + 2 * xx + dx) * c + ch];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out[((bi * oh + y) * ow + xx) * c + ch] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    ensure!(bytes.len() % 4 == 0, "{}: not a multiple of 4 bytes", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{library, EXACT_ID};
+
+    #[test]
+    fn bf16_round_known_values() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(0.0), 0.0);
+        // 1.00390625 = 1 + 2^-8 rounds to 1.0 in bf16 (RNE ties-to-even).
+        assert_eq!(bf16_round(1.00390625), 1.0);
+        // 1.0078125 = 1 + 2^-7 is exactly representable.
+        assert_eq!(bf16_round(1.0078125), 1.0078125);
+        assert_eq!(bf16_round(-2.5), -2.5);
+    }
+
+    #[test]
+    fn pow2_exact_matches_f64() {
+        for e in -250..=250 {
+            let got = pow2_exact(e) as f64;
+            let want = 2f64.powi(e);
+            // Representable range of f32 (incl. denormals handled by chain).
+            if (-126..=127).contains(&e) {
+                assert_eq!(got, want, "e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_datapath_matches_bf16_product() {
+        let lib = library();
+        let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+        let vals = [0.0f32, 1.0, -1.5, 0.3, 7.25, -100.0, 3.1415926, 1e-3];
+        for &a in &vals {
+            for &b in &vals {
+                let want = bf16_round(a) * bf16_round(b);
+                let got = dp.mul(a, b);
+                assert_eq!(got, want, "mul({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_exact_lut_matches_naive() {
+        let lib = library();
+        let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+        let a: Vec<f32> = (0..6).map(|i| i as f32 * 0.5 - 1.0).collect(); // 2x3
+        let b: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect(); // 3x4
+        let got = dp.matmul(&a, &b, 2, 3, 4);
+        for i in 0..2 {
+            for j in 0..4 {
+                let mut want = 0f32;
+                for k in 0..3 {
+                    want += bf16_round(a[i * 3 + k]) * bf16_round(b[k * 4 + j]);
+                }
+                assert!((got[i * 4 + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_datapath_underestimates_magnitude() {
+        let lib = library();
+        let trunc = lib.iter().find(|m| m.name() == "TRUNC4").unwrap();
+        let dp_t = ApproxDatapath::new(trunc);
+        let dp_e = ApproxDatapath::new(&lib[EXACT_ID]);
+        for (a, b) in [(1.7f32, 2.3f32), (0.9, -0.4), (-3.3, -1.1)] {
+            assert!(dp_t.mul(a, b).abs() <= dp_e.mul(a, b).abs() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn maxpool_hand_case() {
+        // 1x4x4x1 ascending values.
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let out = maxpool2(&x, 1, 4, 4, 1);
+        assert_eq!(out, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel_preserves_input() {
+        // 3x3 kernel with only the center tap = 1 reproduces the input.
+        let lib = library();
+        let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) * 0.125).collect(); // 1x4x4x1
+        let mut w = vec![0f32; 9];
+        w[4] = 1.0; // center (dy=1,dx=1)
+        let out = conv2d_same(&dp, &x, 1, 4, 4, 1, &w, &[0.0], 1);
+        for (got, want) in out.iter().zip(&x) {
+            assert!((got - bf16_round(*want)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Gate-level hardware-cost model (Synopsys-DC stand-in — DESIGN.md §6.2).
+//!
+//! Each multiplier reports the standard cells its structure uses; per-node
+//! cell parameters (area/energy/delay of a NAND2-equivalent) convert counts
+//! into um^2 / uW / ns. Cell parameters follow published std-cell-library
+//! trends (45nm open-cell era -> 14nm FinFET -> 7nm FinFET); what matters for
+//! the DSE is the *relative* ordering of designs within a node, which a gate
+//! model preserves by construction.
+
+use crate::area::TechNode;
+
+/// Standard-cell composition of a multiplier implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GateCounts {
+    /// Partial-product AND2 gates.
+    pub and2: u32,
+    /// Full adders (carry-save array + final row).
+    pub fa: u32,
+    /// Half adders.
+    pub ha: u32,
+    /// Misc cells (encoders, muxes, shifters, OR trees), NAND2-equivalents.
+    pub aux: u32,
+}
+
+/// NAND2-equivalent weights per cell type (industry rules of thumb:
+/// FA ~ 6 NAND2e, HA ~ 3, AND2 ~ 1.5).
+const W_AND2: f64 = 1.5;
+const W_FA: f64 = 6.0;
+const W_HA: f64 = 3.0;
+const W_AUX: f64 = 1.0;
+
+impl GateCounts {
+    /// Total NAND2-equivalent area units.
+    pub fn total_area_units(&self) -> f64 {
+        self.and2 as f64 * W_AND2
+            + self.fa as f64 * W_FA
+            + self.ha as f64 * W_HA
+            + self.aux as f64 * W_AUX
+    }
+
+    /// Critical-path length estimate in FA stages: array depth shrinks as
+    /// adder cells are removed (sqrt law over the reduction tree).
+    pub fn critical_path_stages(&self) -> f64 {
+        // Full 8x8 array: ~14 FA stages. Scale with the adder population.
+        let frac = (self.fa as f64 + 0.5 * self.ha as f64) / (48.0 + 0.5 * 8.0);
+        2.0 + 12.0 * frac.max(0.05).sqrt()
+    }
+
+    /// Convert to physical costs at a node.
+    pub fn hw_cost(&self, node: TechNode) -> HwCost {
+        let p = node.cell_params();
+        let units = self.total_area_units();
+        let area_um2 = units * p.nand2_area_um2;
+        // Dynamic power ~ switched cap ~ area; at the node's MAC clock.
+        let power_uw = units * p.nand2_dyn_pw_per_mhz * node.freq_mhz() / 1e6;
+        let delay_ns = self.critical_path_stages() * p.fo4_delay_ps / 1e3;
+        HwCost { area_um2, power_uw, delay_ns }
+    }
+}
+
+/// Physical cost of a circuit at a technology node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwCost {
+    pub area_um2: f64,
+    pub power_uw: f64,
+    pub delay_ns: f64,
+}
+
+/// Per-node standard-cell parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CellParams {
+    /// Area of a NAND2-equivalent, um^2.
+    pub nand2_area_um2: f64,
+    /// Dynamic power of a NAND2e in pW per MHz of toggle rate.
+    pub nand2_dyn_pw_per_mhz: f64,
+    /// FO4 inverter delay, ps.
+    pub fo4_delay_ps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::ApproxKind;
+
+    #[test]
+    fn exact_array_area_calibration_45nm() {
+        // The exact 8x8 array at 45nm should land in the EvoApprox
+        // mul8u ballpark (several hundred um^2).
+        let cost = ApproxKind::Exact.gate_counts().hw_cost(TechNode::N45);
+        assert!(
+            (300.0..1200.0).contains(&cost.area_um2),
+            "45nm exact 8x8 area {} um^2 out of ballpark",
+            cost.area_um2
+        );
+    }
+
+    #[test]
+    fn area_shrinks_with_node() {
+        let g = ApproxKind::Exact.gate_counts();
+        let a45 = g.hw_cost(TechNode::N45).area_um2;
+        let a14 = g.hw_cost(TechNode::N14).area_um2;
+        let a7 = g.hw_cost(TechNode::N7).area_um2;
+        assert!(a45 > a14 && a14 > a7);
+        // 45 -> 7nm should be >10x denser.
+        assert!(a45 / a7 > 10.0, "scaling {}", a45 / a7);
+    }
+
+    #[test]
+    fn delay_improves_with_node() {
+        let g = ApproxKind::Exact.gate_counts();
+        assert!(g.hw_cost(TechNode::N45).delay_ns > g.hw_cost(TechNode::N7).delay_ns);
+    }
+
+    #[test]
+    fn critical_path_shrinks_with_fewer_adders() {
+        let exact = ApproxKind::Exact.gate_counts().critical_path_stages();
+        let trunc = ApproxKind::Truncate(4).gate_counts().critical_path_stages();
+        assert!(trunc < exact);
+    }
+
+    #[test]
+    fn mitchell_is_much_smaller_than_exact() {
+        let e = ApproxKind::Exact.gate_counts().total_area_units();
+        let m = ApproxKind::Mitchell.gate_counts().total_area_units();
+        assert!(m < 0.5 * e, "mitchell {m} vs exact {e}");
+    }
+
+    #[test]
+    fn ordering_is_node_invariant() {
+        // Gate model => relative ordering identical across nodes.
+        let designs = [
+            ApproxKind::Exact,
+            ApproxKind::Truncate(2),
+            ApproxKind::Perforate(4),
+            ApproxKind::Mitchell,
+        ];
+        let order = |node: TechNode| {
+            let mut ids: Vec<usize> = (0..designs.len()).collect();
+            ids.sort_by(|&i, &j| {
+                designs[i]
+                    .gate_counts()
+                    .hw_cost(node)
+                    .area_um2
+                    .partial_cmp(&designs[j].gate_counts().hw_cost(node).area_um2)
+                    .unwrap()
+            });
+            ids
+        };
+        assert_eq!(order(TechNode::N45), order(TechNode::N14));
+        assert_eq!(order(TechNode::N14), order(TechNode::N7));
+    }
+}

@@ -1,0 +1,174 @@
+//! Exhaustive arithmetic-error characterization of multiplier designs.
+//!
+//! Same methodology as the EvoApprox datasheets: every metric is computed by
+//! enumerating the full input space (256x256 = 65536 pairs — microseconds),
+//! plus the bf16-significand subdomain [128,255]^2 that the MAC actually
+//! exercises (the paper's multipliers see only normalized significands).
+
+use super::models::ApproxKind;
+
+/// Error metrics of an approximate multiplier vs the exact product.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorMetrics {
+    // ---- full domain [0,255]^2 ----
+    /// Mean error distance E[|approx - exact|].
+    pub full_med: f64,
+    /// Mean relative error distance E[|approx - exact| / max(1, exact)].
+    pub full_mred: f64,
+    /// Worst-case absolute error.
+    pub full_wce: u32,
+    /// Probability of a non-zero error.
+    pub full_err_prob: f64,
+    // ---- significand domain [128,255]^2 (what the bf16 MAC sees) ----
+    pub sig_med: f64,
+    pub sig_mred: f64,
+    pub sig_wce: u32,
+    pub sig_err_prob: f64,
+    /// Signed mean error on the significand domain (bias; <0 = underestimates).
+    pub sig_bias: f64,
+}
+
+impl ErrorMetrics {
+    /// Exhaustively characterize a design.
+    pub fn exhaustive(kind: &ApproxKind) -> Self {
+        let mut full = Acc::default();
+        let mut sig = Acc::default();
+        for a in 0..=255u32 {
+            for b in 0..=255u32 {
+                let exact = a * b;
+                let approx = kind.mul(a as u8, b as u8);
+                full.push(exact, approx);
+                if a >= 128 && b >= 128 {
+                    sig.push(exact, approx);
+                }
+            }
+        }
+        Self {
+            full_med: full.med(),
+            full_mred: full.mred(),
+            full_wce: full.wce,
+            full_err_prob: full.err_prob(),
+            sig_med: sig.med(),
+            sig_mred: sig.mred(),
+            sig_wce: sig.wce,
+            sig_err_prob: sig.err_prob(),
+            sig_bias: sig.bias(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Acc {
+    n: u64,
+    sum_ed: f64,
+    sum_red: f64,
+    sum_signed: f64,
+    wce: u32,
+    n_err: u64,
+}
+
+impl Acc {
+    fn push(&mut self, exact: u32, approx: u32) {
+        self.n += 1;
+        let signed = approx as f64 - exact as f64;
+        let ed = signed.abs();
+        self.sum_ed += ed;
+        self.sum_signed += signed;
+        self.sum_red += ed / (exact.max(1) as f64);
+        let ed_u = (approx as i64 - exact as i64).unsigned_abs() as u32;
+        self.wce = self.wce.max(ed_u);
+        if ed_u != 0 {
+            self.n_err += 1;
+        }
+    }
+    fn med(&self) -> f64 {
+        self.sum_ed / self.n as f64
+    }
+    fn mred(&self) -> f64 {
+        self.sum_red / self.n as f64
+    }
+    fn bias(&self) -> f64 {
+        self.sum_signed / self.n as f64
+    }
+    fn err_prob(&self) -> f64 {
+        self.n_err as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_has_zero_error() {
+        let e = ErrorMetrics::exhaustive(&ApproxKind::Exact);
+        assert_eq!(e.full_med, 0.0);
+        assert_eq!(e.full_wce, 0);
+        assert_eq!(e.sig_err_prob, 0.0);
+        assert_eq!(e.sig_bias, 0.0);
+    }
+
+    #[test]
+    fn truncation_error_grows_with_k() {
+        let mut prev = -1.0;
+        for k in 1..=5 {
+            let e = ErrorMetrics::exhaustive(&ApproxKind::Truncate(k));
+            assert!(e.sig_mred > prev, "TRUNC{k} mred {} !> {prev}", e.sig_mred);
+            prev = e.sig_mred;
+        }
+    }
+
+    #[test]
+    fn perforation_error_grows_with_p() {
+        let mut prev = -1.0;
+        for p in 1..=7 {
+            let e = ErrorMetrics::exhaustive(&ApproxKind::Perforate(p));
+            assert!(e.sig_mred > prev);
+            prev = e.sig_mred;
+        }
+    }
+
+    #[test]
+    fn underestimating_designs_have_negative_bias() {
+        for kind in [
+            ApproxKind::Perforate(4),
+            ApproxKind::Truncate(3),
+            ApproxKind::BrokenArray(6),
+            ApproxKind::Mitchell,
+        ] {
+            let e = ErrorMetrics::exhaustive(&kind);
+            assert!(e.sig_bias < 0.0, "{kind:?} bias {}", e.sig_bias);
+        }
+    }
+
+    #[test]
+    fn sig_domain_wce_le_full_domain_wce() {
+        for kind in [
+            ApproxKind::Perforate(5),
+            ApproxKind::Truncate(4),
+            ApproxKind::Drum(4),
+            ApproxKind::OrCompress(5),
+        ] {
+            let e = ErrorMetrics::exhaustive(&kind);
+            assert!(e.sig_wce <= e.full_wce, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn mitchell_sig_mred_near_known_value() {
+        // Mitchell's mean relative error is ~3.8% over uniform inputs.
+        let e = ErrorMetrics::exhaustive(&ApproxKind::Mitchell);
+        assert!(
+            (0.01..0.08).contains(&e.sig_mred),
+            "mitchell sig_mred {}",
+            e.sig_mred
+        );
+    }
+
+    #[test]
+    fn drum_error_shrinks_with_k() {
+        let e3 = ErrorMetrics::exhaustive(&ApproxKind::Drum(3));
+        let e6 = ErrorMetrics::exhaustive(&ApproxKind::Drum(6));
+        assert!(e6.sig_mred < e3.sig_mred);
+    }
+}

@@ -1,0 +1,167 @@
+//! Approximate-multiplier library (EvoApprox8b stand-in — DESIGN.md §6.1).
+//!
+//! EvoApprox's role in the paper is a Pareto set of 8x8 unsigned multipliers
+//! over (silicon area, arithmetic error): the GA picks the most area-efficient
+//! design whose measured DNN accuracy drop fits the threshold δ (Eq. 7).
+//!
+//! We reproduce that role with bit-exact *behavioral* models spanning the
+//! same design families the library catalogs:
+//!   - partial-product perforation          (`Perforate`)
+//!   - operand truncation                   (`Truncate`)
+//!   - broken-array multipliers             (`BrokenArray`)
+//!   - OR-based lower-column compression    (`OrCompress`)
+//!   - log-domain: Mitchell and DRUM        (`Mitchell`, `Drum`)
+//!   - exact baseline                       (`Exact`)
+//!
+//! Hardware costs come from a gate-level cost model (`cost.rs`): each design
+//! reports the adder/AND cells its structure eliminates relative to the full
+//! 8x8 array, and per-node standard-cell parameters turn gate counts into
+//! area/power/delay at 45/14/7nm. Error metrics are computed *exhaustively*
+//! over the full 256x256 input space and over the bf16-significand domain
+//! [128,255]^2 actually exercised by the MAC (`error.rs`).
+
+pub mod cost;
+pub mod error;
+pub mod models;
+pub mod netlist;
+
+pub use cost::{GateCounts, HwCost};
+pub use error::ErrorMetrics;
+pub use models::{ApproxKind, Multiplier};
+
+use crate::area::TechNode;
+
+/// The full multiplier library (36 designs incl. the exact baseline).
+/// Deterministic order; `id` indexes into this vector.
+pub fn library() -> Vec<Multiplier> {
+    let mut designs: Vec<ApproxKind> = vec![ApproxKind::Exact];
+    for p in 1..=7 {
+        designs.push(ApproxKind::Perforate(p));
+    }
+    for k in 1..=5 {
+        designs.push(ApproxKind::Truncate(k));
+    }
+    for d in 2..=9 {
+        designs.push(ApproxKind::BrokenArray(d));
+    }
+    for t in 2..=8 {
+        designs.push(ApproxKind::OrCompress(t));
+    }
+    designs.push(ApproxKind::Mitchell);
+    for k in 3..=6 {
+        designs.push(ApproxKind::Drum(k));
+    }
+    // Hybrids: truncate + perforate (EvoApprox's evolved designs often
+    // combine independent simplifications).
+    designs.push(ApproxKind::TruncPerf(2, 3));
+    designs.push(ApproxKind::TruncPerf(3, 4));
+    designs.push(ApproxKind::TruncPerf(1, 5));
+
+    designs
+        .into_iter()
+        .enumerate()
+        .map(|(id, kind)| Multiplier::new(id, kind))
+        .collect()
+}
+
+/// Library entries that satisfy a mean-relative-error bound on the
+/// significand domain (coarse pre-filter before accuracy simulation).
+pub fn filter_by_mred(lib: &[Multiplier], max_mred: f64) -> Vec<usize> {
+    lib.iter()
+        .filter(|m| m.error.sig_mred <= max_mred)
+        .map(|m| m.id)
+        .collect()
+}
+
+/// The exact multiplier's id in `library()` (always 0).
+pub const EXACT_ID: usize = 0;
+
+/// Significand-product LUT (128x128, f32) for feeding the AOT kernel and the
+/// native evaluator: entry (i, j) = design(128+i, 128+j).
+pub fn lut_f32(m: &Multiplier) -> Vec<f32> {
+    let mut lut = Vec::with_capacity(128 * 128);
+    for i in 0..128u32 {
+        for j in 0..128u32 {
+            lut.push(m.mul((128 + i) as u8, (128 + j) as u8) as f32);
+        }
+    }
+    lut
+}
+
+/// Area of a multiplier at a node, in um^2 (convenience wrapper).
+pub fn area_um2(m: &Multiplier, node: TechNode) -> f64 {
+    m.hw_cost(node).area_um2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_is_deterministic_and_ids_sequential() {
+        let a = library();
+        let b = library();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.id, i);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.error.sig_mred, y.error.sig_mred);
+        }
+    }
+
+    #[test]
+    fn exact_is_first_and_error_free() {
+        let lib = library();
+        assert_eq!(lib[EXACT_ID].kind, ApproxKind::Exact);
+        assert_eq!(lib[EXACT_ID].error.sig_mred, 0.0);
+        assert_eq!(lib[EXACT_ID].error.full_wce, 0);
+    }
+
+    #[test]
+    fn all_approx_designs_are_smaller_than_exact() {
+        let lib = library();
+        let exact_area = area_um2(&lib[EXACT_ID], TechNode::N45);
+        for m in &lib[1..] {
+            let a = area_um2(m, TechNode::N45);
+            assert!(
+                a < exact_area,
+                "{} area {a} !< exact {exact_area}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mred_filter_monotone() {
+        let lib = library();
+        let strict = filter_by_mred(&lib, 0.001);
+        let loose = filter_by_mred(&lib, 0.1);
+        assert!(strict.len() <= loose.len());
+        for id in &strict {
+            assert!(loose.contains(id));
+        }
+        // The exact multiplier always qualifies.
+        assert!(strict.contains(&EXACT_ID));
+    }
+
+    #[test]
+    fn lut_matches_behavioral_model() {
+        let lib = library();
+        for m in [&lib[0], &lib[3], lib.last().unwrap()] {
+            let lut = lut_f32(m);
+            assert_eq!(lut.len(), 128 * 128);
+            for (i, j) in [(0u32, 0u32), (5, 9), (127, 127), (64, 1)] {
+                let want = m.mul((128 + i) as u8, (128 + j) as u8) as f32;
+                assert_eq!(lut[(i * 128 + j) as usize], want);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_lut_values() {
+        let lib = library();
+        let lut = lut_f32(&lib[EXACT_ID]);
+        assert_eq!(lut[0], (128.0 * 128.0) as f32);
+        assert_eq!(lut[128 * 128 - 1], (255.0 * 255.0) as f32);
+    }
+}

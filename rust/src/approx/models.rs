@@ -1,0 +1,453 @@
+//! Bit-exact behavioral models of 8x8 unsigned approximate multipliers.
+
+use super::cost::{GateCounts, HwCost};
+use super::error::ErrorMetrics;
+use crate::area::TechNode;
+
+/// Design family + parameter of an approximate 8x8 unsigned multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ApproxKind {
+    /// Exact 8x8 array multiplier (baseline).
+    Exact,
+    /// Partial-product perforation: the `p` least-significant partial-product
+    /// rows of operand `b` are dropped: a * (b & !(2^p - 1)).
+    Perforate(u32),
+    /// Operand truncation: the `k` LSBs of *both* operands are zeroed before
+    /// the exact multiply (removes AND rows and adder columns).
+    Truncate(u32),
+    /// Broken-array multiplier: all partial-product bits with column index
+    /// (i + j) < d are dropped (the carry-save array below the d-th
+    /// anti-diagonal is physically removed).
+    BrokenArray(u32),
+    /// Approximate compression: partial-product bits in columns < t are
+    /// combined with OR instead of full adders (no carries out of the low
+    /// columns). Models approximate 4:2-compressor designs.
+    OrCompress(u32),
+    /// Mitchell's logarithmic multiplier (piecewise-linear log/antilog).
+    Mitchell,
+    /// DRUM(k): dynamic-range unbiased multiplier — each operand keeps its
+    /// leading k bits (LSB of the kept window forced to 1 for unbiasing),
+    /// products of the reduced operands are shifted back.
+    Drum(u32),
+    /// Hybrid: truncate `k` LSBs of both operands, then perforate `p` rows.
+    TruncPerf(u32, u32),
+}
+
+/// A library entry: behavioral model + precomputed error metrics.
+#[derive(Debug, Clone)]
+pub struct Multiplier {
+    pub id: usize,
+    pub kind: ApproxKind,
+    pub error: ErrorMetrics,
+    gates: GateCounts,
+}
+
+impl Multiplier {
+    pub fn new(id: usize, kind: ApproxKind) -> Self {
+        let gates = kind.gate_counts();
+        let error = ErrorMetrics::exhaustive(&kind);
+        Self { id, kind, error, gates }
+    }
+
+    /// Canonical short name (used in reports and the CLI).
+    pub fn name(&self) -> String {
+        match self.kind {
+            ApproxKind::Exact => "EXACT".to_string(),
+            ApproxKind::Perforate(p) => format!("PERF{p}"),
+            ApproxKind::Truncate(k) => format!("TRUNC{k}"),
+            ApproxKind::BrokenArray(d) => format!("BAM{d}"),
+            ApproxKind::OrCompress(t) => format!("ORC{t}"),
+            ApproxKind::Mitchell => "MITCH".to_string(),
+            ApproxKind::Drum(k) => format!("DRUM{k}"),
+            ApproxKind::TruncPerf(k, p) => format!("T{k}P{p}"),
+        }
+    }
+
+    /// The behavioral model: approximate product of two u8 operands.
+    #[inline]
+    pub fn mul(&self, a: u8, b: u8) -> u32 {
+        self.kind.mul(a, b)
+    }
+
+    /// Gate counts of the implementation.
+    pub fn gates(&self) -> GateCounts {
+        self.gates
+    }
+
+    /// Area/power/delay at a technology node.
+    pub fn hw_cost(&self, node: TechNode) -> HwCost {
+        self.gates.hw_cost(node)
+    }
+}
+
+impl ApproxKind {
+    /// Bit-exact behavioral product.
+    #[inline]
+    pub fn mul(&self, a: u8, b: u8) -> u32 {
+        let (a, b) = (a as u32, b as u32);
+        match *self {
+            ApproxKind::Exact => a * b,
+            ApproxKind::Perforate(p) => a * (b & !((1u32 << p) - 1)),
+            ApproxKind::Truncate(k) => {
+                let m = !((1u32 << k) - 1);
+                (a & m) * (b & m)
+            }
+            ApproxKind::BrokenArray(d) => broken_array(a, b, d),
+            ApproxKind::OrCompress(t) => or_compress(a, b, t),
+            ApproxKind::Mitchell => mitchell(a, b),
+            ApproxKind::Drum(k) => drum(a, b, k),
+            ApproxKind::TruncPerf(k, p) => {
+                let m = !((1u32 << k) - 1);
+                (a & m) * ((b & m) & !((1u32 << p) - 1))
+            }
+        }
+    }
+
+    /// Gate-count structure of the design (see cost.rs for the area model).
+    pub fn gate_counts(&self) -> GateCounts {
+        // The exact 8x8 array: 64 partial-product AND2 gates and an adder
+        // array of 8 rows; carry-save reduction uses 48 full adders + 8 half
+        // adders plus a final 8-bit ripple (counted inside `adder_cells`).
+        let full = GateCounts { and2: 64, fa: 48, ha: 8, aux: 16 };
+        match *self {
+            ApproxKind::Exact => full,
+            ApproxKind::Perforate(p) => {
+                // p full rows of the array vanish: 8 AND gates and ~7 adder
+                // cells (FA) per row.
+                GateCounts {
+                    and2: full.and2 - 8 * p,
+                    fa: full.fa.saturating_sub(7 * p),
+                    ha: full.ha,
+                    aux: full.aux,
+                }
+            }
+            ApproxKind::Truncate(k) => {
+                // k LSB columns AND rows are removed from both operands:
+                // the (8-k)x(8-k) core remains.
+                let n = 8 - k;
+                GateCounts {
+                    and2: n * n,
+                    fa: (n.saturating_sub(1)) * (n.saturating_sub(2)) + n,
+                    ha: n.saturating_sub(1).max(1),
+                    aux: full.aux,
+                }
+            }
+            ApproxKind::BrokenArray(d) => {
+                // Cells on anti-diagonals < d are removed: d(d+1)/2 AND gates
+                // and a similar count of adder cells.
+                let removed = d * (d + 1) / 2;
+                GateCounts {
+                    and2: full.and2 - removed.min(32),
+                    fa: full.fa.saturating_sub(removed.min(40)),
+                    ha: full.ha,
+                    aux: full.aux,
+                }
+            }
+            ApproxKind::OrCompress(t) => {
+                // Columns < t replace their adder cells with OR trees: a
+                // column j < 8 has j+1 pp bits -> j OR2 gates instead of
+                // ~j FAs. OR2 is ~1/5 the area of a FA.
+                let freed_fa: u32 = (0..t).map(|j| j.min(7)).sum();
+                GateCounts {
+                    and2: full.and2,
+                    fa: full.fa.saturating_sub(freed_fa),
+                    ha: full.ha,
+                    aux: full.aux + freed_fa / 3, // the OR trees
+                }
+            }
+            ApproxKind::Mitchell => {
+                // LOD (8) + two 3-bit encoders + 8-bit shifter x2 + 12-bit
+                // adder + antilog shifter: far smaller than the array.
+                GateCounts { and2: 8, fa: 14, ha: 4, aux: 52 }
+            }
+            ApproxKind::Drum(k) => {
+                // LOD + two kxk cores + steering muxes + output shifter.
+                GateCounts {
+                    and2: k * k,
+                    fa: (k.saturating_sub(1)) * (k.saturating_sub(2)) + k,
+                    ha: k.max(1),
+                    aux: 40 + 4 * k,
+                }
+            }
+            ApproxKind::TruncPerf(k, p) => {
+                let n = 8 - k;
+                let t = GateCounts {
+                    and2: n * n,
+                    fa: (n.saturating_sub(1)) * (n.saturating_sub(2)) + n,
+                    ha: n.saturating_sub(1).max(1),
+                    aux: full.aux,
+                };
+                GateCounts {
+                    and2: t.and2.saturating_sub(n * p),
+                    fa: t.fa.saturating_sub((n.saturating_sub(1)) * p),
+                    ha: t.ha,
+                    aux: t.aux,
+                }
+            }
+        }
+    }
+}
+
+/// Broken-array: drop pp bits a_i & b_j where i + j < d.
+fn broken_array(a: u32, b: u32, d: u32) -> u32 {
+    let mut acc = 0u32;
+    for i in 0..8 {
+        if (a >> i) & 1 == 0 {
+            continue;
+        }
+        for j in 0..8 {
+            if (b >> j) & 1 == 1 && i + j >= d {
+                acc += 1 << (i + j);
+            }
+        }
+    }
+    acc
+}
+
+/// OR-compress: columns < t reduce their pp bits with OR (no carries);
+/// columns >= t are exact (including carries generated inside them).
+fn or_compress(a: u32, b: u32, t: u32) -> u32 {
+    // Exact part: products of pp bits in columns >= t.
+    let mut exact = 0u32;
+    let mut low_or = 0u32;
+    for i in 0..8 {
+        if (a >> i) & 1 == 0 {
+            continue;
+        }
+        for j in 0..8 {
+            if (b >> j) & 1 == 0 {
+                continue;
+            }
+            let col = i + j;
+            if col >= t {
+                exact += 1 << col;
+            } else {
+                low_or |= 1 << col;
+            }
+        }
+    }
+    // The OR'd low columns produce no carries into the exact part.
+    (exact & !((1u32 << t) - 1)) + low_or
+}
+
+/// Leading-one detector: index of the MSB set bit, or None for zero.
+fn lod(x: u32) -> Option<u32> {
+    if x == 0 {
+        None
+    } else {
+        Some(31 - x.leading_zeros())
+    }
+}
+
+/// Mitchell's logarithmic multiplier on 8-bit operands.
+fn mitchell(a: u32, b: u32) -> u32 {
+    let (ka, kb) = match (lod(a), lod(b)) {
+        (Some(ka), Some(kb)) => (ka, kb),
+        _ => return 0,
+    };
+    // log2(x) ~ k + frac where frac = (x - 2^k) / 2^k, kept in Q16.
+    let fa = ((a - (1 << ka)) << 16) >> ka;
+    let fb = ((b - (1 << kb)) << 16) >> kb;
+    let ksum = ka + kb;
+    let fsum = fa + fb;
+    // antilog: if frac sum overflows past 1.0, bump the exponent.
+    let (k, f) = if fsum >= (1 << 16) { (ksum + 1, fsum - (1 << 16)) } else { (ksum, fsum) };
+    // 2^(k + f) ~ 2^k * (1 + f)
+    let one_plus_f = (1u64 << 16) + f as u64; // Q16
+    ((one_plus_f << k) >> 16) as u32
+}
+
+/// DRUM(k): keep the k-bit window at each operand's leading one, force the
+/// window LSB to 1 (unbiasing), multiply the windows exactly, shift back.
+fn drum(a: u32, b: u32, k: u32) -> u32 {
+    let reduce = |x: u32| -> (u32, u32) {
+        match lod(x) {
+            None => (0, 0),
+            Some(m) if m < k => (x, 0), // small value: exact
+            Some(m) => {
+                let shift = m + 1 - k;
+                let win = (x >> shift) | 1; // forced LSB
+                (win, shift)
+            }
+        }
+    };
+    let (wa, sa) = reduce(a);
+    let (wb, sb) = reduce(b);
+    (wa * wb) << (sa + sb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_is_exact_exhaustively() {
+        for a in 0..=255u32 {
+            for b in 0..=255u32 {
+                assert_eq!(ApproxKind::Exact.mul(a as u8, b as u8), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn perforate_matches_masked_product() {
+        for p in 1..=7 {
+            let k = ApproxKind::Perforate(p);
+            for (a, b) in [(255u32, 255u32), (128, 129), (7, 200), (0, 91)] {
+                assert_eq!(k.mul(a as u8, b as u8), a * (b & !((1 << p) - 1)));
+            }
+        }
+    }
+
+    #[test]
+    fn truncate0_equals_exact() {
+        let k = ApproxKind::Truncate(0);
+        for (a, b) in [(255u8, 255u8), (13, 200), (0, 0)] {
+            assert_eq!(k.mul(a, b), a as u32 * b as u32);
+        }
+    }
+
+    #[test]
+    fn all_families_underestimate_or_equal_within_bound() {
+        // Perforate/Truncate/BrokenArray/TruncPerf strictly underestimate;
+        // OrCompress keeps low bits but drops carries so it also cannot
+        // exceed the exact product... (OR <= sum when both nonzero).
+        let kinds = [
+            ApproxKind::Perforate(3),
+            ApproxKind::Truncate(3),
+            ApproxKind::BrokenArray(5),
+            ApproxKind::OrCompress(4),
+            ApproxKind::TruncPerf(2, 3),
+        ];
+        for kind in kinds {
+            for a in (0..=255u32).step_by(3) {
+                for b in (0..=255u32).step_by(7) {
+                    assert!(
+                        kind.mul(a as u8, b as u8) <= a * b,
+                        "{kind:?} overestimates at ({a},{b})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mitchell_error_bound() {
+        // Mitchell's multiplier has a known worst-case relative error of
+        // ~11.1% (underestimation only).
+        for a in 1..=255u32 {
+            for b in 1..=255u32 {
+                let approx = mitchell(a, b) as f64;
+                let exact = (a * b) as f64;
+                let rel = (exact - approx) / exact;
+                assert!(
+                    (-1e-9..=0.1112).contains(&rel),
+                    "rel err {rel} out of Mitchell bound at ({a},{b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mitchell_exact_on_powers_of_two() {
+        for i in 0..8 {
+            for j in 0..8 {
+                let (a, b) = (1u32 << i, 1u32 << j);
+                assert_eq!(mitchell(a, b), a * b, "2^{i} * 2^{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn drum_small_values_exact() {
+        for k in 3..=6 {
+            let d = ApproxKind::Drum(k);
+            let lim = 1u32 << k;
+            for a in 0..lim.min(256) {
+                for b in 0..lim.min(256) {
+                    assert_eq!(d.mul(a as u8, b as u8), a * b, "DRUM{k} ({a},{b})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drum_relative_error_shrinks_with_k_and_is_bounded() {
+        // DRUM-k worst-case relative error ~ O(2^-(k-1)); assert the
+        // empirical max decreases with k and stays within a loose 2x bound.
+        let mut prev = f64::INFINITY;
+        for k in 3..=6u32 {
+            let d = ApproxKind::Drum(k);
+            let mut worst = 0f64;
+            for a in 1..=255u32 {
+                for b in 1..=255u32 {
+                    let approx = d.mul(a as u8, b as u8) as f64;
+                    let exact = (a * b) as f64;
+                    worst = worst.max(((approx - exact) / exact).abs());
+                }
+            }
+            let bound = 3.0 / ((1u64 << (k - 1)) as f64);
+            assert!(worst <= bound, "DRUM{k} worst {worst} > {bound}");
+            assert!(worst < prev, "DRUM{k} worst {worst} !< DRUM{} {prev}", k - 1);
+            prev = worst;
+        }
+    }
+
+    #[test]
+    fn zero_operands_give_zero_everywhere() {
+        let kinds = [
+            ApproxKind::Exact,
+            ApproxKind::Perforate(4),
+            ApproxKind::Truncate(3),
+            ApproxKind::BrokenArray(6),
+            ApproxKind::OrCompress(5),
+            ApproxKind::Mitchell,
+            ApproxKind::Drum(4),
+            ApproxKind::TruncPerf(2, 2),
+        ];
+        for kind in kinds {
+            for x in 0..=255u8 {
+                assert_eq!(kind.mul(0, x), 0, "{kind:?} mul(0,{x})");
+                assert_eq!(kind.mul(x, 0), 0, "{kind:?} mul({x},0)");
+            }
+        }
+    }
+
+    #[test]
+    fn broken_array_d0_equals_exact() {
+        for (a, b) in [(255u8, 255u8), (200, 13), (1, 1)] {
+            assert_eq!(broken_array(a as u32, b as u32, 0), a as u32 * b as u32);
+        }
+    }
+
+    #[test]
+    fn or_compress_t0_equals_exact_prop() {
+        prop::check("orc0-exact", 50, |rng| {
+            let a = rng.below(256) as u8;
+            let b = rng.below(256) as u8;
+            assert_eq!(or_compress(a as u32, b as u32, 0), a as u32 * b as u32);
+        });
+    }
+
+    #[test]
+    fn products_fit_16_bits_prop() {
+        let lib = super::super::library();
+        prop::check("fits-u16", 200, |rng| {
+            let m = &lib[rng.below(lib.len() as u64) as usize];
+            let a = rng.below(256) as u8;
+            let b = rng.below(256) as u8;
+            assert!(m.mul(a, b) <= u16::MAX as u32 + 1, "{} overflow", m.name());
+        });
+    }
+
+    #[test]
+    fn gate_counts_shrink_with_aggressiveness() {
+        let t1 = ApproxKind::Truncate(1).gate_counts().total_area_units();
+        let t4 = ApproxKind::Truncate(4).gate_counts().total_area_units();
+        assert!(t4 < t1);
+        let p1 = ApproxKind::Perforate(1).gate_counts().total_area_units();
+        let p6 = ApproxKind::Perforate(6).gate_counts().total_area_units();
+        assert!(p6 < p1);
+    }
+}

@@ -1,0 +1,183 @@
+//! Die-area composition for the 3D memory-on-logic accelerator (paper §III-A/C).
+//!
+//! Logic die (bottom): Px*Py PEs (MAC + local-buffer RF + PE control) plus
+//! array interconnect; in 2D designs the NoC between SRAM and PEs also lives
+//! here. Memory die (top): the global SRAM buffer plus hybrid-bond pad field.
+
+use super::mac::mac_area_um2;
+use super::node::TechNode;
+use super::sram::{rf_area_um2, sram_area_mm2};
+use crate::approx::Multiplier;
+
+/// Integration style: the paper's 3D memory-on-logic vs the 2D baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Integration {
+    TwoD,
+    ThreeD,
+}
+
+/// Per-PE control logic in NAND2-equivalents-derived um^2 (sequencer, operand
+/// regs outside the RF). A small constant per node — the MAC dominates the
+/// PE, per the paper's §III-C area analysis.
+fn pe_control_um2(node: TechNode) -> f64 {
+    30.0 * node.cell_params().nand2_area_um2
+}
+
+/// Areas of the dies making up one accelerator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DieAreas {
+    /// Logic die area, mm^2.
+    pub logic_mm2: f64,
+    /// Memory die area, mm^2 (zero for 2D, where the SRAM sits on the logic die).
+    pub memory_mm2: f64,
+    /// Package substrate area, mm^2.
+    pub package_mm2: f64,
+}
+
+impl DieAreas {
+    /// Total silicon area (mm^2) across dies.
+    pub fn silicon_mm2(&self) -> f64 {
+        self.logic_mm2 + self.memory_mm2
+    }
+
+    /// Footprint (mm^2): max die for 3D stacks, the single die for 2D.
+    pub fn footprint_mm2(&self) -> f64 {
+        self.logic_mm2.max(self.memory_mm2)
+    }
+}
+
+/// Logic-die area (mm^2): PE array + wiring overhead (+ NoC in 2D).
+pub fn logic_die_area_mm2(
+    px: usize,
+    py: usize,
+    rf_bytes: usize,
+    mult: &Multiplier,
+    node: TechNode,
+    integration: Integration,
+    sram_bytes: usize,
+) -> f64 {
+    let n_pe = (px * py) as f64;
+    let pe_um2 = mac_area_um2(mult, node) + rf_area_um2(rf_bytes, node) + pe_control_um2(node);
+    // Array wiring/whitespace overhead: 18% (place-and-route rule of thumb).
+    let array_mm2 = n_pe * pe_um2 / 1e6 * 1.18;
+    match integration {
+        Integration::ThreeD => {
+            // Hybrid-bond pad field adds ~3% to the logic die.
+            array_mm2 * 1.03
+        }
+        Integration::TwoD => {
+            // The global SRAM shares the die, connected by a NoC whose area
+            // grows with the array perimeter (router per column/row port).
+            let noc_mm2 =
+                0.3 * (px + py) as f64 * 900.0 * node.cell_params().nand2_area_um2 / 1e6;
+            let sram_mm2 = sram_area_mm2(sram_bytes, node);
+            array_mm2 + noc_mm2 + sram_mm2
+        }
+    }
+}
+
+/// Memory-die area (mm^2) for the 3D stack: global SRAM + bond pads.
+pub fn memory_die_area_mm2(sram_bytes: usize, node: TechNode) -> f64 {
+    sram_area_mm2(sram_bytes, node) * 1.05
+}
+
+/// Compose full die areas for an accelerator configuration.
+#[allow(clippy::too_many_arguments)]
+pub fn die_areas(
+    px: usize,
+    py: usize,
+    rf_bytes: usize,
+    sram_bytes: usize,
+    mult: &Multiplier,
+    node: TechNode,
+    integration: Integration,
+) -> DieAreas {
+    let logic = logic_die_area_mm2(px, py, rf_bytes, mult, node, integration, sram_bytes);
+    let memory = match integration {
+        Integration::ThreeD => memory_die_area_mm2(sram_bytes, node),
+        Integration::TwoD => 0.0,
+    };
+    // Package substrate: footprint + fan-out margin (TSV/BGA field). The
+    // substrate scales with the stack footprint for these mm^2-class edge
+    // dies (WLCSP-style), with a small fixed keep-out ring.
+    let footprint = logic.max(memory);
+    let package = footprint * 1.25 + 0.5;
+    DieAreas { logic_mm2: logic, memory_mm2: memory, package_mm2: package }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{library, EXACT_ID};
+    use crate::util::prop;
+
+    fn lib_exact() -> Multiplier {
+        library()[EXACT_ID].clone()
+    }
+
+    #[test]
+    fn three_d_logic_die_smaller_than_2d() {
+        // Moving the SRAM off-die must shrink the logic die.
+        let m = lib_exact();
+        let node = TechNode::N14;
+        let l3 = logic_die_area_mm2(16, 16, 512, &m, node, Integration::ThreeD, 1 << 20);
+        let l2 = logic_die_area_mm2(16, 16, 512, &m, node, Integration::TwoD, 1 << 20);
+        assert!(l3 < l2);
+    }
+
+    #[test]
+    fn three_d_footprint_below_2d_footprint() {
+        // The headline 3D benefit: smaller footprint at iso-resources.
+        let m = lib_exact();
+        let node = TechNode::N7;
+        let d3 = die_areas(16, 16, 512, 1 << 20, &m, node, Integration::ThreeD);
+        let d2 = die_areas(16, 16, 512, 1 << 20, &m, node, Integration::TwoD);
+        assert!(d3.footprint_mm2() < d2.footprint_mm2());
+    }
+
+    #[test]
+    fn area_scales_with_pe_count() {
+        let m = lib_exact();
+        let node = TechNode::N45;
+        let a8 = logic_die_area_mm2(8, 8, 512, &m, node, Integration::ThreeD, 1 << 20);
+        let a16 = logic_die_area_mm2(16, 16, 512, &m, node, Integration::ThreeD, 1 << 20);
+        let ratio = a16 / a8;
+        assert!((3.5..4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn approx_multiplier_shrinks_logic_die() {
+        // At Eyeriss-class local buffers (128B) the MAC dominates the PE
+        // (paper §III-C) and swapping the multiplier must cut the logic die
+        // by well over 10%.
+        let lib = library();
+        let node = TechNode::N14;
+        let exact = logic_die_area_mm2(32, 32, 128, &lib[EXACT_ID], node, Integration::ThreeD, 1 << 20);
+        let small = lib
+            .iter()
+            .map(|m| logic_die_area_mm2(32, 32, 128, m, node, Integration::ThreeD, 1 << 20))
+            .fold(f64::INFINITY, f64::min);
+        assert!(small < exact * 0.9, "best {small} vs exact {exact}");
+    }
+
+    #[test]
+    fn die_areas_positive_prop() {
+        let m = lib_exact();
+        prop::check("die-areas-positive", 40, |rng| {
+            let px = 1 << rng.range(2, 6);
+            let py = 1 << rng.range(2, 6);
+            let rf = 1 << rng.range(6, 11);
+            let sram = 1 << rng.range(16, 23);
+            for integration in [Integration::TwoD, Integration::ThreeD] {
+                let d = die_areas(px, py, rf, sram, &m, TechNode::N7, integration);
+                assert!(d.logic_mm2 > 0.0);
+                assert!(d.package_mm2 > d.footprint_mm2());
+                if integration == Integration::TwoD {
+                    assert_eq!(d.memory_mm2, 0.0);
+                } else {
+                    assert!(d.memory_mm2 > 0.0);
+                }
+            }
+        });
+    }
+}

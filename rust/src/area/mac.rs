@@ -1,0 +1,89 @@
+//! bfloat16 MAC-unit area composition (paper §III-C).
+//!
+//! Each MAC = mantissa multiplier (the approximated block) + two exact 8-bit
+//! exponent adders + exact 24-bit accumulator adder + normalization/rounding
+//! logic + pipeline registers. Only the multiplier is swapped by the DSE.
+
+use super::node::TechNode;
+use crate::approx::cost::GateCounts;
+use crate::approx::Multiplier;
+
+/// Gate counts of the fixed (never approximated) MAC blocks.
+fn fixed_blocks() -> GateCounts {
+    GateCounts {
+        and2: 0,
+        // two 8-bit ripple adders (16 FA) + 24-bit accumulator (24 FA)
+        fa: 16 + 24,
+        ha: 2,
+        // alignment shifter, normalization, rounding, sign logic, pipeline
+        // registers of the bf16 datapath (~70 NAND2-equivalents; the
+        // multiplier dominates the MAC, paper §III-C).
+        aux: 70,
+    }
+}
+
+/// Total MAC area (um^2) for a given mantissa multiplier at a node.
+pub fn mac_area_um2(mult: &Multiplier, node: TechNode) -> f64 {
+    let fixed = fixed_blocks().hw_cost(node).area_um2;
+    fixed + mult.hw_cost(node).area_um2
+}
+
+/// MAC dynamic power (uW) at the node clock.
+pub fn mac_power_uw(mult: &Multiplier, node: TechNode) -> f64 {
+    fixed_blocks().hw_cost(node).power_uw + mult.hw_cost(node).power_uw
+}
+
+/// Fraction of the MAC area occupied by the multiplier (the paper's
+/// motivation: multipliers dominate).
+pub fn multiplier_area_fraction(mult: &Multiplier, node: TechNode) -> f64 {
+    mult.hw_cost(node).area_um2 / mac_area_um2(mult, node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{library, EXACT_ID};
+
+    #[test]
+    fn multiplier_dominates_exact_mac() {
+        // Paper §III-C: the multiplier is the most area-intensive component.
+        let lib = library();
+        for node in crate::area::node::ALL_NODES {
+            let frac = multiplier_area_fraction(&lib[EXACT_ID], node);
+            assert!(frac > 0.4, "{}: multiplier fraction {frac}", node.name());
+        }
+    }
+
+    #[test]
+    fn approx_mac_smaller_than_exact_mac() {
+        let lib = library();
+        let node = TechNode::N14;
+        let exact = mac_area_um2(&lib[EXACT_ID], node);
+        for m in &lib[1..] {
+            assert!(mac_area_um2(m, node) < exact, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn mac_area_savings_bounded_by_multiplier_share() {
+        // Even the tiniest multiplier cannot shrink the MAC below the fixed
+        // blocks' area.
+        let lib = library();
+        let node = TechNode::N7;
+        let fixed = fixed_blocks().hw_cost(node).area_um2;
+        for m in &lib {
+            assert!(mac_area_um2(m, node) > fixed);
+        }
+    }
+
+    #[test]
+    fn power_positive_and_ordered() {
+        let lib = library();
+        let exact = mac_power_uw(&lib[EXACT_ID], TechNode::N45);
+        let small = lib
+            .iter()
+            .map(|m| mac_power_uw(m, TechNode::N45))
+            .fold(f64::INFINITY, f64::min);
+        assert!(small > 0.0 && small < exact);
+    }
+}

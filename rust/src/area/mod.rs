@@ -1,0 +1,15 @@
+//! Silicon-area models: technology nodes, CACTI-lite SRAM/RF, MAC and die
+//! composition (DESIGN.md §6.2/§6.4).
+//!
+//! The chip area is the dominant factor in embodied carbon (paper §III-C);
+//! everything in `carbon/` consumes areas produced here.
+
+pub mod die;
+pub mod mac;
+pub mod node;
+pub mod sram;
+
+pub use die::{logic_die_area_mm2, memory_die_area_mm2, DieAreas};
+pub use mac::mac_area_um2;
+pub use node::TechNode;
+pub use sram::{rf_area_um2, sram_area_mm2};

@@ -1,0 +1,159 @@
+//! Technology nodes evaluated by the paper: 45nm, 14nm, 7nm.
+//!
+//! Parameter sources (see DESIGN.md §6.5): 45nm open-cell-library era
+//! numbers anchor the EvoApprox calibration; 14/7nm follow published
+//! foundry density/FO4 trends and the ECO-CHIP / ACT carbon parameter
+//! tables. Clock frequencies are the paper's: 500 / 940 / 1050 MHz.
+
+use crate::approx::cost::CellParams;
+
+/// A fabrication technology node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TechNode {
+    N45,
+    N14,
+    N7,
+}
+
+pub const ALL_NODES: [TechNode; 3] = [TechNode::N45, TechNode::N14, TechNode::N7];
+
+impl TechNode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TechNode::N45 => "45nm",
+            TechNode::N14 => "14nm",
+            TechNode::N7 => "7nm",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "45" | "45nm" => Some(TechNode::N45),
+            "14" | "14nm" => Some(TechNode::N14),
+            "7" | "7nm" => Some(TechNode::N7),
+            _ => None,
+        }
+    }
+
+    /// MAC clock frequency (paper §IV): 500 / 940 / 1050 MHz.
+    pub fn freq_mhz(&self) -> f64 {
+        match self {
+            TechNode::N45 => 500.0,
+            TechNode::N14 => 940.0,
+            TechNode::N7 => 1050.0,
+        }
+    }
+
+    /// Standard-cell parameters (NAND2-equivalent).
+    pub fn cell_params(&self) -> CellParams {
+        match self {
+            // 45nm: NAND2 ~ 1.06um x 1.7um with routing overhead -> ~1.6um^2.
+            TechNode::N45 => CellParams {
+                nand2_area_um2: 1.60,
+                nand2_dyn_pw_per_mhz: 3.0,
+                fo4_delay_ps: 125.0,
+            },
+            // 14nm FinFET: ~10x logic density over 45nm.
+            TechNode::N14 => CellParams {
+                nand2_area_um2: 0.160,
+                nand2_dyn_pw_per_mhz: 0.9,
+                fo4_delay_ps: 62.0,
+            },
+            // 7nm FinFET: ~3x density over 14nm.
+            TechNode::N7 => CellParams {
+                nand2_area_um2: 0.054,
+                nand2_dyn_pw_per_mhz: 0.45,
+                fo4_delay_ps: 53.0,
+            },
+        }
+    }
+
+    /// 6T SRAM bit-cell area in um^2 (published foundry values:
+    /// 45nm ~0.35-0.37, 14nm ~0.064 (Intel 0.0588), 7nm ~0.027 (TSMC)).
+    pub fn sram_bitcell_um2(&self) -> f64 {
+        match self {
+            TechNode::N45 => 0.36,
+            TechNode::N14 => 0.064,
+            TechNode::N7 => 0.027,
+        }
+    }
+
+    /// Register-file bit-cell area (~1.2x the 6T cell for the small
+    /// single-port scratchpads Eyeriss-style PEs use).
+    pub fn rf_bitcell_um2(&self) -> f64 {
+        self.sram_bitcell_um2() * 1.2
+    }
+
+    /// Defect density D0 (defects/mm^2) for the Poisson yield model.
+    /// Advanced nodes have higher D0 (ECO-CHIP / industry ranges).
+    pub fn defect_density_per_mm2(&self) -> f64 {
+        match self {
+            TechNode::N45 => 0.0007,
+            TechNode::N14 => 0.0013,
+            TechNode::N7 => 0.0020,
+        }
+    }
+
+    /// Energy per unit area for wafer fabrication, kWh/cm^2 (ECO-CHIP/ACT
+    /// trend: more masks/EUV steps at smaller nodes).
+    pub fn epa_kwh_per_cm2(&self) -> f64 {
+        match self {
+            TechNode::N45 => 0.8,
+            TechNode::N14 => 1.5,
+            TechNode::N7 => 2.15,
+        }
+    }
+
+    /// Direct greenhouse-gas emissions from fab chemistry, kgCO2/cm^2.
+    pub fn gas_kgco2_per_cm2(&self) -> f64 {
+        match self {
+            TechNode::N45 => 0.10,
+            TechNode::N14 => 0.15,
+            TechNode::N7 => 0.20,
+        }
+    }
+
+    /// Raw-material procurement carbon, kgCO2/cm^2.
+    pub fn material_kgco2_per_cm2(&self) -> f64 {
+        match self {
+            TechNode::N45 => 0.28,
+            TechNode::N14 => 0.39,
+            TechNode::N7 => 0.50,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrip() {
+        for n in ALL_NODES {
+            assert_eq!(TechNode::from_name(n.name()), Some(n));
+        }
+        assert_eq!(TechNode::from_name("3nm"), None);
+    }
+
+    #[test]
+    fn paper_clock_frequencies() {
+        assert_eq!(TechNode::N45.freq_mhz(), 500.0);
+        assert_eq!(TechNode::N14.freq_mhz(), 940.0);
+        assert_eq!(TechNode::N7.freq_mhz(), 1050.0);
+    }
+
+    #[test]
+    fn density_monotone_in_node() {
+        assert!(TechNode::N45.cell_params().nand2_area_um2
+            > TechNode::N14.cell_params().nand2_area_um2);
+        assert!(TechNode::N14.cell_params().nand2_area_um2
+            > TechNode::N7.cell_params().nand2_area_um2);
+        assert!(TechNode::N45.sram_bitcell_um2() > TechNode::N7.sram_bitcell_um2());
+    }
+
+    #[test]
+    fn carbon_intensity_of_fab_grows_at_advanced_nodes() {
+        assert!(TechNode::N7.epa_kwh_per_cm2() > TechNode::N45.epa_kwh_per_cm2());
+        assert!(TechNode::N7.defect_density_per_mm2() > TechNode::N45.defect_density_per_mm2());
+    }
+}

@@ -1,0 +1,141 @@
+//! CACTI-lite: analytical SRAM / register-file area model (CACTI stand-in).
+//!
+//! CACTI decomposes a memory into banks -> subarrays of bit cells plus
+//! periphery (row decoders, wordline drivers, sense amps, column muxes,
+//! output drivers). The area trend it produces is:
+//!
+//!   A(bits) = bits * cell_area * array_efficiency^-1
+//!
+//! where array efficiency rises with capacity (periphery amortizes) and
+//! saturates around 70-80% for megabyte-class SRAMs, dropping steeply for
+//! small arrays. We model efficiency with the subarray decomposition
+//! directly, which reproduces CACTI's published area-vs-capacity curve
+//! shape per node (DESIGN.md §6.4).
+
+use super::node::TechNode;
+
+/// Bits per subarray (CACTI default-ish 512 rows x 512 cols is too large for
+/// small buffers; 256x256 balances decoder depth vs cell count).
+const SUBARRAY_BITS: f64 = 256.0 * 256.0;
+
+/// Periphery overhead of one subarray, in bit-cell equivalents:
+/// row decoder + wordline drivers ~ 2 cells/row, sense amps + column mux
+/// ~ 8 cells/column, plus fixed control.
+fn subarray_overhead_cells(rows: f64, cols: f64) -> f64 {
+    2.0 * rows + 8.0 * cols + 1500.0
+}
+
+/// SRAM macro area in mm^2 for a capacity in bytes at a node.
+pub fn sram_area_mm2(bytes: usize, node: TechNode) -> f64 {
+    assert!(bytes > 0, "sram_area_mm2: zero capacity");
+    let bits = bytes as f64 * 8.0;
+    let n_sub = (bits / SUBARRAY_BITS).ceil().max(1.0);
+    let rows = 256.0_f64.min((bits / n_sub).sqrt().ceil());
+    let cols = (bits / n_sub / rows).ceil();
+    let cells_per_sub = rows * cols + subarray_overhead_cells(rows, cols);
+    // Bank-level routing/control overhead: 8% + H-tree growing slowly with
+    // the number of subarrays.
+    let bank_factor = 1.08 + 0.02 * (n_sub.log2().max(0.0));
+    let total_cells = n_sub * cells_per_sub * bank_factor;
+    total_cells * node.sram_bitcell_um2() / 1e6
+}
+
+/// Register-file area in um^2 for a per-PE local buffer of `bytes`.
+/// RFs are flop/multi-port-cell based: bigger cells, higher periphery ratio
+/// at small sizes.
+pub fn rf_area_um2(bytes: usize, node: TechNode) -> f64 {
+    assert!(bytes > 0, "rf_area_um2: zero capacity");
+    let bits = bytes as f64 * 8.0;
+    // Decoder + read/write ports amortized: small RFs pay proportionally
+    // more (floor of ~25% overhead, shrinking to ~12% at 1KB+).
+    let overhead = 1.12 + 0.13 * (512.0 / (bits + 512.0));
+    bits * node.rf_bitcell_um2() * overhead
+}
+
+/// Array efficiency (cell area / total area) — exposed for tests and reports.
+pub fn array_efficiency(bytes: usize, node: TechNode) -> f64 {
+    let cell = bytes as f64 * 8.0 * node.sram_bitcell_um2() / 1e6;
+    cell / sram_area_mm2(bytes, node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let node = TechNode::N14;
+        let mut prev = 0.0;
+        for kb in [4usize, 16, 64, 256, 1024, 4096] {
+            let a = sram_area_mm2(kb * 1024, node);
+            assert!(a > prev, "{kb}KB: {a} !> {prev}");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn efficiency_rises_then_saturates() {
+        // Periphery amortizes from small to mid arrays; at multi-MB sizes
+        // the H-tree/banking overhead grows again but efficiency stays high.
+        let node = TechNode::N7;
+        let small = array_efficiency(2 * 1024, node);
+        let mid = array_efficiency(128 * 1024, node);
+        let big = array_efficiency(4 * 1024 * 1024, node);
+        assert!(small < mid, "{small} !< {mid}");
+        assert!((0.5..0.95).contains(&big), "big-array efficiency {big}");
+        assert!((0.5..0.95).contains(&mid), "mid-array efficiency {mid}");
+    }
+
+    #[test]
+    fn megabyte_sram_area_ballpark() {
+        // 1MB at 14nm: cell area alone = 8Mbit * 0.064um^2 ~ 0.54mm^2;
+        // with periphery we expect ~0.6-0.9mm^2 (CACTI-like).
+        let a = sram_area_mm2(1024 * 1024, TechNode::N14);
+        assert!((0.55..0.95).contains(&a), "1MB@14nm = {a} mm^2");
+    }
+
+    #[test]
+    fn node_scaling_follows_bitcell() {
+        let b = 256 * 1024;
+        let r45 = sram_area_mm2(b, TechNode::N45) / sram_area_mm2(b, TechNode::N7);
+        let cell_ratio = TechNode::N45.sram_bitcell_um2() / TechNode::N7.sram_bitcell_um2();
+        assert!((r45 / cell_ratio - 1.0).abs() < 0.25, "ratio {r45} vs cell {cell_ratio}");
+    }
+
+    #[test]
+    fn rf_area_scales_linearly_at_large_sizes() {
+        let node = TechNode::N45;
+        let a1 = rf_area_um2(512, node);
+        let a2 = rf_area_um2(1024, node);
+        let ratio = a2 / a1;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn rf_cell_bigger_than_sram_cell() {
+        // Same capacity: RF must be bigger than SRAM cells alone.
+        let bytes = 64 * 1024;
+        let rf = rf_area_um2(bytes, TechNode::N14) / 1e6;
+        let sram = sram_area_mm2(bytes, TechNode::N14);
+        assert!(rf > sram);
+    }
+
+    #[test]
+    fn area_superadditive_under_split_prop() {
+        // Building one big SRAM is never worse than two halves (periphery
+        // amortization) — property over random capacities.
+        prop::check("sram-superadd", 40, |rng| {
+            let bytes = rng.range(8 * 1024, 4 * 1024 * 1024);
+            let whole = sram_area_mm2(bytes, TechNode::N14);
+            let half = sram_area_mm2(bytes / 2, TechNode::N14);
+            assert!(whole <= 2.0 * half * 1.02, "bytes={bytes} {whole} vs {}", 2.0 * half);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        sram_area_mm2(0, TechNode::N45);
+    }
+}

@@ -1,0 +1,233 @@
+//! Embodied-carbon model for 2D/3D accelerators — paper §III-B, Eq. (1)-(5).
+//!
+//! C_embodied = C_die_logic + C_die_memory + C_bonding + C_packaging    (1)
+//! C_die      = CFPA * A_die + CFPA_Si * A_wasted                        (2)
+//! CFPA       = (CI_fab * EPA + C_gas + C_material) / Y                  (3)
+//! C_bonding  = CFPA_bonding * A_die                                     (4)
+//! C_packaging= CFPA_packaging * A_package                               (5)
+//!
+//! Fab parameters follow ACT [3] / ECO-CHIP [19] / 3D-Carbon [18] published
+//! ranges and the ISSCC'24 3D SoC prototype [10]; all approaches in every
+//! experiment share them, so comparisons are like-for-like (DESIGN.md §6.5).
+
+pub mod operational;
+pub mod wafer;
+pub mod yield_model;
+
+pub use wafer::{dies_per_wafer, wasted_area_per_die_mm2, WAFER_DIAMETER_MM};
+pub use yield_model::die_yield;
+
+use crate::area::die::{DieAreas, Integration};
+use crate::area::TechNode;
+
+/// Carbon intensity of the fab's electricity, kgCO2 per kWh.
+/// (Taiwan-grid-like value used across ACT studies.)
+pub const CI_FAB_KGCO2_PER_KWH: f64 = 0.5;
+
+/// Carbon cost per area of *wasted* silicon (dicing loss): raw wafer
+/// processing + material, amortized — gCO2/mm^2.
+pub const CFPA_SI_G_PER_MM2: f64 = 0.6;
+
+/// Hybrid-bonding carbon per bonded die area, gCO2/mm^2 (wafer thinning,
+/// pad planarization, F2F bonding steps — 3D-Carbon ballpark).
+pub const CFPA_BONDING_G_PER_MM2: f64 = 1.0;
+
+/// Packaging carbon per package-substrate area, gCO2/mm^2.
+/// TSV-based 3D packages pay extra etch/fill steps vs 2D flip-chip.
+pub const CFPA_PKG_2D_G_PER_MM2: f64 = 0.6;
+pub const CFPA_PKG_3D_G_PER_MM2: f64 = 1.0;
+
+/// SRAM-only memory dies need fewer mask/metal layers than logic dies;
+/// ECO-CHIP models them with a reduced per-area fab footprint.
+pub const MEMORY_DIE_EPA_FACTOR: f64 = 0.7;
+
+/// Hybrid-bonding stack yield: a failed bond scraps *both* known-good dies,
+/// so 3D die carbon is amortized over successful stacks ([6]'s "lower
+/// fabrication yields" of 3D integration).
+pub const BOND_YIELD: f64 = 0.97;
+
+/// Die process kind: logic dies pay the full per-area fab footprint; SRAM
+/// memory dies a reduced one (fewer masks/metal layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DieKind {
+    Logic,
+    Memory,
+}
+
+/// Carbon footprint per unit *good* die area at a node — Eq. (3) — gCO2/mm^2.
+/// `die_area_mm2` enters through yield Y(A).
+pub fn cfpa_g_per_mm2(node: TechNode, die_area_mm2: f64, kind: DieKind) -> f64 {
+    let epa_factor = match kind {
+        DieKind::Logic => 1.0,
+        DieKind::Memory => MEMORY_DIE_EPA_FACTOR,
+    };
+    // kgCO2/cm^2 terms.
+    let energy = CI_FAB_KGCO2_PER_KWH * node.epa_kwh_per_cm2() * epa_factor;
+    let raw_kg_per_cm2 = energy + node.gas_kgco2_per_cm2() * epa_factor + node.material_kgco2_per_cm2();
+    let y = die_yield(node, die_area_mm2);
+    // kg/cm^2 -> g/mm^2 : *1000 / 100
+    raw_kg_per_cm2 * 10.0 / y
+}
+
+/// Eq. (2): carbon of fabricating one die, gCO2 (fabrication + dicing waste).
+pub fn die_carbon_g(node: TechNode, die_area_mm2: f64, kind: DieKind) -> f64 {
+    if die_area_mm2 <= 0.0 {
+        return 0.0;
+    }
+    let fab = cfpa_g_per_mm2(node, die_area_mm2, kind) * die_area_mm2;
+    let waste = CFPA_SI_G_PER_MM2 * wasted_area_per_die_mm2(die_area_mm2);
+    fab + waste
+}
+
+/// Breakdown of the total embodied carbon, all in gCO2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CarbonBreakdown {
+    pub logic_die_g: f64,
+    pub memory_die_g: f64,
+    pub bonding_g: f64,
+    pub packaging_g: f64,
+}
+
+impl CarbonBreakdown {
+    /// Eq. (1): total embodied carbon, gCO2.
+    pub fn total_g(&self) -> f64 {
+        self.logic_die_g + self.memory_die_g + self.bonding_g + self.packaging_g
+    }
+}
+
+/// Eq. (1)-(5) for a full accelerator.
+pub fn embodied_carbon(
+    areas: &DieAreas,
+    node: TechNode,
+    integration: Integration,
+) -> CarbonBreakdown {
+    // 3D stacks amortize die carbon over bond yield: a failed bond scraps
+    // both known-good dies.
+    let stack_yield = match integration {
+        Integration::ThreeD => BOND_YIELD,
+        Integration::TwoD => 1.0,
+    };
+    let logic_die_g = die_carbon_g(node, areas.logic_mm2, DieKind::Logic) / stack_yield;
+    let memory_die_g = die_carbon_g(node, areas.memory_mm2, DieKind::Memory) / stack_yield;
+    let (bonding_g, pkg_rate) = match integration {
+        Integration::ThreeD => {
+            // Both bonded interfaces are the stack footprint.
+            (CFPA_BONDING_G_PER_MM2 * areas.footprint_mm2(), CFPA_PKG_3D_G_PER_MM2)
+        }
+        Integration::TwoD => (0.0, CFPA_PKG_2D_G_PER_MM2),
+    };
+    CarbonBreakdown {
+        logic_die_g,
+        memory_die_g,
+        bonding_g,
+        packaging_g: pkg_rate * areas.package_mm2,
+    }
+}
+
+/// Carbon efficiency in gCO2 per mm^2 of *package* area (Fig. 3's y-axis).
+pub fn carbon_per_mm2(breakdown: &CarbonBreakdown, areas: &DieAreas) -> f64 {
+    breakdown.total_g() / areas.package_mm2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn areas(logic: f64, memory: f64) -> DieAreas {
+        DieAreas { logic_mm2: logic, memory_mm2: memory, package_mm2: logic.max(memory) * 1.35 + 4.0 }
+    }
+
+    #[test]
+    fn cfpa_increases_at_advanced_nodes() {
+        // Per-area fab carbon grows toward 7nm (more EUV/mask steps).
+        let a = 20.0;
+        assert!(cfpa_g_per_mm2(TechNode::N7, a, DieKind::Logic) > cfpa_g_per_mm2(TechNode::N14, a, DieKind::Logic));
+        assert!(cfpa_g_per_mm2(TechNode::N14, a, DieKind::Logic) > cfpa_g_per_mm2(TechNode::N45, a, DieKind::Logic));
+    }
+
+    #[test]
+    fn cfpa_grows_with_die_area_via_yield() {
+        let node = TechNode::N7;
+        assert!(cfpa_g_per_mm2(node, 200.0, DieKind::Logic) > cfpa_g_per_mm2(node, 10.0, DieKind::Logic));
+    }
+
+    #[test]
+    fn die_carbon_superlinear_in_area() {
+        // Doubling area more than doubles carbon (yield term).
+        let node = TechNode::N7;
+        let c1 = die_carbon_g(node, 50.0, DieKind::Logic);
+        let c2 = die_carbon_g(node, 100.0, DieKind::Logic);
+        assert!(c2 > 2.0 * c1);
+    }
+
+    #[test]
+    fn three_d_carbon_exceeds_2d_at_iso_resources() {
+        // The paper's core 3D sustainability challenge: for the same
+        // accelerator resources (PEs + buffers), the 3D stack pays bonding
+        // and TSV packaging, exceeding the 2D design's embodied carbon.
+        // Checked through the real area pipeline (the memory die's reduced
+        // fab footprint does not offset the 3D overheads).
+        use crate::approx::{library, EXACT_ID};
+        let lib = library();
+        for node in crate::area::node::ALL_NODES {
+            for n_pes in [256usize, 1024] {
+                let px = (n_pes as f64).sqrt() as usize;
+                let mk = |integration| {
+                    crate::area::die::die_areas(
+                        px,
+                        n_pes / px,
+                        128,
+                        512 << 10,
+                        &lib[EXACT_ID],
+                        node,
+                        integration,
+                    )
+                };
+                let a2 = mk(Integration::TwoD);
+                let a3 = mk(Integration::ThreeD);
+                let c2 = embodied_carbon(&a2, node, Integration::TwoD).total_g();
+                let c3 = embodied_carbon(&a3, node, Integration::ThreeD).total_g();
+                assert!(c3 > c2, "{} {n_pes}PE: 3D {c3} !> 2D {c2}", node.name());
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_dies_help_yield_term() {
+        // Splitting silicon into two smaller dies improves per-die yield —
+        // the die-fab component alone must not grow.
+        let node = TechNode::N7;
+        let whole = die_carbon_g(node, 100.0, DieKind::Logic);
+        let split = 2.0 * die_carbon_g(node, 50.0, DieKind::Logic);
+        assert!(split < whole);
+    }
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let b = CarbonBreakdown { logic_die_g: 1.0, memory_die_g: 2.0, bonding_g: 3.0, packaging_g: 4.0 };
+        assert_eq!(b.total_g(), 10.0);
+    }
+
+    #[test]
+    fn carbon_positive_and_monotone_in_area_prop() {
+        prop::check("carbon-monotone", 60, |rng| {
+            let node = *rng.choice(&crate::area::node::ALL_NODES);
+            let a = rng.uniform(1.0, 150.0);
+            let delta = rng.uniform(0.5, 30.0);
+            let c_small = embodied_carbon(&areas(a, a * 0.4), node, Integration::ThreeD).total_g();
+            let c_big =
+                embodied_carbon(&areas(a + delta, (a + delta) * 0.4), node, Integration::ThreeD)
+                    .total_g();
+            assert!(c_small > 0.0);
+            assert!(c_big > c_small, "node {} a {a} delta {delta}", node.name());
+        });
+    }
+
+    #[test]
+    fn zero_memory_die_contributes_zero() {
+        let b = embodied_carbon(&areas(25.0, 0.0), TechNode::N45, Integration::TwoD);
+        assert_eq!(b.memory_die_g, 0.0);
+        assert_eq!(b.bonding_g, 0.0);
+    }
+}

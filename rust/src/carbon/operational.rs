@@ -1,0 +1,124 @@
+//! Operational carbon + lifetime totals (the §II discussion around [17]:
+//! embodied and operational emissions live on different scales and the
+//! paper therefore optimizes embodied carbon; this module quantifies the
+//! comparison for our reproduction instead of asserting it).
+
+use crate::area::TechNode;
+use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::energy::EnergyModel;
+use crate::dataflow::mapper::NetworkMapping;
+use crate::approx::Multiplier;
+
+/// Grid carbon intensity at the *deployment* site, kgCO2/kWh (world-average
+/// edge deployment; the fab's CI is a separate constant in `super`).
+pub const CI_USE_KGCO2_PER_KWH: f64 = 0.4;
+
+/// Device lifetime assumptions for edge AI (ACT-style): 3 years, duty-cycled
+/// inference.
+pub const LIFETIME_YEARS: f64 = 3.0;
+
+/// Operational-carbon summary for a deployment scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct OperationalCarbon {
+    pub energy_per_inference_j: f64,
+    pub inferences_per_day: f64,
+    pub lifetime_kwh: f64,
+    pub lifetime_gco2: f64,
+}
+
+/// Operational carbon over the device lifetime at a given inference rate.
+pub fn operational_carbon(
+    cfg: &AccelConfig,
+    mult: &Multiplier,
+    mapping: &NetworkMapping,
+    inferences_per_day: f64,
+) -> OperationalCarbon {
+    let em = EnergyModel::for_config(cfg, mult);
+    let e_inf = em.network_energy_j(mapping);
+    let days = LIFETIME_YEARS * 365.0;
+    let lifetime_j = e_inf * inferences_per_day * days;
+    let lifetime_kwh = lifetime_j / 3.6e6;
+    OperationalCarbon {
+        energy_per_inference_j: e_inf,
+        inferences_per_day,
+        lifetime_kwh,
+        lifetime_gco2: lifetime_kwh * CI_USE_KGCO2_PER_KWH * 1000.0,
+    }
+}
+
+/// Embodied share of the lifetime total: the paper's edge-device motivation
+/// is that this is large.
+pub fn embodied_share(embodied_g: f64, operational: &OperationalCarbon) -> f64 {
+    embodied_g / (embodied_g + operational.lifetime_gco2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::die::Integration;
+    use crate::approx::{library, EXACT_ID};
+    use crate::carbon::embodied_carbon;
+    use crate::dataflow::mapper::map_network;
+    use crate::dataflow::workloads::workload;
+
+    fn setup() -> (AccelConfig, NetworkMapping) {
+        let cfg = AccelConfig {
+            px: 32,
+            py: 32,
+            rf_bytes: 128,
+            sram_bytes: 512 << 10,
+            node: TechNode::N7,
+            integration: Integration::ThreeD,
+            mult_id: EXACT_ID,
+        };
+        let w = workload("resnet50").unwrap();
+        let m = map_network(&w, &cfg);
+        (cfg, m)
+    }
+
+    #[test]
+    fn lifetime_scales_linearly_with_rate() {
+        let lib = library();
+        let (cfg, m) = setup();
+        let a = operational_carbon(&cfg, &lib[EXACT_ID], &m, 1000.0);
+        let b = operational_carbon(&cfg, &lib[EXACT_ID], &m, 2000.0);
+        assert!((b.lifetime_gco2 / a.lifetime_gco2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn embodied_dominates_light_duty_edge_devices() {
+        // The paper's §I premise: for duty-cycled edge inference, embodied
+        // carbon is a significant (often dominant) share.
+        let lib = library();
+        let (cfg, m) = setup();
+        let areas = cfg.die_areas(&lib[EXACT_ID]);
+        let emb = embodied_carbon(&areas, cfg.node, cfg.integration).total_g();
+        // 10k inferences/day (a few per second duty-cycled).
+        let op = operational_carbon(&cfg, &lib[EXACT_ID], &m, 10_000.0);
+        let share = embodied_share(emb, &op);
+        assert!(share > 0.25, "embodied share {share} (emb {emb} g vs op {} g)", op.lifetime_gco2);
+    }
+
+    #[test]
+    fn heavy_duty_flips_toward_operational() {
+        let lib = library();
+        let (cfg, m) = setup();
+        let areas = cfg.die_areas(&lib[EXACT_ID]);
+        let emb = embodied_carbon(&areas, cfg.node, cfg.integration).total_g();
+        let light = operational_carbon(&cfg, &lib[EXACT_ID], &m, 1_000.0);
+        let heavy = operational_carbon(&cfg, &lib[EXACT_ID], &m, 3_000_000.0);
+        assert!(embodied_share(emb, &light) > embodied_share(emb, &heavy));
+        assert!(embodied_share(emb, &heavy) < 0.5);
+    }
+
+    #[test]
+    fn approx_mult_cuts_operational_energy_too() {
+        let lib = library();
+        let (mut cfg, m) = setup();
+        let t2p3 = lib.iter().find(|x| x.name() == "T2P3").unwrap();
+        let exact = operational_carbon(&cfg, &lib[EXACT_ID], &m, 10_000.0);
+        cfg.mult_id = t2p3.id;
+        let appx = operational_carbon(&cfg, t2p3, &m, 10_000.0);
+        assert!(appx.energy_per_inference_j < exact.energy_per_inference_j);
+    }
+}

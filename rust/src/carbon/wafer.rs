@@ -1,0 +1,78 @@
+//! Wafer geometry: dies-per-wafer and dicing waste (Eq. (2)'s A_wasted).
+
+/// Standard 300mm production wafer.
+pub const WAFER_DIAMETER_MM: f64 = 300.0;
+/// Edge exclusion ring (unusable rim).
+pub const EDGE_EXCLUSION_MM: f64 = 3.0;
+/// Saw-street (kerf) width between dies.
+pub const KERF_MM: f64 = 0.1;
+
+/// Usable wafer area, mm^2.
+pub fn usable_wafer_area_mm2() -> f64 {
+    let r = WAFER_DIAMETER_MM / 2.0 - EDGE_EXCLUSION_MM;
+    std::f64::consts::PI * r * r
+}
+
+/// Gross dies per wafer for a square-ish die of `die_area_mm2`.
+/// Uses the standard DPW formula with edge-loss correction:
+///   DPW = pi*r^2/A - pi*d/sqrt(2A)
+pub fn dies_per_wafer(die_area_mm2: f64) -> f64 {
+    assert!(die_area_mm2 > 0.0, "dies_per_wafer: non-positive area");
+    let side = die_area_mm2.sqrt() + KERF_MM;
+    let a = side * side;
+    let d = WAFER_DIAMETER_MM - 2.0 * EDGE_EXCLUSION_MM;
+    let dpw = std::f64::consts::PI * d * d / (4.0 * a)
+        - std::f64::consts::PI * d / (2.0 * a).sqrt();
+    dpw.max(1.0)
+}
+
+/// Wasted silicon attributed to each die (Eq. (2)'s A_wasted / DPW):
+/// the unused wafer area (edge partials + kerf) divided among good dies.
+pub fn wasted_area_per_die_mm2(die_area_mm2: f64) -> f64 {
+    let dpw = dies_per_wafer(die_area_mm2);
+    let used = dpw * die_area_mm2;
+    ((usable_wafer_area_mm2() - used) / dpw).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn small_dies_yield_many_per_wafer() {
+        // 10mm^2 die on 300mm wafer: several thousand dies.
+        let dpw = dies_per_wafer(10.0);
+        assert!((3000.0..7000.0).contains(&dpw), "dpw {dpw}");
+    }
+
+    #[test]
+    fn dpw_decreases_with_die_area() {
+        let mut prev = f64::INFINITY;
+        for a in [5.0, 20.0, 80.0, 320.0] {
+            let dpw = dies_per_wafer(a);
+            assert!(dpw < prev);
+            prev = dpw;
+        }
+    }
+
+    #[test]
+    fn waste_fraction_grows_for_large_dies() {
+        // Larger dies waste proportionally more of the wafer (edge partials).
+        let frac = |a: f64| wasted_area_per_die_mm2(a) / a;
+        assert!(frac(400.0) > frac(10.0));
+    }
+
+    #[test]
+    fn used_area_below_wafer_area_prop() {
+        prop::check("wafer-conservation", 60, |rng| {
+            let a = rng.uniform(1.0, 600.0);
+            let used = dies_per_wafer(a) * a;
+            assert!(
+                used <= usable_wafer_area_mm2() * 1.001,
+                "area {a}: used {used} exceeds wafer"
+            );
+            assert!(wasted_area_per_die_mm2(a) >= 0.0);
+        });
+    }
+}

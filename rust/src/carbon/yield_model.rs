@@ -1,0 +1,81 @@
+//! Die-yield model: Poisson defect model Y = exp(-D0 * A).
+//!
+//! D0 is the node's defect density (defects/mm^2, see `TechNode`); A is the
+//! die area. The paper's Eq. (3) divides the per-area fab carbon by Y, so
+//! larger dies at advanced nodes pay a superlinear carbon penalty — exactly
+//! the lever the approximate multipliers pull.
+
+use crate::area::TechNode;
+
+/// Poisson yield for a die of `area_mm2` at `node`. Clamped to a small
+/// positive floor so pathological areas never divide by zero.
+pub fn die_yield(node: TechNode, area_mm2: f64) -> f64 {
+    assert!(area_mm2 >= 0.0, "negative die area");
+    (-node.defect_density_per_mm2() * area_mm2).exp().max(1e-6)
+}
+
+/// Murphy's yield model (alternative used by some fabs); exposed for the
+/// sensitivity ablation in benches/ablation.rs.
+pub fn die_yield_murphy(node: TechNode, area_mm2: f64) -> f64 {
+    assert!(area_mm2 >= 0.0);
+    let d0a = node.defect_density_per_mm2() * area_mm2;
+    if d0a < 1e-12 {
+        return 1.0;
+    }
+    let inner = (1.0 - (-d0a).exp()) / d0a;
+    (inner * inner).max(1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn yield_is_one_at_zero_area() {
+        for node in crate::area::node::ALL_NODES {
+            assert!((die_yield(node, 0.0) - 1.0).abs() < 1e-12);
+            assert!((die_yield_murphy(node, 0.0) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn yield_decreases_with_area() {
+        let node = TechNode::N7;
+        let mut prev = 1.1;
+        for a in [1.0, 10.0, 50.0, 200.0, 800.0] {
+            let y = die_yield(node, a);
+            assert!(y < prev);
+            assert!(y > 0.0);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn advanced_nodes_yield_worse_at_same_area() {
+        let a = 80.0;
+        assert!(die_yield(TechNode::N7, a) < die_yield(TechNode::N14, a));
+        assert!(die_yield(TechNode::N14, a) < die_yield(TechNode::N45, a));
+    }
+
+    #[test]
+    fn murphy_at_least_poisson() {
+        // Murphy's model is known to be more optimistic than Poisson.
+        prop::check("murphy>=poisson", 50, |rng| {
+            let node = *rng.choice(&crate::area::node::ALL_NODES);
+            let a = rng.uniform(0.0, 500.0);
+            assert!(die_yield_murphy(node, a) >= die_yield(node, a) - 1e-12);
+        });
+    }
+
+    #[test]
+    fn yields_in_unit_interval_prop() {
+        prop::check("yield-unit", 50, |rng| {
+            let node = *rng.choice(&crate::area::node::ALL_NODES);
+            let a = rng.uniform(0.0, 2000.0);
+            for y in [die_yield(node, a), die_yield_murphy(node, a)] {
+                assert!((0.0..=1.0).contains(&y), "y={y} a={a}");
+            }
+        });
+    }
+}

@@ -1,0 +1,202 @@
+//! Baselines the paper compares against (§IV):
+//!  - GA-CDP-EXACT: Byun et al. [6]-style CDP optimization of the 3D design
+//!    *without* approximate computing (multiplier gene pinned to EXACT).
+//!  - 2D-Exact / 3D-Exact / 3D-Appx: NVDLA-like fixed scalings, PE counts
+//!    64..2048 in powers of two, buffers scaled per NVIDIA's published
+//!    ratios [28].
+
+use crate::accuracy::model::{feasible_multipliers, DEFAULT_K};
+use crate::approx::{Multiplier, EXACT_ID};
+use crate::area::die::Integration;
+use crate::area::TechNode;
+use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::workloads::Workload;
+use crate::ga::fitness::{evaluate, Evaluation, FitnessCtx};
+use crate::ga::{Chromosome, Ga, GaParams, GaResult, SearchSpace};
+
+/// The four §IV-B design approaches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Approach {
+    TwoDExact,
+    ThreeDExact,
+    ThreeDAppx,
+    GaAppxCdp,
+}
+
+impl Approach {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Approach::TwoDExact => "2D-Exact",
+            Approach::ThreeDExact => "3D-Exact",
+            Approach::ThreeDAppx => "3D-Appx",
+            Approach::GaAppxCdp => "GA-APPX-CDP",
+        }
+    }
+
+    pub fn integration(&self) -> Integration {
+        match self {
+            Approach::TwoDExact => Integration::TwoD,
+            _ => Integration::ThreeD,
+        }
+    }
+}
+
+/// NVDLA-like configuration for a PE budget: square-ish array, local buffer
+/// fixed at 512B/PE, global SRAM scaled with the MAC count (NVDLA's CBUF is
+/// 512KB for the 2048-MAC full config -> 256B per MAC).
+pub fn nvdla_like_config(
+    n_pes: usize,
+    node: TechNode,
+    integration: Integration,
+    mult_id: usize,
+) -> AccelConfig {
+    assert!(n_pes.is_power_of_two(), "NVDLA scaling uses power-of-two PE counts");
+    let px = 1usize << (n_pes.trailing_zeros() / 2);
+    let py = n_pes / px;
+    AccelConfig {
+        px,
+        py,
+        rf_bytes: 512,
+        sram_bytes: (n_pes * 256).max(64 << 10),
+        node,
+        integration,
+        mult_id,
+    }
+}
+
+/// Evaluate an NVDLA-like sweep (64..=2048 PEs) for an approach.
+/// For `ThreeDAppx`, the most area-efficient multiplier meeting δ=3% is used
+/// (the paper's §IV-B setting).
+pub fn sweep_nvdla(
+    approach: Approach,
+    workload: &Workload,
+    node: TechNode,
+    library: &[Multiplier],
+) -> Vec<(AccelConfig, Evaluation)> {
+    assert!(approach != Approach::GaAppxCdp, "GA points come from ga_appx_cdp_fps");
+    let mult_id = match approach {
+        Approach::ThreeDAppx => smallest_feasible_mult(library, workload, 3.0),
+        _ => EXACT_ID,
+    };
+    let mut out = Vec::new();
+    let mut n = 64usize;
+    while n <= 2048 {
+        let cfg = nvdla_like_config(n, node, approach.integration(), mult_id);
+        let chrom = Chromosome {
+            px: cfg.px,
+            py: cfg.py,
+            rf_bytes: cfg.rf_bytes,
+            sram_bytes: cfg.sram_bytes,
+            mult_id,
+        };
+        let eval = evaluate(&chrom, workload, node, approach.integration(), library, None);
+        out.push((cfg, eval));
+        n *= 2;
+    }
+    out
+}
+
+/// Most area-efficient multiplier whose predicted ΔA fits δ.
+pub fn smallest_feasible_mult(library: &[Multiplier], workload: &Workload, delta_pct: f64) -> usize {
+    let feasible = feasible_multipliers(library, workload, delta_pct, DEFAULT_K);
+    feasible
+        .into_iter()
+        .min_by(|&a, &b| {
+            library[a]
+                .gates()
+                .total_area_units()
+                .partial_cmp(&library[b].gates().total_area_units())
+                .unwrap()
+        })
+        .expect("feasible set is never empty (contains EXACT)")
+}
+
+/// The [6]-style baseline: same GA/space/objective, exact multiplier only.
+pub fn ga_cdp_exact(
+    workload: &Workload,
+    node: TechNode,
+    library: &[Multiplier],
+    fps_floor: Option<f64>,
+    params: GaParams,
+) -> GaResult {
+    let space = SearchSpace::standard(vec![EXACT_ID]);
+    let mut ctx = FitnessCtx::new(workload, node, Integration::ThreeD, library, fps_floor);
+    let mut r = Ga::new(space, params).run(&mut ctx);
+    super::refine_to_min_carbon(&mut r, &ctx);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::library;
+    use crate::dataflow::workloads::workload;
+
+    #[test]
+    fn nvdla_config_square_ish() {
+        let c = nvdla_like_config(64, TechNode::N14, Integration::ThreeD, EXACT_ID);
+        assert_eq!(c.px * c.py, 64);
+        assert_eq!(c.px, 8);
+        let c2 = nvdla_like_config(2048, TechNode::N14, Integration::ThreeD, EXACT_ID);
+        assert_eq!(c2.px * c2.py, 2048);
+        assert!(c2.px == 32 && c2.py == 64);
+        assert_eq!(c2.sram_bytes, 2048 * 256);
+    }
+
+    #[test]
+    fn sweep_covers_64_to_2048() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let pts = sweep_nvdla(Approach::ThreeDExact, &w, TechNode::N14, &lib);
+        assert_eq!(pts.len(), 6); // 64,128,256,512,1024,2048
+        // FPS grows with PE count.
+        for pair in pts.windows(2) {
+            assert!(pair[1].1.fps > pair[0].1.fps);
+        }
+    }
+
+    #[test]
+    fn three_d_exact_faster_but_dirtier_than_2d() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let p2 = sweep_nvdla(Approach::TwoDExact, &w, TechNode::N7, &lib);
+        let p3 = sweep_nvdla(Approach::ThreeDExact, &w, TechNode::N7, &lib);
+        for (a, b) in p2.iter().zip(&p3) {
+            assert!(b.1.fps >= a.1.fps, "3D not faster at {} PEs", a.0.n_pes());
+            assert!(
+                b.1.carbon_per_mm2 > a.1.carbon_per_mm2,
+                "3D not carbon-denser at {} PEs",
+                a.0.n_pes()
+            );
+        }
+    }
+
+    #[test]
+    fn appx_sweep_cuts_carbon_vs_exact_3d() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let pe = sweep_nvdla(Approach::ThreeDExact, &w, TechNode::N14, &lib);
+        let pa = sweep_nvdla(Approach::ThreeDAppx, &w, TechNode::N14, &lib);
+        for (e, a) in pe.iter().zip(&pa) {
+            assert!(a.1.carbon_g < e.1.carbon_g, "at {} PEs", e.0.n_pes());
+            assert_eq!(a.1.delay_s, e.1.delay_s); // same array & buffers
+        }
+    }
+
+    #[test]
+    fn smallest_feasible_is_not_exact_at_3pct() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let id = smallest_feasible_mult(&lib, &w, 3.0);
+        assert_ne!(id, EXACT_ID, "3% should admit an approximate design");
+        assert!(
+            lib[id].gates().total_area_units() < lib[EXACT_ID].gates().total_area_units()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        nvdla_like_config(100, TechNode::N45, Integration::TwoD, EXACT_ID);
+    }
+}

@@ -1,0 +1,177 @@
+//! Figure 2 pipeline: normalized inference delay and embodied carbon across
+//! technology nodes (45/14/7nm), accuracy thresholds (1/2/3%) and the five
+//! CNNs, GA-APPX-CDP vs the GA-CDP-EXACT baseline [6].
+
+use crate::approx::Multiplier;
+use crate::area::node::ALL_NODES;
+use crate::area::TechNode;
+use crate::dataflow::workloads::workload;
+use crate::ga::{GaParams, GaResult};
+use crate::util::{table, Table};
+
+use super::{ga_appx_min_carbon, ga_cdp_exact};
+
+/// One cell of Fig. 2: a (node, model, δ) GA result normalized to baseline.
+#[derive(Debug, Clone)]
+pub struct Fig2Cell {
+    pub node: TechNode,
+    pub model: String,
+    pub delta_pct: f64,
+    pub norm_delay: f64,
+    pub norm_carbon: f64,
+    pub mult_name: String,
+    pub best: GaResult,
+}
+
+/// Full Fig. 2 data.
+#[derive(Debug, Clone)]
+pub struct Fig2Result {
+    pub cells: Vec<Fig2Cell>,
+    /// (node, model) -> baseline absolute (delay_s, carbon_g).
+    pub baselines: Vec<(TechNode, String, f64, f64)>,
+}
+
+pub const FIG2_MODELS: [&str; 5] = ["vgg16", "vgg19", "resnet50", "resnet50v2", "densenet121"];
+pub const FIG2_DELTAS: [f64; 3] = [1.0, 2.0, 3.0];
+
+/// Run the full Fig. 2 grid. `models` defaults to the paper's five CNNs.
+pub fn run_fig2(
+    library: &[Multiplier],
+    models: &[&str],
+    params: GaParams,
+) -> Fig2Result {
+    let mut cells = Vec::new();
+    let mut baselines = Vec::new();
+    for &node in &ALL_NODES {
+        for &model in models {
+            let w = workload(model).unwrap_or_else(|| panic!("unknown workload {model}"));
+            // Baseline: [6]-style CDP GA without approximation.
+            let base = ga_cdp_exact(&w, node, library, None, params);
+            let (bd, bc) = (base.best_eval.delay_s, base.best_eval.carbon_g);
+            baselines.push((node, model.to_string(), bd, bc));
+            // GA-APPX-CDP constrained to the baseline's performance, then
+            // polished to the minimum-carbon feasible design (the paper's
+            // "lower embodied carbon while maintaining competitive
+            // performance" — the same constrained methodology §IV-B makes
+            // explicit with FPS targets). Without the floor the CDP optimum
+            // may legally trade carbon *up* for delay, which is not the
+            // comparison Fig. 2 reports.
+            let fps_floor = base.best_eval.fps * 0.999;
+            for &delta in &FIG2_DELTAS {
+                // Seed varies per cell for independent searches.
+                let cell_params = GaParams {
+                    seed: params
+                        .seed
+                        .wrapping_add((delta as u64) << 8)
+                        .wrapping_add(node as u64)
+                        .wrapping_add(model.len() as u64),
+                    ..params
+                };
+                let r = ga_appx_min_carbon(
+                    &w,
+                    node,
+                    library,
+                    delta,
+                    fps_floor,
+                    cell_params,
+                    Some(&base.best),
+                );
+                cells.push(Fig2Cell {
+                    node,
+                    model: model.to_string(),
+                    delta_pct: delta,
+                    norm_delay: r.best_eval.delay_s / bd,
+                    norm_carbon: r.best_eval.carbon_g / bc,
+                    mult_name: library[r.best.mult_id].name(),
+                    best: r,
+                });
+            }
+        }
+    }
+    Fig2Result { cells, baselines }
+}
+
+impl Fig2Result {
+    /// Render the figure as a table (rows = the paper's bar groups).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "node", "model", "delta", "norm_delay", "norm_carbon", "carbon_cut_%", "mult",
+        ]);
+        for c in &self.cells {
+            t.row(vec![
+                c.node.name().to_string(),
+                c.model.clone(),
+                format!("{}%", c.delta_pct),
+                table::fmt(c.norm_delay),
+                table::fmt(c.norm_carbon),
+                format!("{:.1}", (1.0 - c.norm_carbon) * 100.0),
+                c.mult_name.clone(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Max carbon reduction (%) at a node across models/deltas.
+    pub fn max_carbon_cut_pct(&self, node: TechNode) -> f64 {
+        self.cells
+            .iter()
+            .filter(|c| c.node == node)
+            .map(|c| (1.0 - c.norm_carbon) * 100.0)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Mean carbon reduction (%) at a node and δ.
+    pub fn mean_carbon_cut_pct(&self, node: TechNode, delta: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .cells
+            .iter()
+            .filter(|c| c.node == node && c.delta_pct == delta)
+            .map(|c| (1.0 - c.norm_carbon) * 100.0)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::library;
+
+    /// Small GA budget keeps the test minutes-fast while preserving the
+    /// paper's qualitative shape.
+    fn quick_params() -> GaParams {
+        GaParams { population: 20, generations: 12, patience: 6, seed: 42, ..Default::default() }
+    }
+
+    #[test]
+    fn fig2_single_model_shape() {
+        let lib = library();
+        let r = run_fig2(&lib, &["resnet50"], quick_params());
+        assert_eq!(r.cells.len(), 3 * 3); // 3 nodes x 3 deltas
+        for c in &r.cells {
+            // GA-APPX-CDP must never exceed baseline carbon (the exact
+            // multiplier is in its gene pool).
+            assert!(
+                c.norm_carbon <= 1.02,
+                "{} {} δ{}: norm carbon {}",
+                c.node.name(),
+                c.model,
+                c.delta_pct,
+                c.norm_carbon
+            );
+            assert!(c.norm_delay > 0.0 && c.norm_delay < 3.0);
+        }
+    }
+
+    #[test]
+    fn looser_delta_never_hurts_carbon() {
+        let lib = library();
+        let r = run_fig2(&lib, &["vgg16"], quick_params());
+        for &node in &ALL_NODES {
+            let cut1 = r.mean_carbon_cut_pct(node, 1.0);
+            let cut3 = r.mean_carbon_cut_pct(node, 3.0);
+            // δ=3% has a superset gene pool; allow small GA noise.
+            assert!(cut3 >= cut1 - 3.0, "{}: cut1 {cut1} cut3 {cut3}", node.name());
+        }
+    }
+}

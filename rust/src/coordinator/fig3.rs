@@ -1,0 +1,178 @@
+//! Figure 3 pipeline: embodied-carbon efficiency (gCO2/mm^2) vs performance
+//! (FPS) for VGG16 across nodes; 2D-Exact / 3D-Exact / 3D-Appx NVDLA-like
+//! sweeps (64..2048 PEs) plus GA-APPX-CDP points at the paper's FPS targets.
+
+use crate::approx::Multiplier;
+use crate::area::node::ALL_NODES;
+use crate::area::TechNode;
+use crate::dataflow::workloads::workload;
+use crate::ga::GaParams;
+use crate::util::{table, Table};
+
+use super::baselines::{sweep_nvdla, Approach};
+use super::ga_appx_cdp;
+
+/// One point in Fig. 3's scatter.
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    pub node: TechNode,
+    pub approach: Approach,
+    pub n_pes: usize,
+    pub fps: f64,
+    pub carbon_per_mm2: f64,
+    pub carbon_g: f64,
+    pub feasible: bool,
+    /// FPS target for GA points (None for sweep points).
+    pub fps_target: Option<f64>,
+}
+
+/// Full Fig. 3 data.
+#[derive(Debug, Clone)]
+pub struct Fig3Result {
+    pub points: Vec<Fig3Point>,
+}
+
+/// The paper's FPS targets (§IV-B), applied per node's reachable band.
+pub const FPS_TARGETS: [f64; 5] = [10.0, 15.0, 20.0, 30.0, 40.0];
+
+/// Run Fig. 3 for a model (the paper shows VGG16).
+pub fn run_fig3(library: &[Multiplier], model: &str, params: GaParams) -> Fig3Result {
+    let w = workload(model).unwrap_or_else(|| panic!("unknown workload {model}"));
+    let mut points = Vec::new();
+    for &node in &ALL_NODES {
+        for approach in [Approach::TwoDExact, Approach::ThreeDExact, Approach::ThreeDAppx] {
+            for (cfg, eval) in sweep_nvdla(approach, &w, node, library) {
+                points.push(Fig3Point {
+                    node,
+                    approach,
+                    n_pes: cfg.n_pes(),
+                    fps: eval.fps,
+                    carbon_per_mm2: eval.carbon_per_mm2,
+                    carbon_g: eval.carbon_g,
+                    feasible: true,
+                    fps_target: None,
+                });
+            }
+        }
+        // GA-APPX-CDP at each FPS target (δ = 3%, the §IV-B setting).
+        for (i, &target) in FPS_TARGETS.iter().enumerate() {
+            let cell_params = GaParams {
+                seed: params.seed.wrapping_add(node as u64 * 100 + i as u64),
+                ..params
+            };
+            let r = ga_appx_cdp(&w, node, library, 3.0, Some(target), cell_params);
+            points.push(Fig3Point {
+                node,
+                approach: Approach::GaAppxCdp,
+                n_pes: r.best.px * r.best.py,
+                fps: r.best_eval.fps,
+                carbon_per_mm2: r.best_eval.carbon_per_mm2,
+                carbon_g: r.best_eval.carbon_g,
+                feasible: r.best_eval.feasible,
+                fps_target: Some(target),
+            });
+        }
+    }
+    Fig3Result { points }
+}
+
+impl Fig3Result {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "node", "approach", "PEs", "fps", "gCO2/mm2", "gCO2", "fps_target", "feasible",
+        ]);
+        for p in &self.points {
+            t.row(vec![
+                p.node.name().to_string(),
+                p.approach.name().to_string(),
+                p.n_pes.to_string(),
+                table::fmt(p.fps),
+                table::fmt(p.carbon_per_mm2),
+                table::fmt(p.carbon_g),
+                p.fps_target.map(|f| format!("{f}")).unwrap_or_else(|| "-".into()),
+                if p.feasible { "y".into() } else { "VIOLATED".to_string() },
+            ]);
+        }
+        t.render()
+    }
+
+    /// Sweep series for (node, approach), sorted by FPS.
+    pub fn series(&self, node: TechNode, approach: Approach) -> Vec<&Fig3Point> {
+        let mut v: Vec<&Fig3Point> = self
+            .points
+            .iter()
+            .filter(|p| p.node == node && p.approach == approach)
+            .collect();
+        v.sort_by(|a, b| a.fps.partial_cmp(&b.fps).unwrap());
+        v
+    }
+
+    /// Smallest-carbon point of an approach meeting an FPS target at a node
+    /// (for the headline §IV-B comparisons).
+    pub fn best_meeting_fps(
+        &self,
+        node: TechNode,
+        approach: Approach,
+        fps: f64,
+    ) -> Option<&Fig3Point> {
+        self.points
+            .iter()
+            .filter(|p| p.node == node && p.approach == approach && p.fps >= fps && p.feasible)
+            .min_by(|a, b| a.carbon_g.partial_cmp(&b.carbon_g).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::library;
+
+    fn quick_params() -> GaParams {
+        GaParams { population: 20, generations: 12, patience: 6, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn fig3_point_counts() {
+        let lib = library();
+        let r = run_fig3(&lib, "vgg16", quick_params());
+        // 3 nodes x (3 approaches x 6 sweep points + 5 GA points)
+        assert_eq!(r.points.len(), 3 * (3 * 6 + 5));
+    }
+
+    #[test]
+    fn three_d_dominates_2d_on_fps_in_sweeps() {
+        let lib = library();
+        let r = run_fig3(&lib, "vgg16", quick_params());
+        for &node in &ALL_NODES {
+            let s2 = r.series(node, Approach::TwoDExact);
+            let s3 = r.series(node, Approach::ThreeDExact);
+            for (a, b) in s2.iter().zip(&s3) {
+                assert!(b.fps >= a.fps, "{}: {} PEs", node.name(), a.n_pes);
+            }
+        }
+    }
+
+    #[test]
+    fn appx_3d_lowers_total_carbon_and_mean_density_vs_exact_3d() {
+        // Approximate multipliers cut total carbon at every sweep point.
+        // Carbon *density* (gCO2/mm^2) drops on geomean but not necessarily
+        // pointwise: when the logic die sets the footprint, shrinking it
+        // shrinks the package (denominator) too.
+        let lib = library();
+        let r = run_fig3(&lib, "vgg16", quick_params());
+        for &node in &ALL_NODES {
+            let se = r.series(node, Approach::ThreeDExact);
+            let sa = r.series(node, Approach::ThreeDAppx);
+            let mut dens_e = Vec::new();
+            let mut dens_a = Vec::new();
+            for (e, a) in se.iter().zip(&sa) {
+                assert!(a.carbon_g < e.carbon_g, "{} {} PEs", node.name(), e.n_pes);
+                dens_e.push(e.carbon_per_mm2);
+                dens_a.push(a.carbon_per_mm2);
+            }
+            let ge = crate::util::stats::geomean(&dens_e);
+            let ga = crate::util::stats::geomean(&dens_a);
+            assert!(ga < ge * 1.001, "{}: appx density {ga} !< exact {ge}", node.name());
+        }
+    }
+}

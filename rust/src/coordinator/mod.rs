@@ -1,0 +1,170 @@
+//! Experiment orchestration: the paper's evaluation pipelines (Fig. 2,
+//! Fig. 3, headline report) and the baselines they compare against.
+
+pub mod baselines;
+pub mod fig2;
+pub mod fig3;
+pub mod report;
+
+pub use baselines::{ga_cdp_exact, nvdla_like_config, sweep_nvdla, Approach};
+pub use fig2::{run_fig2, Fig2Cell, Fig2Result};
+pub use fig3::{run_fig3, Fig3Point, Fig3Result};
+pub use report::headline_report;
+
+use crate::accuracy::model::{feasible_multipliers, DEFAULT_K};
+use crate::approx::Multiplier;
+use crate::dataflow::workloads::Workload;
+use crate::ga::{Ga, GaParams, GaResult, SearchSpace};
+use crate::ga::fitness::FitnessCtx;
+use crate::area::die::Integration;
+use crate::area::TechNode;
+
+/// Run the paper's GA-APPX-CDP search: multiplier gene restricted to the
+/// δ-feasible set, CDP objective, optional FPS floor.
+pub fn ga_appx_cdp(
+    workload: &Workload,
+    node: TechNode,
+    library: &[Multiplier],
+    delta_pct: f64,
+    fps_floor: Option<f64>,
+    params: GaParams,
+) -> GaResult {
+    let feasible = feasible_multipliers(library, workload, delta_pct, DEFAULT_K);
+    assert!(!feasible.is_empty(), "no multiplier satisfies δ={delta_pct}%");
+    let space = SearchSpace::standard(feasible);
+    let mut ctx = FitnessCtx::new(workload, node, Integration::ThreeD, library, fps_floor);
+    let mut r = Ga::new(space, params).run(&mut ctx);
+    refine_to_min_carbon(&mut r, &ctx);
+    r
+}
+
+/// Among CDP-near-optimal feasible designs (within 10%), report the lowest
+/// carbon one — CDP is flat near its optimum, and the paper reports the
+/// sustainable end of that plateau. Applied identically to the baseline
+/// (`ga_cdp_exact`), so every comparison stays like-for-like.
+pub(crate) fn refine_to_min_carbon(r: &mut GaResult, ctx: &FitnessCtx) {
+    if let Some((c, e)) = ctx.near_optimal_min_carbon(r.best_eval.fitness * 1.10) {
+        if e.carbon_g < r.best_eval.carbon_g {
+            r.best = c;
+            r.best_eval = e;
+        }
+    }
+}
+
+/// Greedy carbon descent: starting from a chromosome, repeatedly take the
+/// single-gene move (one menu step down on px/py/rf/sram, or any smaller
+/// feasible multiplier) that lowers embodied carbon the most while staying
+/// feasible (FPS floor + δ set). Deterministic polish applied after the GA
+/// for the figure pipelines — removes GA sampling noise from the reported
+/// min-carbon points.
+pub fn carbon_descend(
+    start: &crate::ga::Chromosome,
+    space: &SearchSpace,
+    ctx: &mut FitnessCtx,
+) -> (crate::ga::Chromosome, crate::ga::Evaluation) {
+    let mut cur = start.clone();
+    let mut cur_eval = ctx.eval(&cur);
+    loop {
+        let mut best_next: Option<(crate::ga::Chromosome, crate::ga::Evaluation)> = None;
+        let mut consider = |c: crate::ga::Chromosome, ctx: &mut FitnessCtx| {
+            if !space.contains(&c) {
+                return;
+            }
+            let e = ctx.eval(&c);
+            if e.feasible
+                && e.carbon_g < cur_eval.carbon_g
+                && best_next.as_ref().is_none_or(|(_, b)| e.carbon_g < b.carbon_g)
+            {
+                best_next = Some((c, e));
+            }
+        };
+        let step_down = |menu: &[usize], v: usize| -> Option<usize> {
+            let i = menu.iter().position(|&x| x == v)?;
+            (i > 0).then(|| menu[i - 1])
+        };
+        if let Some(px) = step_down(&space.px, cur.px) {
+            consider(crate::ga::Chromosome { px, ..cur.clone() }, ctx);
+        }
+        if let Some(py) = step_down(&space.py, cur.py) {
+            consider(crate::ga::Chromosome { py, ..cur.clone() }, ctx);
+        }
+        if let Some(rf_bytes) = step_down(&space.rf_bytes, cur.rf_bytes) {
+            consider(crate::ga::Chromosome { rf_bytes, ..cur.clone() }, ctx);
+        }
+        if let Some(sram_bytes) = step_down(&space.sram_bytes, cur.sram_bytes) {
+            consider(crate::ga::Chromosome { sram_bytes, ..cur.clone() }, ctx);
+        }
+        for &mult_id in &space.mult_ids {
+            if mult_id != cur.mult_id {
+                consider(crate::ga::Chromosome { mult_id, ..cur.clone() }, ctx);
+            }
+        }
+        match best_next {
+            Some((c, e)) => {
+                cur = c;
+                cur_eval = e;
+            }
+            None => return (cur, cur_eval),
+        }
+    }
+}
+
+/// The Fig. 2 point: GA-APPX-CDP constrained to the baseline's FPS, then
+/// polished to the minimum-carbon feasible design (the paper's "lower
+/// embodied carbon while maintaining competitive performance").
+pub fn ga_appx_min_carbon(
+    workload: &Workload,
+    node: TechNode,
+    library: &[Multiplier],
+    delta_pct: f64,
+    fps_floor: f64,
+    params: GaParams,
+    baseline: Option<&crate::ga::Chromosome>,
+) -> GaResult {
+    let feasible = feasible_multipliers(library, workload, delta_pct, DEFAULT_K);
+    assert!(!feasible.is_empty(), "no multiplier satisfies δ={delta_pct}%");
+    let space = SearchSpace::standard(feasible);
+    let mut ctx = FitnessCtx::new(workload, node, Integration::ThreeD, library, Some(fps_floor));
+    let mut r = Ga::new(space.clone(), params).run(&mut ctx);
+
+    // Descend from several seeds and keep the best: the GA's best feasible
+    // design, the cache-wide min-carbon feasible design, and the baseline's
+    // chromosome (always floor-feasible by construction — it *is* the
+    // design defining the floor, and any δ-feasible multiplier swap keeps
+    // its delay while cutting carbon).
+    let mut seeds: Vec<crate::ga::Chromosome> = Vec::new();
+    if r.best_eval.feasible {
+        seeds.push(r.best.clone());
+    }
+    if let Some((c, _)) = ctx.near_optimal_min_carbon(f64::INFINITY) {
+        seeds.push(c);
+    }
+    if let Some(b) = baseline {
+        if space.contains(b) {
+            seeds.push(b.clone());
+        } else {
+            // Baseline multiplier (EXACT) is always in the feasible set;
+            // re-home the chromosome onto this space's multiplier menu.
+            let mut b2 = b.clone();
+            b2.mult_id = crate::approx::EXACT_ID;
+            if space.contains(&b2) {
+                seeds.push(b2);
+            }
+        }
+    }
+    let mut best: Option<(crate::ga::Chromosome, crate::ga::Evaluation)> = None;
+    for seed in seeds {
+        let (c, e) = carbon_descend(&seed, &space, &mut ctx);
+        if e.feasible && best.as_ref().is_none_or(|(_, b)| e.carbon_g < b.carbon_g) {
+            best = Some((c, e));
+        }
+    }
+    if let Some((c, e)) = best {
+        if e.carbon_g <= r.best_eval.carbon_g || !r.best_eval.feasible {
+            r.best = c;
+            r.best_eval = e;
+        }
+    }
+    r.evaluations = ctx.cache_len();
+    r
+}

@@ -1,0 +1,90 @@
+//! Headline report: the paper's §I/§V claims vs our measured numbers.
+//!
+//!  - carbon reduction up to ~25% @45nm, ~30% @14nm, ~15% @7nm (Fig. 2)
+//!  - @7nm with a 20 FPS floor: ~32% better carbon than 3D-Exact and ~7%
+//!    lower gCO2/mm^2 than a 2D design meeting the same target (Fig. 3)
+
+use crate::area::TechNode;
+use crate::util::stats::pct_change;
+
+use super::baselines::Approach;
+use super::fig2::Fig2Result;
+use super::fig3::Fig3Result;
+
+/// One headline claim with paper value and our measurement.
+#[derive(Debug, Clone)]
+pub struct Claim {
+    pub name: String,
+    pub paper: f64,
+    pub measured: f64,
+    pub unit: &'static str,
+}
+
+impl Claim {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<58} paper {:>7.1}{}  measured {:>7.1}{}",
+            self.name, self.paper, self.unit, self.measured, self.unit
+        )
+    }
+}
+
+/// Compose the headline claims from completed Fig. 2 / Fig. 3 runs.
+pub fn headline_report(fig2: &Fig2Result, fig3: &Fig3Result) -> Vec<Claim> {
+    let mut out = vec![
+        Claim {
+            name: "max embodied-carbon reduction @45nm (Fig.2)".into(),
+            paper: 25.0,
+            measured: fig2.max_carbon_cut_pct(TechNode::N45),
+            unit: "%",
+        },
+        Claim {
+            name: "max embodied-carbon reduction @14nm (Fig.2)".into(),
+            paper: 30.0,
+            measured: fig2.max_carbon_cut_pct(TechNode::N14),
+            unit: "%",
+        },
+        Claim {
+            name: "max embodied-carbon reduction @7nm (Fig.2)".into(),
+            paper: 15.0,
+            measured: fig2.max_carbon_cut_pct(TechNode::N7),
+            unit: "%",
+        },
+    ];
+
+    // §IV-B @7nm, 20 FPS: GA vs 3D-Exact carbon; GA vs 2D gCO2/mm^2.
+    let node = TechNode::N7;
+    let fps = 20.0;
+    let ga = fig3.best_meeting_fps(node, Approach::GaAppxCdp, fps);
+    let e3 = fig3.best_meeting_fps(node, Approach::ThreeDExact, fps);
+    let e2 = fig3.best_meeting_fps(node, Approach::TwoDExact, fps);
+    if let (Some(ga), Some(e3)) = (ga, e3) {
+        out.push(Claim {
+            name: "carbon cut vs 3D-Exact @7nm, 20FPS (Fig.3)".into(),
+            paper: 32.0,
+            measured: -pct_change(e3.carbon_g, ga.carbon_g),
+            unit: "%",
+        });
+    }
+    if let (Some(ga), Some(e2)) = (ga, e2) {
+        out.push(Claim {
+            name: "gCO2/mm^2 cut vs 2D @7nm, 20FPS (Fig.3)".into(),
+            paper: 7.0,
+            measured: -pct_change(e2.carbon_per_mm2, ga.carbon_per_mm2),
+            unit: "%",
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_line_formats() {
+        let c = Claim { name: "x".into(), paper: 30.0, measured: 28.3, unit: "%" };
+        let s = c.line();
+        assert!(s.contains("30.0%") && s.contains("28.3%"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Accelerator configuration — the GA chromosome (paper Eq. 6) plus fixed
+//! platform parameters.
+
+use crate::area::die::{die_areas, DieAreas, Integration};
+use crate::area::TechNode;
+use crate::approx::Multiplier;
+
+/// DRAM bandwidth shared by all configurations (LPDDR5X-class edge device).
+pub const DRAM_GBPS: f64 = 51.2;
+
+/// Fixed per-layer launch overhead, cycles (descriptor setup, drain).
+pub const LAYER_OVERHEAD_CYCLES: u64 = 2000;
+
+/// An accelerator configuration: C = {Px, Py, B_local, B_global} (Eq. 6)
+/// plus the selected mantissa multiplier and platform choices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    /// PE array dimensions.
+    pub px: usize,
+    pub py: usize,
+    /// Local (per-PE) buffer, bytes.
+    pub rf_bytes: usize,
+    /// Global SRAM buffer, bytes.
+    pub sram_bytes: usize,
+    /// Technology node.
+    pub node: TechNode,
+    /// 2D baseline or the paper's 3D memory-on-logic.
+    pub integration: Integration,
+    /// Index into `approx::library()`.
+    pub mult_id: usize,
+}
+
+impl AccelConfig {
+    pub fn n_pes(&self) -> usize {
+        self.px * self.py
+    }
+
+    /// Clock frequency in Hz (set by the node; paper §IV).
+    pub fn freq_hz(&self) -> f64 {
+        self.node.freq_mhz() * 1e6
+    }
+
+    /// Aggregate SRAM->PE bandwidth in words/cycle.
+    ///
+    /// 2D: a mesh NoC delivers one word per row/column port per cycle —
+    /// scales with the array perimeter. 3D: hybrid-bond vertical links give
+    /// every PE-column group its own port — scales with array *area*
+    /// (the memory-on-logic advantage, paper §III-A).
+    pub fn sram_bw_words_per_cycle(&self) -> f64 {
+        match self.integration {
+            Integration::TwoD => (self.px + self.py) as f64 / 2.0,
+            Integration::ThreeD => (self.n_pes() as f64 / 4.0).max((self.px + self.py) as f64),
+        }
+    }
+
+    /// DRAM bandwidth in bytes/cycle at this node's clock.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        DRAM_GBPS * 1e9 / self.freq_hz()
+    }
+
+    /// Die areas for this configuration.
+    pub fn die_areas(&self, mult: &Multiplier) -> DieAreas {
+        assert_eq!(mult.id, self.mult_id, "multiplier/config mismatch");
+        die_areas(
+            self.px,
+            self.py,
+            self.rf_bytes,
+            self.sram_bytes,
+            mult,
+            self.node,
+            self.integration,
+        )
+    }
+
+    /// Human-readable one-liner.
+    pub fn describe(&self, mult: &Multiplier) -> String {
+        format!(
+            "{}x{} PEs, RF {}B, SRAM {}KB, {} {}, mult {}",
+            self.px,
+            self.py,
+            self.rf_bytes,
+            self.sram_bytes / 1024,
+            self.node.name(),
+            match self.integration {
+                Integration::TwoD => "2D",
+                Integration::ThreeD => "3D",
+            },
+            mult.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{library, EXACT_ID};
+
+    fn cfg(integration: Integration) -> AccelConfig {
+        AccelConfig {
+            px: 16,
+            py: 16,
+            rf_bytes: 512,
+            sram_bytes: 1 << 20,
+            node: TechNode::N14,
+            integration,
+            mult_id: EXACT_ID,
+        }
+    }
+
+    #[test]
+    fn three_d_bandwidth_exceeds_2d() {
+        let b2 = cfg(Integration::TwoD).sram_bw_words_per_cycle();
+        let b3 = cfg(Integration::ThreeD).sram_bw_words_per_cycle();
+        assert!(b3 > 2.0 * b2, "3D {b3} vs 2D {b2}");
+    }
+
+    #[test]
+    fn three_d_bw_scales_with_area_2d_with_perimeter() {
+        let small3 = cfg(Integration::ThreeD);
+        let mut big3 = small3.clone();
+        big3.px = 32;
+        big3.py = 32;
+        let ratio3 = big3.sram_bw_words_per_cycle() / small3.sram_bw_words_per_cycle();
+        assert!((3.5..4.5).contains(&ratio3), "3D ratio {ratio3}");
+
+        let small2 = cfg(Integration::TwoD);
+        let mut big2 = small2.clone();
+        big2.px = 32;
+        big2.py = 32;
+        let ratio2 = big2.sram_bw_words_per_cycle() / small2.sram_bw_words_per_cycle();
+        assert!((1.8..2.2).contains(&ratio2), "2D ratio {ratio2}");
+    }
+
+    #[test]
+    fn dram_bytes_per_cycle_scales_inverse_with_freq() {
+        let c45 = AccelConfig { node: TechNode::N45, ..cfg(Integration::ThreeD) };
+        let c7 = AccelConfig { node: TechNode::N7, ..cfg(Integration::ThreeD) };
+        assert!(c45.dram_bytes_per_cycle() > c7.dram_bytes_per_cycle());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_multiplier_panics() {
+        let lib = library();
+        let c = AccelConfig { mult_id: 3, ..cfg(Integration::ThreeD) };
+        let _ = c.die_areas(&lib[EXACT_ID]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Operational-energy model (used by ablations and the [6]-style baseline
+//! comparisons; the paper's objective is embodied carbon x delay, but the
+//! energy roll-up validates the 3D interconnect advantage).
+
+use super::arch::AccelConfig;
+use super::mapper::NetworkMapping;
+use crate::area::die::Integration;
+use crate::area::mac::mac_power_uw;
+use crate::approx::Multiplier;
+
+/// Per-event energies in picojoules at a given configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub mac_pj: f64,
+    pub sram_word_pj: f64,
+    pub dram_byte_pj: f64,
+    /// Per-word SRAM->PE transport (NoC hop chain for 2D, vertical link for 3D).
+    pub transport_word_pj: f64,
+}
+
+impl EnergyModel {
+    /// Build from the configuration (node scaling + integration style).
+    pub fn for_config(cfg: &AccelConfig, mult: &Multiplier) -> Self {
+        // MAC energy from the gate model: power (uW) at f -> energy/cycle.
+        let mac_uw = mac_power_uw(mult, cfg.node);
+        let mac_pj = mac_uw / cfg.node.freq_mhz(); // uW / MHz = pJ
+        // SRAM read ~ node-scaled; classic 45nm value ~5pJ/word for a
+        // megabyte-class array.
+        let sram_word_pj = 5.0 * cfg.node.sram_bitcell_um2() / 0.36;
+        // LPDDR access ~ 20-40 pJ/byte at the device, node-independent-ish.
+        let dram_byte_pj = 30.0;
+        // 2D NoC: ~0.6pJ/word/hop x avg hops (~(px+py)/3); 3D hybrid bond:
+        // ~0.05pJ/word (the ISSCC'24 prototype reports ~40% energy cut at
+        // iso-area; the vertical hop is over 10x cheaper than a mesh path).
+        let transport_word_pj = match cfg.integration {
+            Integration::TwoD => 0.6 * ((cfg.px + cfg.py) as f64 / 3.0),
+            Integration::ThreeD => 0.05,
+        };
+        Self { mac_pj, sram_word_pj, dram_byte_pj, transport_word_pj }
+    }
+
+    /// Total inference energy (joules) for a mapped network.
+    pub fn network_energy_j(&self, m: &NetworkMapping) -> f64 {
+        let mut pj = 0.0;
+        for l in &m.layers {
+            pj += l.macs as f64 * self.mac_pj;
+            pj += l.sram_words as f64 * (self.sram_word_pj + self.transport_word_pj);
+            pj += l.dram_bytes as f64 * self.dram_byte_pj;
+        }
+        pj * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::TechNode;
+    use crate::approx::{library, EXACT_ID};
+    use crate::dataflow::mapper::map_network;
+    use crate::dataflow::workloads::workload;
+
+    fn cfg(integration: Integration) -> AccelConfig {
+        AccelConfig {
+            px: 16,
+            py: 16,
+            rf_bytes: 512,
+            sram_bytes: 2 << 20,
+            node: TechNode::N14,
+            integration,
+            mult_id: EXACT_ID,
+        }
+    }
+
+    #[test]
+    fn three_d_transport_cheaper_than_2d() {
+        let lib = library();
+        let e2 = EnergyModel::for_config(&cfg(Integration::TwoD), &lib[EXACT_ID]);
+        let e3 = EnergyModel::for_config(&cfg(Integration::ThreeD), &lib[EXACT_ID]);
+        assert!(e3.transport_word_pj < e2.transport_word_pj / 10.0);
+    }
+
+    #[test]
+    fn three_d_network_energy_lower() {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let c2 = cfg(Integration::TwoD);
+        let c3 = cfg(Integration::ThreeD);
+        let e2 = EnergyModel::for_config(&c2, &lib[EXACT_ID]).network_energy_j(&map_network(&w, &c2));
+        let e3 = EnergyModel::for_config(&c3, &lib[EXACT_ID]).network_energy_j(&map_network(&w, &c3));
+        assert!(e3 < e2, "3D {e3} !< 2D {e2}");
+    }
+
+    #[test]
+    fn vgg16_inference_energy_ballpark() {
+        // Edge accelerator at 14nm: O(10-500) mJ per VGG16 inference.
+        let lib = library();
+        let c = cfg(Integration::ThreeD);
+        let e = EnergyModel::for_config(&c, &lib[EXACT_ID])
+            .network_energy_j(&map_network(&workload("vgg16").unwrap(), &c));
+        assert!((0.005..1.0).contains(&e), "energy {e} J");
+    }
+
+    #[test]
+    fn approx_mult_cuts_mac_energy() {
+        let lib = library();
+        let c = cfg(Integration::ThreeD);
+        let exact = EnergyModel::for_config(&c, &lib[EXACT_ID]).mac_pj;
+        let best = lib
+            .iter()
+            .map(|m| EnergyModel::for_config(&c, m).mac_pj)
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < exact);
+    }
+}

@@ -1,0 +1,154 @@
+//! DNN layer IR: shapes and arithmetic/traffic footprints.
+
+/// Data word size: bfloat16 everywhere (paper §III-C).
+pub const WORD_BYTES: usize = 2;
+
+/// One layer of a DNN workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// Layer types the mapper understands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution, NHWC, 'same'-style padding already folded into
+    /// out_h/out_w.
+    Conv {
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    },
+    /// Fully connected.
+    Fc { in_f: usize, out_f: usize },
+    /// Pooling (no MACs; memory traffic only).
+    Pool { in_h: usize, in_w: usize, in_c: usize, k: usize, stride: usize },
+    /// Elementwise residual add (ResNet) / concat bookkeeping (DenseNet):
+    /// pure memory traffic.
+    Eltwise { h: usize, w: usize, c: usize },
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+    ) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv { in_h, in_w, in_c, out_c, kh: k, kw: k, stride },
+        }
+    }
+
+    pub fn fc(name: &str, in_f: usize, out_f: usize) -> Self {
+        Layer { name: name.to_string(), kind: LayerKind::Fc { in_f, out_f } }
+    }
+
+    pub fn pool(name: &str, in_h: usize, in_w: usize, in_c: usize, k: usize, stride: usize) -> Self {
+        Layer { name: name.to_string(), kind: LayerKind::Pool { in_h, in_w, in_c, k, stride } }
+    }
+
+    pub fn eltwise(name: &str, h: usize, w: usize, c: usize) -> Self {
+        Layer { name: name.to_string(), kind: LayerKind::Eltwise { h, w, c } }
+    }
+
+    /// Output spatial/channel shape.
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        match self.kind {
+            LayerKind::Conv { in_h, in_w, out_c, stride, .. } => {
+                (in_h.div_ceil(stride), in_w.div_ceil(stride), out_c)
+            }
+            LayerKind::Fc { out_f, .. } => (1, 1, out_f),
+            LayerKind::Pool { in_h, in_w, in_c, stride, .. } => {
+                (in_h / stride, in_w / stride, in_c)
+            }
+            LayerKind::Eltwise { h, w, c } => (h, w, c),
+        }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { in_c, out_c, kh, kw, .. } => {
+                let (oh, ow, _) = self.out_shape();
+                (oh * ow * out_c * kh * kw * in_c) as u64
+            }
+            LayerKind::Fc { in_f, out_f } => (in_f * out_f) as u64,
+            LayerKind::Pool { .. } | LayerKind::Eltwise { .. } => 0,
+        }
+    }
+
+    /// Weight footprint, bytes.
+    pub fn weight_bytes(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_c, out_c, kh, kw, .. } => kh * kw * in_c * out_c * WORD_BYTES,
+            LayerKind::Fc { in_f, out_f } => in_f * out_f * WORD_BYTES,
+            _ => 0,
+        }
+    }
+
+    /// Input feature-map footprint, bytes.
+    pub fn ifmap_bytes(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_h, in_w, in_c, .. } => in_h * in_w * in_c * WORD_BYTES,
+            LayerKind::Fc { in_f, .. } => in_f * WORD_BYTES,
+            LayerKind::Pool { in_h, in_w, in_c, .. } => in_h * in_w * in_c * WORD_BYTES,
+            LayerKind::Eltwise { h, w, c } => 2 * h * w * c * WORD_BYTES,
+        }
+    }
+
+    /// Output feature-map footprint, bytes.
+    pub fn ofmap_bytes(&self) -> usize {
+        let (oh, ow, oc) = self.out_shape();
+        oh * ow * oc * WORD_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_macs_hand_check() {
+        // 3x3 conv, 224x224x3 -> 64, stride 1: 224*224*64*3*3*3
+        let l = Layer::conv("c", 224, 224, 3, 64, 3, 1);
+        assert_eq!(l.macs(), 224 * 224 * 64 * 9 * 3);
+        assert_eq!(l.weight_bytes(), 3 * 3 * 3 * 64 * 2);
+    }
+
+    #[test]
+    fn strided_conv_shrinks_output() {
+        let l = Layer::conv("c", 224, 224, 3, 64, 7, 2);
+        assert_eq!(l.out_shape(), (112, 112, 64));
+    }
+
+    #[test]
+    fn fc_macs() {
+        let l = Layer::fc("fc", 4096, 1000);
+        assert_eq!(l.macs(), 4096 * 1000);
+        assert_eq!(l.ifmap_bytes(), 4096 * 2);
+        assert_eq!(l.ofmap_bytes(), 1000 * 2);
+    }
+
+    #[test]
+    fn pool_has_no_macs() {
+        let l = Layer::pool("p", 112, 112, 64, 2, 2);
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.out_shape(), (56, 56, 64));
+    }
+
+    #[test]
+    fn eltwise_reads_two_operands() {
+        let l = Layer::eltwise("add", 56, 56, 256);
+        assert_eq!(l.ifmap_bytes(), 2 * 56 * 56 * 256 * 2);
+    }
+}

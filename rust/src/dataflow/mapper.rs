@@ -1,0 +1,330 @@
+//! Layer-to-array mapper: delay-optimized dataflow scheduling (nn-dataflow
+//! stand-in, extended for 3D memory-on-logic — paper §III-E).
+//!
+//! For every layer the mapper searches output-channel x output-pixel tilings
+//! of the PE array, counts RF/SRAM/DRAM traffic under a weight-stationary
+//! dataflow, and takes per-layer delay as the max of compute / SRAM / DRAM
+//! pipelines (double-buffered overlap) plus a fixed launch overhead. The
+//! 3D vertical links enter through `AccelConfig::sram_bw_words_per_cycle`.
+
+use super::arch::{AccelConfig, LAYER_OVERHEAD_CYCLES};
+use super::layer::{Layer, LayerKind, WORD_BYTES};
+use super::workloads::Workload;
+
+/// Mapping result for one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMapping {
+    pub name: String,
+    pub cycles: u64,
+    pub compute_cycles: u64,
+    pub sram_cycles: u64,
+    pub dram_cycles: u64,
+    /// PE-array utilization of the compute phase, 0..=1.
+    pub utilization: f64,
+    pub macs: u64,
+    pub sram_words: u64,
+    pub dram_bytes: u64,
+}
+
+/// Mapping result for a full network.
+#[derive(Debug, Clone)]
+pub struct NetworkMapping {
+    pub workload: String,
+    pub layers: Vec<LayerMapping>,
+    pub total_cycles: u64,
+}
+
+impl NetworkMapping {
+    /// End-to-end inference delay in seconds.
+    pub fn delay_s(&self, cfg: &AccelConfig) -> f64 {
+        self.total_cycles as f64 / cfg.freq_hz()
+    }
+
+    /// Frames per second.
+    pub fn fps(&self, cfg: &AccelConfig) -> f64 {
+        1.0 / self.delay_s(cfg)
+    }
+
+    /// MAC-array utilization aggregated over compute cycles.
+    pub fn mean_utilization(&self) -> f64 {
+        let total: u64 = self.layers.iter().map(|l| l.compute_cycles).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.layers
+            .iter()
+            .map(|l| l.utilization * l.compute_cycles as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+}
+
+/// Reuse factor the per-PE register file supplies for SRAM traffic:
+/// a weight parked in the RF serves all MACs of its output tile; activations
+/// are broadcast. Bigger RFs park more weights -> fewer SRAM fetches.
+fn rf_reuse_factor(rf_bytes: usize, kh: usize, kw: usize, in_c: usize) -> f64 {
+    let slots = (rf_bytes / WORD_BYTES) as f64;
+    // A PE needs kh*kw*tile_ic weights resident to avoid refetch; the
+    // achievable reuse saturates at the filter footprint.
+    let filter_words = (kh * kw * in_c) as f64;
+    (slots / 2.0).clamp(1.0, filter_words.max(1.0)).min(256.0)
+}
+
+/// Map a single layer onto the array.
+pub fn map_layer(layer: &Layer, cfg: &AccelConfig) -> LayerMapping {
+    match layer.kind {
+        LayerKind::Conv { in_c, out_c, kh, kw, .. } => {
+            let (oh, ow, _) = layer.out_shape();
+            map_gemm_like(
+                &layer.name,
+                cfg,
+                oh * ow, // spatial work items
+                out_c,   // output channels
+                kh * kw * in_c,
+                layer.weight_bytes() as u64,
+                layer.ifmap_bytes() as u64,
+                layer.ofmap_bytes() as u64,
+                rf_reuse_factor(cfg.rf_bytes, kh, kw, in_c),
+            )
+        }
+        LayerKind::Fc { in_f, out_f } => map_gemm_like(
+            &layer.name,
+            cfg,
+            1,
+            out_f,
+            in_f,
+            layer.weight_bytes() as u64,
+            layer.ifmap_bytes() as u64,
+            layer.ofmap_bytes() as u64,
+            // FC weights have no reuse across a batch-1 inference.
+            1.0,
+        ),
+        LayerKind::Pool { .. } | LayerKind::Eltwise { .. } => {
+            // Memory-bound: stream ifmap in, ofmap out.
+            let traffic_words = ((layer.ifmap_bytes() + layer.ofmap_bytes()) / WORD_BYTES) as u64;
+            let sram_cycles =
+                (traffic_words as f64 / cfg.sram_bw_words_per_cycle()).ceil() as u64;
+            // Pool/eltwise operands usually stay on-chip; DRAM only if the
+            // working set exceeds SRAM.
+            let resident = layer.ifmap_bytes() + layer.ofmap_bytes();
+            let dram_bytes =
+                if resident > cfg.sram_bytes { (resident - cfg.sram_bytes) as u64 } else { 0 };
+            let dram_cycles = (dram_bytes as f64 / cfg.dram_bytes_per_cycle()).ceil() as u64;
+            let cycles = sram_cycles.max(dram_cycles) + LAYER_OVERHEAD_CYCLES;
+            LayerMapping {
+                name: layer.name.clone(),
+                cycles,
+                compute_cycles: 0,
+                sram_cycles,
+                dram_cycles,
+                utilization: 0.0,
+                macs: 0,
+                sram_words: traffic_words,
+                dram_bytes,
+            }
+        }
+    }
+}
+
+/// Shared conv/FC mapping: `spatial` work items x `channels` outputs, each
+/// output needing `depth` MACs.
+#[allow(clippy::too_many_arguments)]
+fn map_gemm_like(
+    name: &str,
+    cfg: &AccelConfig,
+    spatial: usize,
+    channels: usize,
+    depth: usize,
+    weight_bytes: u64,
+    ifmap_bytes: u64,
+    ofmap_bytes: u64,
+    rf_reuse: f64,
+) -> LayerMapping {
+    let macs = (spatial * channels * depth) as u64;
+
+    // --- compute: search the (channels->py, spatial->px) tiling and its
+    // transpose, take the better utilization.
+    let tiling = |wa: usize, wb: usize| -> u64 {
+        // wa work mapped on px, wb on py.
+        let ta = wa.div_ceil(cfg.px);
+        let tb = wb.div_ceil(cfg.py);
+        (ta * tb * depth) as u64
+    };
+    let compute_cycles = tiling(spatial, channels).min(tiling(channels, spatial)).max(1);
+    let utilization = macs as f64 / (compute_cycles as f64 * cfg.n_pes() as f64);
+
+    // --- SRAM->PE traffic: every MAC consumes a weight and an activation
+    // word; RF reuse cuts weight traffic, spatial broadcast cuts activation
+    // traffic (a fetched activation row feeds a whole PE row).
+    let weight_words = macs as f64 / rf_reuse;
+    let act_words = macs as f64 / (cfg.py as f64).max(1.0);
+    let psum_words = (spatial * channels) as f64; // write-back: one word per output
+    let sram_words = (weight_words + act_words + psum_words) as u64;
+    let sram_cycles = (sram_words as f64 / cfg.sram_bw_words_per_cycle()).ceil() as u64;
+
+    // --- DRAM traffic: weights stream once per output-channel tile pass;
+    // if the layer working set exceeds SRAM, the ifmap is refetched per
+    // weight tile (output-stationary tiling over channels).
+    let working_set = weight_bytes + ifmap_bytes + ofmap_bytes;
+    let refetches = if working_set as usize > cfg.sram_bytes {
+        // number of channel tiles whose weights fit in half the SRAM
+        (weight_bytes as f64 / (cfg.sram_bytes as f64 / 2.0)).ceil().max(1.0)
+    } else {
+        1.0
+    };
+    let dram_bytes = (weight_bytes as f64 + ifmap_bytes as f64 * refetches + ofmap_bytes as f64) as u64;
+    let dram_cycles = (dram_bytes as f64 / cfg.dram_bytes_per_cycle()).ceil() as u64;
+
+    let cycles = compute_cycles.max(sram_cycles).max(dram_cycles) + LAYER_OVERHEAD_CYCLES;
+    LayerMapping {
+        name: name.to_string(),
+        cycles,
+        compute_cycles,
+        sram_cycles,
+        dram_cycles,
+        utilization,
+        macs,
+        sram_words,
+        dram_bytes,
+    }
+}
+
+/// Map every layer of a workload; delays add up (layer-by-layer execution,
+/// as in the paper's latency-optimized nn-dataflow scheduling).
+pub fn map_network(w: &Workload, cfg: &AccelConfig) -> NetworkMapping {
+    let layers: Vec<LayerMapping> = w.layers.iter().map(|l| map_layer(l, cfg)).collect();
+    let total_cycles = layers.iter().map(|l| l.cycles).sum();
+    NetworkMapping { workload: w.name.clone(), layers, total_cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::die::Integration;
+    use crate::area::TechNode;
+    use crate::approx::EXACT_ID;
+    use crate::dataflow::workloads::workload;
+    use crate::util::prop;
+
+    fn cfg(px: usize, py: usize, integration: Integration) -> AccelConfig {
+        AccelConfig {
+            px,
+            py,
+            rf_bytes: 512,
+            sram_bytes: 2 << 20,
+            node: TechNode::N14,
+            integration,
+            mult_id: EXACT_ID,
+        }
+    }
+
+    #[test]
+    fn more_pes_reduce_delay_until_saturation() {
+        let w = workload("vgg16").unwrap();
+        let d16 = map_network(&w, &cfg(16, 16, Integration::ThreeD)).total_cycles;
+        let d32 = map_network(&w, &cfg(32, 32, Integration::ThreeD)).total_cycles;
+        assert!(d32 < d16, "{d32} !< {d16}");
+        // Speedup bounded by PE ratio.
+        assert!(d16 as f64 / d32 as f64 <= 4.05);
+    }
+
+    #[test]
+    fn three_d_faster_than_2d_iso_resources() {
+        // The paper's Fig. 3 claim: vertical integration wins on delay.
+        let w = workload("vgg16").unwrap();
+        let d3 = map_network(&w, &cfg(32, 32, Integration::ThreeD)).total_cycles;
+        let d2 = map_network(&w, &cfg(32, 32, Integration::TwoD)).total_cycles;
+        assert!(d3 < d2, "3D {d3} !< 2D {d2}");
+    }
+
+    #[test]
+    fn vgg16_fps_plausible_range() {
+        // 1024 PEs @ 940MHz on 15.5 GMACs: ideal ~62 fps; with util + mem
+        // overheads expect O(10) fps — the paper's target band.
+        let w = workload("vgg16").unwrap();
+        let c = cfg(32, 32, Integration::ThreeD);
+        let fps = map_network(&w, &c).fps(&c);
+        assert!((5.0..70.0).contains(&fps), "fps {fps}");
+    }
+
+    #[test]
+    fn utilization_in_unit_interval_all_layers() {
+        let w = workload("resnet50").unwrap();
+        let m = map_network(&w, &cfg(16, 16, Integration::ThreeD));
+        for l in &m.layers {
+            assert!((0.0..=1.0 + 1e-9).contains(&l.utilization), "{}: {}", l.name, l.utilization);
+        }
+    }
+
+    #[test]
+    fn compute_cycles_at_least_ideal() {
+        let w = workload("densenet121").unwrap();
+        let c = cfg(16, 16, Integration::ThreeD);
+        let m = map_network(&w, &c);
+        for l in m.layers.iter().filter(|l| l.macs > 0) {
+            let ideal = l.macs.div_ceil(c.n_pes() as u64);
+            assert!(l.compute_cycles >= ideal, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn bigger_rf_cuts_sram_traffic() {
+        let w = workload("vgg16").unwrap();
+        let mut small = cfg(16, 16, Integration::ThreeD);
+        small.rf_bytes = 64;
+        let mut big = small.clone();
+        big.rf_bytes = 2048;
+        let t_small: u64 = map_network(&w, &small).layers.iter().map(|l| l.sram_words).sum();
+        let t_big: u64 = map_network(&w, &big).layers.iter().map(|l| l.sram_words).sum();
+        assert!(t_big < t_small);
+    }
+
+    #[test]
+    fn bigger_sram_cuts_dram_traffic() {
+        let w = workload("vgg16").unwrap();
+        let mut small = cfg(16, 16, Integration::ThreeD);
+        small.sram_bytes = 256 << 10;
+        let mut big = small.clone();
+        big.sram_bytes = 8 << 20;
+        let d_small: u64 = map_network(&w, &small).layers.iter().map(|l| l.dram_bytes).sum();
+        let d_big: u64 = map_network(&w, &big).layers.iter().map(|l| l.dram_bytes).sum();
+        assert!(d_big < d_small);
+    }
+
+    #[test]
+    fn total_cycles_is_sum_of_layers() {
+        let w = workload("tinycnn").unwrap();
+        let m = map_network(&w, &cfg(8, 8, Integration::ThreeD));
+        assert_eq!(m.total_cycles, m.layers.iter().map(|l| l.cycles).sum::<u64>());
+    }
+
+    #[test]
+    fn delay_positive_and_finite_prop() {
+        let w = workload("resnet50v2").unwrap();
+        prop::check("mapper-sane", 30, |rng| {
+            let c = AccelConfig {
+                px: 1 << rng.range(2, 6),
+                py: 1 << rng.range(2, 6),
+                rf_bytes: 1 << rng.range(6, 12),
+                sram_bytes: 1 << rng.range(17, 24),
+                node: *rng.choice(&crate::area::node::ALL_NODES),
+                integration: if rng.chance(0.5) { Integration::TwoD } else { Integration::ThreeD },
+                mult_id: EXACT_ID,
+            };
+            let m = map_network(&w, &c);
+            let d = m.delay_s(&c);
+            assert!(d.is_finite() && d > 0.0);
+            assert!(m.mean_utilization() <= 1.0 + 1e-9);
+        });
+    }
+
+    #[test]
+    fn fc_layers_are_dram_bound_on_big_arrays() {
+        // VGG's fc6 (25088x4096 weights = 205MB) must be DRAM-bound.
+        let w = workload("vgg16").unwrap();
+        let c = cfg(32, 32, Integration::ThreeD);
+        let m = map_network(&w, &c);
+        let fc6 = m.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert!(fc6.dram_cycles > fc6.compute_cycles);
+    }
+}

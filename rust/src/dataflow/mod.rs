@@ -1,0 +1,21 @@
+//! Performance model: nn-dataflow stand-in extended for 3D memory-on-logic
+//! (paper §III-E; DESIGN.md §6.4).
+//!
+//! Layer-level loop-nest mapping over an Eyeriss-like PE array with a
+//! three-level memory hierarchy (per-PE register file, global SRAM, DRAM).
+//! The 2D baseline moves SRAM<->PE traffic over a mesh NoC; the 3D design
+//! uses hybrid-bond vertical links with much higher aggregate bandwidth —
+//! the extension the paper added to nn-dataflow.
+
+pub mod arch;
+pub mod energy;
+pub mod layer;
+pub mod mapper;
+pub mod pipeline;
+pub mod workloads;
+
+pub use arch::AccelConfig;
+pub use energy::EnergyModel;
+pub use layer::{Layer, LayerKind};
+pub use mapper::{map_layer, map_network, LayerMapping, NetworkMapping};
+pub use workloads::{workload, workload_names, Workload};

@@ -1,0 +1,221 @@
+//! Inter-layer pipelined scheduling (Tangram [13]-style extension).
+//!
+//! The paper's nn-dataflow integration performs layer-by-layer
+//! (latency-optimized) scheduling; nn-dataflow's successors add *inter-layer
+//! pipelining*: partition the PE array into segments, map consecutive layers
+//! onto segments, and stream tiles between them through the global SRAM so
+//! segment delays overlap. We implement a segment scheduler to quantify how
+//! much of the paper's headline FPS the simple scheduler leaves on the
+//! table (ablation; also available via `carbon3d map --pipeline`).
+//!
+//! Model: a segment of S consecutive MAC layers gets a contiguous share of
+//! the PE array proportional to its MAC count. Within a segment, layer
+//! tiles flow producer->consumer with double buffering; the segment's
+//! steady-state throughput is set by its slowest layer. Segments execute
+//! back-to-back per frame, but across frames the pipeline overlaps, so
+//! frame *throughput* is 1 / max(segment_delay) while single-frame
+//! *latency* stays the sum.
+
+use super::arch::AccelConfig;
+use super::layer::Layer;
+use super::mapper::{map_layer, LayerMapping};
+use super::workloads::Workload;
+
+/// Result of pipelined scheduling.
+#[derive(Debug, Clone)]
+pub struct PipelineSchedule {
+    pub segments: Vec<Segment>,
+    /// Single-frame latency, cycles (sum over segments).
+    pub latency_cycles: u64,
+    /// Steady-state initiation interval, cycles (max over segments).
+    pub interval_cycles: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Indices into the workload's layer list.
+    pub layer_range: (usize, usize),
+    /// PE share assigned to this segment (fraction of the array).
+    pub pe_share: f64,
+    pub cycles: u64,
+}
+
+impl PipelineSchedule {
+    pub fn throughput_fps(&self, cfg: &AccelConfig) -> f64 {
+        cfg.freq_hz() / self.interval_cycles as f64
+    }
+
+    pub fn latency_s(&self, cfg: &AccelConfig) -> f64 {
+        self.latency_cycles as f64 / cfg.freq_hz()
+    }
+}
+
+/// Split a workload into `n_segments` contiguous segments balancing MACs,
+/// assign PE shares, and evaluate each segment with the per-layer mapper on
+/// a proportionally shrunk array.
+pub fn schedule_pipeline(w: &Workload, cfg: &AccelConfig, n_segments: usize) -> PipelineSchedule {
+    assert!(n_segments >= 1);
+    let total_macs: u64 = w.total_macs().max(1);
+
+    // Greedy contiguous split balanced on *estimated cycles* (full-array
+    // per-layer cost), not MACs: this lets the scheduler isolate
+    // bandwidth-bound layers (pool/eltwise) into their own segment so they
+    // overlap with compute-bound ones — the actual source of pipeline
+    // throughput wins.
+    let est: Vec<u64> = w.layers.iter().map(|l| map_layer(l, cfg).cycles).collect();
+    let total_est: u64 = est.iter().sum::<u64>().max(1);
+    let mut cuts: Vec<usize> = Vec::new(); // exclusive end indices
+    let mut acc = 0u64;
+    let target = total_est / n_segments as u64;
+    for (i, &c) in est.iter().enumerate() {
+        acc += c;
+        if acc >= target && cuts.len() + 1 < n_segments {
+            cuts.push(i + 1);
+            acc = 0;
+        }
+    }
+    cuts.push(w.layers.len());
+
+    // Evaluate each segment on its PE share.
+    let mut segments = Vec::with_capacity(cuts.len());
+    let mut start = 0usize;
+    let mut latency = 0u64;
+    let mut interval = 0u64;
+    for &end in &cuts {
+        let seg_layers: &[Layer] = &w.layers[start..end];
+        let seg_macs: u64 = seg_layers.iter().map(|l| l.macs()).sum();
+        let share = (seg_macs as f64 / total_macs as f64).max(0.02);
+        // Shrink the array (keep aspect ratio-ish): scale both dims by
+        // sqrt(share), min 1.
+        let scale = share.sqrt();
+        let sub_cfg = AccelConfig {
+            px: ((cfg.px as f64 * scale).round() as usize).max(1),
+            py: ((cfg.py as f64 * scale).round() as usize).max(1),
+            // SRAM is shared; each segment sees its share for tiling
+            // decisions.
+            sram_bytes: ((cfg.sram_bytes as f64 * share) as usize).max(16 << 10),
+            ..cfg.clone()
+        };
+        let mappings: Vec<LayerMapping> =
+            seg_layers.iter().map(|l| map_layer(l, &sub_cfg)).collect();
+        let cycles: u64 = mappings.iter().map(|m| m.cycles).sum();
+        latency += cycles;
+        interval = interval.max(cycles);
+        segments.push(Segment { layer_range: (start, end), pe_share: share, cycles });
+        start = end;
+    }
+    PipelineSchedule { segments, latency_cycles: latency, interval_cycles: interval }
+}
+
+/// Search segment counts 1..=max_segments and return the schedule with the
+/// best steady-state throughput.
+pub fn best_pipeline(w: &Workload, cfg: &AccelConfig, max_segments: usize) -> PipelineSchedule {
+    (1..=max_segments.max(1))
+        .map(|n| schedule_pipeline(w, cfg, n))
+        .min_by_key(|s| s.interval_cycles)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::die::Integration;
+    use crate::area::TechNode;
+    use crate::approx::EXACT_ID;
+    use crate::dataflow::mapper::map_network;
+    use crate::dataflow::workloads::workload;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig {
+            px: 32,
+            py: 32,
+            rf_bytes: 128,
+            sram_bytes: 1 << 20,
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            mult_id: EXACT_ID,
+        }
+    }
+
+    #[test]
+    fn one_segment_equals_layerwise_schedule() {
+        let w = workload("resnet50").unwrap();
+        let c = cfg();
+        let p = schedule_pipeline(&w, &c, 1);
+        assert_eq!(p.segments.len(), 1);
+        assert_eq!(p.latency_cycles, p.interval_cycles);
+        // One segment on a "share" of 1.0 uses the full array -> close to
+        // the plain mapper (sram share rounding aside).
+        let plain = map_network(&w, &c).total_cycles;
+        let ratio = p.latency_cycles as f64 / plain as f64;
+        assert!((0.95..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn segments_partition_all_layers() {
+        let w = workload("densenet121").unwrap();
+        let p = schedule_pipeline(&w, &cfg(), 4);
+        assert_eq!(p.segments.first().unwrap().layer_range.0, 0);
+        assert_eq!(p.segments.last().unwrap().layer_range.1, w.layers.len());
+        for pair in p.segments.windows(2) {
+            assert_eq!(pair[0].layer_range.1, pair[1].layer_range.0);
+        }
+    }
+
+    #[test]
+    fn best_pipeline_never_worse_than_layerwise() {
+        // n=1 is in the search space, so the best schedule can only match
+        // or beat it.
+        for name in ["densenet121", "resnet50", "vgg16"] {
+            let w = workload(name).unwrap();
+            let c = cfg();
+            let single = schedule_pipeline(&w, &c, 1);
+            let best = best_pipeline(&w, &c, 6);
+            assert!(best.interval_cycles <= single.interval_cycles, "{name}");
+        }
+    }
+
+    #[test]
+    fn pipelining_wins_on_bandwidth_skewed_workloads() {
+        // A workload alternating compute-bound convs with heavy eltwise
+        // traffic: layer-by-layer serializes the two resources; a 2-segment
+        // pipeline overlaps them, so the initiation interval must drop
+        // meaningfully below the single-segment schedule.
+        use crate::dataflow::layer::Layer;
+        use crate::dataflow::workloads::Workload;
+        let mut layers = Vec::new();
+        for i in 0..4 {
+            layers.push(Layer::conv(&format!("conv{i}"), 56, 56, 64, 64, 3, 1));
+        }
+        for i in 0..12 {
+            layers.push(Layer::eltwise(&format!("elt{i}"), 112, 112, 256));
+        }
+        let w = Workload { name: "skewed".into(), layers };
+        let c = cfg();
+        let single = schedule_pipeline(&w, &c, 1);
+        let best = best_pipeline(&w, &c, 4);
+        assert!(
+            (best.interval_cycles as f64) < 0.9 * single.interval_cycles as f64,
+            "best {} vs single {}",
+            best.interval_cycles,
+            single.interval_cycles
+        );
+    }
+
+    #[test]
+    fn latency_never_beats_interval() {
+        let w = workload("vgg16").unwrap();
+        for n in 1..=5 {
+            let p = schedule_pipeline(&w, &cfg(), n);
+            assert!(p.latency_cycles >= p.interval_cycles);
+        }
+    }
+
+    #[test]
+    fn pe_shares_sum_to_one_ish() {
+        let w = workload("vgg19").unwrap();
+        let p = schedule_pipeline(&w, &cfg(), 5);
+        let total: f64 = p.segments.iter().map(|s| s.pe_share).sum();
+        assert!((0.9..1.2).contains(&total), "shares sum {total}");
+    }
+}

@@ -1,0 +1,271 @@
+//! DNN workloads evaluated by the paper (§IV): VGG16, VGG19, ResNet50,
+//! ResNet50V2, DenseNet121 — plus the tiny CNN used for measured-accuracy
+//! experiments. Layer tables follow the published architectures (224x224x3
+//! ImageNet inputs); batch-norm/activation layers are folded (no MACs at
+//! inference relative to conv cost).
+
+use super::layer::Layer;
+
+/// A named DNN workload: an ordered list of layers.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Workload {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn n_conv_fc(&self) -> usize {
+        self.layers.iter().filter(|l| l.macs() > 0).count()
+    }
+}
+
+/// Names accepted by `workload()`.
+pub fn workload_names() -> Vec<&'static str> {
+    vec!["vgg16", "vgg19", "resnet50", "resnet50v2", "densenet121", "tinycnn"]
+}
+
+/// Build a workload by name.
+pub fn workload(name: &str) -> Option<Workload> {
+    match name {
+        "vgg16" => Some(vgg(16)),
+        "vgg19" => Some(vgg(19)),
+        "resnet50" => Some(resnet50(false)),
+        "resnet50v2" => Some(resnet50(true)),
+        "densenet121" => Some(densenet121()),
+        "tinycnn" => Some(tinycnn()),
+        _ => None,
+    }
+}
+
+/// VGG-16/19: stacks of 3x3 convs with 2x2 maxpools, then 3 FC layers.
+fn vgg(depth: usize) -> Workload {
+    // convs per stage: VGG16 = [2,2,3,3,3], VGG19 = [2,2,4,4,4]
+    let per_stage: [usize; 5] = if depth == 16 { [2, 2, 3, 3, 3] } else { [2, 2, 4, 4, 4] };
+    let chans = [64usize, 128, 256, 512, 512];
+    let mut layers = Vec::new();
+    let (mut h, mut w, mut c) = (224usize, 224usize, 3usize);
+    for (s, (&n, &oc)) in per_stage.iter().zip(&chans).enumerate() {
+        for i in 0..n {
+            layers.push(Layer::conv(&format!("conv{}_{}", s + 1, i + 1), h, w, c, oc, 3, 1));
+            c = oc;
+        }
+        layers.push(Layer::pool(&format!("pool{}", s + 1), h, w, c, 2, 2));
+        h /= 2;
+        w /= 2;
+    }
+    // 7x7x512 = 25088 -> 4096 -> 4096 -> 1000
+    layers.push(Layer::fc("fc6", h * w * c, 4096));
+    layers.push(Layer::fc("fc7", 4096, 4096));
+    layers.push(Layer::fc("fc8", 4096, 1000));
+    Workload { name: format!("vgg{depth}"), layers }
+}
+
+/// ResNet-50 (v1 or v2 — identical MAC structure; v2's pre-activation moves
+/// BN/ReLU, which we model as slightly higher eltwise traffic).
+fn resnet50(v2: bool) -> Workload {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 224, 224, 3, 64, 7, 2));
+    layers.push(Layer::pool("pool1", 112, 112, 64, 3, 2));
+    let stages: [(usize, usize, usize, usize); 4] = [
+        // (blocks, in_c at stage entry, bottleneck width, out_c)
+        (3, 64, 64, 256),
+        (4, 256, 128, 512),
+        (6, 512, 256, 1024),
+        (3, 1024, 512, 2048),
+    ];
+    let mut h = 56usize;
+    let mut w = 56usize;
+    for (si, &(blocks, stage_in, width, out_c)) in stages.iter().enumerate() {
+        let mut in_c = stage_in;
+        for b in 0..blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            if stride == 2 {
+                h /= 2;
+                w /= 2;
+            }
+            let p = format!("s{}b{}", si + 1, b + 1);
+            // Bottleneck: 1x1 reduce -> 3x3 -> 1x1 expand. The strided conv
+            // is the 3x3 (v1.5/standard implementations).
+            layers.push(Layer::conv(&format!("{p}_1x1a"), h * stride, w * stride, in_c, width, 1, stride));
+            layers.push(Layer::conv(&format!("{p}_3x3"), h, w, width, width, 3, 1));
+            layers.push(Layer::conv(&format!("{p}_1x1b"), h, w, width, out_c, 1, 1));
+            if b == 0 {
+                // Projection shortcut.
+                layers.push(Layer::conv(
+                    &format!("{p}_proj"),
+                    h * stride,
+                    w * stride,
+                    in_c,
+                    out_c,
+                    1,
+                    stride,
+                ));
+            }
+            layers.push(Layer::eltwise(&format!("{p}_add"), h, w, out_c));
+            if v2 {
+                // Pre-activation: BN/ReLU on the trunk adds an extra
+                // read-modify-write of the feature map.
+                layers.push(Layer::eltwise(&format!("{p}_preact"), h, w, out_c / 2));
+            }
+            in_c = out_c;
+        }
+    }
+    layers.push(Layer::pool("gap", 7, 7, 2048, 7, 7));
+    layers.push(Layer::fc("fc", 2048, 1000));
+    Workload { name: if v2 { "resnet50v2".into() } else { "resnet50".into() }, layers }
+}
+
+/// DenseNet-121: growth rate 32, blocks [6,12,24,16], 1x1(4k)+3x3(k) pairs,
+/// transition layers halve channels and spatial dims.
+fn densenet121() -> Workload {
+    let growth = 32usize;
+    let blocks = [6usize, 12, 24, 16];
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 224, 224, 3, 64, 7, 2));
+    layers.push(Layer::pool("pool1", 112, 112, 64, 3, 2));
+    let mut h = 56usize;
+    let mut w = 56usize;
+    let mut c = 64usize;
+    for (bi, &n) in blocks.iter().enumerate() {
+        for l in 0..n {
+            let p = format!("d{}l{}", bi + 1, l + 1);
+            // Bottleneck 1x1 -> 4*growth, then 3x3 -> growth; input is the
+            // concatenation of all previous maps in the block.
+            layers.push(Layer::conv(&format!("{p}_1x1"), h, w, c, 4 * growth, 1, 1));
+            layers.push(Layer::conv(&format!("{p}_3x3"), h, w, 4 * growth, growth, 3, 1));
+            // Concat bookkeeping: the new features are appended (traffic only).
+            layers.push(Layer::eltwise(&format!("{p}_cat"), h, w, growth));
+            c += growth;
+        }
+        if bi + 1 < blocks.len() {
+            // Transition: 1x1 conv halving channels + 2x2 avgpool.
+            layers.push(Layer::conv(&format!("t{}_1x1", bi + 1), h, w, c, c / 2, 1, 1));
+            c /= 2;
+            layers.push(Layer::pool(&format!("t{}_pool", bi + 1), h, w, c, 2, 2));
+            h /= 2;
+            w /= 2;
+        }
+    }
+    layers.push(Layer::pool("gap", 7, 7, c, 7, 7));
+    layers.push(Layer::fc("fc", c, 1000));
+    Workload { name: "densenet121".into(), layers }
+}
+
+/// The tiny CNN trained at artifact-build time (python/compile/model.py) —
+/// used for the measured-accuracy E2E experiments.
+fn tinycnn() -> Workload {
+    Workload {
+        name: "tinycnn".into(),
+        layers: vec![
+            Layer::conv("conv1", 16, 16, 1, 8, 3, 1),
+            Layer::pool("pool1", 16, 16, 8, 2, 2),
+            Layer::conv("conv2", 8, 8, 8, 16, 3, 1),
+            Layer::pool("pool2", 8, 8, 16, 2, 2),
+            Layer::fc("fc", 256, 5),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_mac_count_matches_published() {
+        // VGG16 ~ 15.47 GMACs (30.9 GFLOPs) at 224x224.
+        let w = workload("vgg16").unwrap();
+        let g = w.total_macs() as f64 / 1e9;
+        assert!((15.0..16.0).contains(&g), "VGG16 {g} GMACs");
+    }
+
+    #[test]
+    fn vgg19_more_macs_than_vgg16() {
+        let m16 = workload("vgg16").unwrap().total_macs();
+        let m19 = workload("vgg19").unwrap().total_macs();
+        assert!(m19 > m16);
+        // ~19.6 GMACs published.
+        let g = m19 as f64 / 1e9;
+        assert!((19.0..20.5).contains(&g), "VGG19 {g} GMACs");
+    }
+
+    #[test]
+    fn resnet50_mac_count_matches_published() {
+        // ResNet50 ~ 3.8-4.1 GMACs.
+        let w = workload("resnet50").unwrap();
+        let g = w.total_macs() as f64 / 1e9;
+        assert!((3.5..4.3).contains(&g), "ResNet50 {g} GMACs");
+    }
+
+    #[test]
+    fn resnet50_weight_count_matches_published() {
+        // ~25.5M params; conv+fc weights ~ 25M * 2 bytes.
+        let w = workload("resnet50").unwrap();
+        let params = w.total_weight_bytes() / 2;
+        assert!(
+            (23_000_000..27_000_000).contains(&params),
+            "ResNet50 params {params}"
+        );
+    }
+
+    #[test]
+    fn densenet121_mac_count_matches_published() {
+        // DenseNet121 ~ 2.8-2.9 GMACs.
+        let w = workload("densenet121").unwrap();
+        let g = w.total_macs() as f64 / 1e9;
+        assert!((2.6..3.1).contains(&g), "DenseNet121 {g} GMACs");
+    }
+
+    #[test]
+    fn densenet121_param_count_matches_published() {
+        // ~8.0M params.
+        let w = workload("densenet121").unwrap();
+        let params = w.total_weight_bytes() / 2;
+        assert!((6_800_000..8_800_000).contains(&params), "params {params}");
+    }
+
+    #[test]
+    fn vgg16_param_count_matches_published() {
+        // ~138M params.
+        let w = workload("vgg16").unwrap();
+        let params = w.total_weight_bytes() / 2;
+        assert!((130_000_000..145_000_000).contains(&params), "params {params}");
+    }
+
+    #[test]
+    fn all_workloads_build_and_are_nonempty() {
+        for name in workload_names() {
+            let w = workload(name).unwrap();
+            assert!(!w.layers.is_empty(), "{name}");
+            assert!(w.total_macs() > 0, "{name}");
+        }
+        assert!(workload("nope").is_none());
+    }
+
+    #[test]
+    fn resnet_v2_has_more_traffic_same_macs() {
+        let v1 = workload("resnet50").unwrap();
+        let v2 = workload("resnet50v2").unwrap();
+        assert_eq!(v1.total_macs(), v2.total_macs());
+        let t1: usize = v1.layers.iter().map(|l| l.ifmap_bytes()).sum();
+        let t2: usize = v2.layers.iter().map(|l| l.ifmap_bytes()).sum();
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn tinycnn_matches_python_model() {
+        let w = workload("tinycnn").unwrap();
+        // conv1: 16*16*8*9*1, conv2: 8*8*16*9*8, fc: 256*5
+        assert_eq!(
+            w.total_macs(),
+            (16 * 16 * 8 * 9) as u64 + (8 * 8 * 16 * 9 * 8) as u64 + (256 * 5) as u64
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! Chromosome encoding and the bounded search space.
+
+use crate::util::Rng;
+
+/// Discrete search space: every gene takes values from an explicit menu, as
+/// in the paper (PE dims in powers of two, buffer capacities in binary
+/// steps, multipliers from the accuracy-feasible set).
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub px: Vec<usize>,
+    pub py: Vec<usize>,
+    pub rf_bytes: Vec<usize>,
+    pub sram_bytes: Vec<usize>,
+    /// Multiplier ids satisfying the accuracy constraint (Eq. 7).
+    pub mult_ids: Vec<usize>,
+}
+
+impl SearchSpace {
+    /// The paper-scale space: 8..64 per array dimension, 64B..1KB local
+    /// buffers (Eyeriss-class register files), 256KB..8MB global SRAM.
+    pub fn standard(mult_ids: Vec<usize>) -> Self {
+        assert!(!mult_ids.is_empty(), "empty feasible-multiplier set");
+        Self {
+            px: vec![8, 16, 24, 32, 48, 64],
+            py: vec![8, 16, 24, 32, 48, 64],
+            rf_bytes: vec![64, 128, 256, 512, 1024],
+            sram_bytes: vec![128 << 10, 256 << 10, 512 << 10, 1 << 20, 2 << 20, 4 << 20],
+            mult_ids,
+        }
+    }
+
+    /// Total number of configurations.
+    pub fn cardinality(&self) -> usize {
+        self.px.len() * self.py.len() * self.rf_bytes.len() * self.sram_bytes.len()
+            * self.mult_ids.len()
+    }
+
+    /// Random chromosome.
+    pub fn sample(&self, rng: &mut Rng) -> Chromosome {
+        Chromosome {
+            px: *rng.choice(&self.px),
+            py: *rng.choice(&self.py),
+            rf_bytes: *rng.choice(&self.rf_bytes),
+            sram_bytes: *rng.choice(&self.sram_bytes),
+            mult_id: *rng.choice(&self.mult_ids),
+        }
+    }
+
+    /// Check membership (every gene on its menu).
+    pub fn contains(&self, c: &Chromosome) -> bool {
+        self.px.contains(&c.px)
+            && self.py.contains(&c.py)
+            && self.rf_bytes.contains(&c.rf_bytes)
+            && self.sram_bytes.contains(&c.sram_bytes)
+            && self.mult_ids.contains(&c.mult_id)
+    }
+
+    /// Mutate one random gene to a neighboring menu value (local move) or a
+    /// random value (jump), 70/30.
+    pub fn mutate(&self, c: &Chromosome, rng: &mut Rng) -> Chromosome {
+        let mut out = c.clone();
+        let gene = rng.below(5);
+        let pick = |menu: &[usize], cur: usize, rng: &mut Rng| -> usize {
+            let idx = menu.iter().position(|&v| v == cur).unwrap_or(0);
+            if rng.chance(0.7) && menu.len() > 1 {
+                // step to a neighbor
+                let dir: isize = if rng.chance(0.5) { 1 } else { -1 };
+                let j = (idx as isize + dir).clamp(0, menu.len() as isize - 1) as usize;
+                menu[j]
+            } else {
+                *rng.choice(menu)
+            }
+        };
+        match gene {
+            0 => out.px = pick(&self.px, c.px, rng),
+            1 => out.py = pick(&self.py, c.py, rng),
+            2 => out.rf_bytes = pick(&self.rf_bytes, c.rf_bytes, rng),
+            3 => out.sram_bytes = pick(&self.sram_bytes, c.sram_bytes, rng),
+            _ => out.mult_id = pick(&self.mult_ids, c.mult_id, rng),
+        }
+        out
+    }
+}
+
+/// One candidate configuration — Eq. (6) plus the multiplier gene.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Chromosome {
+    pub px: usize,
+    pub py: usize,
+    pub rf_bytes: usize,
+    pub sram_bytes: usize,
+    pub mult_id: usize,
+}
+
+impl Chromosome {
+    /// Uniform crossover.
+    pub fn crossover(&self, other: &Chromosome, rng: &mut Rng) -> Chromosome {
+        Chromosome {
+            px: if rng.chance(0.5) { self.px } else { other.px },
+            py: if rng.chance(0.5) { self.py } else { other.py },
+            rf_bytes: if rng.chance(0.5) { self.rf_bytes } else { other.rf_bytes },
+            sram_bytes: if rng.chance(0.5) { self.sram_bytes } else { other.sram_bytes },
+            mult_id: if rng.chance(0.5) { self.mult_id } else { other.mult_id },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn space() -> SearchSpace {
+        SearchSpace::standard(vec![0, 3, 7])
+    }
+
+    #[test]
+    fn cardinality_matches_menus() {
+        let s = space();
+        assert_eq!(s.cardinality(), 6 * 6 * 5 * 6 * 3);
+    }
+
+    #[test]
+    fn samples_stay_in_space() {
+        let s = space();
+        prop::check("sample-in-space", 100, |rng| {
+            let c = s.sample(rng);
+            assert!(s.contains(&c), "{c:?}");
+        });
+    }
+
+    #[test]
+    fn mutation_stays_in_space_and_changes_at_most_one_gene() {
+        let s = space();
+        prop::check("mutate-local", 100, |rng| {
+            let c = s.sample(rng);
+            let m = s.mutate(&c, rng);
+            assert!(s.contains(&m), "{m:?}");
+            let diffs = [
+                c.px != m.px,
+                c.py != m.py,
+                c.rf_bytes != m.rf_bytes,
+                c.sram_bytes != m.sram_bytes,
+                c.mult_id != m.mult_id,
+            ]
+            .iter()
+            .filter(|&&d| d)
+            .count();
+            assert!(diffs <= 1, "{c:?} -> {m:?}");
+        });
+    }
+
+    #[test]
+    fn crossover_genes_come_from_parents() {
+        let s = space();
+        prop::check("crossover-genes", 100, |rng| {
+            let a = s.sample(rng);
+            let b = s.sample(rng);
+            let c = a.crossover(&b, rng);
+            assert!(c.px == a.px || c.px == b.px);
+            assert!(c.py == a.py || c.py == b.py);
+            assert!(c.rf_bytes == a.rf_bytes || c.rf_bytes == b.rf_bytes);
+            assert!(c.sram_bytes == a.sram_bytes || c.sram_bytes == b.sram_bytes);
+            assert!(c.mult_id == a.mult_id || c.mult_id == b.mult_id);
+            assert!(s.contains(&c));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_multiplier_set_panics() {
+        SearchSpace::standard(vec![]);
+    }
+}

@@ -1,0 +1,232 @@
+//! The evolutionary engine (paper §III-E, Steps 1-6): initialization,
+//! fitness evaluation, tournament selection, uniform crossover, bounded
+//! mutation, elitism, convergence-based termination.
+
+use super::chromosome::{Chromosome, SearchSpace};
+use super::fitness::{Evaluation, FitnessCtx};
+use crate::util::Rng;
+
+/// GA hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    pub tournament: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    pub elites: usize,
+    /// Stop early after this many generations without best-fitness
+    /// improvement (> 0.1% relative).
+    pub patience: usize,
+    pub seed: u64,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        Self {
+            population: 64,
+            generations: 48,
+            tournament: 3,
+            crossover_rate: 0.9,
+            mutation_rate: 0.45,
+            elites: 2,
+            patience: 12,
+            seed: 0xCAFE,
+        }
+    }
+}
+
+/// Outcome of a GA run.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub best: Chromosome,
+    pub best_eval: Evaluation,
+    /// Best fitness after each generation (for convergence plots/tests).
+    pub history: Vec<f64>,
+    pub generations_run: usize,
+    pub evaluations: usize,
+}
+
+/// The GA driver.
+pub struct Ga {
+    pub space: SearchSpace,
+    pub params: GaParams,
+}
+
+impl Ga {
+    pub fn new(space: SearchSpace, params: GaParams) -> Self {
+        assert!(params.population >= 4, "population too small");
+        assert!(params.elites < params.population);
+        assert!(params.tournament >= 1);
+        Self { space, params }
+    }
+
+    /// Run the evolutionary loop against a fitness context.
+    pub fn run(&self, ctx: &mut FitnessCtx) -> GaResult {
+        let p = self.params;
+        let mut rng = Rng::new(p.seed);
+
+        // Step 1: initialization.
+        let mut pop: Vec<Chromosome> =
+            (0..p.population).map(|_| self.space.sample(&mut rng)).collect();
+        let mut history = Vec::with_capacity(p.generations);
+        let mut best: Option<(Chromosome, Evaluation)> = None;
+        let mut stale = 0usize;
+        let mut gens = 0usize;
+
+        for _gen in 0..p.generations {
+            gens += 1;
+            // Step 2: fitness evaluation.
+            let evals: Vec<Evaluation> = pop.iter().map(|c| ctx.eval(c)).collect();
+
+            // Track the incumbent.
+            let (gen_best_i, gen_best) = evals
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.fitness.partial_cmp(&b.1.fitness).unwrap())
+                .map(|(i, e)| (i, *e))
+                .unwrap();
+            let improved = match &best {
+                None => true,
+                Some((_, e)) => gen_best.fitness < e.fitness * (1.0 - 1e-3),
+            };
+            if improved {
+                best = Some((pop[gen_best_i].clone(), gen_best));
+                stale = 0;
+            } else {
+                stale += 1;
+            }
+            history.push(best.as_ref().unwrap().1.fitness);
+
+            // Step 6: termination (convergence criterion).
+            if stale >= p.patience {
+                break;
+            }
+
+            // Steps 3-5: selection, crossover, mutation (+ elitism).
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&a, &b| evals[a].fitness.partial_cmp(&evals[b].fitness).unwrap());
+            let mut next: Vec<Chromosome> =
+                order.iter().take(p.elites).map(|&i| pop[i].clone()).collect();
+
+            let tournament = |rng: &mut Rng| -> usize {
+                let mut winner = rng.below(pop.len() as u64) as usize;
+                for _ in 1..p.tournament {
+                    let cand = rng.below(pop.len() as u64) as usize;
+                    if evals[cand].fitness < evals[winner].fitness {
+                        winner = cand;
+                    }
+                }
+                winner
+            };
+
+            while next.len() < p.population {
+                let a = tournament(&mut rng);
+                let mut child = if rng.chance(p.crossover_rate) {
+                    let b = tournament(&mut rng);
+                    pop[a].crossover(&pop[b], &mut rng)
+                } else {
+                    pop[a].clone()
+                };
+                if rng.chance(p.mutation_rate) {
+                    child = self.space.mutate(&child, &mut rng);
+                }
+                next.push(child);
+            }
+            pop = next;
+        }
+
+        let (best, best_eval) = best.expect("at least one generation ran");
+        GaResult { best, best_eval, history, generations_run: gens, evaluations: ctx.cache_len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::die::Integration;
+    use crate::area::TechNode;
+    use crate::approx::{filter_by_mred, library};
+    use crate::dataflow::workloads::workload;
+    use crate::ga::fitness::FitnessCtx;
+
+    fn run_ga(seed: u64, pop: usize, gens: usize) -> GaResult {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let feasible = filter_by_mred(&lib, 0.02);
+        let space = SearchSpace::standard(feasible);
+        let mut ctx = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, None);
+        let params = GaParams { population: pop, generations: gens, seed, ..Default::default() };
+        Ga::new(space, params).run(&mut ctx)
+    }
+
+    #[test]
+    fn history_is_monotone_nonincreasing() {
+        let r = run_ga(1, 24, 15);
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "history regressed: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn ga_beats_random_sampling_budget_matched() {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let feasible = filter_by_mred(&lib, 0.02);
+        let space = SearchSpace::standard(feasible.clone());
+
+        let r = run_ga(7, 24, 20);
+
+        // Random search with the same number of evaluations.
+        let mut ctx = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, None);
+        let mut rng = crate::util::Rng::new(999);
+        let mut best_rand = f64::INFINITY;
+        for _ in 0..r.evaluations {
+            let c = space.sample(&mut rng);
+            best_rand = best_rand.min(ctx.eval(&c).fitness);
+        }
+        assert!(
+            r.best_eval.fitness <= best_rand * 1.05,
+            "GA {} vs random {}",
+            r.best_eval.fitness,
+            best_rand
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_ga(5, 16, 8);
+        let b = run_ga(5, 16, 8);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.history, b.history);
+    }
+
+    #[test]
+    fn best_is_in_space() {
+        let lib = library();
+        let feasible = filter_by_mred(&lib, 0.02);
+        let space = SearchSpace::standard(feasible);
+        let r = run_ga(3, 16, 10);
+        assert!(space.contains(&r.best));
+    }
+
+    #[test]
+    fn early_stop_respects_patience() {
+        let r = run_ga(11, 16, 40);
+        assert!(r.generations_run <= 40);
+        // History length equals generations actually run.
+        assert_eq!(r.history.len(), r.generations_run);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_population_rejected() {
+        let lib = library();
+        let space = SearchSpace::standard(vec![0]);
+        let _ = Ga::new(
+            space,
+            GaParams { population: 2, ..Default::default() },
+        );
+        let _ = lib;
+    }
+}

@@ -1,0 +1,230 @@
+//! Fitness evaluation: CDP = C_embodied x D_task with constraint handling,
+//! plus a memoizing cache (the GA revisits configurations constantly).
+
+use std::collections::HashMap;
+
+use super::chromosome::Chromosome;
+use crate::area::die::Integration;
+use crate::area::TechNode;
+use crate::carbon::{carbon_per_mm2, embodied_carbon, CarbonBreakdown};
+use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::mapper::map_network;
+use crate::dataflow::workloads::Workload;
+use crate::approx::Multiplier;
+
+/// Everything a fitness evaluation needs.
+pub struct FitnessCtx<'a> {
+    pub workload: &'a Workload,
+    pub node: TechNode,
+    pub integration: Integration,
+    pub library: &'a [Multiplier],
+    /// Optional FPS floor (paper §IV-B); designs below pay a penalty.
+    pub fps_floor: Option<f64>,
+    cache: HashMap<Chromosome, Evaluation>,
+}
+
+impl<'a> FitnessCtx<'a> {
+    pub fn new(
+        workload: &'a Workload,
+        node: TechNode,
+        integration: Integration,
+        library: &'a [Multiplier],
+        fps_floor: Option<f64>,
+    ) -> Self {
+        Self { workload, node, integration, library, fps_floor, cache: HashMap::new() }
+    }
+
+    /// Evaluate with memoization.
+    pub fn eval(&mut self, c: &Chromosome) -> Evaluation {
+        if let Some(e) = self.cache.get(c) {
+            return *e;
+        }
+        let e = evaluate(
+            c,
+            self.workload,
+            self.node,
+            self.integration,
+            self.library,
+            self.fps_floor,
+        );
+        self.cache.insert(c.clone(), e);
+        e
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Lowest-carbon *feasible* design among all evaluated configurations
+    /// whose fitness is within `max_fitness`. Used by the figure pipelines:
+    /// among CDP-near-optimal designs, report the most sustainable one
+    /// (CDP is flat near its optimum — carbon/delay splits there are
+    /// interchangeable, and the paper reports the carbon-efficient end).
+    pub fn near_optimal_min_carbon(&self, max_fitness: f64) -> Option<(Chromosome, Evaluation)> {
+        self.cache
+            .iter()
+            .filter(|(_, e)| e.feasible && e.fitness <= max_fitness)
+            .min_by(|a, b| a.1.carbon_g.partial_cmp(&b.1.carbon_g).unwrap())
+            .map(|(c, e)| (c.clone(), *e))
+    }
+
+    /// Build the `AccelConfig` for a chromosome.
+    pub fn config(&self, c: &Chromosome) -> AccelConfig {
+        to_config(c, self.node, self.integration)
+    }
+}
+
+/// Full evaluation of one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Evaluation {
+    /// Embodied carbon, gCO2.
+    pub carbon_g: f64,
+    /// Task delay, seconds.
+    pub delay_s: f64,
+    /// Frames per second.
+    pub fps: f64,
+    /// Carbon-Delay-Product (gCO2 * s).
+    pub cdp: f64,
+    /// Penalized fitness the GA minimizes (== cdp when constraints hold).
+    pub fitness: f64,
+    /// Carbon per package mm^2 (Fig. 3 y-axis).
+    pub carbon_per_mm2: f64,
+    /// Total silicon, mm^2.
+    pub silicon_mm2: f64,
+    pub feasible: bool,
+}
+
+pub fn to_config(c: &Chromosome, node: TechNode, integration: Integration) -> AccelConfig {
+    AccelConfig {
+        px: c.px,
+        py: c.py,
+        rf_bytes: c.rf_bytes,
+        sram_bytes: c.sram_bytes,
+        node,
+        integration,
+        mult_id: c.mult_id,
+    }
+}
+
+/// CDP metric (paper's objective).
+pub fn cdp(carbon_g: f64, delay_s: f64) -> f64 {
+    carbon_g * delay_s
+}
+
+/// Evaluate one chromosome: carbon model (Eq. 1-5) + dataflow delay model,
+/// FPS-constraint penalty if requested.
+pub fn evaluate(
+    c: &Chromosome,
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    fps_floor: Option<f64>,
+) -> Evaluation {
+    let mult = &library[c.mult_id];
+    let cfg = to_config(c, node, integration);
+    let areas = cfg.die_areas(mult);
+    let breakdown: CarbonBreakdown = embodied_carbon(&areas, node, integration);
+    let carbon_g = breakdown.total_g();
+    let mapping = map_network(workload, &cfg);
+    let delay_s = mapping.delay_s(&cfg);
+    let fps = 1.0 / delay_s;
+    let cdp_v = cdp(carbon_g, delay_s);
+    let (fitness, feasible) = match fps_floor {
+        Some(floor) if fps < floor => {
+            // Multiplicative penalty growing with the violation: keeps the
+            // search surface smooth while making infeasible designs lose
+            // every tournament against feasible ones of similar CDP.
+            let violation = floor / fps;
+            (cdp_v * (1.0 + 10.0 * (violation - 1.0)).max(1.0) * violation, false)
+        }
+        _ => (cdp_v, true),
+    };
+    Evaluation {
+        carbon_g,
+        delay_s,
+        fps,
+        cdp: cdp_v,
+        fitness,
+        carbon_per_mm2: carbon_per_mm2(&breakdown, &areas),
+        silicon_mm2: areas.silicon_mm2(),
+        feasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{library, EXACT_ID};
+    use crate::dataflow::workloads::workload;
+
+    fn chrom(mult_id: usize) -> Chromosome {
+        Chromosome { px: 16, py: 16, rf_bytes: 512, sram_bytes: 1 << 20, mult_id }
+    }
+
+    #[test]
+    fn evaluation_fields_consistent() {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let e = evaluate(&chrom(EXACT_ID), &w, TechNode::N14, Integration::ThreeD, &lib, None);
+        assert!(e.carbon_g > 0.0 && e.delay_s > 0.0);
+        assert!((e.cdp - e.carbon_g * e.delay_s).abs() < 1e-12);
+        assert!((e.fps - 1.0 / e.delay_s).abs() < 1e-9);
+        assert_eq!(e.fitness, e.cdp);
+        assert!(e.feasible);
+    }
+
+    #[test]
+    fn approx_multiplier_lowers_carbon_same_delay() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let exact = evaluate(&chrom(EXACT_ID), &w, TechNode::N14, Integration::ThreeD, &lib, None);
+        // An aggressive truncation design (id of TRUNC4).
+        let trunc = lib.iter().find(|m| m.name() == "TRUNC4").unwrap().id;
+        let appr = evaluate(&chrom(trunc), &w, TechNode::N14, Integration::ThreeD, &lib, None);
+        assert!(appr.carbon_g < exact.carbon_g);
+        assert_eq!(appr.delay_s, exact.delay_s); // same array dims -> same delay
+        assert!(appr.cdp < exact.cdp);
+    }
+
+    #[test]
+    fn fps_penalty_applies_only_below_floor() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let free = evaluate(&chrom(EXACT_ID), &w, TechNode::N14, Integration::ThreeD, &lib, None);
+        let hard_floor = free.fps * 4.0;
+        let pen = evaluate(
+            &chrom(EXACT_ID),
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            Some(hard_floor),
+        );
+        assert!(!pen.feasible);
+        assert!(pen.fitness > pen.cdp);
+        let easy = evaluate(
+            &chrom(EXACT_ID),
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            Some(free.fps * 0.5),
+        );
+        assert!(easy.feasible);
+        assert_eq!(easy.fitness, easy.cdp);
+    }
+
+    #[test]
+    fn cache_hits_return_identical_results() {
+        let lib = library();
+        let w = workload("densenet121").unwrap();
+        let mut ctx = FitnessCtx::new(&w, TechNode::N7, Integration::ThreeD, &lib, None);
+        let c = chrom(EXACT_ID);
+        let a = ctx.eval(&c);
+        let n = ctx.cache_len();
+        let b = ctx.eval(&c);
+        assert_eq!(a, b);
+        assert_eq!(ctx.cache_len(), n);
+    }
+}

@@ -1,0 +1,21 @@
+//! Genetic-algorithm design-space exploration (paper §III-E).
+//!
+//! Chromosome C = {Px, Py, B_local, B_global} (Eq. 6) + the approximate
+//! multiplier id; fitness = Carbon-Delay-Product CDP = C_embodied * D_task,
+//! with an optional FPS floor handled as a multiplicative penalty. The
+//! multiplier gene is restricted to the set that satisfies the accuracy-drop
+//! constraint ΔA(M) <= δ (Eq. 7), established *before* the search from
+//! ApproxTrain-style simulation (here: the measured tiny-CNN table or the
+//! MRED-calibrated model — see `accuracy/`).
+
+pub mod chromosome;
+pub mod engine;
+pub mod fitness;
+pub mod islands;
+pub mod nsga;
+
+pub use chromosome::{Chromosome, SearchSpace};
+pub use engine::{Ga, GaParams, GaResult};
+pub use islands::{run_islands, IslandParams};
+pub use fitness::{cdp, evaluate, Evaluation, FitnessCtx};
+pub use nsga::{crowding_distance, non_dominated_sort, pareto_front};

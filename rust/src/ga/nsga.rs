@@ -1,0 +1,155 @@
+//! NSGA-II building blocks: non-dominated sorting and crowding distance.
+//!
+//! The paper optimizes the scalar CDP; this module powers the *ablation*
+//! (benches/ablation.rs) comparing scalar-CDP search against a true
+//! multi-objective (carbon, delay) Pareto search, quantifying what the CDP
+//! scalarization gives up.
+
+/// A point in objective space (minimize both coordinates).
+pub type Point = (f64, f64);
+
+/// Does `a` dominate `b` (<= in all objectives, < in at least one)?
+pub fn dominates(a: Point, b: Point) -> bool {
+    (a.0 <= b.0 && a.1 <= b.1) && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Fast non-dominated sort; returns fronts as index lists (front 0 = Pareto).
+pub fn non_dominated_sort(points: &[Point]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<usize> = vec![0; n]; // count of dominators
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates(points[i], points[j]) {
+                dominates_list[i].push(j);
+            } else if dominates(points[j], points[i]) {
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Pareto-optimal subset of `points` (indices).
+pub fn pareto_front(points: &[Point]) -> Vec<usize> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    non_dominated_sort(points).swap_remove(0)
+}
+
+/// NSGA-II crowding distance for one front (infinite at the extremes).
+pub fn crowding_distance(points: &[Point], front: &[usize]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    for obj in 0..2usize {
+        let get = |i: usize| if obj == 0 { points[front[i]].0 } else { points[front[i]].1 };
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| get(a).partial_cmp(&get(b)).unwrap());
+        let span = get(order[m - 1]) - get(order[0]);
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        if span <= 0.0 {
+            continue;
+        }
+        for k in 1..m - 1 {
+            dist[order[k]] += (get(order[k + 1]) - get(order[k - 1])) / span;
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn dominates_basics() {
+        assert!(dominates((1.0, 1.0), (2.0, 2.0)));
+        assert!(dominates((1.0, 2.0), (1.0, 3.0)));
+        assert!(!dominates((1.0, 3.0), (2.0, 2.0))); // trade-off
+        assert!(!dominates((1.0, 1.0), (1.0, 1.0))); // equal
+    }
+
+    #[test]
+    fn sort_identifies_fronts() {
+        // (0) and (1) trade off; (2) is dominated by both; (3) by (2).
+        let pts = vec![(1.0, 4.0), (4.0, 1.0), (4.0, 4.0), (5.0, 5.0)];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts[0], vec![0, 1]);
+        assert_eq!(fronts[1], vec![2]);
+        assert_eq!(fronts[2], vec![3]);
+    }
+
+    #[test]
+    fn pareto_front_of_chain() {
+        let pts = vec![(1.0, 1.0), (2.0, 2.0), (3.0, 3.0)];
+        assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let pts = vec![(1.0, 5.0), (2.0, 4.0), (3.0, 3.0), (4.0, 2.0), (5.0, 1.0)];
+        let front: Vec<usize> = (0..5).collect();
+        let d = crowding_distance(&pts, &front);
+        assert!(d[0].is_infinite() && d[4].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite() && d[3].is_finite());
+    }
+
+    #[test]
+    fn front_members_mutually_nondominating_prop() {
+        prop::check("pareto-nondominated", 30, |rng| {
+            let pts: Vec<Point> =
+                (0..40).map(|_| (rng.uniform(0.0, 10.0), rng.uniform(0.0, 10.0))).collect();
+            let front = pareto_front(&pts);
+            assert!(!front.is_empty());
+            for &i in &front {
+                for &j in &front {
+                    if i != j {
+                        assert!(!dominates(pts[i], pts[j]), "{i} dominates {j}");
+                    }
+                }
+                // Nothing outside the front dominates a front member.
+                for (k, &p) in pts.iter().enumerate() {
+                    if !front.contains(&k) {
+                        assert!(!dominates(p, pts[i]));
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fronts_partition_population_prop() {
+        prop::check("fronts-partition", 20, |rng| {
+            let pts: Vec<Point> =
+                (0..30).map(|_| (rng.uniform(0.0, 5.0), rng.uniform(0.0, 5.0))).collect();
+            let fronts = non_dominated_sort(&pts);
+            let mut all: Vec<usize> = fronts.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..pts.len()).collect::<Vec<_>>());
+        });
+    }
+}

@@ -1,0 +1,32 @@
+//! # carbon3d
+//!
+//! Reproduction of *"Carbon-Efficient 3D DNN Acceleration: Optimizing
+//! Performance and Sustainability"* (CS.AR 2025): a carbon-aware
+//! design-space-exploration framework for 3D memory-on-logic DNN
+//! accelerators that swaps exact bf16 mantissa multipliers for approximate
+//! ones and searches accelerator configurations minimizing the
+//! Carbon-Delay-Product (CDP) under accuracy and FPS constraints.
+//!
+//! ## Layers
+//! - **L3 (this crate)**: the DSE framework — approximate-multiplier
+//!   library, area/carbon/dataflow models, genetic algorithm, baselines,
+//!   experiment pipelines — plus a PJRT runtime that executes the AOT-
+//!   compiled accuracy-evaluation workload.
+//! - **L2/L1 (python/, build-time only)**: JAX CNN + Pallas LUT-matmul
+//!   kernel, lowered once to `artifacts/*.hlo.txt`.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
+//! results vs the paper.
+
+pub mod accuracy;
+pub mod approx;
+pub mod area;
+pub mod carbon;
+pub mod coordinator;
+pub mod dataflow;
+pub mod ga;
+pub mod runtime;
+pub mod util;
+
+pub use area::TechNode;
+pub use dataflow::AccelConfig;

@@ -1,0 +1,544 @@
+//! carbon3d CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!   multipliers            print the approximate-multiplier library
+//!   workloads              print the DNN workload inventory
+//!   map --model M ...      map one workload onto a configuration
+//!   carbon ...             carbon breakdown of a configuration
+//!   dse --model M ...      one GA-APPX-CDP run
+//!   fig2 [--quick]         reproduce Fig. 2
+//!   fig3 [--quick]         reproduce Fig. 3
+//!   report [--quick]       headline paper-vs-measured report
+//!   accuracy [--pjrt]      ΔA table on the trained tiny CNN
+//!   selfcheck              PJRT runtime smoke test (matmul artifacts)
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use carbon3d::accuracy::model::{calibrate_k, predicted_drop_pct, DEFAULT_K};
+use carbon3d::accuracy::native::{ApproxDatapath, NativeEvaluator};
+use carbon3d::approx::{library, lut_f32, EXACT_ID};
+use carbon3d::area::die::Integration;
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::area::TechNode;
+use carbon3d::carbon::embodied_carbon;
+use carbon3d::coordinator::{
+    ga_appx_cdp, ga_cdp_exact, headline_report, run_fig2, run_fig3,
+};
+use carbon3d::coordinator::fig2::FIG2_MODELS;
+use carbon3d::dataflow::arch::AccelConfig;
+use carbon3d::dataflow::mapper::map_network;
+use carbon3d::dataflow::workloads::{workload, workload_names};
+use carbon3d::ga::GaParams;
+use carbon3d::runtime::{Artifacts, Engine};
+use carbon3d::util::{table, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: positional subcommand + `--key value` / `--flag`.
+struct Opts {
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let has_val = i + 1 < args.len() && !args[i + 1].starts_with("--");
+                if has_val {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v}")),
+        }
+    }
+
+    fn node(&self) -> Result<TechNode> {
+        let s = self.get("node", "14nm");
+        TechNode::from_name(&s).ok_or_else(|| anyhow!("unknown node {s} (45nm|14nm|7nm)"))
+    }
+}
+
+fn ga_params(o: &Opts) -> Result<GaParams> {
+    let quick = o.has("quick");
+    Ok(GaParams {
+        population: o.usize("pop", if quick { 32 } else { 64 })?,
+        generations: o.usize("gens", if quick { 20 } else { 48 })?,
+        patience: if quick { 8 } else { 14 },
+        seed: o.usize("seed", 0xCAFE)? as u64,
+        ..Default::default()
+    })
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let o = Opts::parse(&args[1.min(args.len())..]);
+    match cmd {
+        "multipliers" => cmd_multipliers(&o),
+        "workloads" => cmd_workloads(),
+        "map" => cmd_map(&o),
+        "carbon" => cmd_carbon(&o),
+        "dse" => cmd_dse(&o),
+        "fig2" => cmd_fig2(&o),
+        "fig3" => cmd_fig3(&o),
+        "report" => cmd_report(&o),
+        "accuracy" => cmd_accuracy(&o),
+        "verilog" => cmd_verilog(&o),
+        "pipeline" => cmd_pipeline(&o),
+        "lifetime" => cmd_lifetime(&o),
+        "selfcheck" => cmd_selfcheck(),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; try `carbon3d help`"),
+    }
+}
+
+const HELP: &str = "carbon3d — carbon-efficient 3D DNN accelerator DSE
+USAGE: carbon3d <subcommand> [--flags]
+  multipliers [--node N]        approximate-multiplier library + HW costs
+  workloads                     DNN workload inventory
+  map --model M [--node N] [--px P --py P --sram KB --rf B] [--twod]
+  carbon [--node N] [--px ..]   embodied-carbon breakdown of a config
+  dse --model M [--node N] [--delta PCT] [--fps F] [--quick]
+  fig2 [--quick] [--models a,b] reproduce Fig. 2 (normalized delay/carbon)
+  fig3 [--quick] [--model M]    reproduce Fig. 3 (gCO2/mm^2 vs FPS)
+  report [--quick]              headline paper-vs-measured claims
+  accuracy [--pjrt] [--limit N] measured ΔA table on the tiny CNN
+  verilog [--out-dir D]         emit structural Verilog for the multiplier library
+  pipeline --model M [--segments N]  inter-layer pipelined schedule (Tangram-style)
+  lifetime --model M [--ipd N]  embodied vs operational carbon over device lifetime
+  selfcheck                     PJRT runtime smoke test
+
+dse also accepts --islands N (island-model GA with ring migration).";
+
+fn cmd_multipliers(o: &Opts) -> Result<()> {
+    let node = o.node()?;
+    let lib = library();
+    let mut t = Table::new(vec![
+        "id", "name", "area_um2", "power_uW", "delay_ns", "sig_MRED", "sig_bias", "full_WCE",
+    ]);
+    for m in &lib {
+        let hw = m.hw_cost(node);
+        t.row(vec![
+            m.id.to_string(),
+            m.name(),
+            format!("{:.1}", hw.area_um2),
+            format!("{:.1}", hw.power_uw),
+            format!("{:.2}", hw.delay_ns),
+            format!("{:.5}", m.error.sig_mred),
+            format!("{:.1}", m.error.sig_bias),
+            m.error.full_wce.to_string(),
+        ]);
+    }
+    println!("approximate-multiplier library at {} ({} designs)", node.name(), lib.len());
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_workloads() -> Result<()> {
+    let mut t = Table::new(vec!["name", "layers", "MAC layers", "GMACs", "params(M)"]);
+    for name in workload_names() {
+        let w = workload(name).unwrap();
+        t.row(vec![
+            name.to_string(),
+            w.layers.len().to_string(),
+            w.n_conv_fc().to_string(),
+            format!("{:.2}", w.total_macs() as f64 / 1e9),
+            format!("{:.1}", w.total_weight_bytes() as f64 / 2e6),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn config_from_opts(o: &Opts) -> Result<(AccelConfig, usize)> {
+    let node = o.node()?;
+    let mult_id = o.usize("mult", EXACT_ID)?;
+    let lib_len = library().len();
+    if mult_id >= lib_len {
+        bail!("--mult {mult_id} out of range (library has {lib_len})");
+    }
+    Ok((
+        AccelConfig {
+            px: o.usize("px", 16)?,
+            py: o.usize("py", 16)?,
+            rf_bytes: o.usize("rf", 512)?,
+            sram_bytes: o.usize("sram", 1024)? * 1024,
+            node,
+            integration: if o.has("twod") { Integration::TwoD } else { Integration::ThreeD },
+            mult_id,
+        },
+        mult_id,
+    ))
+}
+
+fn cmd_map(o: &Opts) -> Result<()> {
+    let model = o.get("model", "vgg16");
+    let w = workload(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let (cfg, mult_id) = config_from_opts(o)?;
+    let lib = library();
+    let m = map_network(&w, &cfg);
+    println!("{} on {}", model, cfg.describe(&lib[mult_id]));
+    let mut t = Table::new(vec!["layer", "cycles", "compute", "sram", "dram", "util"]);
+    for l in m.layers.iter().take(o.usize("limit", 1000)?) {
+        t.row(vec![
+            l.name.clone(),
+            l.cycles.to_string(),
+            l.compute_cycles.to_string(),
+            l.sram_cycles.to_string(),
+            l.dram_cycles.to_string(),
+            format!("{:.2}", l.utilization),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "total: {} cycles = {:.3} ms  ({:.2} fps, mean util {:.2})",
+        m.total_cycles,
+        m.delay_s(&cfg) * 1e3,
+        m.fps(&cfg),
+        m.mean_utilization()
+    );
+    Ok(())
+}
+
+fn cmd_carbon(o: &Opts) -> Result<()> {
+    let (cfg, mult_id) = config_from_opts(o)?;
+    let lib = library();
+    let areas = cfg.die_areas(&lib[mult_id]);
+    let b = embodied_carbon(&areas, cfg.node, cfg.integration);
+    println!("config: {}", cfg.describe(&lib[mult_id]));
+    println!(
+        "areas : logic {:.2} mm^2, memory {:.2} mm^2, package {:.2} mm^2",
+        areas.logic_mm2, areas.memory_mm2, areas.package_mm2
+    );
+    let mut t = Table::new(vec!["component", "gCO2", "share_%"]);
+    let total = b.total_g();
+    for (name, v) in [
+        ("logic die", b.logic_die_g),
+        ("memory die", b.memory_die_g),
+        ("bonding", b.bonding_g),
+        ("packaging", b.packaging_g),
+    ] {
+        t.row(vec![name.to_string(), table::fmt(v), format!("{:.1}", v / total * 100.0)]);
+    }
+    println!("{}", t.render());
+    println!("total embodied carbon: {:.1} gCO2  ({:.2} gCO2/mm^2 of package)", total, total / areas.package_mm2);
+    Ok(())
+}
+
+fn cmd_dse(o: &Opts) -> Result<()> {
+    let model = o.get("model", "vgg16");
+    let w = workload(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let node = o.node()?;
+    let delta = o.f64("delta", 3.0)?;
+    let fps_floor = if o.has("fps") { Some(o.f64("fps", 0.0)?) } else { None };
+    let params = ga_params(o)?;
+    let lib = library();
+
+    println!(
+        "GA-APPX-CDP: {model} @ {}, δ={delta}%, fps_floor={fps_floor:?}, pop={} gens={}",
+        node.name(),
+        params.population,
+        params.generations
+    );
+    let base = ga_cdp_exact(&w, node, &lib, fps_floor, params);
+    let islands = o.usize("islands", 0)?;
+    let r = if islands > 1 {
+        use carbon3d::accuracy::model::{feasible_multipliers, DEFAULT_K};
+        use carbon3d::ga::{run_islands, IslandParams, SearchSpace};
+        let feasible = feasible_multipliers(&lib, &w, delta, DEFAULT_K);
+        let space = SearchSpace::standard(feasible);
+        let ip = IslandParams {
+            islands,
+            epoch_generations: params.generations / 4 + 1,
+            epochs: 4,
+            migrants: 2,
+            base: params,
+        };
+        println!("island-model GA: {islands} islands x {} epochs", ip.epochs);
+        run_islands(&space, ip, &w, node, Integration::ThreeD, &lib, fps_floor)
+    } else {
+        ga_appx_cdp(&w, node, &lib, delta, fps_floor, params)
+    };
+    println!(
+        "baseline (GA-CDP-EXACT): {}  carbon {:.1} g, delay {:.2} ms, CDP {:.3}",
+        carbon3d::ga::fitness::to_config(&base.best, node, Integration::ThreeD)
+            .describe(&lib[base.best.mult_id]),
+        base.best_eval.carbon_g,
+        base.best_eval.delay_s * 1e3,
+        base.best_eval.cdp
+    );
+    println!(
+        "GA-APPX-CDP            : {}  carbon {:.1} g, delay {:.2} ms, CDP {:.3}",
+        carbon3d::ga::fitness::to_config(&r.best, node, Integration::ThreeD)
+            .describe(&lib[r.best.mult_id]),
+        r.best_eval.carbon_g,
+        r.best_eval.delay_s * 1e3,
+        r.best_eval.cdp
+    );
+    println!(
+        "carbon cut {:.1}%  | delay change {:+.1}%  | {} evals, {} gens",
+        (1.0 - r.best_eval.carbon_g / base.best_eval.carbon_g) * 100.0,
+        (r.best_eval.delay_s / base.best_eval.delay_s - 1.0) * 100.0,
+        r.evaluations,
+        r.generations_run
+    );
+    Ok(())
+}
+
+fn cmd_fig2(o: &Opts) -> Result<()> {
+    let lib = library();
+    let params = ga_params(o)?;
+    let models_arg = o.get("models", &FIG2_MODELS.join(","));
+    let models: Vec<&str> = models_arg.split(',').collect();
+    let r = run_fig2(&lib, &models, params);
+    println!("{}", r.render());
+    for &node in &ALL_NODES {
+        println!(
+            "{}: max carbon cut {:.1}%",
+            node.name(),
+            r.max_carbon_cut_pct(node)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig3(o: &Opts) -> Result<()> {
+    let lib = library();
+    let params = ga_params(o)?;
+    let model = o.get("model", "vgg16");
+    let r = run_fig3(&lib, &model, params);
+    println!("{}", r.render());
+    Ok(())
+}
+
+fn cmd_report(o: &Opts) -> Result<()> {
+    let lib = library();
+    let params = ga_params(o)?;
+    println!("running Fig.2 grid...");
+    let fig2 = run_fig2(&lib, &FIG2_MODELS, params);
+    println!("running Fig.3 sweeps...");
+    let fig3 = run_fig3(&lib, "vgg16", params);
+    println!("\n== headline claims (paper vs measured) ==");
+    for c in headline_report(&fig2, &fig3) {
+        println!("{}", c.line());
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(o: &Opts) -> Result<()> {
+    let artifacts = Artifacts::load(Path::new(&o.get("artifacts", "artifacts")))?;
+    let lib = library();
+    let limit = o.usize("limit", lib.len())?;
+    let tiny = workload("tinycnn").unwrap();
+
+    if o.has("pjrt") {
+        let engine = Engine::new(artifacts)?;
+        println!("PJRT platform: {}", engine.platform());
+        let mults: Vec<&carbon3d::approx::Multiplier> = lib.iter().take(limit).collect();
+        let t = engine.measure_table(&mults)?;
+        let k = calibrate_k(&lib, &tiny, &t);
+        print_accuracy_table(&lib[..limit.min(lib.len())], &t, &tiny, k);
+    } else {
+        let native = NativeEvaluator::load(&Artifacts::load(Path::new(
+            &o.get("artifacts", "artifacts"),
+        ))?)?;
+        let mut t = carbon3d::accuracy::AccuracyTable {
+            exact: native.accuracy(&ApproxDatapath::new(&lib[EXACT_ID])),
+            ..Default::default()
+        };
+        for m in lib.iter().take(limit) {
+            t.accuracy.insert(m.id, native.accuracy(&ApproxDatapath::new(m)));
+        }
+        let k = calibrate_k(&lib, &tiny, &t);
+        print_accuracy_table(&lib[..limit.min(lib.len())], &t, &tiny, k);
+    }
+    Ok(())
+}
+
+fn print_accuracy_table(
+    mults: &[carbon3d::approx::Multiplier],
+    t: &carbon3d::accuracy::AccuracyTable,
+    tiny: &carbon3d::dataflow::workloads::Workload,
+    k: f64,
+) {
+    let mut tab = Table::new(vec!["id", "mult", "accuracy", "drop_pp", "model_pred_pp"]);
+    for m in mults {
+        let acc = t.accuracy[&m.id];
+        tab.row(vec![
+            m.id.to_string(),
+            m.name(),
+            format!("{:.4}", acc),
+            format!("{:+.2}", (t.exact - acc) * 100.0),
+            format!("{:.2}", predicted_drop_pct(m, tiny, k)),
+        ]);
+    }
+    println!("exact-path accuracy: {:.4}   calibrated K = {:.2} (default {DEFAULT_K})", t.exact, k);
+    println!("{}", tab.render());
+}
+
+fn cmd_verilog(o: &Opts) -> Result<()> {
+    let out_dir = o.get("out-dir", "results/verilog");
+    std::fs::create_dir_all(&out_dir)?;
+    let all = carbon3d::approx::netlist::export_all_verilog();
+    let lib = library();
+    let mut t = Table::new(vec!["mult", "gates", "depth", "file"]);
+    for m in &lib {
+        if let Some(nl) = m.kind.netlist() {
+            let file = format!("{out_dir}/{}.v", m.name().to_lowercase());
+            std::fs::write(&file, &all[&m.name()])?;
+            t.row(vec![
+                m.name(),
+                nl.gate_count().to_string(),
+                nl.depth().to_string(),
+                file,
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("wrote {} structural netlists to {out_dir}/", all.len());
+    println!("(log-domain designs MITCH/DRUM* use macro blocks — no flat netlist)");
+    Ok(())
+}
+
+fn cmd_pipeline(o: &Opts) -> Result<()> {
+    use carbon3d::dataflow::pipeline::{best_pipeline, schedule_pipeline};
+    let model = o.get("model", "vgg16");
+    let w = workload(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let (cfg, mult_id) = config_from_opts(o)?;
+    let lib = library();
+    println!("{} on {}", model, cfg.describe(&lib[mult_id]));
+    let max_segments = o.usize("segments", 6)?;
+    let single = schedule_pipeline(&w, &cfg, 1);
+    let best = best_pipeline(&w, &cfg, max_segments);
+    let mut t = Table::new(vec!["segment", "layers", "pe_share", "cycles"]);
+    for (i, s) in best.segments.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            format!("{}..{}", s.layer_range.0, s.layer_range.1),
+            format!("{:.2}", s.pe_share),
+            s.cycles.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "layer-by-layer: {:.2} fps | pipelined ({} segments): {:.2} fps throughput, {:.2} ms latency",
+        single.throughput_fps(&cfg),
+        best.segments.len(),
+        best.throughput_fps(&cfg),
+        best.latency_s(&cfg) * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_lifetime(o: &Opts) -> Result<()> {
+    use carbon3d::carbon::operational::{embodied_share, operational_carbon};
+    use carbon3d::dataflow::mapper::map_network;
+    let model = o.get("model", "resnet50");
+    let w = workload(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let (cfg, mult_id) = config_from_opts(o)?;
+    let lib = library();
+    let ipd = o.f64("ipd", 10_000.0)?;
+    let mapping = map_network(&w, &cfg);
+    let areas = cfg.die_areas(&lib[mult_id]);
+    let emb = embodied_carbon(&areas, cfg.node, cfg.integration).total_g();
+    let op = operational_carbon(&cfg, &lib[mult_id], &mapping, ipd);
+    println!("{} on {}", model, cfg.describe(&lib[mult_id]));
+    println!(
+        "energy/inference {:.2} mJ | {:.0} inferences/day | lifetime {:.1} kWh",
+        op.energy_per_inference_j * 1e3,
+        op.inferences_per_day,
+        op.lifetime_kwh
+    );
+    println!(
+        "embodied {:.1} gCO2 vs operational {:.1} gCO2 over {} years -> embodied share {:.0}%",
+        emb,
+        op.lifetime_gco2,
+        carbon3d::carbon::operational::LIFETIME_YEARS,
+        embodied_share(emb, &op) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck() -> Result<()> {
+    let artifacts = Artifacts::load(Path::new("artifacts"))?;
+    artifacts.verify()?;
+    println!("artifacts OK ({} files)", Artifacts::hlo_names().len());
+    let engine = Engine::new(artifacts)?;
+    println!("PJRT platform: {} ({} devices)", engine.platform(), 1);
+
+    // matmul artifacts: exact LUT through the approx kernel == exact kernel.
+    let lib = library();
+    let lut = lut_f32(&lib[EXACT_ID]);
+    let mut a = vec![0f32; 64 * 64];
+    let mut b = vec![0f32; 64 * 64];
+    for i in 0..64 * 64 {
+        a[i] = ((i % 97) as f32 - 48.0) * 0.11;
+        b[i] = ((i % 89) as f32 - 44.0) * 0.07;
+    }
+    let approx = engine
+        .executable("matmul_approx")
+        .unwrap()
+        .run_f32(&[(&a, &[64, 64]), (&b, &[64, 64]), (&lut, &[128, 128])])?;
+    let exact = engine
+        .executable("matmul_exact")
+        .unwrap()
+        .run_f32(&[(&a, &[64, 64]), (&b, &[64, 64])])?;
+    let max_err = approx
+        .iter()
+        .zip(&exact)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    println!("matmul exact-LUT max |err| vs exact path: {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-3, "kernel mismatch: {max_err}");
+
+    // CNN artifacts: PJRT exact accuracy matches the manifest.
+    let acc = engine.accuracy_pjrt(None)?;
+    println!(
+        "PJRT exact accuracy {:.4} (manifest {:.4})",
+        acc, engine.artifacts.exact_test_accuracy
+    );
+    anyhow::ensure!((acc - engine.artifacts.exact_test_accuracy).abs() < 1e-6);
+    println!("selfcheck OK");
+    Ok(())
+}

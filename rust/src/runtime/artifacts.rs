@@ -1,0 +1,121 @@
+//! Artifact registry: manifest.json + file layout of `artifacts/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Json;
+
+/// Parsed view of the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub img: usize,
+    pub num_classes: usize,
+    pub n_test: usize,
+    pub exact_test_accuracy: f64,
+    /// (name, flattened-size) of each trained parameter tensor.
+    pub params: Vec<(String, usize)>,
+}
+
+impl Artifacts {
+    /// Default location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Allow override for tests / deployments.
+        if let Ok(d) = std::env::var("CARBON3D_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Load and validate the manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let m = Json::parse(&text).context("parse manifest.json")?;
+        let params = m
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| -> Result<(String, usize)> {
+                let pair = p.as_arr()?;
+                let name = pair[0].as_str()?.to_string();
+                let size = pair[1]
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .product::<Result<usize>>()?;
+                Ok((name, size))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let a = Self {
+            dir: dir.to_path_buf(),
+            batch: m.get("batch")?.as_usize()?,
+            img: m.get("img")?.as_usize()?,
+            num_classes: m.get("num_classes")?.as_usize()?,
+            n_test: m.get("n_test")?.as_usize()?,
+            exact_test_accuracy: m.get("exact_test_accuracy")?.as_f64()?,
+            params,
+        };
+        ensure!(a.batch > 0 && a.n_test > 0, "degenerate manifest");
+        Ok(a)
+    }
+
+    /// Path to one of the HLO artifacts.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// All expected HLO artifact names.
+    pub fn hlo_names() -> [&'static str; 4] {
+        ["matmul_approx", "matmul_exact", "cnn_approx", "cnn_exact"]
+    }
+
+    /// Verify every expected file exists and is non-empty.
+    pub fn verify(&self) -> Result<()> {
+        for name in Self::hlo_names() {
+            let p = self.hlo_path(name);
+            ensure!(
+                p.exists() && std::fs::metadata(&p)?.len() > 0,
+                "missing artifact {} (run `make artifacts`)",
+                p.display()
+            );
+        }
+        for f in ["weights.f32", "testset_images.f32", "testset_labels.u8"] {
+            ensure!(self.dir.join(f).exists(), "missing artifact {f}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let a = Artifacts::load(Path::new("artifacts")).unwrap();
+        assert_eq!(a.batch, 64);
+        assert_eq!(a.img, 16);
+        assert_eq!(a.num_classes, 5);
+        assert!(a.exact_test_accuracy > 0.8);
+        assert_eq!(a.params.len(), 6);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_graceful_error() {
+        let err = Artifacts::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,149 @@
+//! The accuracy-evaluation engine: artifacts + compiled executables +
+//! batched test-set inference. This is the rust-side "ApproxTrain": the GA
+//! asks it for measured ΔA per multiplier LUT; Python is never involved.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::artifacts::Artifacts;
+use super::pjrt::{Executable, PjrtClient};
+use crate::accuracy::native::{NativeEvaluator, IMG, NUM_CLASSES};
+use crate::accuracy::AccuracyTable;
+use crate::approx::{lut_f32, Multiplier};
+
+/// Engine owning the PJRT client and compiled executables (compiled once,
+/// executed many times — one compiled executable per model variant).
+pub struct Engine {
+    pub artifacts: Artifacts,
+    client: PjrtClient,
+    executables: HashMap<String, Executable>,
+    /// Test data (shared with the native evaluator's loader).
+    native: NativeEvaluator,
+}
+
+impl Engine {
+    /// Create from an artifacts directory; compiles the CNN executables.
+    pub fn new(artifacts: Artifacts) -> Result<Self> {
+        artifacts.verify()?;
+        let client = PjrtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for name in ["cnn_approx", "cnn_exact", "matmul_approx", "matmul_exact"] {
+            let exe = client.compile_hlo_text(name, &artifacts.hlo_path(name))?;
+            executables.insert(name.to_string(), exe);
+        }
+        let native = NativeEvaluator::load(&artifacts)?;
+        Ok(Self { artifacts, client, executables, native })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform()
+    }
+
+    pub fn executable(&self, name: &str) -> Option<&Executable> {
+        self.executables.get(name)
+    }
+
+    /// The trained weights as (data, shape) pairs in PARAM_SPECS order —
+    /// the CNN artifacts take them as runtime parameters (baked constants
+    /// trip the HLO-text large-constant elision; see python/compile/aot.py).
+    fn weight_inputs(&self) -> [(&[f32], [usize; 4]); 6] {
+        let w = &self.native.weights;
+        // Shapes padded to 4 entries; the used prefix length is in .1[3].
+        [
+            (&w.conv1_w, [3, 3, 1, 8]),
+            (&w.conv1_b, [8, 0, 0, 1]),
+            (&w.conv2_w, [3, 3, 8, 16]),
+            (&w.conv2_b, [16, 0, 0, 1]),
+            (&w.fc_w, [256, NUM_CLASSES, 0, 2]),
+            (&w.fc_b, [NUM_CLASSES, 0, 0, 1]),
+        ]
+    }
+
+    fn push_weights<'a>(&'a self, inputs: &mut Vec<(&'a [f32], Vec<usize>)>) {
+        for (data, shape) in self.weight_inputs() {
+            let rank = match shape {
+                [_, _, _, 1] => 1,
+                [_, _, _, 2] => 2,
+                _ => 4,
+            };
+            let dims: Vec<usize> = match rank {
+                1 => vec![shape[0]],
+                2 => vec![shape[0], shape[1]],
+                _ => shape.to_vec(),
+            };
+            inputs.push((data, dims));
+        }
+    }
+
+    /// Run the approximate CNN on one batch (len = batch*16*16) with a LUT.
+    pub fn cnn_logits_approx(&self, images: &[f32], lut: &[f32]) -> Result<Vec<f32>> {
+        let b = self.artifacts.batch;
+        ensure!(images.len() == b * IMG * IMG, "batch must be exactly {b} images");
+        ensure!(lut.len() == 128 * 128, "LUT must be 128x128");
+        let exe = self.executables.get("cnn_approx").unwrap();
+        let mut inputs: Vec<(&[f32], Vec<usize>)> =
+            vec![(images, vec![b, IMG, IMG, 1]), (lut, vec![128, 128])];
+        self.push_weights(&mut inputs);
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        exe.run_f32(&refs)
+    }
+
+    /// Run the exact CNN on one batch.
+    pub fn cnn_logits_exact(&self, images: &[f32]) -> Result<Vec<f32>> {
+        let b = self.artifacts.batch;
+        ensure!(images.len() == b * IMG * IMG, "batch must be exactly {b} images");
+        let exe = self.executables.get("cnn_exact").unwrap();
+        let mut inputs: Vec<(&[f32], Vec<usize>)> = vec![(images, vec![b, IMG, IMG, 1])];
+        self.push_weights(&mut inputs);
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        exe.run_f32(&refs)
+    }
+
+    /// Top-1 accuracy over the artifact test set through the PJRT path.
+    /// `lut = None` runs the exact executable.
+    pub fn accuracy_pjrt(&self, lut: Option<&[f32]>) -> Result<f64> {
+        let b = self.artifacts.batch;
+        let n = self.native.testset.n;
+        ensure!(n % b == 0, "test set ({n}) not a multiple of batch ({b})");
+        let mut correct = 0usize;
+        for start in (0..n).step_by(b) {
+            let imgs = &self.native.testset.images[start * IMG * IMG..(start + b) * IMG * IMG];
+            let logits = match lut {
+                Some(l) => self.cnn_logits_approx(imgs, l)?,
+                None => self.cnn_logits_exact(imgs)?,
+            };
+            for i in 0..b {
+                let row = &logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == self.native.testset.labels[start + i] as usize {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Measure the full accuracy table for a set of multipliers via PJRT.
+    pub fn measure_table(&self, mults: &[&Multiplier]) -> Result<AccuracyTable> {
+        let exact = self.accuracy_pjrt(None)?;
+        let mut table = AccuracyTable { exact, ..Default::default() };
+        for m in mults {
+            let lut = lut_f32(m);
+            table.accuracy.insert(m.id, self.accuracy_pjrt(Some(&lut))?);
+        }
+        Ok(table)
+    }
+
+    /// Native (non-PJRT) evaluator view for cross-checking.
+    pub fn native(&self) -> &NativeEvaluator {
+        &self.native
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `make artifacts` and executes them on the xla crate's CPU client.
+//!
+//! Python never runs here — the rust binary is self-contained once
+//! artifacts exist. Interchange is HLO *text* (xla_extension 0.5.1 rejects
+//! jax>=0.5's 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod artifacts;
+pub mod engine;
+pub mod pjrt;
+pub mod service;
+
+pub use artifacts::Artifacts;
+pub use engine::Engine;
+pub use service::{EvalClient, EvalService};

@@ -1,0 +1,76 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO text -> HloModuleProto ->
+//! XlaComputation -> compile -> execute. Artifacts are lowered with
+//! return_tuple=True, so results unwrap with `to_tuple1`.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+/// A compiled executable plus its human name (for errors/metrics).
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client wrapper.
+pub struct PjrtClient {
+    client: xla::PjRtClient,
+}
+
+impl PjrtClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text(&self, name: &str, path: &Path) -> Result<Executable> {
+        ensure!(path.exists(), "HLO artifact {} missing (run `make artifacts`)", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {name}"))?;
+        Ok(Executable { name: name.to_string(), exe })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs (shape per tensor), returning the
+    /// flattened f32 output of the 1-tuple result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshape input to {shape:?} for {}", self.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        let out = lit.to_tuple1().with_context(|| format!("untuple result of {}", self.name))?;
+        out.to_vec::<f32>().with_context(|| format!("read f32 result of {}", self.name))
+    }
+}

@@ -1,0 +1,281 @@
+//! Accuracy-evaluation service: a threaded request loop over the evaluation
+//! engine (the vLLM-router-shaped slice of L3).
+//!
+//! Clients submit `EvalRequest`s (multiplier id, or a raw LUT) on a channel;
+//! a worker owns the evaluator and serves requests FIFO with *result
+//! caching* and *request coalescing* (duplicate in-flight multiplier ids
+//! collapse onto one evaluation — the GA hammers the same feasible set
+//! repeatedly). The worker is generic over the evaluation backend so tests
+//! run on the fast native path and production on PJRT.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::accuracy::native::{ApproxDatapath, NativeEvaluator};
+use crate::approx::{lut_f32, Multiplier};
+
+/// Evaluation backend: maps a multiplier LUT to a test-set accuracy.
+pub trait EvalBackend: Send + 'static {
+    fn accuracy_of_lut(&self, lut: &[f32]) -> Result<f64>;
+}
+
+/// Native bit-faithful backend (no PJRT; used in tests and as fallback).
+pub struct NativeBackend(pub NativeEvaluator);
+
+impl EvalBackend for NativeBackend {
+    fn accuracy_of_lut(&self, lut: &[f32]) -> Result<f64> {
+        Ok(self.0.accuracy(&ApproxDatapath::from_lut(lut.to_vec())))
+    }
+}
+
+/// A request to evaluate one multiplier.
+pub struct EvalRequest {
+    pub mult_id: usize,
+    pub lut: Vec<f32>,
+    pub reply: Sender<Result<f64, String>>,
+}
+
+/// Worker mailbox message. `Stop` is sent by `shutdown` so the worker exits
+/// deterministically even while client handles (sender clones) are alive.
+enum Msg {
+    Eval(EvalRequest),
+    Stop,
+}
+
+/// Handle to the running service.
+pub struct EvalService {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<ServiceStats>>,
+}
+
+/// Counters the worker reports on shutdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub served: usize,
+    pub evaluated: usize,
+    pub cache_hits: usize,
+    pub coalesced: usize,
+}
+
+impl EvalService {
+    /// Spawn the worker thread over a backend.
+    pub fn start<B: EvalBackend>(backend: B) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || worker_loop(backend, rx));
+        Self { tx, worker: Some(worker) }
+    }
+
+    /// Client handle for submitting requests.
+    pub fn client(&self) -> EvalClient {
+        EvalClient { tx: self.tx.clone() }
+    }
+
+    /// Shut down (poison message + join) and return stats. Outstanding
+    /// queued requests ahead of the Stop are still served; later submits
+    /// from surviving client clones get a "service stopped" error.
+    pub fn shutdown(mut self) -> ServiceStats {
+        let _ = self.tx.send(Msg::Stop);
+        self.worker
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("worker panicked")
+    }
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct EvalClient {
+    tx: Sender<Msg>,
+}
+
+impl EvalClient {
+    /// Blocking evaluation of one multiplier.
+    pub fn eval(&self, m: &Multiplier) -> Result<f64, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Eval(EvalRequest { mult_id: m.id, lut: lut_f32(m), reply }))
+            .map_err(|_| "service stopped".to_string())?;
+        rx.recv().map_err(|_| "service dropped request".to_string())?
+    }
+
+    /// Fire-and-collect: submit all multipliers, then gather accuracies in
+    /// submission order. Coalescing in the worker dedupes repeats.
+    pub fn eval_all(&self, mults: &[&Multiplier]) -> Result<Vec<f64>, String> {
+        let mut replies = Vec::with_capacity(mults.len());
+        for m in mults {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(Msg::Eval(EvalRequest { mult_id: m.id, lut: lut_f32(m), reply }))
+                .map_err(|_| "service stopped".to_string())?;
+            replies.push(rx);
+        }
+        replies
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| "service dropped request".to_string())?)
+            .collect()
+    }
+}
+
+fn worker_loop<B: EvalBackend>(backend: B, rx: Receiver<Msg>) -> ServiceStats {
+    let mut stats = ServiceStats::default();
+    let mut cache: HashMap<usize, f64> = HashMap::new();
+    // Drain-and-batch: pull everything queued, coalesce by mult_id, then
+    // evaluate unique ids once and fan results back out.
+    'outer: while let Ok(first) = rx.recv() {
+        let first = match first {
+            Msg::Stop => break 'outer,
+            Msg::Eval(r) => r,
+        };
+        let mut batch: Vec<EvalRequest> = vec![first];
+        let mut stop_after = false;
+        while let Ok(more) = rx.try_recv() {
+            match more {
+                Msg::Stop => {
+                    stop_after = true;
+                    break;
+                }
+                Msg::Eval(r) => batch.push(r),
+            }
+        }
+        // Group replies by multiplier id.
+        let mut groups: HashMap<usize, Vec<EvalRequest>> = HashMap::new();
+        for req in batch {
+            groups.entry(req.mult_id).or_default().push(req);
+        }
+        let mut ids: Vec<usize> = groups.keys().copied().collect();
+        ids.sort_unstable(); // deterministic service order
+        for id in ids {
+            let reqs = groups.remove(&id).unwrap();
+            stats.served += reqs.len();
+            stats.coalesced += reqs.len() - 1;
+            let acc = if let Some(&hit) = cache.get(&id) {
+                stats.cache_hits += reqs.len();
+                Ok(hit)
+            } else {
+                stats.evaluated += 1;
+                match backend.accuracy_of_lut(&reqs[0].lut) {
+                    Ok(a) => {
+                        cache.insert(id, a);
+                        Ok(a)
+                    }
+                    Err(e) => Err(format!("{e:#}")),
+                }
+            };
+            for req in reqs {
+                let _ = req.reply.send(acc.clone());
+            }
+        }
+        if stop_after {
+            break 'outer;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Counting stub backend: accuracy = f(lut[255*255 entry]) so results
+    /// are checkable and differ across designs (the (128,128) entry is the
+    /// same for most families — no low bits to approximate).
+    struct Stub(Arc<AtomicUsize>);
+
+    impl EvalBackend for Stub {
+        fn accuracy_of_lut(&self, lut: &[f32]) -> Result<f64> {
+            self.0.fetch_add(1, Ordering::SeqCst);
+            Ok(f64::from(lut[127 * 128 + 127]) / 100_000.0)
+        }
+    }
+
+    fn mults() -> Vec<crate::approx::Multiplier> {
+        crate::approx::library()
+    }
+
+    #[test]
+    fn serves_and_caches() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let svc = EvalService::start(Stub(count.clone()));
+        let client = svc.client();
+        let lib = mults();
+        let a1 = client.eval(&lib[0]).unwrap();
+        let a2 = client.eval(&lib[0]).unwrap(); // cached
+        let a3 = client.eval(&lib[5]).unwrap();
+        assert_eq!(a1, a2);
+        assert_ne!(a1, a3);
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.evaluated, 2);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn eval_all_returns_in_submission_order() {
+        let svc = EvalService::start(Stub(Arc::new(AtomicUsize::new(0))));
+        let client = svc.client();
+        let lib = mults();
+        let sel: Vec<&crate::approx::Multiplier> = vec![&lib[3], &lib[1], &lib[3], &lib[7]];
+        let out = client.eval_all(&sel).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0], out[2]); // same multiplier, same answer
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 4);
+        // The duplicate either coalesced in-batch or hit the cache; both
+        // save one evaluation.
+        assert_eq!(stats.evaluated, 3);
+        assert_eq!(stats.coalesced + stats.cache_hits, 1);
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_answers() {
+        let svc = EvalService::start(Stub(Arc::new(AtomicUsize::new(0))));
+        let lib = Arc::new(mults());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let client = svc.client();
+            let lib = lib.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..8).map(|i| client.eval(&lib[(t * 3 + i) % lib.len()]).unwrap()).collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            let results = h.join().unwrap();
+            assert_eq!(results.len(), 8);
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 32);
+        // At most one evaluation per distinct multiplier id.
+        assert!(stats.evaluated <= 32 - stats.cache_hits - stats.coalesced);
+    }
+
+    #[test]
+    fn shutdown_returns_stats_once() {
+        let svc = EvalService::start(Stub(Arc::new(AtomicUsize::new(0))));
+        let stats = svc.shutdown();
+        assert_eq!(stats, ServiceStats::default());
+    }
+
+    #[test]
+    fn native_backend_end_to_end_if_artifacts_exist() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let artifacts = crate::runtime::Artifacts::load(std::path::Path::new("artifacts")).unwrap();
+        let native = NativeEvaluator::load(&artifacts).unwrap();
+        let exact_expected = artifacts.exact_test_accuracy;
+        let svc = EvalService::start(NativeBackend(native));
+        let client = svc.client();
+        let lib = mults();
+        let acc = client.eval(&lib[crate::approx::EXACT_ID]).unwrap();
+        assert!((acc - exact_expected).abs() < 1e-9);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities (offline build: no rand/serde/proptest/
+//! criterion available, so we carry our own).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;

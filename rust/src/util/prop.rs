@@ -1,0 +1,77 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure with `cases` independent
+//! seeded RNG streams; a panic in any case is re-raised together with the
+//! case seed so failures reproduce with `case_with_seed`.
+
+use super::rng::Rng;
+
+/// Run `cases` randomized checks; on failure, report the offending seed.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: usize, f: F) {
+    for i in 0..cases {
+        let seed = 0xC0FFEE ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed on case {i} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::prop::case_with_seed({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn case_with_seed<F: Fn(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        // Captured mutation via cell to count invocations.
+        let counter = std::cell::Cell::new(0);
+        check("trivial", 25, |rng| {
+            let _ = rng.f64();
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_rng| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_see_distinct_randomness() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        check("distinct", 10, |rng| {
+            seen.borrow_mut().push(rng.next_u64());
+        });
+        let v = seen.borrow();
+        let mut dedup = v.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), v.len());
+    }
+}

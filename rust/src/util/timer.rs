@@ -1,0 +1,95 @@
+//! Bench timing helpers (criterion is unavailable offline).
+//!
+//! `bench(name, iters, f)` runs a warmup, then `iters` timed invocations and
+//! prints mean/p50/p95 — the shared harness for everything in rust/benches/.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            human_time(self.summary.mean),
+            human_time(self.summary.p50),
+            human_time(self.summary.p95),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds in engineering units.
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+/// Returns per-iteration statistics. `f`'s return value is black-boxed.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, summary: Summary::of(&samples) }
+}
+
+/// Time a single invocation (for long end-to-end pipelines).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let counter = std::cell::Cell::new(0usize);
+        let r = bench("count", 2, 5, || counter.set(counter.get() + 1));
+        assert_eq!(counter.get(), 7); // 2 warmup + 5 timed
+        assert_eq!(r.iters, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with('s'));
+        assert!(human_time(2e-3).ends_with("ms"));
+        assert!(human_time(2e-6).ends_with("us"));
+        assert!(human_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

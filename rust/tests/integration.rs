@@ -1,0 +1,242 @@
+//! Integration tests across modules: runtime x accuracy x coordinator.
+//!
+//! PJRT-dependent tests skip (with a message) when `artifacts/` has not
+//! been built — run `make artifacts` first for full coverage.
+
+use std::path::Path;
+
+use carbon3d::accuracy::model::{calibrate_k, feasible_multipliers, DEFAULT_K};
+use carbon3d::accuracy::native::{ApproxDatapath, NativeEvaluator};
+use carbon3d::approx::{library, lut_f32, EXACT_ID};
+use carbon3d::area::die::Integration;
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::area::TechNode;
+use carbon3d::coordinator::baselines::Approach;
+use carbon3d::coordinator::{ga_appx_min_carbon, ga_cdp_exact, headline_report, run_fig2, run_fig3};
+use carbon3d::dataflow::workloads::workload;
+use carbon3d::ga::GaParams;
+use carbon3d::runtime::{Artifacts, Engine};
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn quick() -> GaParams {
+    GaParams { population: 24, generations: 14, patience: 7, ..Default::default() }
+}
+
+// ---------------------------------------------------------------- figure pipelines
+
+#[test]
+fn fig2_pipeline_never_regresses_carbon() {
+    let lib = library();
+    let r = run_fig2(&lib, &["resnet50"], quick());
+    assert_eq!(r.cells.len(), 9);
+    for c in &r.cells {
+        assert!(
+            c.norm_carbon <= 1.0 + 1e-9,
+            "{} {} δ{}: norm carbon {}",
+            c.node.name(),
+            c.model,
+            c.delta_pct,
+            c.norm_carbon
+        );
+        assert!(c.norm_delay <= 1.0 + 1e-9, "delay regressed: {}", c.norm_delay);
+    }
+}
+
+#[test]
+fn fig2_carbon_cut_monotone_in_delta() {
+    let lib = library();
+    let r = run_fig2(&lib, &["vgg19"], quick());
+    for &node in &ALL_NODES {
+        let cut = |d: f64| r.mean_carbon_cut_pct(node, d);
+        assert!(cut(2.0) >= cut(1.0) - 1e-9, "{}", node.name());
+        assert!(cut(3.0) >= cut(2.0) - 1e-9, "{}", node.name());
+    }
+}
+
+#[test]
+fn fig3_ga_points_meet_their_targets() {
+    let lib = library();
+    let r = run_fig3(&lib, "vgg16", quick());
+    for p in r.points.iter().filter(|p| p.approach == Approach::GaAppxCdp) {
+        let target = p.fps_target.unwrap();
+        // GA points must meet reachable targets; the paper's max target is
+        // within reach at every node for 3D arrays <= 64x64.
+        assert!(p.feasible, "{} target {target}", p.node.name());
+        assert!(p.fps >= target * 0.999, "{}: {} < {target}", p.node.name(), p.fps);
+    }
+}
+
+#[test]
+fn headline_report_directions_match_paper() {
+    let lib = library();
+    let fig2 = run_fig2(&lib, &["vgg16", "densenet121"], quick());
+    let fig3 = run_fig3(&lib, "vgg16", quick());
+    let claims = headline_report(&fig2, &fig3);
+    assert!(claims.len() >= 4);
+    for c in &claims {
+        // Every measured claim must at least point the same way as the
+        // paper's (positive = improvement).
+        assert!(
+            c.measured > 0.0,
+            "{}: measured {} has wrong sign (paper {})",
+            c.name,
+            c.measured,
+            c.paper
+        );
+    }
+}
+
+#[test]
+fn baseline_vs_appx_like_for_like() {
+    // The APPX search space strictly contains the baseline's, so with the
+    // deterministic descent the reported carbon can never exceed baseline.
+    let lib = library();
+    let w = workload("resnet50v2").unwrap();
+    for &node in &ALL_NODES {
+        let base = ga_cdp_exact(&w, node, &lib, None, quick());
+        let r = ga_appx_min_carbon(
+            &w,
+            node,
+            &lib,
+            3.0,
+            base.best_eval.fps * 0.999,
+            quick(),
+            Some(&base.best),
+        );
+        assert!(r.best_eval.carbon_g <= base.best_eval.carbon_g + 1e-9, "{}", node.name());
+        assert!(r.best_eval.fps >= base.best_eval.fps * 0.998, "{}", node.name());
+    }
+}
+
+// ---------------------------------------------------------------- accuracy model
+
+#[test]
+fn feasible_sets_respect_delta_ordering_on_all_workloads() {
+    let lib = library();
+    for name in ["vgg16", "vgg19", "resnet50", "resnet50v2", "densenet121"] {
+        let w = workload(name).unwrap();
+        let f1 = feasible_multipliers(&lib, &w, 1.0, DEFAULT_K);
+        let f3 = feasible_multipliers(&lib, &w, 3.0, DEFAULT_K);
+        assert!(f1.contains(&EXACT_ID), "{name}");
+        assert!(f3.len() > f1.len(), "{name}: δ=3% adds nothing over δ=1%");
+    }
+}
+
+// ---------------------------------------------------------------- PJRT runtime
+
+#[test]
+fn pjrt_exact_accuracy_matches_manifest() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(Artifacts::load(Path::new("artifacts")).unwrap()).unwrap();
+    let acc = engine.accuracy_pjrt(None).unwrap();
+    assert!((acc - engine.artifacts.exact_test_accuracy).abs() < 1e-9);
+}
+
+#[test]
+fn pjrt_exact_lut_equals_exact_executable() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(Artifacts::load(Path::new("artifacts")).unwrap()).unwrap();
+    let lib = library();
+    let lut = lut_f32(&lib[EXACT_ID]);
+    let imgs = &engine.native().testset.images[..64 * 256];
+    let exact = engine.cnn_logits_exact(imgs).unwrap();
+    let viaapx = engine.cnn_logits_approx(imgs, &lut).unwrap();
+    // Approximate path quantizes to bf16; logits must stay close.
+    let max_abs = exact.iter().fold(0f32, |m, x| m.max(x.abs()));
+    for (a, b) in exact.iter().zip(&viaapx) {
+        assert!((a - b).abs() < 0.05 * max_abs, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_and_native_agree_on_an_aggressive_multiplier() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(Artifacts::load(Path::new("artifacts")).unwrap()).unwrap();
+    let lib = library();
+    let m = lib.iter().find(|m| m.name() == "TRUNC5").unwrap();
+    let pjrt = engine.accuracy_pjrt(Some(&lut_f32(m))).unwrap();
+    let native = engine.native().accuracy(&ApproxDatapath::new(m));
+    assert!(
+        (pjrt - native).abs() < 0.01,
+        "TRUNC5: pjrt {pjrt} vs native {native}"
+    );
+}
+
+#[test]
+fn native_evaluator_accuracy_matches_manifest() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let artifacts = Artifacts::load(Path::new("artifacts")).unwrap();
+    let native = NativeEvaluator::load(&artifacts).unwrap();
+    let lib = library();
+    let acc = native.accuracy(&ApproxDatapath::new(&lib[EXACT_ID]));
+    assert!((acc - artifacts.exact_test_accuracy).abs() < 1e-9);
+}
+
+#[test]
+fn measured_calibration_is_stable() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let artifacts = Artifacts::load(Path::new("artifacts")).unwrap();
+    let native = NativeEvaluator::load(&artifacts).unwrap();
+    let lib = library();
+    let tiny = workload("tinycnn").unwrap();
+    let mut table = carbon3d::accuracy::AccuracyTable {
+        exact: native.accuracy(&ApproxDatapath::new(&lib[EXACT_ID])),
+        ..Default::default()
+    };
+    // A handful of informative designs suffices for a stable K.
+    for name in ["PERF6", "PERF7", "TRUNC5"] {
+        let m = lib.iter().find(|m| m.name() == name).unwrap();
+        table.accuracy.insert(m.id, native.accuracy(&ApproxDatapath::new(m)));
+    }
+    let k = calibrate_k(&lib, &tiny, &table);
+    assert!((0.05..50.0).contains(&k), "k={k}");
+}
+
+// ---------------------------------------------------------------- cross-model glue
+
+#[test]
+fn config_describe_roundtrips_all_nodes_integrations() {
+    let lib = library();
+    for &node in &ALL_NODES {
+        for integration in [Integration::TwoD, Integration::ThreeD] {
+            let cfg = carbon3d::dataflow::arch::AccelConfig {
+                px: 16,
+                py: 16,
+                rf_bytes: 128,
+                sram_bytes: 512 << 10,
+                node,
+                integration,
+                mult_id: EXACT_ID,
+            };
+            let d = cfg.describe(&lib[EXACT_ID]);
+            assert!(d.contains(node.name()));
+            let areas = cfg.die_areas(&lib[EXACT_ID]);
+            assert!(areas.logic_mm2 > 0.0);
+        }
+    }
+}
+
+#[test]
+fn tech_node_sanity_against_paper_frequencies() {
+    assert_eq!(TechNode::N45.freq_mhz(), 500.0);
+    assert_eq!(TechNode::N14.freq_mhz(), 940.0);
+    assert_eq!(TechNode::N7.freq_mhz(), 1050.0);
+}
