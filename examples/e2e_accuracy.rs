@@ -1,5 +1,5 @@
-//! END-TO-END driver (EXPERIMENTS.md §E2E): proves all three layers compose
-//! on a real small workload.
+//! END-TO-END driver: proves all three layers compose on a real small
+//! workload.
 //!
 //!   L1 Pallas LUT-matmul kernel ──lowered into── L2 JAX CNN artifact
 //!        └───────────── executed by ─────────── L3 rust PJRT runtime

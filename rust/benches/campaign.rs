@@ -1,0 +1,72 @@
+//! Bench campaign: grid throughput (jobs/sec) and campaign-global eval
+//! cache-hit rate for the worker-pool scheduler vs a serial loop of
+//! `ga_appx_cdp` calls over the same scenarios.
+
+use carbon3d::approx::library;
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::campaign::{run_campaign, CampaignSpec, ResultStore, SurrogateBackend};
+use carbon3d::coordinator::ga_appx_cdp;
+use carbon3d::dataflow::workloads::workload;
+use carbon3d::ga::GaParams;
+use carbon3d::runtime::EvalService;
+use carbon3d::util::timer::time_once;
+
+/// 2 models x 3 nodes x 2 deltas = 12 jobs at a reduced GA budget.
+fn spec() -> CampaignSpec {
+    let mut s = CampaignSpec::new(
+        vec!["vgg16".to_string(), "resnet50".to_string()],
+        ALL_NODES.to_vec(),
+        vec![1.0, 3.0],
+    );
+    s.ga = GaParams { population: 16, generations: 8, patience: 4, ..Default::default() };
+    s
+}
+
+fn main() {
+    println!("== campaign benches ==");
+    let s = spec();
+    let n = s.n_jobs();
+    let lib = library();
+
+    // Serial baseline: one GA-APPX-CDP invocation per scenario, nothing
+    // shared across runs (the pre-campaign workflow).
+    let (_, serial_t) = time_once(|| {
+        for job in s.jobs() {
+            let w = workload(&job.model).unwrap();
+            std::hint::black_box(ga_appx_cdp(
+                &w,
+                job.node,
+                &lib,
+                job.delta_pct,
+                job.fps_floor,
+                GaParams { seed: job.seed, ..s.ga },
+            ));
+        }
+    });
+    println!(
+        "serial ga_appx_cdp loop                      {n} jobs in {serial_t:.2}s = {:.2} jobs/s",
+        n as f64 / serial_t
+    );
+
+    for workers in [1usize, 2, 4, 8] {
+        let path = std::env::temp_dir().join(format!(
+            "carbon3d-bench-campaign-{}-{workers}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let (report, t) =
+            time_once(|| run_campaign(&s, workers, &mut store, &svc).unwrap());
+        svc.shutdown();
+        println!(
+            "campaign {workers} worker{}                           \
+             {n} jobs in {t:.2}s = {:.2} jobs/s | cache-hit {:.0}% | {:.2}x vs serial",
+            if workers == 1 { " " } else { "s" },
+            report.jobs_per_sec(),
+            report.stats.hit_rate() * 100.0,
+            serial_t / t
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -2,7 +2,8 @@
 //! per-network mapping cost for every workload, 2D vs 3D.
 //!
 //! This is the innermost loop of every GA fitness evaluation, so its cost
-//! bounds the whole DSE (see EXPERIMENTS.md §Perf).
+//! bounds the whole DSE (and thereby campaign throughput; see
+//! benches/campaign.rs).
 
 use carbon3d::approx::EXACT_ID;
 use carbon3d::area::die::Integration;

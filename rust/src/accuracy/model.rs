@@ -22,7 +22,7 @@ use crate::approx::Multiplier;
 use crate::dataflow::workloads::Workload;
 
 /// Mean exact significand product over [128,255]^2 (~ (191.5)^2).
-const MEAN_SIG_PRODUCT: f64 = 36672.25;
+pub const MEAN_SIG_PRODUCT: f64 = 36672.25;
 
 /// Default calibration constant (fit against the measured tiny-CNN table at
 /// artifact-build time; `calibrate_k` recomputes it from live data).
@@ -45,7 +45,14 @@ fn depth_factor(w: &Workload) -> f64 {
 
 /// Predicted accuracy drop in percentage points for a workload.
 pub fn predicted_drop_pct(m: &Multiplier, w: &Workload, k: f64) -> f64 {
-    A_SCALE * 100.0 * (k * effective_error(m) * depth_factor(w)).tanh()
+    drop_pct_from_error(effective_error(m), w, k)
+}
+
+/// The drop model on a raw effective-error value. Exposed for the campaign
+/// engine's surrogate `EvalBackend`, which measures e_eff directly from a
+/// significand LUT instead of a library entry.
+pub fn drop_pct_from_error(e_eff: f64, w: &Workload, k: f64) -> f64 {
+    A_SCALE * 100.0 * (k * e_eff * depth_factor(w)).tanh()
 }
 
 /// Calibrate K by least squares against a measured accuracy table on the

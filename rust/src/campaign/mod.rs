@@ -1,0 +1,133 @@
+//! Design-space-exploration **campaign engine**: run an entire scenario
+//! grid — {workload} x {TechNode} x {Integration} x {δ} x {FPS floor} — as
+//! a job queue drained by a pool of std-thread workers, instead of one
+//! GA-APPX-CDP invocation at a time.
+//!
+//! The pieces:
+//! - [`spec`]: grid definition; per-job GA seeds derive from the campaign
+//!   seed + the job *key*, so results are reproducible for any worker count
+//!   and stable under grid growth.
+//! - [`scheduler`]: the worker pool. All workers share ONE
+//!   [`crate::runtime::EvalService`], so multiplier-accuracy evaluations are
+//!   cached campaign-globally — the δ-feasible sets of neighboring scenarios
+//!   overlap almost entirely, making every job after the first nearly free
+//!   on the accuracy side. Results are committed in job-id order through a
+//!   reorder buffer.
+//! - [`store`]: append-only JSONL with checkpoint/resume — on restart,
+//!   completed jobs are detected by key and skipped; a torn final line from
+//!   an interrupted write is dropped and its job redone.
+//! - [`pareto`]: cross-scenario Pareto archive over (embodied carbon, task
+//!   delay, accuracy drop) with per-node / per-workload aggregates.
+//!
+//! Invariant the tests pin down: for a fixed campaign seed, the final store
+//! bytes are identical whether the campaign ran uninterrupted with any
+//! number of workers or was killed and resumed.
+
+pub mod pareto;
+pub mod scheduler;
+pub mod spec;
+pub mod store;
+
+pub use pareto::{CampaignArchive, GroupBy};
+pub use scheduler::{run_campaign, start_service, CampaignReport, SurrogateBackend};
+pub use spec::{CampaignSpec, JobSpec};
+pub use store::ResultStore;
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::area::TechNode;
+    use crate::ga::GaParams;
+    use crate::runtime::EvalService;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "carbon3d-campaign-{}-{name}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    /// 2 models x 2 nodes x 2 deltas = 8 jobs, tiny GA budget.
+    fn quick_spec() -> CampaignSpec {
+        let mut s = CampaignSpec::new(
+            vec!["vgg16".to_string(), "resnet50".to_string()],
+            vec![TechNode::N45, TechNode::N7],
+            vec![1.0, 3.0],
+        );
+        s.ga = GaParams { population: 8, generations: 4, patience: 2, elites: 1, ..Default::default() };
+        s
+    }
+
+    fn run_to(path: &PathBuf, workers: usize) -> (CampaignReport, String) {
+        let mut store = ResultStore::open(path).unwrap();
+        // Surrogate backend: deterministic and artifact-free.
+        let svc = EvalService::start(SurrogateBackend::default());
+        let report = run_campaign(&quick_spec(), workers, &mut store, &svc).unwrap();
+        svc.shutdown();
+        (report, std::fs::read_to_string(path).unwrap())
+    }
+
+    #[test]
+    fn campaign_resume_and_worker_count_are_invisible_in_the_store() {
+        let (p4, p1, pr) = (tmp("w4"), tmp("w1"), tmp("resume"));
+        for p in [&p4, &p1, &pr] {
+            let _ = std::fs::remove_file(p);
+        }
+
+        // Uninterrupted, 4 workers.
+        let (report, bytes4) = run_to(&p4, 4);
+        assert_eq!(report.jobs_total, 8);
+        assert_eq!(report.jobs_run, 8);
+        assert_eq!(report.jobs_skipped, 0);
+        assert_eq!(bytes4.lines().count(), 8);
+
+        // Campaign-global cache: 8 jobs each request the full library, but
+        // only the first evaluates it — everything later is cross-job hits.
+        let lib_len = crate::approx::library().len();
+        assert_eq!(report.stats.served, 8 * lib_len);
+        assert!(report.stats.evaluated <= lib_len, "{:?}", report.stats);
+        assert!(report.stats.cache_hits > 0, "{:?}", report.stats);
+        assert!(report.stats.hit_rate() > 0.5, "{:?}", report.stats);
+
+        // Same grid, 1 worker: byte-identical store.
+        let (_, bytes1) = run_to(&p1, 1);
+        assert_eq!(bytes4, bytes1, "store depends on worker interleaving");
+
+        // Kill after 5 jobs (truncate), then resume: identical store again.
+        let prefix: String =
+            bytes4.lines().take(5).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&pr, prefix).unwrap();
+        let (resumed, bytes_r) = run_to(&pr, 3);
+        assert_eq!(resumed.jobs_skipped, 5);
+        assert_eq!(resumed.jobs_run, 3);
+        assert_eq!(bytes_r, bytes4, "resume diverged from uninterrupted run");
+
+        // The archive reads the store back: 8 points, a nonempty front,
+        // and aggregates grouped by the grid's 2 nodes / 2 models.
+        let store = ResultStore::open(&p4).unwrap();
+        let arch = CampaignArchive::from_rows(store.rows()).unwrap();
+        assert_eq!(arch.points.len(), 8);
+        assert!(!arch.front.is_empty());
+        assert_eq!(arch.aggregate_table(GroupBy::Node).n_rows(), 2);
+        assert_eq!(arch.aggregate_table(GroupBy::Model).n_rows(), 2);
+
+        for p in [&p4, &p1, &pr] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn rerun_of_complete_campaign_is_a_noop() {
+        let p = tmp("noop");
+        let _ = std::fs::remove_file(&p);
+        let (_, bytes) = run_to(&p, 2);
+        let (report, bytes_again) = run_to(&p, 2);
+        assert_eq!(report.jobs_run, 0);
+        assert_eq!(report.jobs_skipped, 8);
+        assert_eq!(report.stats.served, 0);
+        assert_eq!(bytes, bytes_again);
+        let _ = std::fs::remove_file(&p);
+    }
+}

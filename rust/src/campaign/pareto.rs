@@ -1,0 +1,211 @@
+//! Cross-scenario Pareto archive: every committed campaign row is a point
+//! in (embodied carbon, task delay, accuracy drop) space; the archive keeps
+//! the non-dominated set across ALL scenarios plus per-node and
+//! per-workload aggregate summaries. This is the campaign-level view the
+//! single-run pipelines (fig2/fig3) cannot give: which (workload, node, δ)
+//! corners the grid actually pays for.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::{table, Json, Table};
+
+/// One campaign result as an objective-space point (all minimized).
+#[derive(Debug, Clone)]
+pub struct ArchivePoint {
+    pub key: String,
+    pub model: String,
+    pub node: String,
+    pub mult: String,
+    pub carbon_g: f64,
+    pub delay_s: f64,
+    pub drop_pct: f64,
+    pub cdp: f64,
+}
+
+impl ArchivePoint {
+    fn from_row(row: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            row.get(k).and_then(|v| v.as_str().map(str::to_string)).context(format!("field {k}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            row.get(k).and_then(|v| v.as_f64()).context(format!("field {k}"))
+        };
+        Ok(Self {
+            key: s("key")?,
+            model: s("model")?,
+            node: s("node")?,
+            mult: s("mult")?,
+            carbon_g: f("carbon_g")?,
+            delay_s: f("delay_s")?,
+            drop_pct: f("drop_pct")?,
+            cdp: f("cdp")?,
+        })
+    }
+}
+
+/// 3-objective dominance (<= everywhere, < somewhere; minimize all).
+fn dominates(a: &ArchivePoint, b: &ArchivePoint) -> bool {
+    let le = a.carbon_g <= b.carbon_g && a.delay_s <= b.delay_s && a.drop_pct <= b.drop_pct;
+    let lt = a.carbon_g < b.carbon_g || a.delay_s < b.delay_s || a.drop_pct < b.drop_pct;
+    le && lt
+}
+
+/// Grouping axis for aggregate summaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupBy {
+    Node,
+    Model,
+}
+
+/// The archive: all points plus the indices of the cross-scenario front.
+#[derive(Debug, Clone)]
+pub struct CampaignArchive {
+    pub points: Vec<ArchivePoint>,
+    /// Indices into `points` on the (carbon, delay, drop) Pareto front,
+    /// in store order.
+    pub front: Vec<usize>,
+}
+
+impl CampaignArchive {
+    /// Build from committed store rows.
+    pub fn from_rows(rows: &[Json]) -> Result<Self> {
+        let points: Vec<ArchivePoint> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ArchivePoint::from_row(r).with_context(|| format!("store row {}", i + 1)))
+            .collect::<Result<_>>()?;
+        let front = (0..points.len())
+            .filter(|&i| {
+                points
+                    .iter()
+                    .enumerate()
+                    .all(|(j, other)| j == i || !dominates(other, &points[i]))
+            })
+            .collect();
+        Ok(Self { points, front })
+    }
+
+    /// The cross-scenario Pareto front as a printable table.
+    pub fn pareto_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "scenario", "mult", "carbon_g", "delay_ms", "drop_pp", "cdp",
+        ]);
+        for &i in &self.front {
+            let p = &self.points[i];
+            t.row(vec![
+                p.key.clone(),
+                p.mult.clone(),
+                table::fmt(p.carbon_g),
+                format!("{:.3}", p.delay_s * 1e3),
+                format!("{:.2}", p.drop_pct),
+                format!("{:.4}", p.cdp),
+            ]);
+        }
+        t
+    }
+
+    /// Aggregate summary per node or per workload: scenario count, how many
+    /// sit on the cross-scenario front, carbon/cdp extremes and means.
+    pub fn aggregate_table(&self, by: GroupBy) -> Table {
+        let label = match by {
+            GroupBy::Node => "node",
+            GroupBy::Model => "model",
+        };
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, p) in self.points.iter().enumerate() {
+            let g = match by {
+                GroupBy::Node => p.node.clone(),
+                GroupBy::Model => p.model.clone(),
+            };
+            groups.entry(g).or_default().push(i);
+        }
+        let mut t = Table::new(vec![
+            label, "jobs", "on_front", "min_carbon_g", "mean_carbon_g", "best_cdp", "min_delay_ms",
+        ]);
+        for (g, idxs) in &groups {
+            let carbons: Vec<f64> = idxs.iter().map(|&i| self.points[i].carbon_g).collect();
+            let min_c = carbons.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mean_c = carbons.iter().sum::<f64>() / carbons.len() as f64;
+            let best_cdp =
+                idxs.iter().map(|&i| self.points[i].cdp).fold(f64::INFINITY, f64::min);
+            let min_delay =
+                idxs.iter().map(|&i| self.points[i].delay_s).fold(f64::INFINITY, f64::min);
+            let on_front = idxs.iter().filter(|&&i| self.front.contains(&i)).count();
+            t.row(vec![
+                g.clone(),
+                idxs.len().to_string(),
+                on_front.to_string(),
+                table::fmt(min_c),
+                table::fmt(mean_c),
+                format!("{:.4}", best_cdp),
+                format!("{:.3}", min_delay * 1e3),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn row(key: &str, model: &str, node: &str, c: f64, d: f64, a: f64) -> Json {
+        obj([
+            ("key", Json::from(key)),
+            ("model", Json::from(model)),
+            ("node", Json::from(node)),
+            ("mult", Json::from("M")),
+            ("carbon_g", Json::from(c)),
+            ("delay_s", Json::from(d)),
+            ("drop_pct", Json::from(a)),
+            ("cdp", Json::from(c * d)),
+        ])
+    }
+
+    #[test]
+    fn front_excludes_dominated_points() {
+        let rows = vec![
+            row("a", "vgg16", "14nm", 10.0, 1.0, 1.0),
+            row("b", "vgg16", "14nm", 12.0, 2.0, 1.5), // dominated by a
+            row("c", "vgg16", "7nm", 8.0, 3.0, 1.0),   // trades delay for carbon
+            row("d", "vgg16", "7nm", 11.0, 1.0, 0.5),  // trades carbon for drop
+        ];
+        let arch = CampaignArchive::from_rows(&rows).unwrap();
+        assert_eq!(arch.front, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn duplicate_points_both_survive() {
+        // Equal points do not dominate each other (no strict improvement).
+        let rows = vec![
+            row("a", "m", "14nm", 1.0, 1.0, 1.0),
+            row("b", "m", "14nm", 1.0, 1.0, 1.0),
+        ];
+        let arch = CampaignArchive::from_rows(&rows).unwrap();
+        assert_eq!(arch.front.len(), 2);
+    }
+
+    #[test]
+    fn aggregates_group_and_count() {
+        let rows = vec![
+            row("a", "vgg16", "14nm", 10.0, 1.0, 1.0),
+            row("b", "resnet50", "14nm", 20.0, 2.0, 1.0),
+            row("c", "vgg16", "7nm", 8.0, 3.0, 1.0),
+        ];
+        let arch = CampaignArchive::from_rows(&rows).unwrap();
+        let t = arch.aggregate_table(GroupBy::Node);
+        assert_eq!(t.n_rows(), 2); // 14nm, 7nm
+        let t = arch.aggregate_table(GroupBy::Model);
+        assert_eq!(t.n_rows(), 2); // vgg16, resnet50
+    }
+
+    #[test]
+    fn missing_fields_error_with_row_number() {
+        let rows = vec![obj([("key", Json::from("a"))])];
+        let e = CampaignArchive::from_rows(&rows).unwrap_err();
+        assert!(format!("{e:#}").contains("store row 1"), "{e:#}");
+    }
+}

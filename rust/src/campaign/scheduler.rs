@@ -1,0 +1,344 @@
+//! Campaign scheduler: a pool of std-thread workers draining the job grid,
+//! all sharing ONE `EvalService` so the multiplier-accuracy cache is
+//! campaign-global. The δ-feasible sets of neighboring scenarios overlap
+//! heavily, so after the first job primes the cache every later job's
+//! accuracy table is pure cache hits — the dominant cross-run saving.
+//!
+//! Results flow through a reorder buffer and are committed to the JSONL
+//! store in job-id order, which (with key-derived per-job GA seeds) makes
+//! the store byte-identical for any worker count or interleaving.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context as _, Result};
+
+use crate::accuracy::model::{
+    calibrate_k, drop_pct_from_error, feasible_multipliers, predicted_drop_pct, DEFAULT_K,
+    MEAN_SIG_PRODUCT,
+};
+use crate::accuracy::native::NativeEvaluator;
+use crate::accuracy::AccuracyTable;
+use crate::approx::{library, Multiplier, EXACT_ID};
+use crate::coordinator::ga_appx_cdp_with_feasible;
+use crate::dataflow::workloads::{workload, Workload};
+use crate::ga::GaParams;
+use crate::runtime::{Artifacts, EvalBackend, EvalClient, EvalService, NativeBackend, ServiceStats};
+use crate::util::json::{obj, Json};
+
+use super::spec::{integration_name, CampaignSpec, JobSpec};
+use super::store::ResultStore;
+
+/// Reference exact-path accuracy when no measured artifacts exist (the
+/// trained tiny CNN's manifest value).
+const SURROGATE_EXACT_ACC: f64 = 0.9355;
+
+/// Accuracy backend for artifact-less environments: measures the effective
+/// arithmetic error of the submitted LUT against exact significand products
+/// and applies the calibrated ΔA drop model at tiny-CNN depth. Monotone in
+/// the LUT's error, so feasibility ordering matches the measured path.
+pub struct SurrogateBackend {
+    exact_accuracy: f64,
+    k: f64,
+    tiny: Workload,
+}
+
+impl Default for SurrogateBackend {
+    fn default() -> Self {
+        Self {
+            exact_accuracy: SURROGATE_EXACT_ACC,
+            k: DEFAULT_K,
+            tiny: workload("tinycnn").expect("tinycnn workload exists"),
+        }
+    }
+}
+
+impl EvalBackend for SurrogateBackend {
+    fn accuracy_of_lut(&self, lut: &[f32]) -> Result<f64> {
+        ensure!(lut.len() == 128 * 128, "LUT must be 128x128");
+        let (mut mred, mut bias) = (0.0f64, 0.0f64);
+        for i in 0..128usize {
+            for j in 0..128usize {
+                let exact = ((128 + i) * (128 + j)) as f64;
+                let got = f64::from(lut[i * 128 + j]);
+                mred += (got - exact).abs() / exact;
+                bias += got - exact;
+            }
+        }
+        let n = (128 * 128) as f64;
+        let e_eff = mred / n + (bias / n).abs() / MEAN_SIG_PRODUCT;
+        let drop_pct = drop_pct_from_error(e_eff, &self.tiny, self.k);
+        Ok(self.exact_accuracy - drop_pct / 100.0)
+    }
+}
+
+/// Start the campaign-global accuracy service: measured native evaluation
+/// when artifacts are built, the surrogate error model otherwise. Returns
+/// the service and the backend's name (for reporting).
+pub fn start_service(artifacts_dir: &Path) -> Result<(EvalService, &'static str)> {
+    if artifacts_dir.join("manifest.json").exists() {
+        let artifacts = Artifacts::load(artifacts_dir)?;
+        let native = NativeEvaluator::load(&artifacts)?;
+        Ok((EvalService::start(NativeBackend(native)), "native"))
+    } else {
+        Ok((EvalService::start(SurrogateBackend::default()), "surrogate"))
+    }
+}
+
+/// What a finished campaign reports.
+#[derive(Debug, Clone, Copy)]
+pub struct CampaignReport {
+    pub jobs_total: usize,
+    pub jobs_run: usize,
+    /// Jobs skipped because the store already had their row (resume).
+    pub jobs_skipped: usize,
+    pub elapsed_s: f64,
+    /// Eval-service counter deltas attributable to this campaign.
+    pub stats: ServiceStats,
+}
+
+impl CampaignReport {
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.jobs_run as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{} jobs ({} run, {} resumed) in {:.2}s = {:.2} jobs/s | eval service: \
+             {} served, {} evaluated, {} cache hits, {} coalesced ({:.0}% hit rate)",
+            self.jobs_total,
+            self.jobs_run,
+            self.jobs_skipped,
+            self.elapsed_s,
+            self.jobs_per_sec(),
+            self.stats.served,
+            self.stats.evaluated,
+            self.stats.cache_hits,
+            self.stats.coalesced,
+            self.stats.hit_rate() * 100.0,
+        )
+    }
+}
+
+fn stats_delta(after: ServiceStats, before: ServiceStats) -> ServiceStats {
+    ServiceStats {
+        served: after.served - before.served,
+        evaluated: after.evaluated - before.evaluated,
+        cache_hits: after.cache_hits - before.cache_hits,
+        coalesced: after.coalesced - before.coalesced,
+    }
+}
+
+/// Drain the campaign grid with `workers` threads, committing one JSONL row
+/// per job to `store` in job-id order. Jobs whose key is already in the
+/// store are skipped (checkpoint/resume); everything else about the run is
+/// deterministic in the campaign seed.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    workers: usize,
+    store: &mut ResultStore,
+    service: &EvalService,
+) -> Result<CampaignReport> {
+    let jobs = spec.jobs();
+    let pending: Vec<JobSpec> =
+        jobs.iter().filter(|j| !store.contains(&j.key())).cloned().collect();
+    let jobs_skipped = jobs.len() - pending.len();
+    let lib = library();
+    let mut workloads: HashMap<String, Workload> = HashMap::new();
+    for m in &spec.models {
+        workloads
+            .insert(m.clone(), workload(m).ok_or_else(|| anyhow!("unknown model {m}"))?);
+    }
+    let tiny = workload("tinycnn").expect("tinycnn workload exists");
+
+    let before = service.stats();
+    let t0 = Instant::now();
+    let n_workers = workers.max(1).min(pending.len().max(1));
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<Result<(usize, Json)>>();
+
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..n_workers {
+            let tx = tx.clone();
+            let client = service.client();
+            let (pending, lib, workloads, tiny, next, ga) =
+                (&pending, &lib, &workloads, &tiny, &next, spec.ga);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= pending.len() {
+                    break;
+                }
+                let job = &pending[i];
+                let out = run_job(job, ga, lib, workloads, tiny, &client)
+                    .with_context(|| format!("job {}", job.key()))
+                    .map(|row| (job.id, row));
+                if tx.send(out).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        // Single writer: reorder results into job-id order so the store is
+        // identical no matter how workers interleave.
+        let expected: Vec<usize> = pending.iter().map(|j| j.id).collect();
+        let mut buffer: BTreeMap<usize, Json> = BTreeMap::new();
+        let mut cursor = 0usize;
+        for msg in rx {
+            let (id, row) = msg?;
+            buffer.insert(id, row);
+            while cursor < expected.len() {
+                match buffer.remove(&expected[cursor]) {
+                    Some(row) => {
+                        store.append(row)?;
+                        cursor += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        ensure!(
+            cursor == expected.len(),
+            "campaign incomplete: committed {cursor} of {} pending jobs",
+            expected.len()
+        );
+        Ok(())
+    })?;
+
+    Ok(CampaignReport {
+        jobs_total: jobs.len(),
+        jobs_run: pending.len(),
+        jobs_skipped,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        stats: stats_delta(service.stats(), before),
+    })
+}
+
+/// Execute one scenario: measured/surrogate accuracy table through the
+/// shared service, δ-feasible set, GA-APPX-CDP run, result row.
+fn run_job(
+    job: &JobSpec,
+    ga: GaParams,
+    lib: &[Multiplier],
+    workloads: &HashMap<String, Workload>,
+    tiny: &Workload,
+    client: &EvalClient,
+) -> Result<Json> {
+    let w = workloads
+        .get(&job.model)
+        .ok_or_else(|| anyhow!("workload {} not preloaded", job.model))?;
+
+    // Accuracy table via the campaign-global service (cache-shared).
+    let mult_refs: Vec<&Multiplier> = lib.iter().collect();
+    let accs = client
+        .eval_all(&mult_refs)
+        .map_err(|e| anyhow!("accuracy service: {e}"))?;
+    let mut table = AccuracyTable { exact: accs[EXACT_ID], ..Default::default() };
+    for (m, &a) in lib.iter().zip(&accs) {
+        table.accuracy.insert(m.id, a);
+    }
+    let k = calibrate_k(lib, tiny, &table);
+    let feasible = feasible_multipliers(lib, w, job.delta_pct, k);
+    ensure!(!feasible.is_empty(), "no multiplier satisfies δ={}%", job.delta_pct);
+    let n_feasible = feasible.len();
+
+    let params = GaParams { seed: job.seed, ..ga };
+    let r = ga_appx_cdp_with_feasible(
+        w,
+        job.node,
+        job.integration,
+        lib,
+        feasible,
+        job.fps_floor,
+        params,
+    );
+
+    let best = &r.best;
+    let e = &r.best_eval;
+    let mult = &lib[best.mult_id];
+    Ok(obj([
+        ("key", Json::from(job.key())),
+        ("model", Json::from(job.model.clone())),
+        ("node", Json::from(job.node.name())),
+        ("integration", Json::from(integration_name(job.integration))),
+        ("delta_pct", Json::from(job.delta_pct)),
+        (
+            "fps_floor",
+            match job.fps_floor {
+                Some(f) => Json::from(f),
+                None => Json::Null,
+            },
+        ),
+        ("seed", Json::from(format!("{:#018x}", job.seed))),
+        ("px", Json::from(best.px)),
+        ("py", Json::from(best.py)),
+        ("rf_bytes", Json::from(best.rf_bytes)),
+        ("sram_bytes", Json::from(best.sram_bytes)),
+        ("mult_id", Json::from(best.mult_id)),
+        ("mult", Json::from(mult.name())),
+        ("carbon_g", Json::from(e.carbon_g)),
+        ("delay_s", Json::from(e.delay_s)),
+        ("fps", Json::from(e.fps)),
+        ("cdp", Json::from(e.cdp)),
+        ("carbon_per_mm2", Json::from(e.carbon_per_mm2)),
+        ("silicon_mm2", Json::from(e.silicon_mm2)),
+        ("feasible", Json::from(e.feasible)),
+        ("drop_pct", Json::from(predicted_drop_pct(mult, w, k))),
+        ("k", Json::from(k)),
+        ("n_feasible", Json::from(n_feasible)),
+        ("evaluations", Json::from(r.evaluations)),
+        ("generations", Json::from(r.generations_run)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surrogate_exact_lut_has_zero_drop() {
+        let lib = library();
+        let b = SurrogateBackend::default();
+        let acc = b.accuracy_of_lut(&crate::approx::lut_f32(&lib[EXACT_ID])).unwrap();
+        assert!((acc - SURROGATE_EXACT_ACC).abs() < 1e-12);
+    }
+
+    #[test]
+    fn surrogate_orders_designs_by_error() {
+        let lib = library();
+        let b = SurrogateBackend::default();
+        // A mild truncation should keep more accuracy than an aggressive one.
+        let mild = lib.iter().find(|m| m.name() == "TRUNC1").unwrap();
+        let harsh = lib.iter().find(|m| m.name() == "TRUNC5").unwrap();
+        let a_mild = b.accuracy_of_lut(&crate::approx::lut_f32(mild)).unwrap();
+        let a_harsh = b.accuracy_of_lut(&crate::approx::lut_f32(harsh)).unwrap();
+        assert!(a_mild > a_harsh, "{a_mild} !> {a_harsh}");
+    }
+
+    #[test]
+    fn surrogate_rejects_bad_lut() {
+        assert!(SurrogateBackend::default().accuracy_of_lut(&[1.0; 7]).is_err());
+    }
+
+    #[test]
+    fn report_line_mentions_throughput_and_hits() {
+        let r = CampaignReport {
+            jobs_total: 10,
+            jobs_run: 8,
+            jobs_skipped: 2,
+            elapsed_s: 4.0,
+            stats: ServiceStats { served: 100, evaluated: 20, cache_hits: 70, coalesced: 10 },
+        };
+        assert!((r.jobs_per_sec() - 2.0).abs() < 1e-12);
+        let line = r.line();
+        assert!(line.contains("2.00 jobs/s"), "{line}");
+        assert!(line.contains("80% hit rate"), "{line}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Campaign grid definition: the cross product of
+//! {workload} x {TechNode} x {Integration} x {δ} x {optional FPS floor},
+//! flattened into a deterministic job list.
+//!
+//! Per-job seeds derive from the campaign seed *and the job key* (not the
+//! job index), so results are reproducible regardless of worker
+//! interleaving, and adding scenarios to a grid never reshuffles the seeds
+//! of the scenarios already present.
+
+use crate::area::die::Integration;
+use crate::area::node::ALL_NODES;
+use crate::area::TechNode;
+use crate::ga::GaParams;
+
+/// Human/stable name for an integration style (used in job keys and rows).
+pub fn integration_name(i: Integration) -> &'static str {
+    match i {
+        Integration::TwoD => "2D",
+        Integration::ThreeD => "3D",
+    }
+}
+
+pub fn integration_from_name(s: &str) -> Option<Integration> {
+    match s {
+        "2d" | "2D" | "twod" => Some(Integration::TwoD),
+        "3d" | "3D" | "threed" => Some(Integration::ThreeD),
+        _ => None,
+    }
+}
+
+/// A full DSE campaign: the scenario grid plus shared GA hyperparameters
+/// and the campaign seed all per-job seeds derive from.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub models: Vec<String>,
+    pub nodes: Vec<TechNode>,
+    pub integrations: Vec<Integration>,
+    /// Accuracy budgets δ in percentage points.
+    pub deltas: Vec<f64>,
+    /// FPS floors; `None` = unconstrained. One job per entry.
+    pub fps_floors: Vec<Option<f64>>,
+    pub ga: GaParams,
+    pub seed: u64,
+}
+
+impl CampaignSpec {
+    /// A grid over the given models/nodes/deltas: 3D integration, no FPS
+    /// floor, default GA budget.
+    pub fn new(models: Vec<String>, nodes: Vec<TechNode>, deltas: Vec<f64>) -> Self {
+        Self {
+            models,
+            nodes,
+            integrations: vec![Integration::ThreeD],
+            deltas,
+            fps_floors: vec![None],
+            ga: GaParams::default(),
+            seed: 0xCA4B07,
+        }
+    }
+
+    /// The paper's full scenario grid (five CNNs x three nodes x δ=1/2/3%).
+    pub fn paper_grid() -> Self {
+        Self::new(
+            crate::coordinator::fig2::FIG2_MODELS.iter().map(|s| s.to_string()).collect(),
+            ALL_NODES.to_vec(),
+            vec![1.0, 2.0, 3.0],
+        )
+    }
+
+    /// Grid size.
+    pub fn n_jobs(&self) -> usize {
+        self.models.len()
+            * self.nodes.len()
+            * self.integrations.len()
+            * self.deltas.len()
+            * self.fps_floors.len()
+    }
+
+    /// Flatten the grid into jobs, in deterministic model-major order.
+    pub fn jobs(&self) -> Vec<JobSpec> {
+        let mut out = Vec::with_capacity(self.n_jobs());
+        for model in &self.models {
+            for &node in &self.nodes {
+                for &integration in &self.integrations {
+                    for &delta_pct in &self.deltas {
+                        for &fps_floor in &self.fps_floors {
+                            let mut job = JobSpec {
+                                id: out.len(),
+                                model: model.clone(),
+                                node,
+                                integration,
+                                delta_pct,
+                                fps_floor,
+                                seed: 0,
+                            };
+                            job.seed = job_seed(self.seed, &job.key());
+                            out.push(job);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One scenario of the campaign grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Position in the flattened grid (drives store write order).
+    pub id: usize,
+    pub model: String,
+    pub node: TechNode,
+    pub integration: Integration,
+    pub delta_pct: f64,
+    pub fps_floor: Option<f64>,
+    /// GA seed, derived from campaign seed + job key.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// Stable identity of the scenario (checkpoint/resume matches on this).
+    pub fn key(&self) -> String {
+        let fps = match self.fps_floor {
+            Some(f) => format!("{f:.3}"),
+            None => "-".to_string(),
+        };
+        format!(
+            "{}@{}/{}/d{:.3}/fps{}",
+            self.model,
+            self.node.name(),
+            integration_name(self.integration),
+            self.delta_pct,
+            fps
+        )
+    }
+}
+
+/// FNV-1a 64-bit hash of a byte string.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer — decorrelates nearby inputs.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic per-job GA seed.
+pub fn job_seed(campaign_seed: u64, key: &str) -> u64 {
+    splitmix64(campaign_seed ^ fnv1a64(key.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CampaignSpec {
+        CampaignSpec::new(
+            vec!["vgg16".into(), "resnet50".into()],
+            vec![TechNode::N45, TechNode::N7],
+            vec![1.0, 3.0],
+        )
+    }
+
+    #[test]
+    fn grid_size_is_cross_product() {
+        let s = small();
+        assert_eq!(s.n_jobs(), 2 * 2 * 2);
+        assert_eq!(s.jobs().len(), s.n_jobs());
+    }
+
+    #[test]
+    fn keys_unique_and_ids_sequential() {
+        let jobs = small().jobs();
+        let mut keys: Vec<String> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), jobs.len());
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+    }
+
+    #[test]
+    fn seeds_depend_on_key_not_index() {
+        let s = small();
+        let jobs = s.jobs();
+        // Growing the grid must not change seeds of pre-existing scenarios.
+        let mut bigger = s.clone();
+        bigger.models.insert(0, "densenet121".to_string());
+        let grown = bigger.jobs();
+        for j in &jobs {
+            let same = grown.iter().find(|g| g.key() == j.key()).unwrap();
+            assert_eq!(same.seed, j.seed, "{}", j.key());
+            assert_ne!(same.id, j.id); // ids shifted, seeds did not
+        }
+    }
+
+    #[test]
+    fn seeds_differ_across_jobs_and_campaign_seeds() {
+        let s = small();
+        let jobs = s.jobs();
+        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), jobs.len(), "per-job seed collision");
+        let mut reseeded = s.clone();
+        reseeded.seed ^= 0xDEAD_BEEF;
+        assert_ne!(reseeded.jobs()[0].seed, jobs[0].seed);
+    }
+
+    #[test]
+    fn paper_grid_is_at_least_45_jobs() {
+        assert_eq!(CampaignSpec::paper_grid().n_jobs(), 5 * 3 * 3);
+    }
+
+    #[test]
+    fn integration_names_roundtrip() {
+        for i in [Integration::TwoD, Integration::ThreeD] {
+            assert_eq!(integration_from_name(integration_name(i)), Some(i));
+        }
+        assert_eq!(integration_from_name("4d"), None);
+    }
+}

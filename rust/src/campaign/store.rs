@@ -1,0 +1,220 @@
+//! Append-only JSONL result store with checkpoint/resume.
+//!
+//! One line per completed job, written in job-id order by the scheduler's
+//! single writer. On open, existing rows are parsed and their job keys
+//! indexed, so a restarted campaign skips completed scenarios. A torn final
+//! line (interrupted mid-write) is ignored; corruption anywhere else is an
+//! error rather than silent data loss.
+
+use std::collections::HashSet;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Field every row carries to identify its scenario.
+pub const KEY_FIELD: &str = "key";
+
+/// The JSONL store.
+pub struct ResultStore {
+    path: PathBuf,
+    rows: Vec<Json>,
+    keys: HashSet<String>,
+    file: File,
+}
+
+impl ResultStore {
+    /// Open (creating parent directories and the file if needed) and index
+    /// any rows already present.
+    pub fn open(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create store directory {}", dir.display()))?;
+            }
+        }
+        let existing = match std::fs::read_to_string(path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(e).with_context(|| format!("read store {}", path.display())),
+        };
+        let mut rows = Vec::new();
+        let mut keys = HashSet::new();
+        let mut torn = false;
+        let lines: Vec<&str> = existing.lines().filter(|l| !l.trim().is_empty()).collect();
+        for (i, line) in lines.iter().enumerate() {
+            match Json::parse(line) {
+                Ok(row) => {
+                    let key = row
+                        .get(KEY_FIELD)
+                        .and_then(|k| k.as_str().map(str::to_string))
+                        .with_context(|| format!("store row {} has no string `key`", i + 1))?;
+                    if !keys.insert(key.clone()) {
+                        bail!("store {} has duplicate key {key:?}", path.display());
+                    }
+                    rows.push(row);
+                }
+                Err(e) if i + 1 == lines.len() => {
+                    // Torn tail from an interrupted append: drop it; the
+                    // scheduler will redo that job.
+                    eprintln!(
+                        "store {}: ignoring torn final line ({e:#})",
+                        path.display()
+                    );
+                    torn = true;
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("store {} row {} corrupt", path.display(), i + 1))
+                }
+            }
+        }
+        if torn {
+            // Drop the torn bytes without risking the committed prefix:
+            // write the good rows to a sibling temp file, then atomically
+            // rename it over the store. The common (untorn) path never
+            // rewrites anything.
+            let tmp = path.with_extension("jsonl.tmp");
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            for row in &rows {
+                writeln!(f, "{}", row.dumps())
+                    .with_context(|| format!("rewrite store {}", tmp.display()))?;
+            }
+            f.flush()?;
+            drop(f);
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("replace store {}", path.display()))?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open store {}", path.display()))?;
+        Ok(Self { path: path.to_path_buf(), rows, keys, file })
+    }
+
+    /// Has a row for this job key already been committed?
+    pub fn contains(&self, key: &str) -> bool {
+        self.keys.contains(key)
+    }
+
+    /// Append one result row (must carry a unique `key`) and flush.
+    pub fn append(&mut self, row: Json) -> Result<()> {
+        let key = row
+            .get(KEY_FIELD)
+            .and_then(|k| k.as_str().map(str::to_string))
+            .context("result row has no string `key`")?;
+        if !self.keys.insert(key.clone()) {
+            bail!("duplicate result for job {key:?}");
+        }
+        writeln!(self.file, "{}", row.dumps())
+            .with_context(|| format!("append to store {}", self.path.display()))?;
+        self.file.flush()?;
+        self.rows.push(row);
+        Ok(())
+    }
+
+    /// All committed rows, in file order.
+    pub fn rows(&self) -> &[Json] {
+        &self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "carbon3d-store-{}-{name}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn row(key: &str, x: f64) -> Json {
+        obj([("key", Json::from(key)), ("x", Json::from(x))])
+    }
+
+    #[test]
+    fn append_then_reopen_indexes_keys() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            assert!(s.is_empty());
+            s.append(row("a", 1.0)).unwrap();
+            s.append(row("b", 2.0)).unwrap();
+        }
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains("a") && s.contains("b") && !s.contains("c"));
+        assert_eq!(s.rows()[1].get("x").unwrap().as_f64().unwrap(), 2.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let path = tmp("dup");
+        let _ = std::fs::remove_file(&path);
+        let mut s = ResultStore::open(&path).unwrap();
+        s.append(row("a", 1.0)).unwrap();
+        assert!(s.append(row("a", 9.0)).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_and_redone() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            s.append(row("a", 1.0)).unwrap();
+        }
+        // Simulate a crash mid-append.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"key\": \"b\", \"x\":").unwrap();
+        drop(f);
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(!s.contains("b"));
+        // The torn bytes are gone from disk after reopen.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mid_file_corruption_is_an_error() {
+        let path = tmp("corrupt");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, "not json\n{\"key\": \"a\", \"x\": 1}\n").unwrap();
+        assert!(ResultStore::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rows_without_keys_are_rejected() {
+        let path = tmp("nokey");
+        let _ = std::fs::remove_file(&path);
+        let mut s = ResultStore::open(&path).unwrap();
+        assert!(s.append(obj([("x", Json::from(1.0))])).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -31,8 +31,35 @@ pub fn ga_appx_cdp(
 ) -> GaResult {
     let feasible = feasible_multipliers(library, workload, delta_pct, DEFAULT_K);
     assert!(!feasible.is_empty(), "no multiplier satisfies δ={delta_pct}%");
+    ga_appx_cdp_with_feasible(
+        workload,
+        node,
+        Integration::ThreeD,
+        library,
+        feasible,
+        fps_floor,
+        params,
+    )
+}
+
+/// GA-APPX-CDP over an explicit feasible-multiplier set and integration
+/// style. The `campaign` scheduler uses this with feasibility derived from
+/// the campaign-global `EvalService` accuracy table (measured or surrogate)
+/// instead of the `DEFAULT_K` analytical model, so accuracy evaluations are
+/// shared across every run in the grid.
+#[allow(clippy::too_many_arguments)]
+pub fn ga_appx_cdp_with_feasible(
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    feasible: Vec<usize>,
+    fps_floor: Option<f64>,
+    params: GaParams,
+) -> GaResult {
+    assert!(!feasible.is_empty(), "empty feasible-multiplier set");
     let space = SearchSpace::standard(feasible);
-    let mut ctx = FitnessCtx::new(workload, node, Integration::ThreeD, library, fps_floor);
+    let mut ctx = FitnessCtx::new(workload, node, integration, library, fps_floor);
     let mut r = Ga::new(space, params).run(&mut ctx);
     refine_to_min_carbon(&mut r, &ctx);
     r

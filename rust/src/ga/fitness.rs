@@ -60,11 +60,21 @@ impl<'a> FitnessCtx<'a> {
     /// among CDP-near-optimal designs, report the most sustainable one
     /// (CDP is flat near its optimum — carbon/delay splits there are
     /// interchangeable, and the paper reports the carbon-efficient end).
+    /// Carbon ties break on the chromosome's genes, never on `HashMap`
+    /// iteration order — campaign stores are compared byte-for-byte across
+    /// runs, so this selection must be deterministic.
     pub fn near_optimal_min_carbon(&self, max_fitness: f64) -> Option<(Chromosome, Evaluation)> {
+        let gene_key =
+            |c: &Chromosome| (c.px, c.py, c.rf_bytes, c.sram_bytes, c.mult_id);
         self.cache
             .iter()
             .filter(|(_, e)| e.feasible && e.fitness <= max_fitness)
-            .min_by(|a, b| a.1.carbon_g.partial_cmp(&b.1.carbon_g).unwrap())
+            .min_by(|a, b| {
+                a.1.carbon_g
+                    .partial_cmp(&b.1.carbon_g)
+                    .unwrap()
+                    .then_with(|| gene_key(a.0).cmp(&gene_key(b.0)))
+            })
             .map(|(c, e)| (c.clone(), *e))
     }
 

@@ -14,13 +14,18 @@
 //!   compiled accuracy-evaluation workload.
 //! - **L2/L1 (python/, build-time only)**: JAX CNN + Pallas LUT-matmul
 //!   kernel, lowered once to `artifacts/*.hlo.txt`.
+//! - **campaign**: the production layer on top — runs entire scenario grids
+//!   ({workload} x {node} x {integration} x {δ} x {FPS floor}) on a worker
+//!   pool with a campaign-global accuracy cache, a resumable JSONL result
+//!   store, and a cross-scenario Pareto archive.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for measured
-//! results vs the paper.
+//! See DESIGN.md (repo root) for the system inventory; measured-vs-paper
+//! numbers are printed by `carbon3d report`.
 
 pub mod accuracy;
 pub mod approx;
 pub mod area;
+pub mod campaign;
 pub mod carbon;
 pub mod coordinator;
 pub mod dataflow;

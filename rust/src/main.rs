@@ -117,6 +117,7 @@ fn run(args: &[String]) -> Result<()> {
         "map" => cmd_map(&o),
         "carbon" => cmd_carbon(&o),
         "dse" => cmd_dse(&o),
+        "campaign" => cmd_campaign(&o),
         "fig2" => cmd_fig2(&o),
         "fig3" => cmd_fig3(&o),
         "report" => cmd_report(&o),
@@ -140,6 +141,12 @@ USAGE: carbon3d <subcommand> [--flags]
   map --model M [--node N] [--px P --py P --sram KB --rf B] [--twod]
   carbon [--node N] [--px ..]   embodied-carbon breakdown of a config
   dse --model M [--node N] [--delta PCT] [--fps F] [--quick]
+  campaign [--models a,b|all] [--nodes 45nm,14nm|all] [--delta 1,2,3]
+           [--integrations 3d,2d] [--fps F1,F2] [--workers N] [--quick]
+           [--out FILE.jsonl] [--resume] [--seed S]
+                                run the whole scenario grid on a worker pool
+                                with a campaign-global accuracy cache and a
+                                resumable JSONL result store
   fig2 [--quick] [--models a,b] reproduce Fig. 2 (normalized delay/carbon)
   fig3 [--quick] [--model M]    reproduce Fig. 3 (gCO2/mm^2 vs FPS)
   report [--quick]              headline paper-vs-measured claims
@@ -323,6 +330,108 @@ fn cmd_dse(o: &Opts) -> Result<()> {
         r.evaluations,
         r.generations_run
     );
+    Ok(())
+}
+
+fn cmd_campaign(o: &Opts) -> Result<()> {
+    use carbon3d::campaign::spec::integration_from_name;
+    use carbon3d::campaign::{
+        run_campaign, start_service, CampaignArchive, CampaignSpec, GroupBy, ResultStore,
+    };
+
+    let models_arg = o.get("models", "all");
+    let models: Vec<String> = if models_arg == "all" {
+        FIG2_MODELS.iter().map(|s| s.to_string()).collect()
+    } else {
+        models_arg.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    for m in &models {
+        workload(m).ok_or_else(|| anyhow!("unknown model {m}"))?;
+    }
+    let nodes_arg = o.get("nodes", "all");
+    let nodes: Vec<TechNode> = if nodes_arg == "all" {
+        ALL_NODES.to_vec()
+    } else {
+        nodes_arg
+            .split(',')
+            .map(|s| {
+                TechNode::from_name(s.trim())
+                    .ok_or_else(|| anyhow!("unknown node {s} (45nm|14nm|7nm)"))
+            })
+            .collect::<Result<_>>()?
+    };
+    let deltas: Vec<f64> = o
+        .get("delta", "1,2,3")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .with_context(|| format!("--delta expects numbers, got {s}"))
+        })
+        .collect::<Result<_>>()?;
+    let integrations: Vec<Integration> = o
+        .get("integrations", "3d")
+        .split(',')
+        .map(|s| {
+            integration_from_name(s.trim())
+                .ok_or_else(|| anyhow!("unknown integration {s} (2d|3d)"))
+        })
+        .collect::<Result<_>>()?;
+    let fps_floors: Vec<Option<f64>> = match o.flags.get("fps") {
+        None => vec![None],
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<f64>()
+                    .map(Some)
+                    .with_context(|| format!("--fps expects numbers, got {v}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    let mut spec = CampaignSpec::new(models, nodes, deltas);
+    spec.integrations = integrations;
+    spec.fps_floors = fps_floors;
+    spec.ga = ga_params(o)?;
+    spec.seed = o.usize("seed", 0xCA4B07)? as u64;
+    let workers = o.usize("workers", 4)?;
+    let out = o.get("out", "results/campaign.jsonl");
+    let resume = o.has("resume");
+
+    let mut store = ResultStore::open(Path::new(&out))?;
+    if !store.is_empty() && !resume {
+        bail!(
+            "store {out} already has {} rows; pass --resume to continue it or remove the file",
+            store.len()
+        );
+    }
+    let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
+    println!(
+        "campaign: {} jobs = {} models x {} nodes x {} integrations x {} deltas x {} fps | \
+         {workers} workers | {backend} accuracy backend | store {out}",
+        spec.n_jobs(),
+        spec.models.len(),
+        spec.nodes.len(),
+        spec.integrations.len(),
+        spec.deltas.len(),
+        spec.fps_floors.len(),
+    );
+    let report = run_campaign(&spec, workers, &mut store, &svc)?;
+    svc.shutdown();
+
+    let arch = CampaignArchive::from_rows(store.rows())?;
+    println!("\n== per-node summary ==");
+    println!("{}", arch.aggregate_table(GroupBy::Node).render());
+    println!("== per-workload summary ==");
+    println!("{}", arch.aggregate_table(GroupBy::Model).render());
+    println!(
+        "== cross-scenario Pareto front (carbon / delay / accuracy-drop, {} of {} points) ==",
+        arch.front.len(),
+        arch.points.len()
+    );
+    println!("{}", arch.pareto_table().render());
+    println!("{}", report.line());
     Ok(())
 }
 

@@ -12,4 +12,4 @@ pub mod service;
 
 pub use artifacts::Artifacts;
 pub use engine::Engine;
-pub use service::{EvalClient, EvalService};
+pub use service::{EvalBackend, EvalClient, EvalService, NativeBackend, ServiceStats};

@@ -3,74 +3,135 @@
 //! Pattern from /opt/xla-example/load_hlo: HLO text -> HloModuleProto ->
 //! XlaComputation -> compile -> execute. Artifacts are lowered with
 //! return_tuple=True, so results unwrap with `to_tuple1`.
+//!
+//! The `xla` crate is only reachable in environments with the PJRT toolchain
+//! installed, so the real implementation is gated behind the `pjrt` cargo
+//! feature. Without it this module compiles to an API-identical stub whose
+//! client constructor returns an error — every native (non-PJRT) path,
+//! including the campaign engine's surrogate accuracy backend, is unaffected.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
+    use anyhow::{ensure, Context, Result};
 
-/// A compiled executable plus its human name (for errors/metrics).
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+    /// A compiled executable plus its human name (for errors/metrics).
+    pub struct Executable {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT client wrapper.
+    pub struct PjrtClient {
+        client: xla::PjRtClient,
+    }
+
+    impl PjrtClient {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn device_count(&self) -> usize {
+            self.client.device_count()
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn compile_hlo_text(&self, name: &str, path: &Path) -> Result<Executable> {
+            ensure!(path.exists(), "HLO artifact {} missing (run `make artifacts`)", path.display());
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?;
+            Ok(Executable { name: name.to_string(), exe })
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 tensor inputs (shape per tensor), returning the
+        /// flattened f32 output of the 1-tuple result.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| -> Result<xla::Literal> {
+                    let lit = xla::Literal::vec1(data);
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims)
+                        .with_context(|| format!("reshape input to {shape:?} for {}", self.name))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("execute {}", self.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetch result of {}", self.name))?;
+            let out = lit.to_tuple1().with_context(|| format!("untuple result of {}", self.name))?;
+            out.to_vec::<f32>().with_context(|| format!("read f32 result of {}", self.name))
+        }
+    }
 }
 
-/// The PJRT client wrapper.
-pub struct PjrtClient {
-    client: xla::PjRtClient,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
 
-impl PjrtClient {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client })
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str =
+        "PJRT unavailable: carbon3d was built without the `pjrt` feature \
+         (enable with `--features pjrt` where the xla crate is installed)";
+
+    /// Stub executable (never constructed without the `pjrt` feature).
+    pub struct Executable {
+        pub name: String,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Stub client: construction fails, so no stub method is ever reached
+    /// at runtime.
+    pub struct PjrtClient {
+        _private: (),
     }
 
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
+    impl PjrtClient {
+        pub fn cpu() -> Result<Self> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn device_count(&self) -> usize {
+            0
+        }
+
+        pub fn compile_hlo_text(&self, _name: &str, _path: &Path) -> Result<Executable> {
+            bail!("{UNAVAILABLE}");
+        }
     }
 
-    /// Load an HLO-text artifact and compile it.
-    pub fn compile_hlo_text(&self, name: &str, path: &Path) -> Result<Executable> {
-        ensure!(path.exists(), "HLO artifact {} missing (run `make artifacts`)", path.display());
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile artifact {name}"))?;
-        Ok(Executable { name: name.to_string(), exe })
-    }
-}
-
-impl Executable {
-    /// Execute with f32 tensor inputs (shape per tensor), returning the
-    /// flattened f32 output of the 1-tuple result.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| -> Result<xla::Literal> {
-                let lit = xla::Literal::vec1(data);
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims)
-                    .with_context(|| format!("reshape input to {shape:?} for {}", self.name))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("execute {}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetch result of {}", self.name))?;
-        let out = lit.to_tuple1().with_context(|| format!("untuple result of {}", self.name))?;
-        out.to_vec::<f32>().with_context(|| format!("read f32 result of {}", self.name))
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            bail!("{UNAVAILABLE}");
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::{Executable, PjrtClient};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, PjrtClient};

@@ -9,7 +9,9 @@
 //! run on the fast native path and production on PJRT.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -49,9 +51,12 @@ enum Msg {
 pub struct EvalService {
     tx: Sender<Msg>,
     worker: Option<JoinHandle<ServiceStats>>,
+    counters: Arc<Counters>,
 }
 
-/// Counters the worker reports on shutdown.
+/// Counters the worker reports on shutdown — and, via [`EvalService::stats`],
+/// *live* while serving: a campaign scheduler polls them to report
+/// cross-job cache-hit/coalescing rates mid-run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     pub served: usize,
@@ -60,12 +65,46 @@ pub struct ServiceStats {
     pub coalesced: usize,
 }
 
+impl ServiceStats {
+    /// Fraction of served requests answered without a fresh evaluation
+    /// (cache hit or in-batch coalescing). 0.0 when nothing served yet.
+    pub fn hit_rate(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            (self.cache_hits + self.coalesced) as f64 / self.served as f64
+        }
+    }
+}
+
+/// Shared atomic counters backing [`ServiceStats`] snapshots.
+#[derive(Default)]
+struct Counters {
+    served: AtomicUsize,
+    evaluated: AtomicUsize,
+    cache_hits: AtomicUsize,
+    coalesced: AtomicUsize,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ServiceStats {
+        ServiceStats {
+            served: self.served.load(Ordering::Acquire),
+            evaluated: self.evaluated.load(Ordering::Acquire),
+            cache_hits: self.cache_hits.load(Ordering::Acquire),
+            coalesced: self.coalesced.load(Ordering::Acquire),
+        }
+    }
+}
+
 impl EvalService {
     /// Spawn the worker thread over a backend.
     pub fn start<B: EvalBackend>(backend: B) -> Self {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || worker_loop(backend, rx));
-        Self { tx, worker: Some(worker) }
+        let counters = Arc::new(Counters::default());
+        let worker_counters = counters.clone();
+        let worker = std::thread::spawn(move || worker_loop(backend, rx, &worker_counters));
+        Self { tx, worker: Some(worker), counters }
     }
 
     /// Client handle for submitting requests.
@@ -73,9 +112,19 @@ impl EvalService {
         EvalClient { tx: self.tx.clone() }
     }
 
+    /// Live counter snapshot (safe to call while the worker is serving).
+    pub fn stats(&self) -> ServiceStats {
+        self.counters.snapshot()
+    }
+
     /// Shut down (poison message + join) and return stats. Outstanding
-    /// queued requests ahead of the Stop are still served; later submits
-    /// from surviving client clones get a "service stopped" error.
+    /// queued requests ahead of the Stop are still served; requests already
+    /// queued *behind* the Stop get an eager "service stopped" error reply
+    /// (the worker drains and rejects them instead of dropping them), and
+    /// later submits from surviving client clones fail at send time. One
+    /// narrow race remains best-effort: a send landing between the worker's
+    /// final drain and its channel teardown is reported as "service dropped
+    /// request" — treat both errors as the service being gone.
     pub fn shutdown(mut self) -> ServiceStats {
         let _ = self.tx.send(Msg::Stop);
         self.worker
@@ -120,22 +169,24 @@ impl EvalClient {
     }
 }
 
-fn worker_loop<B: EvalBackend>(backend: B, rx: Receiver<Msg>) -> ServiceStats {
-    let mut stats = ServiceStats::default();
+fn worker_loop<B: EvalBackend>(backend: B, rx: Receiver<Msg>, counters: &Counters) -> ServiceStats {
     let mut cache: HashMap<usize, f64> = HashMap::new();
+    let mut stopping = false;
     // Drain-and-batch: pull everything queued, coalesce by mult_id, then
     // evaluate unique ids once and fan results back out.
-    'outer: while let Ok(first) = rx.recv() {
+    while let Ok(first) = rx.recv() {
         let first = match first {
-            Msg::Stop => break 'outer,
+            Msg::Stop => {
+                stopping = true;
+                break;
+            }
             Msg::Eval(r) => r,
         };
         let mut batch: Vec<EvalRequest> = vec![first];
-        let mut stop_after = false;
         while let Ok(more) = rx.try_recv() {
             match more {
                 Msg::Stop => {
-                    stop_after = true;
+                    stopping = true;
                     break;
                 }
                 Msg::Eval(r) => batch.push(r),
@@ -150,13 +201,13 @@ fn worker_loop<B: EvalBackend>(backend: B, rx: Receiver<Msg>) -> ServiceStats {
         ids.sort_unstable(); // deterministic service order
         for id in ids {
             let reqs = groups.remove(&id).unwrap();
-            stats.served += reqs.len();
-            stats.coalesced += reqs.len() - 1;
+            counters.served.fetch_add(reqs.len(), Ordering::Release);
+            counters.coalesced.fetch_add(reqs.len() - 1, Ordering::Release);
             let acc = if let Some(&hit) = cache.get(&id) {
-                stats.cache_hits += reqs.len();
+                counters.cache_hits.fetch_add(reqs.len(), Ordering::Release);
                 Ok(hit)
             } else {
-                stats.evaluated += 1;
+                counters.evaluated.fetch_add(1, Ordering::Release);
                 match backend.accuracy_of_lut(&reqs[0].lut) {
                     Ok(a) => {
                         cache.insert(id, a);
@@ -169,11 +220,22 @@ fn worker_loop<B: EvalBackend>(backend: B, rx: Receiver<Msg>) -> ServiceStats {
                 let _ = req.reply.send(acc.clone());
             }
         }
-        if stop_after {
-            break 'outer;
+        if stopping {
+            break;
         }
     }
-    stats
+    if stopping {
+        // Requests that raced in behind the Stop would otherwise be dropped
+        // with the channel, leaving their reply senders dead and the client
+        // mapping that to an opaque "service dropped request". Reject them
+        // eagerly with the same error a post-shutdown submit gets.
+        while let Ok(msg) = rx.try_recv() {
+            if let Msg::Eval(req) = msg {
+                let _ = req.reply.send(Err("service stopped".to_string()));
+            }
+        }
+    }
+    counters.snapshot()
 }
 
 #[cfg(test)]
@@ -253,6 +315,61 @@ mod tests {
         assert_eq!(stats.served, 32);
         // At most one evaluation per distinct multiplier id.
         assert!(stats.evaluated <= 32 - stats.cache_hits - stats.coalesced);
+    }
+
+    #[test]
+    fn requests_behind_stop_get_eager_error() {
+        /// Slow backend: holds the worker long enough for a Stop plus a
+        /// trailing request to queue up behind the in-flight batch.
+        struct Slow;
+        impl EvalBackend for Slow {
+            fn accuracy_of_lut(&self, _lut: &[f32]) -> Result<f64> {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                Ok(0.5)
+            }
+        }
+        let svc = EvalService::start(Slow);
+        let client = svc.client();
+        let lib = Arc::new(mults());
+        let busy = {
+            let c = svc.client();
+            let lib = lib.clone();
+            std::thread::spawn(move || c.eval(&lib[1]))
+        };
+        // Let the worker enter the slow evaluation, then queue Stop.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let stopper = std::thread::spawn(move || svc.shutdown());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // This lands behind the Stop (or after worker exit — either way the
+        // surviving clone must get an eager, explicit error, not a dropped
+        // reply channel).
+        let err = client.eval(&lib[2]).unwrap_err();
+        assert_eq!(err, "service stopped");
+        // The busy request usually wins the race and is served; on a loaded
+        // machine it may instead land behind the Stop — then it too must get
+        // the explicit error, never an opaque dropped-reply one.
+        let busy_res = busy.join().unwrap();
+        assert!(
+            busy_res == Ok(0.5) || busy_res == Err("service stopped".to_string()),
+            "{busy_res:?}"
+        );
+        let stats = stopper.join().unwrap();
+        assert!(stats.evaluated <= 1);
+    }
+
+    #[test]
+    fn live_stats_visible_before_shutdown() {
+        let svc = EvalService::start(Stub(Arc::new(AtomicUsize::new(0))));
+        let client = svc.client();
+        let lib = mults();
+        client.eval(&lib[0]).unwrap();
+        client.eval(&lib[0]).unwrap();
+        let live = svc.stats();
+        assert_eq!(live.served, 2);
+        assert_eq!(live.evaluated, 1);
+        assert_eq!(live.cache_hits, 1);
+        assert!((live.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(svc.shutdown(), live);
     }
 
     #[test]

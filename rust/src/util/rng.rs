@@ -1,8 +1,8 @@
 //! Deterministic xorshift64*-based PRNG.
 //!
 //! All stochastic components (GA, workload generators, property tests) take
-//! an explicit seed so every experiment in EXPERIMENTS.md is reproducible
-//! bit-for-bit.
+//! an explicit seed so every experiment — including whole campaign stores —
+//! is reproducible bit-for-bit.
 
 /// xorshift64* PRNG with splitmix64 seeding.
 #[derive(Debug, Clone)]

@@ -111,6 +111,49 @@ fn baseline_vs_appx_like_for_like() {
     }
 }
 
+// ---------------------------------------------------------------- campaign engine
+
+#[test]
+fn campaign_runs_a_grid_through_the_public_api() {
+    use carbon3d::campaign::{
+        run_campaign, CampaignArchive, CampaignSpec, GroupBy, ResultStore, SurrogateBackend,
+    };
+    use carbon3d::runtime::EvalService;
+
+    let mut spec = CampaignSpec::new(
+        vec!["vgg16".to_string()],
+        vec![TechNode::N14, TechNode::N7],
+        vec![3.0],
+    );
+    spec.ga = quick();
+    let path = std::env::temp_dir()
+        .join(format!("carbon3d-it-campaign-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut store = ResultStore::open(&path).unwrap();
+    let svc = EvalService::start(SurrogateBackend::default());
+    let report = run_campaign(&spec, 2, &mut store, &svc).unwrap();
+    let stats = svc.shutdown();
+    assert_eq!(report.jobs_run, 2);
+    // With 2 concurrent jobs the duplicate library requests are answered
+    // either from cache or by in-batch coalescing, depending on timing —
+    // both count as the shared service saving re-evaluation.
+    assert!(
+        stats.cache_hits + stats.coalesced > 0,
+        "second job should reuse the shared service's work: {stats:?}"
+    );
+
+    let arch = CampaignArchive::from_rows(store.rows()).unwrap();
+    assert_eq!(arch.points.len(), 2);
+    assert!(!arch.front.is_empty());
+    assert_eq!(arch.aggregate_table(GroupBy::Node).n_rows(), 2);
+    for row in store.rows() {
+        assert!(row.get("carbon_g").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("cdp").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("feasible").unwrap() == &carbon3d::util::Json::Bool(true));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 // ---------------------------------------------------------------- accuracy model
 
 #[test]
