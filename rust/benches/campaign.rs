@@ -1,6 +1,13 @@
 //! Bench campaign: grid throughput (jobs/sec) and campaign-global eval
 //! cache-hit rate for the worker-pool scheduler vs a serial loop of
 //! `ga_appx_cdp` calls over the same scenarios.
+//!
+//! Modes:
+//!   (default)        full sweep: serial baseline + 1/2/4/8-worker campaigns
+//!   --smoke          reduced grid, skips the serial baseline — CI-sized
+//!   --json FILE      also write the measurements as a JSON document
+//!                    (CI uploads this as the `BENCH_campaign.json` artifact
+//!                    so the perf trajectory accumulates across commits)
 
 use carbon3d::approx::library;
 use carbon3d::area::node::ALL_NODES;
@@ -9,46 +16,65 @@ use carbon3d::coordinator::ga_appx_cdp;
 use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::GaParams;
 use carbon3d::runtime::EvalService;
+use carbon3d::util::json::{obj, Json};
 use carbon3d::util::timer::time_once;
 
 /// 2 models x 3 nodes x 2 deltas = 12 jobs at a reduced GA budget.
-fn spec() -> CampaignSpec {
+fn spec(smoke: bool) -> CampaignSpec {
     let mut s = CampaignSpec::new(
         vec!["vgg16".to_string(), "resnet50".to_string()],
         ALL_NODES.to_vec(),
-        vec![1.0, 3.0],
+        if smoke { vec![3.0] } else { vec![1.0, 3.0] },
     );
-    s.ga = GaParams { population: 16, generations: 8, patience: 4, ..Default::default() };
+    s.ga = if smoke {
+        GaParams { population: 8, generations: 4, patience: 2, elites: 1, ..Default::default() }
+    } else {
+        GaParams { population: 16, generations: 8, patience: 4, ..Default::default() }
+    };
     s
 }
 
 fn main() {
-    println!("== campaign benches ==");
-    let s = spec();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke") || std::env::var("BENCH_SMOKE").is_ok();
+    let json_out = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned());
+
+    println!("== campaign benches{} ==", if smoke { " (smoke)" } else { "" });
+    let s = spec(smoke);
     let n = s.n_jobs();
     let lib = library();
+    let mut measurements: Vec<Json> = Vec::new();
 
     // Serial baseline: one GA-APPX-CDP invocation per scenario, nothing
-    // shared across runs (the pre-campaign workflow).
-    let (_, serial_t) = time_once(|| {
-        for job in s.jobs() {
-            let w = workload(&job.model).unwrap();
-            std::hint::black_box(ga_appx_cdp(
-                &w,
-                job.node,
-                &lib,
-                job.delta_pct,
-                job.fps_floor,
-                GaParams { seed: job.seed, ..s.ga },
-            ));
-        }
-    });
-    println!(
-        "serial ga_appx_cdp loop                      {n} jobs in {serial_t:.2}s = {:.2} jobs/s",
-        n as f64 / serial_t
-    );
+    // shared across runs (the pre-campaign workflow). Skipped in smoke
+    // mode to keep the CI job short.
+    let mut serial_t = None;
+    if !smoke {
+        let (_, t) = time_once(|| {
+            for job in s.jobs() {
+                let w = workload(&job.model).unwrap();
+                std::hint::black_box(ga_appx_cdp(
+                    &w,
+                    job.node,
+                    &lib,
+                    job.delta_pct,
+                    job.fps_floor,
+                    GaParams { seed: job.seed, ..s.ga },
+                ));
+            }
+        });
+        println!(
+            "serial ga_appx_cdp loop                      {n} jobs in {t:.2}s = {:.2} jobs/s",
+            n as f64 / t
+        );
+        serial_t = Some(t);
+    }
 
-    for workers in [1usize, 2, 4, 8] {
+    let worker_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    for &workers in worker_counts {
         let path = std::env::temp_dir().join(format!(
             "carbon3d-bench-campaign-{}-{workers}.jsonl",
             std::process::id()
@@ -59,14 +85,53 @@ fn main() {
         let (report, t) =
             time_once(|| run_campaign(&s, workers, &mut store, &svc).unwrap());
         svc.shutdown();
+        let speedup = serial_t.map(|st| st / t);
         println!(
             "campaign {workers} worker{}                           \
-             {n} jobs in {t:.2}s = {:.2} jobs/s | cache-hit {:.0}% | {:.2}x vs serial",
+             {n} jobs in {t:.2}s = {:.2} jobs/s | cache-hit {:.0}%{}",
             if workers == 1 { " " } else { "s" },
             report.jobs_per_sec(),
             report.stats.hit_rate() * 100.0,
-            serial_t / t
+            match speedup {
+                Some(x) => format!(" | {x:.2}x vs serial"),
+                None => String::new(),
+            }
         );
+        measurements.push(obj([
+            ("workers", Json::from(workers)),
+            ("jobs", Json::from(n)),
+            ("elapsed_s", Json::from(t)),
+            ("jobs_per_sec", Json::from(report.jobs_per_sec())),
+            ("hit_rate", Json::from(report.stats.hit_rate())),
+            ("jobs_pruned", Json::from(report.jobs_pruned)),
+            (
+                "speedup_vs_serial",
+                match speedup {
+                    Some(x) => Json::from(x),
+                    None => Json::Null,
+                },
+            ),
+        ]));
         let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(
+            carbon3d::campaign::CampaignArchive::checkpoint_path(&path),
+        );
+    }
+
+    if let Some(out) = json_out {
+        let doc = obj([
+            ("bench", Json::from("campaign")),
+            ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+            (
+                "serial_jobs_per_sec",
+                match serial_t {
+                    Some(t) => Json::from(n as f64 / t),
+                    None => Json::Null,
+                },
+            ),
+            ("runs", Json::Arr(measurements)),
+        ]);
+        std::fs::write(&out, doc.pretty(2)).expect("write bench json");
+        println!("wrote {out}");
     }
 }

@@ -1,23 +1,32 @@
 //! Design-space-exploration **campaign engine**: run an entire scenario
 //! grid — {workload} x {TechNode} x {Integration} x {δ} x {FPS floor} — as
 //! a job queue drained by a pool of std-thread workers, instead of one
-//! GA-APPX-CDP invocation at a time.
+//! GA invocation at a time.
 //!
 //! The pieces:
-//! - [`spec`]: grid definition; per-job GA seeds derive from the campaign
-//!   seed + the job *key*, so results are reproducible for any worker count
-//!   and stable under grid growth.
+//! - [`spec`]: grid definition plus the campaign objective
+//!   ([`CampaignObjective`]: embodied CDP, operational-only, or lifetime
+//!   CDP under a configurable [`crate::carbon::operational::Deployment`]).
+//!   Per-job GA seeds derive from the campaign seed + the job *key*, so
+//!   results are reproducible for any worker count and stable under grid
+//!   growth; non-default objectives are part of the key.
 //! - [`scheduler`]: the worker pool. All workers share ONE
 //!   [`crate::runtime::EvalService`], so multiplier-accuracy evaluations are
-//!   cached campaign-globally — the δ-feasible sets of neighboring scenarios
-//!   overlap almost entirely, making every job after the first nearly free
-//!   on the accuracy side. Results are committed in job-id order through a
-//!   reorder buffer.
+//!   cached campaign-globally. The queue is ordered most-promising-first by
+//!   an analytic optimistic bound ([`scheduler::JobBound`]) and jobs whose
+//!   bound provably cannot beat the best committed *objective value* in
+//!   their scenario family are pruned — deterministically, so the store
+//!   stays byte-reproducible (`--no-prune` for exhaustive grids; see
+//!   [`scheduler::prune_reason`] for the exact semantics). Results are
+//!   committed in schedule order through a reorder buffer.
 //! - [`store`]: append-only JSONL with checkpoint/resume — on restart,
 //!   completed jobs are detected by key and skipped; a torn final line from
-//!   an interrupted write is dropped and its job redone.
-//! - [`pareto`]: cross-scenario Pareto archive over (embodied carbon, task
-//!   delay, accuracy drop) with per-node / per-workload aggregates.
+//!   an interrupted write (no trailing newline) is dropped and its job
+//!   redone, while any other corruption is a loud error.
+//! - [`pareto`]: cross-scenario Pareto archive over (carbon, task delay,
+//!   accuracy drop) — embodied or lifetime carbon depending on the
+//!   objective — maintained *incrementally* as rows commit and
+//!   checkpointed/restored beside the store.
 //!
 //! Invariant the tests pin down: for a fixed campaign seed, the final store
 //! bytes are identical whether the campaign ran uninterrupted with any
@@ -28,9 +37,12 @@ pub mod scheduler;
 pub mod spec;
 pub mod store;
 
-pub use pareto::{CampaignArchive, GroupBy};
-pub use scheduler::{run_campaign, start_service, CampaignReport, SurrogateBackend};
-pub use spec::{CampaignSpec, JobSpec};
+pub use pareto::{CampaignArchive, CarbonAxis, GroupBy};
+pub use scheduler::{
+    job_bound, prune_reason, run_campaign, start_service, CampaignReport, JobBound,
+    SurrogateBackend,
+};
+pub use spec::{CampaignObjective, CampaignSpec, JobSpec};
 pub use store::ResultStore;
 
 #[cfg(test)]
@@ -49,6 +61,11 @@ mod tests {
         ))
     }
 
+    fn cleanup(path: &std::path::Path) {
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(path));
+    }
+
     /// 2 models x 2 nodes x 2 deltas = 8 jobs, tiny GA budget.
     fn quick_spec() -> CampaignSpec {
         let mut s = CampaignSpec::new(
@@ -60,20 +77,28 @@ mod tests {
         s
     }
 
-    fn run_to(path: &PathBuf, workers: usize) -> (CampaignReport, String) {
+    fn run_spec_to(
+        spec: &CampaignSpec,
+        path: &std::path::Path,
+        workers: usize,
+    ) -> (CampaignReport, String) {
         let mut store = ResultStore::open(path).unwrap();
         // Surrogate backend: deterministic and artifact-free.
         let svc = EvalService::start(SurrogateBackend::default());
-        let report = run_campaign(&quick_spec(), workers, &mut store, &svc).unwrap();
+        let report = run_campaign(spec, workers, &mut store, &svc).unwrap();
         svc.shutdown();
         (report, std::fs::read_to_string(path).unwrap())
+    }
+
+    fn run_to(path: &std::path::Path, workers: usize) -> (CampaignReport, String) {
+        run_spec_to(&quick_spec(), path, workers)
     }
 
     #[test]
     fn campaign_resume_and_worker_count_are_invisible_in_the_store() {
         let (p4, p1, pr) = (tmp("w4"), tmp("w1"), tmp("resume"));
         for p in [&p4, &p1, &pr] {
-            let _ = std::fs::remove_file(p);
+            cleanup(p);
         }
 
         // Uninterrupted, 4 workers.
@@ -81,12 +106,14 @@ mod tests {
         assert_eq!(report.jobs_total, 8);
         assert_eq!(report.jobs_run, 8);
         assert_eq!(report.jobs_skipped, 0);
+        assert_eq!(report.jobs_pruned, 0);
         assert_eq!(bytes4.lines().count(), 8);
 
-        // Campaign-global cache: 8 jobs each request the full library, but
-        // only the first evaluates it — everything later is cross-job hits.
+        // Campaign-global cache: the bound pre-pass plus all 8 jobs request
+        // the full library, but only the first evaluates it — everything
+        // later is cross-job hits.
         let lib_len = crate::approx::library().len();
-        assert_eq!(report.stats.served, 8 * lib_len);
+        assert_eq!(report.stats.served, (8 + 1) * lib_len);
         assert!(report.stats.evaluated <= lib_len, "{:?}", report.stats);
         assert!(report.stats.cache_hits > 0, "{:?}", report.stats);
         assert!(report.stats.hit_rate() > 0.5, "{:?}", report.stats);
@@ -105,29 +132,113 @@ mod tests {
         assert_eq!(bytes_r, bytes4, "resume diverged from uninterrupted run");
 
         // The archive reads the store back: 8 points, a nonempty front,
-        // and aggregates grouped by the grid's 2 nodes / 2 models.
+        // and aggregates grouped by the grid's 2 nodes / 2 models. The
+        // incremental archive (checkpointed beside the store during the
+        // run) must agree with a full recompute.
         let store = ResultStore::open(&p4).unwrap();
         let arch = CampaignArchive::from_rows(store.rows()).unwrap();
         assert_eq!(arch.points.len(), 8);
         assert!(!arch.front.is_empty());
         assert_eq!(arch.aggregate_table(GroupBy::Node).n_rows(), 2);
         assert_eq!(arch.aggregate_table(GroupBy::Model).n_rows(), 2);
+        let restored = CampaignArchive::load_or_rebuild(
+            store.rows(),
+            CarbonAxis::Embodied,
+            &CampaignArchive::checkpoint_path(&p4),
+        )
+        .unwrap();
+        assert_eq!(restored.front, arch.front, "checkpointed archive diverged");
 
         for p in [&p4, &p1, &pr] {
-            let _ = std::fs::remove_file(p);
+            cleanup(p);
         }
     }
 
     #[test]
     fn rerun_of_complete_campaign_is_a_noop() {
         let p = tmp("noop");
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
         let (_, bytes) = run_to(&p, 2);
         let (report, bytes_again) = run_to(&p, 2);
         assert_eq!(report.jobs_run, 0);
         assert_eq!(report.jobs_skipped, 8);
         assert_eq!(report.stats.served, 0);
         assert_eq!(bytes, bytes_again);
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn unreachable_fps_floors_are_pruned_deterministically() {
+        // Half the grid demands an absurd FPS floor; the bound proves those
+        // jobs can never produce a feasible design, so they are pruned —
+        // identically on fresh and resumed runs.
+        let (pf, pr) = (tmp("prune-fresh"), tmp("prune-resume"));
+        for p in [&pf, &pr] {
+            cleanup(p);
+        }
+        let mut spec = quick_spec();
+        spec.fps_floors = vec![None, Some(1e9)];
+
+        let (report, bytes) = run_spec_to(&spec, &pf, 4);
+        assert_eq!(report.jobs_total, 16);
+        assert_eq!(report.jobs_pruned, 8, "{}", report.line());
+        assert_eq!(report.jobs_run, 8);
+        assert_eq!(bytes.lines().count(), 8);
+        // Only the unconstrained jobs committed rows.
+        for line in bytes.lines() {
+            assert!(line.contains("\"fps_floor\":null"), "{line}");
+        }
+
+        // Resume from a 3-row prefix: pruned set and bytes unchanged.
+        let prefix: String = bytes.lines().take(3).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&pr, prefix).unwrap();
+        let (resumed, bytes_r) = run_spec_to(&spec, &pr, 2);
+        assert_eq!(resumed.jobs_skipped, 3);
+        assert_eq!(resumed.jobs_run, 5);
+        assert_eq!(resumed.jobs_pruned, 8);
+        assert_eq!(bytes_r, bytes, "pruned resume diverged");
+
+        // With pruning disabled the floored jobs run (and report
+        // infeasible rows) instead of being skipped.
+        let pn = tmp("prune-off");
+        cleanup(&pn);
+        let mut spec_off = spec.clone();
+        spec_off.prune = false;
+        let (off, bytes_off) = run_spec_to(&spec_off, &pn, 4);
+        assert_eq!(off.jobs_pruned, 0);
+        assert_eq!(off.jobs_run, 16);
+        assert_eq!(bytes_off.lines().count(), 16);
+
+        for p in [&pf, &pr, &pn] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
+    fn lifetime_objective_changes_keys_and_reports_lifetime_carbon() {
+        let p = tmp("lifetime");
+        cleanup(&p);
+        let mut spec = quick_spec();
+        spec.models.truncate(1);
+        spec.deltas.truncate(1);
+        spec.objective = CampaignObjective::LifetimeCdp;
+        let (report, bytes) = run_spec_to(&spec, &p, 2);
+        assert_eq!(report.jobs_run, 2);
+        for line in bytes.lines() {
+            assert!(line.contains("obj=lifetime-cdp"), "{line}");
+            assert!(line.contains("\"objective\":\"lifetime-cdp\""), "{line}");
+        }
+        let store = ResultStore::open(&p).unwrap();
+        for row in store.rows() {
+            let carbon = row.get("carbon_g").unwrap().as_f64().unwrap();
+            let lifetime = row.get("lifetime_gco2").unwrap().as_f64().unwrap();
+            let op = row.get("op_gco2").unwrap().as_f64().unwrap();
+            assert!(op > 0.0);
+            assert!((lifetime - (carbon + op)).abs() < 1e-9);
+            let obj = row.get("obj_value").unwrap().as_f64().unwrap();
+            let delay = row.get("delay_s").unwrap().as_f64().unwrap();
+            assert!((obj - lifetime * delay).abs() < 1e-9);
+        }
+        cleanup(&p);
     }
 }

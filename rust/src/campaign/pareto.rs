@@ -1,15 +1,50 @@
 //! Cross-scenario Pareto archive: every committed campaign row is a point
-//! in (embodied carbon, task delay, accuracy drop) space; the archive keeps
-//! the non-dominated set across ALL scenarios plus per-node and
-//! per-workload aggregate summaries. This is the campaign-level view the
-//! single-run pipelines (fig2/fig3) cannot give: which (workload, node, δ)
-//! corners the grid actually pays for.
+//! in (carbon, task delay, accuracy drop) space — where "carbon" is the
+//! campaign objective's metric (embodied gCO2, or lifetime gCO2 for the
+//! lifetime objectives) — and the archive keeps the non-dominated set
+//! across ALL scenarios plus per-node and per-workload aggregate summaries.
+//!
+//! The archive is **incremental**: the scheduler calls [`CampaignArchive::
+//! insert_row`] as each row commits, so the front is maintained in O(|front|)
+//! per insert instead of recomputed O(n^2) from the full store. It is also
+//! **checkpointed** alongside the JSONL store (a small sidecar JSON with the
+//! front indices); [`CampaignArchive::load_or_rebuild`] restores it on
+//! resume and falls back to an incremental rebuild whenever the sidecar is
+//! missing, stale, or corrupt — the store rows remain the source of truth.
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::util::json::obj;
 use crate::util::{table, Json, Table};
+
+/// Which carbon metric spans the archive's first objective axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CarbonAxis {
+    /// Embodied gCO2 (the paper's view).
+    Embodied,
+    /// Embodied + lifetime operational gCO2.
+    Lifetime,
+}
+
+impl CarbonAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CarbonAxis::Embodied => "embodied",
+            CarbonAxis::Lifetime => "lifetime",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "embodied" => Some(CarbonAxis::Embodied),
+            "lifetime" => Some(CarbonAxis::Lifetime),
+            _ => None,
+        }
+    }
+}
 
 /// One campaign result as an objective-space point (all minimized).
 #[derive(Debug, Clone)]
@@ -19,6 +54,9 @@ pub struct ArchivePoint {
     pub node: String,
     pub mult: String,
     pub carbon_g: f64,
+    /// Embodied + lifetime operational carbon; equals `carbon_g` for rows
+    /// written before lifetime accounting existed.
+    pub lifetime_gco2: f64,
     pub delay_s: f64,
     pub drop_pct: f64,
     pub cdp: f64,
@@ -32,23 +70,33 @@ impl ArchivePoint {
         let f = |k: &str| -> Result<f64> {
             row.get(k).and_then(|v| v.as_f64()).context(format!("field {k}"))
         };
+        let carbon_g = f("carbon_g")?;
         Ok(Self {
             key: s("key")?,
             model: s("model")?,
             node: s("node")?,
             mult: s("mult")?,
-            carbon_g: f("carbon_g")?,
+            carbon_g,
+            lifetime_gco2: f("lifetime_gco2").unwrap_or(carbon_g),
             delay_s: f("delay_s")?,
             drop_pct: f("drop_pct")?,
             cdp: f("cdp")?,
         })
     }
+
+    fn carbon_on(&self, axis: CarbonAxis) -> f64 {
+        match axis {
+            CarbonAxis::Embodied => self.carbon_g,
+            CarbonAxis::Lifetime => self.lifetime_gco2,
+        }
+    }
 }
 
 /// 3-objective dominance (<= everywhere, < somewhere; minimize all).
-fn dominates(a: &ArchivePoint, b: &ArchivePoint) -> bool {
-    let le = a.carbon_g <= b.carbon_g && a.delay_s <= b.delay_s && a.drop_pct <= b.drop_pct;
-    let lt = a.carbon_g < b.carbon_g || a.delay_s < b.delay_s || a.drop_pct < b.drop_pct;
+fn dominates(axis: CarbonAxis, a: &ArchivePoint, b: &ArchivePoint) -> bool {
+    let (ca, cb) = (a.carbon_on(axis), b.carbon_on(axis));
+    let le = ca <= cb && a.delay_s <= b.delay_s && a.drop_pct <= b.drop_pct;
+    let lt = ca < cb || a.delay_s < b.delay_s || a.drop_pct < b.drop_pct;
     le && lt
 }
 
@@ -62,15 +110,53 @@ pub enum GroupBy {
 /// The archive: all points plus the indices of the cross-scenario front.
 #[derive(Debug, Clone)]
 pub struct CampaignArchive {
+    pub axis: CarbonAxis,
     pub points: Vec<ArchivePoint>,
     /// Indices into `points` on the (carbon, delay, drop) Pareto front,
-    /// in store order.
+    /// in ascending insertion (store) order.
     pub front: Vec<usize>,
 }
 
 impl CampaignArchive {
-    /// Build from committed store rows.
+    /// An empty archive over the given carbon axis.
+    pub fn new(axis: CarbonAxis) -> Self {
+        Self { axis, points: Vec::new(), front: Vec::new() }
+    }
+
+    /// Insert one point, updating the front incrementally. Returns whether
+    /// the point landed on the front. Checking the new point against the
+    /// current front members alone is sufficient: any dominator of the new
+    /// point is itself dominated only by front members, and dominance is
+    /// transitive.
+    pub fn insert(&mut self, p: ArchivePoint) -> bool {
+        let axis = self.axis;
+        let dominated = self.front.iter().any(|&j| dominates(axis, &self.points[j], &p));
+        let idx = self.points.len();
+        if !dominated {
+            let points = &self.points;
+            self.front.retain(|&j| !dominates(axis, &p, &points[j]));
+            self.front.push(idx);
+        }
+        self.points.push(p);
+        !dominated
+    }
+
+    /// Parse and insert one committed store row.
+    pub fn insert_row(&mut self, row: &Json) -> Result<bool> {
+        let p = ArchivePoint::from_row(row)
+            .with_context(|| format!("store row {}", self.points.len() + 1))?;
+        Ok(self.insert(p))
+    }
+
+    /// Build from committed store rows on the embodied axis (the legacy
+    /// full-recompute entry point; kept O(n^2) and independent of the
+    /// incremental path so tests can pit one against the other).
     pub fn from_rows(rows: &[Json]) -> Result<Self> {
+        Self::from_rows_on(rows, CarbonAxis::Embodied)
+    }
+
+    /// Full O(n^2) recompute on an explicit axis.
+    pub fn from_rows_on(rows: &[Json], axis: CarbonAxis) -> Result<Self> {
         let points: Vec<ArchivePoint> = rows
             .iter()
             .enumerate()
@@ -81,16 +167,86 @@ impl CampaignArchive {
                 points
                     .iter()
                     .enumerate()
-                    .all(|(j, other)| j == i || !dominates(other, &points[i]))
+                    .all(|(j, other)| j == i || !dominates(axis, other, &points[i]))
             })
             .collect();
-        Ok(Self { points, front })
+        Ok(Self { axis, points, front })
+    }
+
+    /// Stream all rows through the incremental path.
+    pub fn from_rows_incremental(rows: &[Json], axis: CarbonAxis) -> Result<Self> {
+        let mut arch = Self::new(axis);
+        for row in rows {
+            arch.insert_row(row)?;
+        }
+        Ok(arch)
+    }
+
+    /// Sidecar path for a store at `store_path` (e.g. `campaign.jsonl` ->
+    /// `campaign.front.json`).
+    pub fn checkpoint_path(store_path: &Path) -> PathBuf {
+        store_path.with_extension("front.json")
+    }
+
+    /// The checkpoint document: enough to validate freshness and restore
+    /// the front without re-running dominance checks.
+    pub fn checkpoint(&self) -> Json {
+        obj([
+            ("axis", Json::from(self.axis.name())),
+            ("n_points", Json::from(self.points.len() as f64)),
+            (
+                "front",
+                Json::Arr(self.front.iter().map(|&i| Json::from(i as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.checkpoint().dumps())
+            .with_context(|| format!("write archive checkpoint {}", path.display()))
+    }
+
+    /// Restore from a checkpoint if it matches the store (same axis, same
+    /// row count, well-formed front); otherwise rebuild incrementally from
+    /// the rows. Never fails because of a bad sidecar — the store is the
+    /// source of truth and the checkpoint is just a warm start.
+    pub fn load_or_rebuild(rows: &[Json], axis: CarbonAxis, ckpt_path: &Path) -> Result<Self> {
+        if let Some(arch) = Self::try_restore(rows, axis, ckpt_path) {
+            return Ok(arch);
+        }
+        Self::from_rows_incremental(rows, axis)
+    }
+
+    fn try_restore(rows: &[Json], axis: CarbonAxis, ckpt_path: &Path) -> Option<Self> {
+        let text = std::fs::read_to_string(ckpt_path).ok()?;
+        let ck = Json::parse(&text).ok()?;
+        let ck_axis = CarbonAxis::from_name(ck.get("axis").ok()?.as_str().ok()?)?;
+        if ck_axis != axis {
+            return None;
+        }
+        let n = ck.get("n_points").ok()?.as_usize().ok()?;
+        if n != rows.len() {
+            return None; // stale: rows were appended since the checkpoint
+        }
+        let mut front = Vec::new();
+        let mut prev: Option<usize> = None;
+        for v in ck.get("front").ok()?.as_arr().ok()? {
+            let i = v.as_usize().ok()?;
+            if i >= n || prev.is_some_and(|p| p >= i) {
+                return None; // malformed: out of range or not ascending
+            }
+            front.push(i);
+            prev = Some(i);
+        }
+        let points: Vec<ArchivePoint> =
+            rows.iter().map(ArchivePoint::from_row).collect::<Result<_>>().ok()?;
+        Some(Self { axis, points, front })
     }
 
     /// The cross-scenario Pareto front as a printable table.
     pub fn pareto_table(&self) -> Table {
         let mut t = Table::new(vec![
-            "scenario", "mult", "carbon_g", "delay_ms", "drop_pp", "cdp",
+            "scenario", "mult", "carbon_g", "lifetime_g", "delay_ms", "drop_pp", "cdp",
         ]);
         for &i in &self.front {
             let p = &self.points[i];
@@ -98,6 +254,7 @@ impl CampaignArchive {
                 p.key.clone(),
                 p.mult.clone(),
                 table::fmt(p.carbon_g),
+                table::fmt(p.lifetime_gco2),
                 format!("{:.3}", p.delay_s * 1e3),
                 format!("{:.2}", p.drop_pct),
                 format!("{:.4}", p.cdp),
@@ -151,6 +308,7 @@ impl CampaignArchive {
 mod tests {
     use super::*;
     use crate::util::json::obj;
+    use crate::util::Rng;
 
     fn row(key: &str, model: &str, node: &str, c: f64, d: f64, a: f64) -> Json {
         obj([
@@ -159,6 +317,20 @@ mod tests {
             ("node", Json::from(node)),
             ("mult", Json::from("M")),
             ("carbon_g", Json::from(c)),
+            ("delay_s", Json::from(d)),
+            ("drop_pct", Json::from(a)),
+            ("cdp", Json::from(c * d)),
+        ])
+    }
+
+    fn row_lifetime(key: &str, c: f64, life: f64, d: f64, a: f64) -> Json {
+        obj([
+            ("key", Json::from(key)),
+            ("model", Json::from("m")),
+            ("node", Json::from("14nm")),
+            ("mult", Json::from("M")),
+            ("carbon_g", Json::from(c)),
+            ("lifetime_gco2", Json::from(life)),
             ("delay_s", Json::from(d)),
             ("drop_pct", Json::from(a)),
             ("cdp", Json::from(c * d)),
@@ -207,5 +379,132 @@ mod tests {
         let rows = vec![obj([("key", Json::from("a"))])];
         let e = CampaignArchive::from_rows(&rows).unwrap_err();
         assert!(format!("{e:#}").contains("store row 1"), "{e:#}");
+    }
+
+    /// A pseudo-random row set with plenty of dominance structure (values
+    /// drawn from a small menu so ties and duplicates occur too).
+    fn random_rows(rng: &mut Rng, n: usize) -> Vec<Json> {
+        let menu = [1.0, 2.0, 3.0, 5.0, 8.0];
+        (0..n)
+            .map(|i| {
+                row(
+                    &format!("k{i}"),
+                    "m",
+                    "14nm",
+                    *rng.choice(&menu),
+                    *rng.choice(&menu),
+                    *rng.choice(&menu),
+                )
+            })
+            .collect()
+    }
+
+    fn front_keys(arch: &CampaignArchive) -> Vec<String> {
+        let mut ks: Vec<String> =
+            arch.front.iter().map(|&i| arch.points[i].key.clone()).collect();
+        ks.sort();
+        ks
+    }
+
+    #[test]
+    fn streaming_matches_full_recompute() {
+        // Property: for many random row sets, the incremental archive's
+        // front is exactly the full-recompute front (same indices).
+        let mut rng = Rng::new(0xA5C4DE);
+        for n in [0usize, 1, 2, 7, 20, 50] {
+            let rows = random_rows(&mut rng, n);
+            let full = CampaignArchive::from_rows(&rows).unwrap();
+            let inc =
+                CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+            assert_eq!(inc.front, full.front, "n={n}");
+            assert_eq!(inc.points.len(), full.points.len());
+        }
+    }
+
+    #[test]
+    fn front_membership_is_insert_order_independent() {
+        // Property: permuting the insertion order never changes *which*
+        // scenarios are on the front (indices shift, the key set must not).
+        let mut rng = Rng::new(0xF00D);
+        for trial in 0..10 {
+            let rows = random_rows(&mut rng, 16);
+            let base = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+            let mut perm = rows.clone();
+            rng.shuffle(&mut perm);
+            let shuffled =
+                CampaignArchive::from_rows_incremental(&perm, CarbonAxis::Embodied).unwrap();
+            assert_eq!(front_keys(&base), front_keys(&shuffled), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn insert_reports_front_membership() {
+        let mut arch = CampaignArchive::new(CarbonAxis::Embodied);
+        assert!(arch.insert_row(&row("a", "m", "14nm", 10.0, 1.0, 1.0)).unwrap());
+        // Dominated by a -> not on the front.
+        assert!(!arch.insert_row(&row("b", "m", "14nm", 12.0, 2.0, 1.5)).unwrap());
+        // Dominates a -> replaces it.
+        assert!(arch.insert_row(&row("c", "m", "14nm", 9.0, 0.5, 0.5)).unwrap());
+        assert_eq!(arch.front, vec![2]);
+        assert_eq!(arch.points.len(), 3);
+    }
+
+    #[test]
+    fn lifetime_axis_orders_fronts_differently() {
+        // Point a: low embodied, high lifetime. Point b: the reverse.
+        // Each axis must pick its own winner.
+        let rows = vec![
+            row_lifetime("a", 5.0, 100.0, 1.0, 1.0),
+            row_lifetime("b", 8.0, 40.0, 1.0, 1.0),
+        ];
+        let emb = CampaignArchive::from_rows_on(&rows, CarbonAxis::Embodied).unwrap();
+        let life = CampaignArchive::from_rows_on(&rows, CarbonAxis::Lifetime).unwrap();
+        assert_eq!(emb.front, vec![0]);
+        assert_eq!(life.front, vec![1]);
+        // And rows without the lifetime field fall back to embodied carbon.
+        let legacy = vec![row("x", "m", "14nm", 3.0, 1.0, 1.0)];
+        let arch = CampaignArchive::from_rows_on(&legacy, CarbonAxis::Lifetime).unwrap();
+        assert_eq!(arch.points[0].lifetime_gco2, 3.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_staleness() {
+        let mut rng = Rng::new(0xCAFE);
+        let rows = random_rows(&mut rng, 12);
+        let arch = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "carbon3d-pareto-ckpt-{}.front.json",
+            std::process::id()
+        ));
+        arch.save_checkpoint(&path).unwrap();
+
+        // Fresh checkpoint restores the exact front.
+        let restored =
+            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
+        assert_eq!(restored.front, arch.front);
+
+        // Stale checkpoint (more rows than it covers) -> rebuilt, not trusted.
+        let mut more = rows.clone();
+        more.push(row("extra", "m", "14nm", 0.5, 0.5, 0.5));
+        let rebuilt =
+            CampaignArchive::load_or_rebuild(&more, CarbonAxis::Embodied, &path).unwrap();
+        let full = CampaignArchive::from_rows(&more).unwrap();
+        assert_eq!(rebuilt.front, full.front);
+
+        // Axis mismatch -> rebuilt on the requested axis.
+        let other = CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Lifetime, &path).unwrap();
+        assert_eq!(other.axis, CarbonAxis::Lifetime);
+
+        // Corrupt checkpoint -> rebuilt.
+        std::fs::write(&path, "not json at all").unwrap();
+        let rebuilt2 =
+            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
+        assert_eq!(rebuilt2.front, arch.front);
+
+        // Missing checkpoint -> rebuilt.
+        let _ = std::fs::remove_file(&path);
+        let rebuilt3 =
+            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
+        assert_eq!(rebuilt3.front, arch.front);
     }
 }

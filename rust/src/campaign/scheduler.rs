@@ -4,17 +4,29 @@
 //! heavily, so after the first job primes the cache every later job's
 //! accuracy table is pure cache hits — the dominant cross-run saving.
 //!
+//! The queue is **objective-aware**: each pending job gets an analytic
+//! optimistic bound ([`JobBound`]) on the best objective value any design in
+//! its search space could reach, jobs are dispatched most-promising-first by
+//! that bound, and jobs whose bound provably cannot beat the committed
+//! front are skipped ([`prune_reason`]). Pruning is deterministic by
+//! construction: the commit-time decision for the job at schedule slot *i*
+//! is a pure function of the rows committed at slots `< i` (the dispatch-
+//! time check is merely a sound early-out — incumbents only improve as rows
+//! commit, so a prune visible at dispatch still holds at commit).
+//!
 //! Results flow through a reorder buffer and are committed to the JSONL
-//! store in job-id order, which (with key-derived per-job GA seeds) makes
-//! the store byte-identical for any worker count or interleaving.
+//! store in schedule order, which (with key-derived per-job GA seeds) makes
+//! the store byte-identical for any worker count or interleaving, fresh or
+//! resumed. The cross-scenario Pareto archive is maintained incrementally
+//! as rows commit and checkpointed beside the store.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Context as _, Result};
+use anyhow::{anyhow, bail, ensure, Context as _, Result};
 
 use crate::accuracy::model::{
     calibrate_k, drop_pct_from_error, feasible_multipliers, predicted_drop_pct, DEFAULT_K,
@@ -23,12 +35,16 @@ use crate::accuracy::model::{
 use crate::accuracy::native::NativeEvaluator;
 use crate::accuracy::AccuracyTable;
 use crate::approx::{library, Multiplier, EXACT_ID};
-use crate::coordinator::ga_appx_cdp_with_feasible;
+use crate::area::mac::mac_power_uw;
+use crate::carbon::embodied_carbon;
+use crate::coordinator::ga_appx_with_feasible_objective;
+use crate::dataflow::arch::AccelConfig;
 use crate::dataflow::workloads::{workload, Workload};
-use crate::ga::GaParams;
+use crate::ga::{GaParams, Objective, SearchSpace};
 use crate::runtime::{Artifacts, EvalBackend, EvalClient, EvalService, NativeBackend, ServiceStats};
 use crate::util::json::{obj, Json};
 
+use super::pareto::CampaignArchive;
 use super::spec::{integration_name, CampaignSpec, JobSpec};
 use super::store::ResultStore;
 
@@ -88,13 +104,130 @@ pub fn start_service(artifacts_dir: &Path) -> Result<(EvalService, &'static str)
     }
 }
 
+/// Fetch the campaign-global accuracy table through the shared service and
+/// calibrate the ΔA model's K against it. Used identically by the bound
+/// pre-pass and by every job — a single definition is what guarantees the
+/// pre-pass δ-feasible sets (and therefore the prune bounds) agree exactly
+/// with the sets the GA searches.
+fn calibrated_k(client: &EvalClient, lib: &[Multiplier], tiny: &Workload) -> Result<f64> {
+    let mult_refs: Vec<&Multiplier> = lib.iter().collect();
+    let accs = client
+        .eval_all(&mult_refs)
+        .map_err(|e| anyhow!("accuracy service: {e}"))?;
+    let mut table = AccuracyTable { exact: accs[EXACT_ID], ..Default::default() };
+    for (m, &a) in lib.iter().zip(&accs) {
+        table.accuracy.insert(m.id, a);
+    }
+    Ok(calibrate_k(lib, tiny, &table))
+}
+
+/// Analytic optimistic bounds for one pending job: component-wise lower
+/// bounds over the job's *entire* search space, so no achievable design can
+/// beat them. Used to order the queue (most promising first) and to prune
+/// jobs that provably cannot improve the committed front.
+#[derive(Debug, Clone, Copy)]
+pub struct JobBound {
+    /// Lower bound on embodied carbon (g): the min-area corner of the
+    /// search space with the cheapest δ-feasible multiplier.
+    pub carbon_lb_g: f64,
+    /// Lower bound on task delay (s): compute-bound at the largest array.
+    pub delay_lb_s: f64,
+    /// Lower bound on energy/inference (J): MAC energy only, at the most
+    /// frugal δ-feasible multiplier (memory traffic ignored).
+    pub energy_lb_j: f64,
+    /// Upper bound on achievable FPS (`1 / delay_lb_s`).
+    pub fps_ub: f64,
+    /// Lower bound on the campaign objective value.
+    pub objective_lb: f64,
+}
+
+/// Compute the optimistic bound for a job over its δ-feasible multiplier
+/// set. Every component combines best-cases that no single design attains
+/// simultaneously, which is exactly what makes it a valid lower bound.
+pub fn job_bound(
+    job: &JobSpec,
+    w: &Workload,
+    lib: &[Multiplier],
+    feasible: &[usize],
+    objective: &Objective,
+) -> JobBound {
+    let space = SearchSpace::standard(feasible.to_vec());
+    let (px_min, py_min) = (space.px[0], space.py[0]);
+    let (px_max, py_max) = (*space.px.last().unwrap(), *space.py.last().unwrap());
+    let (rf_min, sram_min) = (space.rf_bytes[0], space.sram_bytes[0]);
+    let mut carbon_lb_g = f64::INFINITY;
+    let mut mac_pj_min = f64::INFINITY;
+    for &mid in feasible {
+        let cfg = AccelConfig {
+            px: px_min,
+            py: py_min,
+            rf_bytes: rf_min,
+            sram_bytes: sram_min,
+            node: job.node,
+            integration: job.integration,
+            mult_id: mid,
+        };
+        let areas = cfg.die_areas(&lib[mid]);
+        let c = embodied_carbon(&areas, job.node, job.integration).total_g();
+        carbon_lb_g = carbon_lb_g.min(c);
+        mac_pj_min = mac_pj_min.min(mac_power_uw(&lib[mid], job.node) / job.node.freq_mhz());
+    }
+    let macs = w.total_macs() as f64;
+    let freq_hz = job.node.freq_mhz() * 1e6;
+    let delay_lb_s = macs / ((px_max * py_max) as f64 * freq_hz);
+    let energy_lb_j = macs * mac_pj_min * 1e-12;
+    let objective_lb = match objective {
+        Objective::EmbodiedCdp(_) => carbon_lb_g * delay_lb_s,
+        Objective::OperationalCarbon(d) => d.lifetime_gco2(energy_lb_j),
+        Objective::LifetimeCdp(d) => (carbon_lb_g + d.lifetime_gco2(energy_lb_j)) * delay_lb_s,
+    };
+    JobBound { carbon_lb_g, delay_lb_s, energy_lb_j, fps_ub: 1.0 / delay_lb_s, objective_lb }
+}
+
+/// Why a job may be skipped without running, given its bound and the best
+/// committed objective value in its family (None = no incumbent yet).
+/// Returns `None` when the job must run.
+///
+/// Note the exact semantics: rule (b) prunes on the *scalar objective*
+/// projected per (model, node, integration) family — a pruned scenario can
+/// never improve the family's best objective value, but its row might have
+/// contributed to the 3-axis (carbon, delay, drop) archive through a lower
+/// accuracy drop alone. Pruning trades that per-scenario completeness for
+/// speed; campaigns that need every grid point exhaustively set
+/// `CampaignSpec::prune = false` (CLI `--no-prune`).
+pub fn prune_reason(
+    job: &JobSpec,
+    bound: &JobBound,
+    incumbent: Option<f64>,
+) -> Option<&'static str> {
+    if let Some(floor) = job.fps_floor {
+        if bound.fps_ub < floor {
+            // Even the compute-bound best case misses the floor: every
+            // design in the space is infeasible.
+            return Some("fps floor exceeds the reachable bound");
+        }
+    }
+    if let Some(best) = incumbent {
+        if bound.objective_lb >= best {
+            // The optimistic bound already loses to a committed result in
+            // this (model, node, integration) family.
+            return Some("objective bound cannot beat the committed front");
+        }
+    }
+    None
+}
+
 /// What a finished campaign reports.
 #[derive(Debug, Clone, Copy)]
 pub struct CampaignReport {
     pub jobs_total: usize,
+    /// Jobs that ran and committed a row.
     pub jobs_run: usize,
     /// Jobs skipped because the store already had their row (resume).
     pub jobs_skipped: usize,
+    /// Jobs skipped because their optimistic bound provably cannot beat
+    /// the committed front (deterministic prune; no row written).
+    pub jobs_pruned: usize,
     pub elapsed_s: f64,
     /// Eval-service counter deltas attributable to this campaign.
     pub stats: ServiceStats,
@@ -111,11 +244,12 @@ impl CampaignReport {
 
     pub fn line(&self) -> String {
         format!(
-            "{} jobs ({} run, {} resumed) in {:.2}s = {:.2} jobs/s | eval service: \
+            "{} jobs ({} run, {} resumed, {} pruned) in {:.2}s = {:.2} jobs/s | eval service: \
              {} served, {} evaluated, {} cache hits, {} coalesced ({:.0}% hit rate)",
             self.jobs_total,
             self.jobs_run,
             self.jobs_skipped,
+            self.jobs_pruned,
             self.elapsed_s,
             self.jobs_per_sec(),
             self.stats.served,
@@ -136,10 +270,45 @@ fn stats_delta(after: ServiceStats, before: ServiceStats) -> ServiceStats {
     }
 }
 
+/// Committed-front state shared between the writer (updates on commit) and
+/// the workers (read for the dispatch-side prune early-out).
+struct FrontState {
+    archive: CampaignArchive,
+    /// Best committed objective value per job family.
+    incumbents: HashMap<String, f64>,
+}
+
+/// Family + objective value of a committed row, if it carries the
+/// objective-era fields (legacy rows simply never become incumbents).
+fn row_incumbent(row: &Json) -> Option<(String, f64)> {
+    let s = |k: &str| row.get(k).ok().and_then(|v| v.as_str().ok().map(str::to_string));
+    let fam =
+        format!("{}@{}/{}/{}", s("model")?, s("node")?, s("integration")?, s("objective")?);
+    let v = row.get("obj_value").ok()?.as_f64().ok()?;
+    Some((fam, v))
+}
+
+fn update_incumbent(incumbents: &mut HashMap<String, f64>, row: &Json) {
+    if let Some((fam, v)) = row_incumbent(row) {
+        let e = incumbents.entry(fam).or_insert(v);
+        if v < *e {
+            *e = v;
+        }
+    }
+}
+
+/// A worker's verdict on one job.
+enum JobOutcome {
+    Row(Json),
+    Pruned,
+}
+
 /// Drain the campaign grid with `workers` threads, committing one JSONL row
-/// per job to `store` in job-id order. Jobs whose key is already in the
-/// store are skipped (checkpoint/resume); everything else about the run is
-/// deterministic in the campaign seed.
+/// per runnable job to `store` in schedule order (ascending optimistic
+/// objective bound, ties by grid id). Jobs whose key is already in the
+/// store are skipped (checkpoint/resume); jobs whose bound cannot beat the
+/// committed front are pruned; everything else about the run — including
+/// which jobs get pruned — is deterministic in the campaign seed.
 pub fn run_campaign(
     spec: &CampaignSpec,
     workers: usize,
@@ -147,7 +316,7 @@ pub fn run_campaign(
     service: &EvalService,
 ) -> Result<CampaignReport> {
     let jobs = spec.jobs();
-    let pending: Vec<JobSpec> =
+    let mut pending: Vec<JobSpec> =
         jobs.iter().filter(|j| !store.contains(&j.key())).cloned().collect();
     let jobs_skipped = jobs.len() - pending.len();
     let lib = library();
@@ -157,12 +326,59 @@ pub fn run_campaign(
             .insert(m.clone(), workload(m).ok_or_else(|| anyhow!("unknown model {m}"))?);
     }
     let tiny = workload("tinycnn").expect("tinycnn workload exists");
+    let objective = spec.objective.to_fitness(spec.deployment);
+    let axis = spec.objective.carbon_axis();
 
     let before = service.stats();
     let t0 = Instant::now();
+
+    // Bound pre-pass: one accuracy-table fetch (shared with the jobs via
+    // the service cache), then an analytic bound per pending job. The queue
+    // is then ordered most-promising-first; commits follow this schedule
+    // order, so the ordering itself is part of the deterministic contract.
+    let mut bounds: HashMap<usize, JobBound> = HashMap::new();
+    if !pending.is_empty() {
+        let client = service.client();
+        let k = calibrated_k(&client, &lib, &tiny)?;
+        let mut feasible_sets: HashMap<(String, u64), Vec<usize>> = HashMap::new();
+        for job in &pending {
+            let w = workloads.get(&job.model).expect("workload preloaded");
+            let f = feasible_sets
+                .entry((job.model.clone(), job.delta_pct.to_bits()))
+                .or_insert_with(|| feasible_multipliers(&lib, w, job.delta_pct, k));
+            ensure!(
+                !f.is_empty(),
+                "no multiplier satisfies δ={}% for {}",
+                job.delta_pct,
+                job.model
+            );
+            bounds.insert(job.id, job_bound(job, w, &lib, f, &objective));
+        }
+        pending.sort_by(|a, b| {
+            bounds[&a.id]
+                .objective_lb
+                .partial_cmp(&bounds[&b.id].objective_lb)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+    }
+
+    // Committed-front state: restore the incremental Pareto archive from
+    // its sidecar checkpoint (or rebuild from the rows) and seed the
+    // per-family incumbents from the already-committed rows.
+    let ckpt_path = CampaignArchive::checkpoint_path(store.path());
+    let archive = CampaignArchive::load_or_rebuild(store.rows(), axis, &ckpt_path)?;
+    let mut incumbents: HashMap<String, f64> = HashMap::new();
+    for row in store.rows() {
+        update_incumbent(&mut incumbents, row);
+    }
+    let shared = Mutex::new(FrontState { archive, incumbents });
+
     let n_workers = workers.max(1).min(pending.len().max(1));
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<Result<(usize, Json)>>();
+    let (tx, rx) = mpsc::channel::<Result<(usize, JobOutcome)>>();
+    let mut jobs_run = 0usize;
+    let mut jobs_pruned = 0usize;
 
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..n_workers {
@@ -170,15 +386,30 @@ pub fn run_campaign(
             let client = service.client();
             let (pending, lib, workloads, tiny, next, ga) =
                 (&pending, &lib, &workloads, &tiny, &next, spec.ga);
+            let (bounds, shared, objective, prune_on) =
+                (&bounds, &shared, &objective, spec.prune);
             scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= pending.len() {
                     break;
                 }
                 let job = &pending[i];
-                let out = run_job(job, ga, lib, workloads, tiny, &client)
-                    .with_context(|| format!("job {}", job.key()))
-                    .map(|row| (job.id, row));
+                // Dispatch-side prune early-out: sound, because commits only
+                // ever improve the incumbents, so a prune visible now still
+                // holds when the writer re-checks at commit time.
+                let pruned = prune_on
+                    && bounds.get(&job.id).is_some_and(|b| {
+                        let inc =
+                            shared.lock().unwrap().incumbents.get(&job.family()).copied();
+                        prune_reason(job, b, inc).is_some()
+                    });
+                let out = if pruned {
+                    Ok((job.id, JobOutcome::Pruned))
+                } else {
+                    run_job(job, ga, lib, workloads, tiny, &client, objective)
+                        .with_context(|| format!("job {}", job.key()))
+                        .map(|row| (job.id, JobOutcome::Row(row)))
+                };
                 if tx.send(out).is_err() {
                     break;
                 }
@@ -186,22 +417,55 @@ pub fn run_campaign(
         }
         drop(tx);
 
-        // Single writer: reorder results into job-id order so the store is
-        // identical no matter how workers interleave.
+        // Single writer: reorder results into schedule order and apply the
+        // authoritative prune rule at commit time, so the committed store —
+        // including which jobs were pruned — is a pure function of the spec
+        // and the rows committed before each slot.
         let expected: Vec<usize> = pending.iter().map(|j| j.id).collect();
-        let mut buffer: BTreeMap<usize, Json> = BTreeMap::new();
+        let mut buffer: BTreeMap<usize, JobOutcome> = BTreeMap::new();
         let mut cursor = 0usize;
         for msg in rx {
-            let (id, row) = msg?;
-            buffer.insert(id, row);
+            let (id, out) = msg?;
+            buffer.insert(id, out);
             while cursor < expected.len() {
-                match buffer.remove(&expected[cursor]) {
-                    Some(row) => {
+                let Some(out) = buffer.remove(&expected[cursor]) else {
+                    break;
+                };
+                let job = &pending[cursor];
+                // Shared-state update under the lock; file I/O (row append +
+                // checkpoint) outside it, so workers' dispatch-side prune
+                // reads never stall behind disk writes.
+                let mut st = shared.lock().unwrap();
+                let prune = spec.prune
+                    && bounds.get(&job.id).is_some_and(|b| {
+                        prune_reason(job, b, st.incumbents.get(&job.family()).copied())
+                            .is_some()
+                    });
+                let commit = if prune {
+                    None
+                } else {
+                    let JobOutcome::Row(row) = out else {
+                        bail!(
+                            "job {} pruned by a worker but runnable at commit time",
+                            job.key()
+                        );
+                    };
+                    update_incumbent(&mut st.incumbents, &row);
+                    st.archive.insert_row(&row)?;
+                    Some((row, st.archive.checkpoint()))
+                };
+                drop(st);
+                match commit {
+                    None => jobs_pruned += 1,
+                    Some((row, ckpt)) => {
                         store.append(row)?;
-                        cursor += 1;
+                        std::fs::write(&ckpt_path, ckpt.dumps()).with_context(|| {
+                            format!("write archive checkpoint {}", ckpt_path.display())
+                        })?;
+                        jobs_run += 1;
                     }
-                    None => break,
                 }
+                cursor += 1;
             }
         }
         ensure!(
@@ -214,15 +478,16 @@ pub fn run_campaign(
 
     Ok(CampaignReport {
         jobs_total: jobs.len(),
-        jobs_run: pending.len(),
+        jobs_run,
         jobs_skipped,
+        jobs_pruned,
         elapsed_s: t0.elapsed().as_secs_f64(),
         stats: stats_delta(service.stats(), before),
     })
 }
 
 /// Execute one scenario: measured/surrogate accuracy table through the
-/// shared service, δ-feasible set, GA-APPX-CDP run, result row.
+/// shared service, δ-feasible set, objective-aware GA run, result row.
 fn run_job(
     job: &JobSpec,
     ga: GaParams,
@@ -230,33 +495,32 @@ fn run_job(
     workloads: &HashMap<String, Workload>,
     tiny: &Workload,
     client: &EvalClient,
+    objective: &Objective,
 ) -> Result<Json> {
     let w = workloads
         .get(&job.model)
         .ok_or_else(|| anyhow!("workload {} not preloaded", job.model))?;
 
-    // Accuracy table via the campaign-global service (cache-shared).
-    let mult_refs: Vec<&Multiplier> = lib.iter().collect();
-    let accs = client
-        .eval_all(&mult_refs)
-        .map_err(|e| anyhow!("accuracy service: {e}"))?;
-    let mut table = AccuracyTable { exact: accs[EXACT_ID], ..Default::default() };
-    for (m, &a) in lib.iter().zip(&accs) {
-        table.accuracy.insert(m.id, a);
-    }
-    let k = calibrate_k(lib, tiny, &table);
+    // Accuracy table via the campaign-global service. Deliberately
+    // re-derived per job rather than threaded in from the bound pre-pass:
+    // jobs stay self-contained (runnable without a pre-pass), and the
+    // shared `calibrated_k` definition + the service's result cache
+    // guarantee the values agree — the redundancy costs only cached
+    // round-trips, never re-evaluation.
+    let k = calibrated_k(client, lib, tiny)?;
     let feasible = feasible_multipliers(lib, w, job.delta_pct, k);
     ensure!(!feasible.is_empty(), "no multiplier satisfies δ={}%", job.delta_pct);
     let n_feasible = feasible.len();
 
     let params = GaParams { seed: job.seed, ..ga };
-    let r = ga_appx_cdp_with_feasible(
+    let r = ga_appx_with_feasible_objective(
         w,
         job.node,
         job.integration,
         lib,
         feasible,
         job.fps_floor,
+        *objective,
         params,
     );
 
@@ -276,6 +540,7 @@ fn run_job(
                 None => Json::Null,
             },
         ),
+        ("objective", Json::from(job.objective.name())),
         ("seed", Json::from(format!("{:#018x}", job.seed))),
         ("px", Json::from(best.px)),
         ("py", Json::from(best.py)),
@@ -287,6 +552,11 @@ fn run_job(
         ("delay_s", Json::from(e.delay_s)),
         ("fps", Json::from(e.fps)),
         ("cdp", Json::from(e.cdp)),
+        ("energy_per_inf_j", Json::from(e.energy_per_inference_j)),
+        ("op_gco2", Json::from(e.operational_gco2)),
+        ("lifetime_gco2", Json::from(e.lifetime_gco2)),
+        ("lifetime_cdp", Json::from(e.lifetime_cdp)),
+        ("obj_value", Json::from(objective.value(e))),
         ("carbon_per_mm2", Json::from(e.carbon_per_mm2)),
         ("silicon_mm2", Json::from(e.silicon_mm2)),
         ("feasible", Json::from(e.feasible)),
@@ -301,6 +571,11 @@ fn run_job(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::area::die::Integration;
+    use crate::area::TechNode;
+    use crate::campaign::spec::CampaignObjective;
+    use crate::ga::evaluate_objective;
+    use crate::util::Rng;
 
     #[test]
     fn surrogate_exact_lut_has_zero_drop() {
@@ -328,11 +603,12 @@ mod tests {
     }
 
     #[test]
-    fn report_line_mentions_throughput_and_hits() {
+    fn report_line_mentions_throughput_hits_and_prunes() {
         let r = CampaignReport {
             jobs_total: 10,
             jobs_run: 8,
-            jobs_skipped: 2,
+            jobs_skipped: 1,
+            jobs_pruned: 1,
             elapsed_s: 4.0,
             stats: ServiceStats { served: 100, evaluated: 20, cache_hits: 70, coalesced: 10 },
         };
@@ -340,5 +616,103 @@ mod tests {
         let line = r.line();
         assert!(line.contains("2.00 jobs/s"), "{line}");
         assert!(line.contains("80% hit rate"), "{line}");
+        assert!(line.contains("1 pruned"), "{line}");
+    }
+
+    fn test_job(fps_floor: Option<f64>) -> JobSpec {
+        let mut j = JobSpec {
+            id: 0,
+            model: "vgg16".to_string(),
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            delta_pct: 3.0,
+            fps_floor,
+            objective: CampaignObjective::EmbodiedCdp,
+            seed: 0,
+        };
+        j.seed = super::super::spec::job_seed(1, &j.key());
+        j
+    }
+
+    #[test]
+    fn prune_rules_fire_on_bound_violations_only() {
+        let bound = JobBound {
+            carbon_lb_g: 1.0,
+            delay_lb_s: 0.5,
+            energy_lb_j: 0.01,
+            fps_ub: 2.0,
+            objective_lb: 5.0,
+        };
+        let free = test_job(None);
+        // No incumbent, no floor: must run.
+        assert_eq!(prune_reason(&free, &bound, None), None);
+        // Incumbent worse than the bound: still must run (could beat it).
+        assert_eq!(prune_reason(&free, &bound, Some(6.0)), None);
+        // Incumbent at/below the bound: provably cannot beat it.
+        assert!(prune_reason(&free, &bound, Some(5.0)).is_some());
+        assert!(prune_reason(&free, &bound, Some(4.0)).is_some());
+        // FPS floor above the compute-bound best case: infeasible.
+        assert!(prune_reason(&test_job(Some(3.0)), &bound, None).is_some());
+        assert_eq!(prune_reason(&test_job(Some(1.0)), &bound, None), None);
+    }
+
+    #[test]
+    fn job_bound_is_a_true_lower_bound_on_sampled_designs() {
+        // Property: the analytic bound never exceeds any achievable design's
+        // metrics, across objectives and random chromosomes.
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let feasible: Vec<usize> = (0..lib.len()).collect();
+        let dep = crate::carbon::operational::Deployment::default();
+        for objective in [
+            Objective::EmbodiedCdp(dep),
+            Objective::OperationalCarbon(dep),
+            Objective::LifetimeCdp(dep),
+        ] {
+            let job = test_job(None);
+            let b = job_bound(&job, &w, &lib, &feasible, &objective);
+            let space = SearchSpace::standard(feasible.clone());
+            let mut rng = Rng::new(42);
+            for _ in 0..25 {
+                let c = space.sample(&mut rng);
+                let e = evaluate_objective(
+                    &c,
+                    &w,
+                    job.node,
+                    job.integration,
+                    &lib,
+                    None,
+                    &objective,
+                );
+                assert!(b.carbon_lb_g <= e.carbon_g + 1e-9, "{objective:?}");
+                assert!(b.delay_lb_s <= e.delay_s + 1e-12, "{objective:?}");
+                assert!(b.energy_lb_j <= e.energy_per_inference_j + 1e-15, "{objective:?}");
+                assert!(b.fps_ub >= e.fps - 1e-9, "{objective:?}");
+                assert!(
+                    b.objective_lb <= objective.value(&e) * (1.0 + 1e-9),
+                    "{objective:?}: bound {} vs value {}",
+                    b.objective_lb,
+                    objective.value(&e)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_incumbent_requires_objective_fields() {
+        let legacy = obj([("key", Json::from("a")), ("carbon_g", Json::from(1.0))]);
+        assert!(row_incumbent(&legacy).is_none());
+        let modern = obj([
+            ("model", Json::from("vgg16")),
+            ("node", Json::from("14nm")),
+            ("integration", Json::from("3D")),
+            ("objective", Json::from("embodied-cdp")),
+            ("obj_value", Json::from(2.5)),
+        ]);
+        let (fam, v) = row_incumbent(&modern).unwrap();
+        assert_eq!(fam, "vgg16@14nm/3D/embodied-cdp");
+        assert_eq!(v, 2.5);
+        // And the family string matches JobSpec::family for the same scenario.
+        assert_eq!(fam, test_job(None).family());
     }
 }

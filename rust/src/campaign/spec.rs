@@ -10,7 +10,65 @@
 use crate::area::die::Integration;
 use crate::area::node::ALL_NODES;
 use crate::area::TechNode;
-use crate::ga::GaParams;
+use crate::carbon::operational::Deployment;
+use crate::ga::{GaParams, Objective};
+
+/// What a campaign optimizes per scenario. A thin, nameable layer over
+/// [`crate::ga::Objective`]: the CLI and the job keys speak these names,
+/// the scheduler combines them with the campaign's [`Deployment`] into the
+/// fitness-level objective it hands the GA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CampaignObjective {
+    /// The paper's objective: embodied carbon x task delay.
+    #[default]
+    EmbodiedCdp,
+    /// Lifetime operational carbon only.
+    Operational,
+    /// (embodied + lifetime operational carbon) x task delay.
+    LifetimeCdp,
+}
+
+impl CampaignObjective {
+    /// Stable name (CLI flag values, job keys, result rows).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CampaignObjective::EmbodiedCdp => "embodied-cdp",
+            CampaignObjective::Operational => "operational",
+            CampaignObjective::LifetimeCdp => "lifetime-cdp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "embodied-cdp" | "embodied" | "cdp" => Some(CampaignObjective::EmbodiedCdp),
+            "operational" | "op" => Some(CampaignObjective::Operational),
+            "lifetime-cdp" | "lifetime" => Some(CampaignObjective::LifetimeCdp),
+            _ => None,
+        }
+    }
+
+    /// Combine with a deployment into the fitness-level objective. The
+    /// deployment travels along even for the embodied objective, so every
+    /// row's reported lifetime fields reflect the campaign's `--ipd`/
+    /// `--lifetime-years`/`--grid-gco2-kwh` flags whatever the objective.
+    pub fn to_fitness(&self, deployment: Deployment) -> Objective {
+        match self {
+            CampaignObjective::EmbodiedCdp => Objective::EmbodiedCdp(deployment),
+            CampaignObjective::Operational => Objective::OperationalCarbon(deployment),
+            CampaignObjective::LifetimeCdp => Objective::LifetimeCdp(deployment),
+        }
+    }
+
+    /// Which carbon metric spans the campaign's Pareto-archive axis.
+    pub fn carbon_axis(&self) -> crate::campaign::pareto::CarbonAxis {
+        match self {
+            CampaignObjective::EmbodiedCdp => crate::campaign::pareto::CarbonAxis::Embodied,
+            CampaignObjective::Operational | CampaignObjective::LifetimeCdp => {
+                crate::campaign::pareto::CarbonAxis::Lifetime
+            }
+        }
+    }
+}
 
 /// Human/stable name for an integration style (used in job keys and rows).
 pub fn integration_name(i: Integration) -> &'static str {
@@ -41,6 +99,15 @@ pub struct CampaignSpec {
     pub fps_floors: Vec<Option<f64>>,
     pub ga: GaParams,
     pub seed: u64,
+    /// What each scenario's search minimizes.
+    pub objective: CampaignObjective,
+    /// Deployment the lifetime objectives account operational carbon under.
+    pub deployment: Deployment,
+    /// Skip jobs whose optimistic objective bound provably cannot beat the
+    /// best committed objective value in their scenario family
+    /// (deterministic; trades per-scenario grid completeness for speed —
+    /// see `scheduler::prune_reason` for the exact semantics).
+    pub prune: bool,
 }
 
 impl CampaignSpec {
@@ -55,6 +122,9 @@ impl CampaignSpec {
             fps_floors: vec![None],
             ga: GaParams::default(),
             seed: 0xCA4B07,
+            objective: CampaignObjective::default(),
+            deployment: Deployment::default(),
+            prune: true,
         }
     }
 
@@ -91,6 +161,7 @@ impl CampaignSpec {
                                 integration,
                                 delta_pct,
                                 fps_floor,
+                                objective: self.objective,
                                 seed: 0,
                             };
                             job.seed = job_seed(self.seed, &job.key());
@@ -107,31 +178,57 @@ impl CampaignSpec {
 /// One scenario of the campaign grid.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
-    /// Position in the flattened grid (drives store write order).
+    /// Position in the flattened grid.
     pub id: usize,
     pub model: String,
     pub node: TechNode,
     pub integration: Integration,
     pub delta_pct: f64,
     pub fps_floor: Option<f64>,
+    /// What this scenario's search minimizes (from the campaign spec).
+    pub objective: CampaignObjective,
     /// GA seed, derived from campaign seed + job key.
     pub seed: u64,
 }
 
 impl JobSpec {
     /// Stable identity of the scenario (checkpoint/resume matches on this).
+    /// Non-default objectives are part of the identity, so a store can
+    /// never silently resume a lifetime campaign with embodied rows (or
+    /// vice versa); the default keeps the legacy key format so pre-existing
+    /// stores stay resumable. Deployment knobs are deliberately *not* in
+    /// the key — like GA hyperparameters, keeping them consistent across a
+    /// resumed campaign is the caller's contract.
     pub fn key(&self) -> String {
         let fps = match self.fps_floor {
             Some(f) => format!("{f:.3}"),
             None => "-".to_string(),
         };
+        let obj = match self.objective {
+            CampaignObjective::EmbodiedCdp => String::new(),
+            other => format!("/obj={}", other.name()),
+        };
         format!(
-            "{}@{}/{}/d{:.3}/fps{}",
+            "{}@{}/{}/d{:.3}/fps{}{}",
             self.model,
             self.node.name(),
             integration_name(self.integration),
             self.delta_pct,
-            fps
+            fps,
+            obj
+        )
+    }
+
+    /// Family identity: scenarios that differ only in δ / FPS floor. The
+    /// prune bound compares a job against the best committed result in its
+    /// family ("the archive's current front", projected on the objective).
+    pub fn family(&self) -> String {
+        format!(
+            "{}@{}/{}/{}",
+            self.model,
+            self.node.name(),
+            integration_name(self.integration),
+            self.objective.name()
         )
     }
 }
@@ -229,5 +326,58 @@ mod tests {
             assert_eq!(integration_from_name(integration_name(i)), Some(i));
         }
         assert_eq!(integration_from_name("4d"), None);
+    }
+
+    #[test]
+    fn objective_names_roundtrip() {
+        for o in [
+            CampaignObjective::EmbodiedCdp,
+            CampaignObjective::Operational,
+            CampaignObjective::LifetimeCdp,
+        ] {
+            assert_eq!(CampaignObjective::from_name(o.name()), Some(o));
+        }
+        assert_eq!(CampaignObjective::from_name("speed"), None);
+    }
+
+    #[test]
+    fn default_objective_keeps_legacy_keys_and_seeds() {
+        // Embodied (default) keys must not mention the objective, so stores
+        // written before objectives existed stay resumable and the seeds
+        // derived from keys stay put.
+        let jobs = small().jobs();
+        assert_eq!(jobs[0].key(), "vgg16@45nm/3D/d1.000/fps-");
+        for j in &jobs {
+            assert!(!j.key().contains("obj="), "{}", j.key());
+        }
+    }
+
+    #[test]
+    fn non_default_objective_is_part_of_job_identity() {
+        let mut s = small();
+        let embodied = s.jobs();
+        s.objective = CampaignObjective::LifetimeCdp;
+        let lifetime = s.jobs();
+        for (e, l) in embodied.iter().zip(&lifetime) {
+            assert!(l.key().ends_with("/obj=lifetime-cdp"), "{}", l.key());
+            assert_ne!(e.key(), l.key());
+            // Different key -> different derived GA seed: the two
+            // objectives explore independently even at the same scenario.
+            assert_ne!(e.seed, l.seed, "{}", e.key());
+            // But the family differs only by objective tag.
+            assert_ne!(e.family(), l.family());
+        }
+    }
+
+    #[test]
+    fn family_groups_deltas_and_fps_only() {
+        let mut s = small();
+        s.fps_floors = vec![None, Some(30.0)];
+        let jobs = s.jobs();
+        let mut families: Vec<String> = jobs.iter().map(|j| j.family()).collect();
+        families.sort();
+        families.dedup();
+        // 2 models x 2 nodes x 1 integration: δ and fps collapse.
+        assert_eq!(families.len(), 4);
     }
 }

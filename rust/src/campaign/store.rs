@@ -1,10 +1,12 @@
 //! Append-only JSONL result store with checkpoint/resume.
 //!
-//! One line per completed job, written in job-id order by the scheduler's
+//! One line per completed job, written in schedule order by the scheduler's
 //! single writer. On open, existing rows are parsed and their job keys
 //! indexed, so a restarted campaign skips completed scenarios. A torn final
-//! line (interrupted mid-write) is ignored; corruption anywhere else is an
-//! error rather than silent data loss.
+//! line (interrupted mid-write, so no trailing newline) is dropped and its
+//! job redone; corruption anywhere else — including an unparseable but
+//! newline-*terminated* final line, which an interrupted append can never
+//! produce — is a loud error rather than silent data loss.
 
 use std::collections::HashSet;
 use std::fs::{File, OpenOptions};
@@ -44,6 +46,11 @@ impl ResultStore {
         let mut rows = Vec::new();
         let mut keys = HashSet::new();
         let mut torn = false;
+        // Only a *final* line with no trailing newline can be a torn append
+        // (the writer always emits `row\n` in one call). Anything else that
+        // fails to parse is corruption and must error loudly — quietly
+        // dropping it would silently truncate committed results.
+        let ends_with_newline = existing.ends_with('\n');
         let lines: Vec<&str> = existing.lines().filter(|l| !l.trim().is_empty()).collect();
         for (i, line) in lines.iter().enumerate() {
             match Json::parse(line) {
@@ -57,7 +64,7 @@ impl ResultStore {
                     }
                     rows.push(row);
                 }
-                Err(e) if i + 1 == lines.len() => {
+                Err(e) if i + 1 == lines.len() && !ends_with_newline => {
                     // Torn tail from an interrupted append: drop it; the
                     // scheduler will redo that job.
                     eprintln!(
@@ -67,8 +74,14 @@ impl ResultStore {
                     torn = true;
                 }
                 Err(e) => {
-                    return Err(e)
-                        .with_context(|| format!("store {} row {} corrupt", path.display(), i + 1))
+                    return Err(e).with_context(|| {
+                        format!(
+                            "store {} row {} corrupt (not a torn append tail); \
+                             refusing to resume over damaged results",
+                            path.display(),
+                            i + 1
+                        )
+                    })
                 }
             }
         }
@@ -206,6 +219,22 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         std::fs::write(&path, "not json\n{\"key\": \"a\", \"x\": 1}\n").unwrap();
         assert!(ResultStore::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn newline_terminated_garbage_tail_is_an_error_not_a_truncation() {
+        // A final line that fails to parse but IS newline-terminated cannot
+        // be a torn append (appends write `row\n` atomically from the
+        // store's perspective) — treat it as corruption, never drop it.
+        let path = tmp("garbage-tail");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, "{\"key\": \"a\", \"x\": 1}\nnot json\n").unwrap();
+        let err = ResultStore::open(&path).err().expect("open must refuse garbage tail");
+        assert!(format!("{err:#}").contains("row 2"), "{err:#}");
+        // The damaged file is left untouched for inspection.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
         let _ = std::fs::remove_file(&path);
     }
 

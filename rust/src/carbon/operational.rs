@@ -17,6 +17,49 @@ pub const CI_USE_KGCO2_PER_KWH: f64 = 0.4;
 /// inference.
 pub const LIFETIME_YEARS: f64 = 3.0;
 
+/// Default duty cycle: 10k inferences/day (a few per second, duty-cycled).
+pub const DEFAULT_INFERENCES_PER_DAY: f64 = 10_000.0;
+
+/// Deployment assumptions for lifetime-carbon accounting: how long the
+/// device serves, how hard it works, and how dirty its electricity is.
+/// These are the knobs the `lifetime-cdp` campaign objective exposes
+/// (`--lifetime-years`, `--ipd`, `--grid-gco2-kwh`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Deployment {
+    pub lifetime_years: f64,
+    /// Duty cycle, expressed as inferences per day.
+    pub inferences_per_day: f64,
+    pub grid_kgco2_per_kwh: f64,
+}
+
+impl Default for Deployment {
+    fn default() -> Self {
+        Self {
+            lifetime_years: LIFETIME_YEARS,
+            inferences_per_day: DEFAULT_INFERENCES_PER_DAY,
+            grid_kgco2_per_kwh: CI_USE_KGCO2_PER_KWH,
+        }
+    }
+}
+
+impl Deployment {
+    /// Total inferences served over the deployment's lifetime.
+    pub fn lifetime_inferences(&self) -> f64 {
+        self.inferences_per_day * self.lifetime_years * 365.0
+    }
+
+    /// Lifetime operational energy (kWh) at a given energy per inference.
+    pub fn lifetime_kwh(&self, energy_per_inference_j: f64) -> f64 {
+        energy_per_inference_j * self.lifetime_inferences() / 3.6e6
+    }
+
+    /// Lifetime operational carbon (gCO2) at a given energy per inference.
+    /// Strictly monotone in every deployment knob and in the energy.
+    pub fn lifetime_gco2(&self, energy_per_inference_j: f64) -> f64 {
+        self.lifetime_kwh(energy_per_inference_j) * self.grid_kgco2_per_kwh * 1000.0
+    }
+}
+
 /// Operational-carbon summary for a deployment scenario.
 #[derive(Debug, Clone, Copy)]
 pub struct OperationalCarbon {
@@ -26,24 +69,33 @@ pub struct OperationalCarbon {
     pub lifetime_gco2: f64,
 }
 
-/// Operational carbon over the device lifetime at a given inference rate.
+/// Operational carbon over a configurable deployment.
+pub fn operational_carbon_with(
+    cfg: &AccelConfig,
+    mult: &Multiplier,
+    mapping: &NetworkMapping,
+    deployment: &Deployment,
+) -> OperationalCarbon {
+    let em = EnergyModel::for_config(cfg, mult);
+    let e_inf = em.network_energy_j(mapping);
+    OperationalCarbon {
+        energy_per_inference_j: e_inf,
+        inferences_per_day: deployment.inferences_per_day,
+        lifetime_kwh: deployment.lifetime_kwh(e_inf),
+        lifetime_gco2: deployment.lifetime_gco2(e_inf),
+    }
+}
+
+/// Operational carbon over the default device lifetime at a given inference
+/// rate (the `Deployment`-less convenience entry point).
 pub fn operational_carbon(
     cfg: &AccelConfig,
     mult: &Multiplier,
     mapping: &NetworkMapping,
     inferences_per_day: f64,
 ) -> OperationalCarbon {
-    let em = EnergyModel::for_config(cfg, mult);
-    let e_inf = em.network_energy_j(mapping);
-    let days = LIFETIME_YEARS * 365.0;
-    let lifetime_j = e_inf * inferences_per_day * days;
-    let lifetime_kwh = lifetime_j / 3.6e6;
-    OperationalCarbon {
-        energy_per_inference_j: e_inf,
-        inferences_per_day,
-        lifetime_kwh,
-        lifetime_gco2: lifetime_kwh * CI_USE_KGCO2_PER_KWH * 1000.0,
-    }
+    let deployment = Deployment { inferences_per_day, ..Deployment::default() };
+    operational_carbon_with(cfg, mult, mapping, &deployment)
 }
 
 /// Embodied share of the lifetime total: the paper's edge-device motivation
@@ -109,6 +161,46 @@ mod tests {
         let heavy = operational_carbon(&cfg, &lib[EXACT_ID], &m, 3_000_000.0);
         assert!(embodied_share(emb, &light) > embodied_share(emb, &heavy));
         assert!(embodied_share(emb, &heavy) < 0.5);
+    }
+
+    #[test]
+    fn lifetime_gco2_is_monotone_in_every_deployment_knob() {
+        // Property-style sweep: bumping any single knob (or the energy)
+        // strictly increases lifetime operational carbon.
+        let base = Deployment::default();
+        let energies = [1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+        for &e in &energies {
+            let v0 = base.lifetime_gco2(e);
+            assert!(v0 > 0.0);
+            for factor in [1.5, 2.0, 10.0] {
+                let years = Deployment { lifetime_years: base.lifetime_years * factor, ..base };
+                let duty =
+                    Deployment { inferences_per_day: base.inferences_per_day * factor, ..base };
+                let grid =
+                    Deployment { grid_kgco2_per_kwh: base.grid_kgco2_per_kwh * factor, ..base };
+                assert!(years.lifetime_gco2(e) > v0, "years x{factor} at {e} J");
+                assert!(duty.lifetime_gco2(e) > v0, "duty x{factor} at {e} J");
+                assert!(grid.lifetime_gco2(e) > v0, "grid x{factor} at {e} J");
+                assert!(base.lifetime_gco2(e * factor) > v0, "energy x{factor} at {e} J");
+            }
+        }
+        // And each knob scales linearly: doubling it doubles the total.
+        let d2 = Deployment { lifetime_years: base.lifetime_years * 2.0, ..base };
+        assert!((d2.lifetime_gco2(0.01) / base.lifetime_gco2(0.01) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deployment_default_matches_legacy_constants() {
+        // `operational_carbon` (the pre-Deployment API) and
+        // `operational_carbon_with` at the default deployment must agree.
+        let lib = library();
+        let (cfg, m) = setup();
+        let a = operational_carbon(&cfg, &lib[EXACT_ID], &m, DEFAULT_INFERENCES_PER_DAY);
+        let d = Deployment::default();
+        let b = operational_carbon_with(&cfg, &lib[EXACT_ID], &m, &d);
+        assert_eq!(a.lifetime_gco2, b.lifetime_gco2);
+        assert_eq!(a.lifetime_kwh, b.lifetime_kwh);
+        assert!((d.lifetime_gco2(a.energy_per_inference_j) - a.lifetime_gco2).abs() < 1e-12);
     }
 
     #[test]

@@ -57,9 +57,38 @@ pub fn ga_appx_cdp_with_feasible(
     fps_floor: Option<f64>,
     params: GaParams,
 ) -> GaResult {
+    ga_appx_with_feasible_objective(
+        workload,
+        node,
+        integration,
+        library,
+        feasible,
+        fps_floor,
+        crate::ga::Objective::embodied(),
+        params,
+    )
+}
+
+/// The fully-general search entry point: explicit feasible set, integration
+/// style, and objective (embodied CDP, operational-only, or lifetime CDP
+/// under a deployment). The campaign scheduler threads its
+/// `CampaignObjective` through here so every candidate the GA evaluates is
+/// scored on lifetime carbon when the campaign asks for it.
+#[allow(clippy::too_many_arguments)]
+pub fn ga_appx_with_feasible_objective(
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    feasible: Vec<usize>,
+    fps_floor: Option<f64>,
+    objective: crate::ga::Objective,
+    params: GaParams,
+) -> GaResult {
     assert!(!feasible.is_empty(), "empty feasible-multiplier set");
     let space = SearchSpace::standard(feasible);
-    let mut ctx = FitnessCtx::new(workload, node, integration, library, fps_floor);
+    let mut ctx =
+        FitnessCtx::with_objective(workload, node, integration, library, fps_floor, objective);
     let mut r = Ga::new(space, params).run(&mut ctx);
     refine_to_min_carbon(&mut r, &ctx);
     r
@@ -71,7 +100,7 @@ pub fn ga_appx_cdp_with_feasible(
 /// (`ga_cdp_exact`), so every comparison stays like-for-like.
 pub(crate) fn refine_to_min_carbon(r: &mut GaResult, ctx: &FitnessCtx) {
     if let Some((c, e)) = ctx.near_optimal_min_carbon(r.best_eval.fitness * 1.10) {
-        if e.carbon_g < r.best_eval.carbon_g {
+        if ctx.objective.carbon_g(&e) < ctx.objective.carbon_g(&r.best_eval) {
             r.best = c;
             r.best_eval = e;
         }

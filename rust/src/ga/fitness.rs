@@ -1,16 +1,71 @@
-//! Fitness evaluation: CDP = C_embodied x D_task with constraint handling,
-//! plus a memoizing cache (the GA revisits configurations constantly).
+//! Fitness evaluation: the paper's CDP = C_embodied x D_task, plus the
+//! lifetime-carbon objectives (embodied + operational over a configurable
+//! deployment) with constraint handling and a memoizing cache (the GA
+//! revisits configurations constantly).
 
 use std::collections::HashMap;
 
 use super::chromosome::Chromosome;
 use crate::area::die::Integration;
 use crate::area::TechNode;
+use crate::carbon::operational::Deployment;
 use crate::carbon::{carbon_per_mm2, embodied_carbon, CarbonBreakdown};
 use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::energy::EnergyModel;
 use crate::dataflow::mapper::map_network;
 use crate::dataflow::workloads::Workload;
 use crate::approx::Multiplier;
+
+/// What the search minimizes. The paper's objective is embodied CDP; the
+/// lifetime objectives fold in operational energy over a deployment, which
+/// lets the GA trade silicon area (embodied) against energy-per-inference
+/// (operational) at each node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Embodied carbon x task delay (the paper's Carbon-Delay-Product).
+    /// Carries a deployment too: fitness ignores it, but the lifetime
+    /// fields of every `Evaluation` are reported under it, so an embodied
+    /// campaign's rows stay comparable with a lifetime campaign's.
+    EmbodiedCdp(Deployment),
+    /// Lifetime *operational* carbon only (gCO2) under a deployment.
+    OperationalCarbon(Deployment),
+    /// (embodied + lifetime operational carbon) x task delay.
+    LifetimeCdp(Deployment),
+}
+
+impl Objective {
+    /// The paper's objective at the default deployment.
+    pub fn embodied() -> Self {
+        Objective::EmbodiedCdp(Deployment::default())
+    }
+
+    /// The deployment the objective accounts operational carbon under.
+    pub fn deployment(&self) -> Deployment {
+        match self {
+            Objective::EmbodiedCdp(d)
+            | Objective::OperationalCarbon(d)
+            | Objective::LifetimeCdp(d) => *d,
+        }
+    }
+
+    /// The carbon metric this objective charges a design for.
+    pub fn carbon_g(&self, e: &Evaluation) -> f64 {
+        match self {
+            Objective::EmbodiedCdp(_) => e.carbon_g,
+            Objective::OperationalCarbon(_) => e.operational_gco2,
+            Objective::LifetimeCdp(_) => e.lifetime_gco2,
+        }
+    }
+
+    /// The unpenalized objective value of an evaluation.
+    pub fn value(&self, e: &Evaluation) -> f64 {
+        match self {
+            Objective::EmbodiedCdp(_) => e.cdp,
+            Objective::OperationalCarbon(_) => e.operational_gco2,
+            Objective::LifetimeCdp(_) => e.lifetime_cdp,
+        }
+    }
+}
 
 /// Everything a fitness evaluation needs.
 pub struct FitnessCtx<'a> {
@@ -20,6 +75,8 @@ pub struct FitnessCtx<'a> {
     pub library: &'a [Multiplier],
     /// Optional FPS floor (paper §IV-B); designs below pay a penalty.
     pub fps_floor: Option<f64>,
+    /// What the search minimizes (embodied CDP unless stated otherwise).
+    pub objective: Objective,
     cache: HashMap<Chromosome, Evaluation>,
 }
 
@@ -31,7 +88,19 @@ impl<'a> FitnessCtx<'a> {
         library: &'a [Multiplier],
         fps_floor: Option<f64>,
     ) -> Self {
-        Self { workload, node, integration, library, fps_floor, cache: HashMap::new() }
+        let objective = Objective::embodied();
+        Self::with_objective(workload, node, integration, library, fps_floor, objective)
+    }
+
+    pub fn with_objective(
+        workload: &'a Workload,
+        node: TechNode,
+        integration: Integration,
+        library: &'a [Multiplier],
+        fps_floor: Option<f64>,
+        objective: Objective,
+    ) -> Self {
+        Self { workload, node, integration, library, fps_floor, objective, cache: HashMap::new() }
     }
 
     /// Evaluate with memoization.
@@ -39,13 +108,14 @@ impl<'a> FitnessCtx<'a> {
         if let Some(e) = self.cache.get(c) {
             return *e;
         }
-        let e = evaluate(
+        let e = evaluate_objective(
             c,
             self.workload,
             self.node,
             self.integration,
             self.library,
             self.fps_floor,
+            &self.objective,
         );
         self.cache.insert(c.clone(), e);
         e
@@ -56,7 +126,9 @@ impl<'a> FitnessCtx<'a> {
     }
 
     /// Lowest-carbon *feasible* design among all evaluated configurations
-    /// whose fitness is within `max_fitness`. Used by the figure pipelines:
+    /// whose fitness is within `max_fitness`, where "carbon" is the metric
+    /// the context's objective charges for (embodied for the paper's CDP,
+    /// lifetime for the lifetime objectives). Used by the figure pipelines:
     /// among CDP-near-optimal designs, report the most sustainable one
     /// (CDP is flat near its optimum — carbon/delay splits there are
     /// interchangeable, and the paper reports the carbon-efficient end).
@@ -66,12 +138,13 @@ impl<'a> FitnessCtx<'a> {
     pub fn near_optimal_min_carbon(&self, max_fitness: f64) -> Option<(Chromosome, Evaluation)> {
         let gene_key =
             |c: &Chromosome| (c.px, c.py, c.rf_bytes, c.sram_bytes, c.mult_id);
+        let carbon_of = |e: &Evaluation| self.objective.carbon_g(e);
         self.cache
             .iter()
             .filter(|(_, e)| e.feasible && e.fitness <= max_fitness)
             .min_by(|a, b| {
-                a.1.carbon_g
-                    .partial_cmp(&b.1.carbon_g)
+                carbon_of(a.1)
+                    .partial_cmp(&carbon_of(b.1))
                     .unwrap()
                     .then_with(|| gene_key(a.0).cmp(&gene_key(b.0)))
             })
@@ -95,7 +168,16 @@ pub struct Evaluation {
     pub fps: f64,
     /// Carbon-Delay-Product (gCO2 * s).
     pub cdp: f64,
-    /// Penalized fitness the GA minimizes (== cdp when constraints hold).
+    /// Operational energy per inference, joules.
+    pub energy_per_inference_j: f64,
+    /// Lifetime operational carbon under the objective's deployment, gCO2.
+    pub operational_gco2: f64,
+    /// Lifetime total: embodied + operational, gCO2.
+    pub lifetime_gco2: f64,
+    /// Lifetime-Carbon-Delay-Product (gCO2 * s).
+    pub lifetime_cdp: f64,
+    /// Penalized fitness the GA minimizes (== the objective value when
+    /// constraints hold).
     pub fitness: f64,
     /// Carbon per package mm^2 (Fig. 3 y-axis).
     pub carbon_per_mm2: f64,
@@ -121,8 +203,7 @@ pub fn cdp(carbon_g: f64, delay_s: f64) -> f64 {
     carbon_g * delay_s
 }
 
-/// Evaluate one chromosome: carbon model (Eq. 1-5) + dataflow delay model,
-/// FPS-constraint penalty if requested.
+/// Evaluate one chromosome against the paper's embodied-CDP objective.
 pub fn evaluate(
     c: &Chromosome,
     workload: &Workload,
@@ -130,6 +211,21 @@ pub fn evaluate(
     integration: Integration,
     library: &[Multiplier],
     fps_floor: Option<f64>,
+) -> Evaluation {
+    evaluate_objective(c, workload, node, integration, library, fps_floor, &Objective::embodied())
+}
+
+/// Evaluate one chromosome: carbon model (Eq. 1-5) + dataflow delay/energy
+/// models + lifetime accounting under the objective's deployment, with an
+/// FPS-constraint penalty if requested.
+pub fn evaluate_objective(
+    c: &Chromosome,
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    fps_floor: Option<f64>,
+    objective: &Objective,
 ) -> Evaluation {
     let mult = &library[c.mult_id];
     let cfg = to_config(c, node, integration);
@@ -140,21 +236,35 @@ pub fn evaluate(
     let delay_s = mapping.delay_s(&cfg);
     let fps = 1.0 / delay_s;
     let cdp_v = cdp(carbon_g, delay_s);
+    let energy_j = EnergyModel::for_config(&cfg, mult).network_energy_j(&mapping);
+    let operational_gco2 = objective.deployment().lifetime_gco2(energy_j);
+    let lifetime_gco2 = carbon_g + operational_gco2;
+    let lifetime_cdp = lifetime_gco2 * delay_s;
+    let base = match objective {
+        Objective::EmbodiedCdp(_) => cdp_v,
+        Objective::OperationalCarbon(_) => operational_gco2,
+        Objective::LifetimeCdp(_) => lifetime_cdp,
+    };
     let (fitness, feasible) = match fps_floor {
         Some(floor) if fps < floor => {
             // Multiplicative penalty growing with the violation: keeps the
             // search surface smooth while making infeasible designs lose
-            // every tournament against feasible ones of similar CDP.
+            // every tournament against feasible ones of similar objective
+            // value.
             let violation = floor / fps;
-            (cdp_v * (1.0 + 10.0 * (violation - 1.0)).max(1.0) * violation, false)
+            (base * (1.0 + 10.0 * (violation - 1.0)).max(1.0) * violation, false)
         }
-        _ => (cdp_v, true),
+        _ => (base, true),
     };
     Evaluation {
         carbon_g,
         delay_s,
         fps,
         cdp: cdp_v,
+        energy_per_inference_j: energy_j,
+        operational_gco2,
+        lifetime_gco2,
+        lifetime_cdp,
         fitness,
         carbon_per_mm2: carbon_per_mm2(&breakdown, &areas),
         silicon_mm2: areas.silicon_mm2(),
@@ -223,6 +333,101 @@ mod tests {
         );
         assert!(easy.feasible);
         assert_eq!(easy.fitness, easy.cdp);
+    }
+
+    #[test]
+    fn objective_values_are_internally_consistent() {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let dep = crate::carbon::operational::Deployment {
+            inferences_per_day: 1_000_000.0,
+            ..Default::default()
+        };
+        let c = chrom(EXACT_ID);
+        let emb = evaluate(&c, &w, TechNode::N14, Integration::ThreeD, &lib, None);
+        let op = evaluate_objective(
+            &c,
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            None,
+            &Objective::OperationalCarbon(dep),
+        );
+        let life = evaluate_objective(
+            &c,
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            None,
+            &Objective::LifetimeCdp(dep),
+        );
+        // Same design, same physics: embodied/delay/energy identical.
+        assert_eq!(emb.carbon_g, op.carbon_g);
+        assert_eq!(emb.delay_s, life.delay_s);
+        assert_eq!(emb.energy_per_inference_j, life.energy_per_inference_j);
+        assert!(emb.energy_per_inference_j > 0.0);
+        // Fitness tracks the declared objective.
+        assert_eq!(op.fitness, op.operational_gco2);
+        assert_eq!(life.fitness, life.lifetime_cdp);
+        assert!((life.lifetime_gco2 - (life.carbon_g + life.operational_gco2)).abs() < 1e-9);
+        assert!((life.lifetime_cdp - life.lifetime_gco2 * life.delay_s).abs() < 1e-9);
+        // Lifetime carbon strictly exceeds embodied (operational > 0), so
+        // lifetime CDP strictly exceeds embodied CDP at the same design.
+        assert!(life.lifetime_gco2 > life.carbon_g);
+        assert!(life.lifetime_cdp > life.cdp);
+        // Heavier duty -> more operational carbon at the same design.
+        assert!(op.operational_gco2 > emb.operational_gco2);
+    }
+
+    #[test]
+    fn objective_helpers_pick_the_right_metric() {
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let e = evaluate(&chrom(EXACT_ID), &w, TechNode::N7, Integration::ThreeD, &lib, None);
+        let dep = crate::carbon::operational::Deployment::default();
+        assert_eq!(Objective::embodied().carbon_g(&e), e.carbon_g);
+        assert_eq!(Objective::OperationalCarbon(dep).carbon_g(&e), e.operational_gco2);
+        assert_eq!(Objective::LifetimeCdp(dep).carbon_g(&e), e.lifetime_gco2);
+        assert_eq!(Objective::embodied().value(&e), e.cdp);
+        assert_eq!(Objective::OperationalCarbon(dep).value(&e), e.operational_gco2);
+        assert_eq!(Objective::LifetimeCdp(dep).value(&e), e.lifetime_cdp);
+    }
+
+    #[test]
+    fn lifetime_objective_rewards_energy_efficiency() {
+        // Under a heavy-duty deployment the operational term dominates, so
+        // an approximate multiplier (cheaper MACs) must strictly lower the
+        // lifetime objective at an otherwise identical design.
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let dep = crate::carbon::operational::Deployment {
+            inferences_per_day: 10_000_000.0,
+            ..Default::default()
+        };
+        let obj = Objective::LifetimeCdp(dep);
+        let trunc = lib.iter().find(|m| m.name() == "TRUNC4").unwrap().id;
+        let exact = evaluate_objective(
+            &chrom(EXACT_ID),
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            None,
+            &obj,
+        );
+        let appr = evaluate_objective(
+            &chrom(trunc),
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            None,
+            &obj,
+        );
+        assert!(appr.energy_per_inference_j < exact.energy_per_inference_j);
+        assert!(appr.fitness < exact.fitness);
     }
 
     #[test]

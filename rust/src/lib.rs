@@ -17,7 +17,9 @@
 //! - **campaign**: the production layer on top — runs entire scenario grids
 //!   ({workload} x {node} x {integration} x {δ} x {FPS floor}) on a worker
 //!   pool with a campaign-global accuracy cache, a resumable JSONL result
-//!   store, and a cross-scenario Pareto archive.
+//!   store, an incremental checkpointed cross-scenario Pareto archive, and
+//!   selectable objectives (embodied CDP / operational / lifetime CDP) with
+//!   deterministic bound-based job pruning.
 //!
 //! See DESIGN.md (repo root) for the system inventory; measured-vs-paper
 //! numbers are printed by `carbon3d report`.

@@ -97,6 +97,19 @@ impl Opts {
     }
 }
 
+/// Deployment knobs shared by `campaign` and `lifetime`: `--lifetime-years`,
+/// `--ipd` (inferences/day), `--grid-gco2-kwh`. The CLI speaks gCO2/kWh to
+/// match the carbon tables; the model keeps kgCO2/kWh.
+fn deployment_from_opts(o: &Opts) -> Result<carbon3d::carbon::operational::Deployment> {
+    use carbon3d::carbon::operational::Deployment;
+    let d = Deployment::default();
+    Ok(Deployment {
+        lifetime_years: o.f64("lifetime-years", d.lifetime_years)?,
+        inferences_per_day: o.f64("ipd", d.inferences_per_day)?,
+        grid_kgco2_per_kwh: o.f64("grid-gco2-kwh", d.grid_kgco2_per_kwh * 1000.0)? / 1000.0,
+    })
+}
+
 fn ga_params(o: &Opts) -> Result<GaParams> {
     let quick = o.has("quick");
     Ok(GaParams {
@@ -144,16 +157,22 @@ USAGE: carbon3d <subcommand> [--flags]
   campaign [--models a,b|all] [--nodes 45nm,14nm|all] [--delta 1,2,3]
            [--integrations 3d,2d] [--fps F1,F2] [--workers N] [--quick]
            [--out FILE.jsonl] [--resume] [--seed S]
+           [--objective embodied-cdp|operational|lifetime-cdp]
+           [--lifetime-years Y] [--ipd N] [--grid-gco2-kwh G] [--no-prune]
                                 run the whole scenario grid on a worker pool
-                                with a campaign-global accuracy cache and a
-                                resumable JSONL result store
+                                with a campaign-global accuracy cache, an
+                                objective-aware bound-ordered queue (jobs
+                                that cannot beat the committed front are
+                                pruned), an incremental checkpointed Pareto
+                                archive, and a resumable JSONL result store
   fig2 [--quick] [--models a,b] reproduce Fig. 2 (normalized delay/carbon)
   fig3 [--quick] [--model M]    reproduce Fig. 3 (gCO2/mm^2 vs FPS)
   report [--quick]              headline paper-vs-measured claims
   accuracy [--pjrt] [--limit N] measured ΔA table on the tiny CNN
   verilog [--out-dir D]         emit structural Verilog for the multiplier library
   pipeline --model M [--segments N]  inter-layer pipelined schedule (Tangram-style)
-  lifetime --model M [--ipd N]  embodied vs operational carbon over device lifetime
+  lifetime --model M [--ipd N] [--lifetime-years Y] [--grid-gco2-kwh G]
+                                embodied vs operational carbon over device lifetime
   selfcheck                     PJRT runtime smoke test
 
 dse also accepts --islands N (island-model GA with ring migration).";
@@ -336,7 +355,8 @@ fn cmd_dse(o: &Opts) -> Result<()> {
 fn cmd_campaign(o: &Opts) -> Result<()> {
     use carbon3d::campaign::spec::integration_from_name;
     use carbon3d::campaign::{
-        run_campaign, start_service, CampaignArchive, CampaignSpec, GroupBy, ResultStore,
+        run_campaign, start_service, CampaignArchive, CampaignObjective, CampaignSpec, GroupBy,
+        ResultStore,
     };
 
     let models_arg = o.get("models", "all");
@@ -390,11 +410,20 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
             .collect::<Result<_>>()?,
     };
 
+    let obj_arg = o.get("objective", "embodied-cdp");
+    let objective = CampaignObjective::from_name(&obj_arg).ok_or_else(|| {
+        anyhow!("unknown objective {obj_arg} (embodied-cdp|operational|lifetime-cdp)")
+    })?;
+    let deployment = deployment_from_opts(o)?;
+
     let mut spec = CampaignSpec::new(models, nodes, deltas);
     spec.integrations = integrations;
     spec.fps_floors = fps_floors;
     spec.ga = ga_params(o)?;
     spec.seed = o.usize("seed", 0xCA4B07)? as u64;
+    spec.objective = objective;
+    spec.deployment = deployment;
+    spec.prune = !o.has("no-prune");
     let workers = o.usize("workers", 4)?;
     let out = o.get("out", "results/campaign.jsonl");
     let resume = o.has("resume");
@@ -409,24 +438,35 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
     let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
     println!(
         "campaign: {} jobs = {} models x {} nodes x {} integrations x {} deltas x {} fps | \
-         {workers} workers | {backend} accuracy backend | store {out}",
+         objective {} ({}y, {:.0} inf/day, {:.0} gCO2/kWh) | {workers} workers | \
+         {backend} accuracy backend | store {out}",
         spec.n_jobs(),
         spec.models.len(),
         spec.nodes.len(),
         spec.integrations.len(),
         spec.deltas.len(),
         spec.fps_floors.len(),
+        objective.name(),
+        deployment.lifetime_years,
+        deployment.inferences_per_day,
+        deployment.grid_kgco2_per_kwh * 1000.0,
     );
     let report = run_campaign(&spec, workers, &mut store, &svc)?;
     svc.shutdown();
 
-    let arch = CampaignArchive::from_rows(store.rows())?;
+    let axis = objective.carbon_axis();
+    let arch = CampaignArchive::load_or_rebuild(
+        store.rows(),
+        axis,
+        &CampaignArchive::checkpoint_path(store.path()),
+    )?;
     println!("\n== per-node summary ==");
     println!("{}", arch.aggregate_table(GroupBy::Node).render());
     println!("== per-workload summary ==");
     println!("{}", arch.aggregate_table(GroupBy::Model).render());
     println!(
-        "== cross-scenario Pareto front (carbon / delay / accuracy-drop, {} of {} points) ==",
+        "== cross-scenario Pareto front ({} carbon / delay / accuracy-drop, {} of {} points) ==",
+        axis.name(),
         arch.front.len(),
         arch.points.len()
     );
@@ -581,29 +621,30 @@ fn cmd_pipeline(o: &Opts) -> Result<()> {
 }
 
 fn cmd_lifetime(o: &Opts) -> Result<()> {
-    use carbon3d::carbon::operational::{embodied_share, operational_carbon};
+    use carbon3d::carbon::operational::{embodied_share, operational_carbon_with};
     use carbon3d::dataflow::mapper::map_network;
     let model = o.get("model", "resnet50");
     let w = workload(&model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let (cfg, mult_id) = config_from_opts(o)?;
     let lib = library();
-    let ipd = o.f64("ipd", 10_000.0)?;
+    let dep = deployment_from_opts(o)?;
     let mapping = map_network(&w, &cfg);
     let areas = cfg.die_areas(&lib[mult_id]);
     let emb = embodied_carbon(&areas, cfg.node, cfg.integration).total_g();
-    let op = operational_carbon(&cfg, &lib[mult_id], &mapping, ipd);
+    let op = operational_carbon_with(&cfg, &lib[mult_id], &mapping, &dep);
     println!("{} on {}", model, cfg.describe(&lib[mult_id]));
     println!(
-        "energy/inference {:.2} mJ | {:.0} inferences/day | lifetime {:.1} kWh",
+        "energy/inference {:.2} mJ | {:.0} inferences/day | lifetime {:.1} kWh @ {:.0} gCO2/kWh",
         op.energy_per_inference_j * 1e3,
         op.inferences_per_day,
-        op.lifetime_kwh
+        op.lifetime_kwh,
+        dep.grid_kgco2_per_kwh * 1000.0
     );
     println!(
         "embodied {:.1} gCO2 vs operational {:.1} gCO2 over {} years -> embodied share {:.0}%",
         emb,
         op.lifetime_gco2,
-        carbon3d::carbon::operational::LIFETIME_YEARS,
+        dep.lifetime_years,
         embodied_share(emb, &op) * 100.0
     );
     Ok(())

@@ -10,6 +10,12 @@
 //! client constructor returns an error — every native (non-PJRT) path,
 //! including the campaign engine's surrogate accuracy backend, is unaffected.
 
+#[cfg(all(feature = "pjrt", feature = "pjrt-stub"))]
+compile_error!(
+    "features `pjrt` and `pjrt-stub` are mutually exclusive: pick the real \
+     PJRT runtime or the stub, not both"
+);
+
 #[cfg(feature = "pjrt")]
 mod real {
     use std::path::Path;

@@ -152,6 +152,97 @@ fn campaign_runs_a_grid_through_the_public_api() {
         assert!(row.get("feasible").unwrap() == &carbon3d::util::Json::Bool(true));
     }
     let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(&path));
+}
+
+#[test]
+fn lifetime_objective_shifts_the_campaign_front() {
+    use carbon3d::campaign::{
+        run_campaign, CampaignArchive, CampaignObjective, CampaignSpec, CarbonAxis, ResultStore,
+        SurrogateBackend,
+    };
+    use carbon3d::carbon::operational::Deployment;
+    use carbon3d::runtime::EvalService;
+    use carbon3d::util::Json;
+
+    let mk_spec = |objective: CampaignObjective| {
+        let mut spec = CampaignSpec::new(
+            vec!["resnet50".to_string()],
+            vec![TechNode::N45, TechNode::N7],
+            vec![3.0],
+        );
+        spec.ga = GaParams { population: 12, generations: 8, patience: 4, ..Default::default() };
+        spec.objective = objective;
+        // Heavy-duty deployment: operational carbon dominates embodied by
+        // orders of magnitude, so the optimal area/energy split must shift.
+        spec.deployment = Deployment {
+            lifetime_years: 10.0,
+            inferences_per_day: 50_000_000.0,
+            grid_kgco2_per_kwh: 0.7,
+        };
+        spec
+    };
+    let run = |objective: CampaignObjective, tag: &str| {
+        let path = std::env::temp_dir().join(format!(
+            "carbon3d-it-objective-{}-{tag}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(&path));
+        let mut store = ResultStore::open(&path).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        run_campaign(&mk_spec(objective), 2, &mut store, &svc).unwrap();
+        svc.shutdown();
+        (path, store)
+    };
+    let (pe, emb_store) = run(CampaignObjective::EmbodiedCdp, "embodied");
+    let (pl, life_store) = run(CampaignObjective::LifetimeCdp, "lifetime");
+
+    // Under this deployment the operational term dwarfs the embodied one.
+    for row in life_store.rows() {
+        let c = row.get("carbon_g").unwrap().as_f64().unwrap();
+        let l = row.get("lifetime_gco2").unwrap().as_f64().unwrap();
+        assert!(l > 10.0 * c, "operational term unexpectedly small: {l} vs embodied {c}");
+    }
+
+    // The acceptance bar: the lifetime-cdp front differs from the
+    // embodied-cdp front on at least one node (different winning design).
+    let config_of = |row: &Json| {
+        (
+            row.get("node").unwrap().as_str().unwrap().to_string(),
+            row.get("px").unwrap().as_usize().unwrap(),
+            row.get("py").unwrap().as_usize().unwrap(),
+            row.get("rf_bytes").unwrap().as_usize().unwrap(),
+            row.get("sram_bytes").unwrap().as_usize().unwrap(),
+            row.get("mult_id").unwrap().as_usize().unwrap(),
+        )
+    };
+    let mut emb: Vec<_> = emb_store.rows().iter().map(config_of).collect();
+    let mut life: Vec<_> = life_store.rows().iter().map(config_of).collect();
+    emb.sort();
+    life.sort();
+    assert_eq!(emb.len(), 2);
+    assert_eq!(life.len(), 2);
+    assert_ne!(emb, life, "lifetime objective chose identical designs on every node");
+
+    // Incremental archive == full recompute on the same store, and the
+    // checkpointed sidecar written during the run restores the same front.
+    let full = CampaignArchive::from_rows_on(life_store.rows(), CarbonAxis::Lifetime).unwrap();
+    let inc =
+        CampaignArchive::from_rows_incremental(life_store.rows(), CarbonAxis::Lifetime).unwrap();
+    assert_eq!(inc.front, full.front, "incremental archive diverged from full recompute");
+    let restored = CampaignArchive::load_or_rebuild(
+        life_store.rows(),
+        CarbonAxis::Lifetime,
+        &CampaignArchive::checkpoint_path(&pl),
+    )
+    .unwrap();
+    assert_eq!(restored.front, full.front, "checkpoint restore diverged");
+
+    for p in [&pe, &pl] {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(p));
+    }
 }
 
 // ---------------------------------------------------------------- accuracy model
