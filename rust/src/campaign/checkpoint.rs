@@ -1,0 +1,218 @@
+//! Sidecar **checkpointing** for the incremental Pareto archive: a small
+//! `<store>.front.json` document (axis, row count, front indices) written
+//! beside the JSONL store after every commit and restored on resume.
+//!
+//! Every write goes through [`write_atomic`] — temp file + rename — so a
+//! crash mid-checkpoint can never leave a torn sidecar. That guarantee
+//! sharpens the read side: a sidecar that *parses wrong* is real damage
+//! (external truncation or editing), and [`CampaignArchive::load_or_rebuild`]
+//! rejects it loudly instead of silently rebuilding over it. A *missing*
+//! sidecar or a *stale* one (rows were appended after the last checkpoint,
+//! or the axis changed) is normal operation and rebuilds quietly — the
+//! store rows remain the sole source of truth.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::pareto::{ArchivePoint, CampaignArchive, CarbonAxis};
+
+/// Write `text` to `path` atomically: a sibling temp file is written in
+/// full, then renamed over the destination, so readers only ever see the
+/// old complete document or the new complete document.
+pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".to_string());
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    std::fs::write(&tmp, text).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("finalize checkpoint {}", path.display()))
+}
+
+impl CampaignArchive {
+    /// Sidecar path for a store at `store_path` (e.g. `campaign.jsonl` ->
+    /// `campaign.front.json`).
+    pub fn checkpoint_path(store_path: &Path) -> PathBuf {
+        store_path.with_extension("front.json")
+    }
+
+    /// The checkpoint document: enough to validate freshness and restore
+    /// the front without re-running dominance checks.
+    pub fn checkpoint(&self) -> Json {
+        obj([
+            ("axis", Json::from(self.axis.name())),
+            ("n_points", Json::from(self.points.len() as f64)),
+            (
+                "front",
+                Json::Arr(self.front.iter().map(|&i| Json::from(i as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Atomically persist the checkpoint document.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.checkpoint().dumps())
+    }
+
+    /// Restore from a checkpoint if it matches the store (same axis, same
+    /// row count); rebuild incrementally from the rows when the sidecar is
+    /// missing or merely stale. A sidecar that exists but does not parse
+    /// as a well-formed checkpoint is a **loud error**: checkpoints are
+    /// written atomically, so a torn document means external damage, and
+    /// resuming over it silently would hide that something corrupted the
+    /// campaign directory.
+    pub fn load_or_rebuild(rows: &[Json], axis: CarbonAxis, ckpt_path: &Path) -> Result<Self> {
+        let text = match std::fs::read_to_string(ckpt_path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Self::from_rows_incremental(rows, axis);
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("read front sidecar {}", ckpt_path.display()));
+            }
+        };
+        match Self::restore_from(&text, rows, axis).with_context(|| {
+            format!(
+                "front sidecar {} is corrupt — checkpoints are written atomically, so \
+                 this is external damage; delete the sidecar to rebuild it from the \
+                 store rows",
+                ckpt_path.display()
+            )
+        })? {
+            Some(arch) => Ok(arch),
+            None => Self::from_rows_incremental(rows, axis),
+        }
+    }
+
+    /// Parse a checkpoint document against the store rows. `Ok(None)`
+    /// means the sidecar is well-formed but stale (different axis or row
+    /// count) and a rebuild should proceed; `Err` means the document is
+    /// damaged and must surface to the operator.
+    fn restore_from(text: &str, rows: &[Json], axis: CarbonAxis) -> Result<Option<Self>> {
+        let ck = Json::parse(text).context("unparseable checkpoint document")?;
+        let axis_name = ck.get("axis")?.as_str()?;
+        let ck_axis = CarbonAxis::from_name(axis_name)
+            .ok_or_else(|| anyhow!("unknown carbon axis {axis_name:?}"))?;
+        let n = ck.get("n_points")?.as_usize()?;
+        let mut front = Vec::new();
+        let mut prev: Option<usize> = None;
+        for v in ck.get("front")?.as_arr()? {
+            let i = v.as_usize().context("front index")?;
+            if i >= n || prev.is_some_and(|p| p >= i) {
+                bail!("front indices out of range or not ascending");
+            }
+            front.push(i);
+            prev = Some(i);
+        }
+        if ck_axis != axis || n != rows.len() {
+            return Ok(None); // stale, not damaged: rebuild from the rows
+        }
+        let points: Vec<ArchivePoint> = rows
+            .iter()
+            .map(ArchivePoint::from_row)
+            .collect::<Result<_>>()
+            .context("store rows no longer parse")?;
+        Ok(Some(Self { axis, points, front }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::pareto::tests::{random_rows, row};
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "carbon3d-ckpt-{}-{name}.front.json",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_staleness() {
+        let mut rng = Rng::new(0xCAFE);
+        let rows = random_rows(&mut rng, 12);
+        let arch = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+        let path = tmp("roundtrip");
+        arch.save_checkpoint(&path).unwrap();
+
+        // Fresh checkpoint restores the exact front.
+        let restored =
+            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
+        assert_eq!(restored.front, arch.front);
+
+        // Stale checkpoint (more rows than it covers) -> rebuilt, not trusted.
+        let mut more = rows.clone();
+        more.push(row("extra", "m", "14nm", 0.5, 0.5, 0.5));
+        let rebuilt =
+            CampaignArchive::load_or_rebuild(&more, CarbonAxis::Embodied, &path).unwrap();
+        let full = CampaignArchive::from_rows(&more).unwrap();
+        assert_eq!(rebuilt.front, full.front);
+
+        // Axis mismatch -> rebuilt on the requested axis.
+        let other = CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Lifetime, &path).unwrap();
+        assert_eq!(other.axis, CarbonAxis::Lifetime);
+
+        // Missing checkpoint -> rebuilt.
+        let _ = std::fs::remove_file(&path);
+        let rebuilt2 =
+            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
+        assert_eq!(rebuilt2.front, arch.front);
+    }
+
+    #[test]
+    fn truncated_or_garbage_sidecars_are_rejected_loudly() {
+        let mut rng = Rng::new(0xBEEF);
+        let rows = random_rows(&mut rng, 8);
+        let arch = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+        let path = tmp("truncated");
+        arch.save_checkpoint(&path).unwrap();
+
+        // Truncate the (atomically written) sidecar: that cannot happen
+        // through the writer, so resume must refuse rather than rebuild.
+        let full_text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full_text[..full_text.len() / 2]).unwrap();
+        let err = CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path)
+            .expect_err("truncated sidecar must be rejected");
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+
+        // Outright garbage: same loud refusal.
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).is_err());
+
+        // A malformed front (index out of range) is damage too.
+        std::fs::write(
+            &path,
+            "{\"axis\": \"embodied\", \"n_points\": 8, \"front\": [99]}",
+        )
+        .unwrap();
+        assert!(CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_checkpoint_is_atomic_and_leaves_no_temp() {
+        let mut rng = Rng::new(0x50DA);
+        let rows = random_rows(&mut rng, 5);
+        let arch = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+        let path = tmp("atomic");
+        // Overwrite an existing (different) document in place.
+        std::fs::write(&path, "{\"axis\": \"embodied\", \"n_points\": 0, \"front\": []}")
+            .unwrap();
+        arch.save_checkpoint(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), arch.checkpoint());
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(
+            !path.with_file_name(format!("{name}.tmp")).exists(),
+            "temp file left behind"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

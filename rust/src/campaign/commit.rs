@@ -1,0 +1,364 @@
+//! **CommitPipeline** — the single-writer back half of a campaign: a
+//! reorder buffer that restores schedule order, the writer-authoritative
+//! prune decision, the JSONL append, and the incremental Pareto archive
+//! with its atomically-written sidecar checkpoint.
+//!
+//! Executors produce `(job id, JobOutcome)` pairs in *any* order; the
+//! pipeline commits them strictly in schedule-slot order, so the committed
+//! store — including which jobs get pruned — is a pure function of the
+//! spec and the rows committed before each slot, never of worker timing.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::Json;
+
+use super::checkpoint::write_atomic;
+use super::pareto::{CampaignArchive, CarbonAxis};
+use super::source::{prune_reason, JobBound, JobSource};
+use super::spec::JobSpec;
+use super::store::ResultStore;
+
+/// Which prune rules apply — the ONE predicate shared by every executor's
+/// dispatch-side early-out and the pipeline's authoritative commit-slot
+/// decision, so the two can never drift apart.
+///
+/// `FloorOnly` exists for shard processes: the FPS-floor rule is a pure
+/// function of the job and its bound, so every process agrees on it — but
+/// the incumbent rule is only sound against incumbents committed at
+/// *earlier schedule slots*, and a **resumed** shard store is not a slot
+/// prefix (skipped-lease gaps mean stored rows can sit at later slots than
+/// a still-pending job). A shard that incumbent-pruned against such rows
+/// could starve the merge of a row it needs; restricting shards to the
+/// floor rule removes that class entirely, at the cost of occasionally
+/// evaluating a job the merge will discard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneMode {
+    /// Floor rule + incumbent rule (single-process runs and the merge,
+    /// whose commit order makes incumbent pruning sound).
+    Full,
+    /// Floor rule only (shard processes).
+    FloorOnly,
+    /// Never prune (`--no-prune`).
+    Off,
+}
+
+impl PruneMode {
+    /// Collapse to `Off` when the spec disables pruning.
+    pub fn gated(self, enabled: bool) -> Self {
+        if enabled {
+            self
+        } else {
+            PruneMode::Off
+        }
+    }
+
+    /// Does this mode prune the job? `incumbent` is consulted lazily and
+    /// only under `Full` (callers pass a closure so e.g. no lock is taken
+    /// when the mode ignores incumbents).
+    pub fn fires(
+        self,
+        job: &JobSpec,
+        bound: Option<&JobBound>,
+        incumbent: impl FnOnce() -> Option<f64>,
+    ) -> bool {
+        let inc = match self {
+            PruneMode::Full => incumbent(),
+            PruneMode::FloorOnly | PruneMode::Off => None,
+        };
+        match self {
+            PruneMode::Off => false,
+            PruneMode::Full | PruneMode::FloorOnly => {
+                bound.is_some_and(|b| prune_reason(job, b, inc).is_some())
+            }
+        }
+    }
+}
+
+/// Committed-front state: the incremental archive plus the best committed
+/// objective value per job family.
+struct FrontState {
+    archive: CampaignArchive,
+    incumbents: HashMap<String, f64>,
+}
+
+/// Shared committed-front cell: the writer updates it at each commit, the
+/// executors read it for the dispatch-side prune early-out. Lives outside
+/// the pipeline so workers can hold a reference while the writer drives
+/// the pipeline mutably.
+pub struct FrontCell {
+    inner: Mutex<FrontState>,
+}
+
+impl FrontCell {
+    /// Restore the archive from its sidecar checkpoint (or rebuild from
+    /// the rows) and seed the per-family incumbents from the rows already
+    /// committed to `store`.
+    pub fn restore(store: &ResultStore, axis: CarbonAxis) -> Result<Self> {
+        let ckpt_path = CampaignArchive::checkpoint_path(store.path());
+        let archive = CampaignArchive::load_or_rebuild(store.rows(), axis, &ckpt_path)?;
+        let mut incumbents: HashMap<String, f64> = HashMap::new();
+        for row in store.rows() {
+            update_incumbent(&mut incumbents, row);
+        }
+        Ok(Self { inner: Mutex::new(FrontState { archive, incumbents }) })
+    }
+
+    /// Best committed objective value in a job family, if any. This is the
+    /// executors' dispatch-side prune input — sound as an early-out because
+    /// incumbents only ever improve as rows commit, so a prune visible at
+    /// dispatch still holds when the writer re-checks at commit time.
+    pub fn incumbent(&self, family: &str) -> Option<f64> {
+        self.inner.lock().unwrap().incumbents.get(family).copied()
+    }
+}
+
+/// Family + objective value of a committed row, if it carries the
+/// objective-era fields (legacy rows simply never become incumbents).
+fn row_incumbent(row: &Json) -> Option<(String, f64)> {
+    let s = |k: &str| row.get(k).ok().and_then(|v| v.as_str().ok().map(str::to_string));
+    let fam = super::spec::family_of(
+        &s("model")?,
+        &s("node")?,
+        &s("integration")?,
+        &s("objective")?,
+    );
+    let v = row.get("obj_value").ok()?.as_f64().ok()?;
+    Some((fam, v))
+}
+
+fn update_incumbent(incumbents: &mut HashMap<String, f64>, row: &Json) {
+    if let Some((fam, v)) = row_incumbent(row) {
+        let e = incumbents.entry(fam).or_insert(v);
+        if v < *e {
+            *e = v;
+        }
+    }
+}
+
+/// An executor's verdict on one scheduled job.
+pub enum JobOutcome {
+    /// The job ran and produced this result row.
+    Row(Json),
+    /// The executor's dispatch-side check found the job provably hopeless.
+    /// The writer re-decides authoritatively at the commit slot.
+    Pruned,
+    /// The job belongs to another process (sharded runs): commit nothing,
+    /// just advance past its slot.
+    Skipped,
+}
+
+/// What the pipeline counted by the time it finished.
+#[derive(Debug, Clone, Copy)]
+pub struct CommitTotals {
+    /// Jobs that committed a row.
+    pub jobs_run: usize,
+    /// Jobs pruned by the authoritative commit-slot rule (no row written).
+    pub jobs_pruned: usize,
+    /// Jobs deferred to other shards (always 0 for single-process runs).
+    pub jobs_deferred: usize,
+}
+
+/// The single-writer commit pipeline. `offer` accepts outcomes in any
+/// order; commits happen strictly in schedule order.
+pub struct CommitPipeline<'a> {
+    store: &'a mut ResultStore,
+    front: &'a FrontCell,
+    source: &'a JobSource,
+    mode: PruneMode,
+    ckpt_path: PathBuf,
+    buffer: BTreeMap<usize, JobOutcome>,
+    cursor: usize,
+    totals: CommitTotals,
+}
+
+impl<'a> CommitPipeline<'a> {
+    pub fn new(
+        store: &'a mut ResultStore,
+        front: &'a FrontCell,
+        source: &'a JobSource,
+        mode: PruneMode,
+    ) -> Self {
+        let ckpt_path = CampaignArchive::checkpoint_path(store.path());
+        Self {
+            store,
+            front,
+            source,
+            mode,
+            ckpt_path,
+            buffer: BTreeMap::new(),
+            cursor: 0,
+            totals: CommitTotals { jobs_run: 0, jobs_pruned: 0, jobs_deferred: 0 },
+        }
+    }
+
+    /// The shared front cell, borrowed for the pipeline's full lifetime —
+    /// executors keep this reference while the writer drives `offer`.
+    pub fn front(&self) -> &'a FrontCell {
+        self.front
+    }
+
+    /// The prune mode this pipeline commits under. Executors use the same
+    /// mode for their dispatch-side early-out, so dispatch and commit can
+    /// never apply different rules.
+    pub fn mode(&self) -> PruneMode {
+        self.mode
+    }
+
+    /// Accept one job's outcome. If it completes the prefix at the commit
+    /// cursor, every ready slot is committed immediately.
+    pub fn offer(&mut self, job_id: usize, outcome: JobOutcome) -> Result<()> {
+        self.buffer.insert(job_id, outcome);
+        let schedule = self.source.schedule();
+        while self.cursor < schedule.len() {
+            let Some(out) = self.buffer.remove(&schedule[self.cursor].id) else {
+                break;
+            };
+            self.commit_slot(&schedule[self.cursor], out)?;
+            self.cursor += 1;
+        }
+        Ok(())
+    }
+
+    /// Commit the job at the current cursor slot: apply the authoritative
+    /// prune rule against the rows committed at earlier slots, then append
+    /// the row and checkpoint the archive. Shared-state update happens
+    /// under the lock; file I/O (row append + checkpoint) outside it, so
+    /// executors' dispatch-side prune reads never stall behind disk writes.
+    fn commit_slot(&mut self, job: &JobSpec, out: JobOutcome) -> Result<()> {
+        if matches!(out, JobOutcome::Skipped) {
+            self.totals.jobs_deferred += 1;
+            return Ok(());
+        }
+        let mut st = self.front.inner.lock().unwrap();
+        let prune = self.mode.fires(job, self.source.bound(job.id), || {
+            st.incumbents.get(&job.family()).copied()
+        });
+        let commit = if prune {
+            None
+        } else {
+            let JobOutcome::Row(row) = out else {
+                bail!(
+                    "job {} was marked pruned by its executor but is runnable at its \
+                     commit slot",
+                    job.key()
+                );
+            };
+            update_incumbent(&mut st.incumbents, &row);
+            st.archive.insert_row(&row)?;
+            Some((row, st.archive.checkpoint()))
+        };
+        drop(st);
+        match commit {
+            None => self.totals.jobs_pruned += 1,
+            Some((row, ckpt)) => {
+                self.store.append(row)?;
+                write_atomic(&self.ckpt_path, &ckpt.dumps())?;
+                self.totals.jobs_run += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify every scheduled slot was committed and return the counters.
+    pub fn finish(self) -> Result<CommitTotals> {
+        ensure!(
+            self.cursor == self.source.schedule().len(),
+            "campaign incomplete: committed {} of {} scheduled jobs",
+            self.cursor,
+            self.source.schedule().len()
+        );
+        Ok(self.totals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::die::Integration;
+    use crate::area::TechNode;
+    use crate::campaign::spec::CampaignObjective;
+    use crate::util::json::obj;
+
+    fn job(fps_floor: Option<f64>) -> JobSpec {
+        JobSpec {
+            id: 0,
+            model: "vgg16".to_string(),
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            delta_pct: 3.0,
+            fps_floor,
+            objective: CampaignObjective::EmbodiedCdp,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn prune_modes_gate_exactly_the_rules_they_claim() {
+        let bound = JobBound {
+            carbon_lb_g: 1.0,
+            delay_lb_s: 0.5,
+            energy_lb_j: 0.01,
+            fps_ub: 2.0,
+            objective_lb: 5.0,
+        };
+        // Incumbent rule: Full only — shards must not apply it (their
+        // stores are not slot prefixes), the merge must.
+        assert!(PruneMode::Full.fires(&job(None), Some(&bound), || Some(4.0)));
+        assert!(!PruneMode::FloorOnly.fires(&job(None), Some(&bound), || Some(4.0)));
+        assert!(!PruneMode::Off.fires(&job(None), Some(&bound), || Some(4.0)));
+        // Floor rule: every pruning mode (it is a pure function of the job).
+        assert!(PruneMode::Full.fires(&job(Some(3.0)), Some(&bound), || None));
+        assert!(PruneMode::FloorOnly.fires(&job(Some(3.0)), Some(&bound), || None));
+        assert!(!PruneMode::Off.fires(&job(Some(3.0)), Some(&bound), || None));
+        // Non-incumbent modes never even consult the incumbent closure.
+        assert!(!PruneMode::FloorOnly.fires(&job(None), Some(&bound), || unreachable!()));
+        assert!(!PruneMode::Off.fires(&job(Some(3.0)), Some(&bound), || unreachable!()));
+        // A job without a bound is never pruned.
+        assert!(!PruneMode::Full.fires(&job(Some(3.0)), None, || None));
+        // The spec's prune gate collapses any mode to Off.
+        assert_eq!(PruneMode::Full.gated(false), PruneMode::Off);
+        assert_eq!(PruneMode::FloorOnly.gated(false), PruneMode::Off);
+        assert_eq!(PruneMode::FloorOnly.gated(true), PruneMode::FloorOnly);
+    }
+
+    #[test]
+    fn row_incumbent_requires_objective_fields() {
+        let legacy = obj([("key", Json::from("a")), ("carbon_g", Json::from(1.0))]);
+        assert!(row_incumbent(&legacy).is_none());
+        let modern = obj([
+            ("model", Json::from("vgg16")),
+            ("node", Json::from("14nm")),
+            ("integration", Json::from("3D")),
+            ("objective", Json::from("embodied-cdp")),
+            ("obj_value", Json::from(2.5)),
+        ]);
+        let (fam, v) = row_incumbent(&modern).unwrap();
+        assert_eq!(fam, "vgg16@14nm/3D/embodied-cdp");
+        // The row-derived family and the job-derived family share one
+        // definition; pin that they agree on the same scenario.
+        assert_eq!(fam, job(None).family());
+        assert_eq!(v, 2.5);
+    }
+
+    #[test]
+    fn update_incumbent_keeps_the_minimum() {
+        let row = |v: f64| {
+            obj([
+                ("model", Json::from("m")),
+                ("node", Json::from("7nm")),
+                ("integration", Json::from("3D")),
+                ("objective", Json::from("embodied-cdp")),
+                ("obj_value", Json::from(v)),
+            ])
+        };
+        let mut inc = HashMap::new();
+        update_incumbent(&mut inc, &row(5.0));
+        update_incumbent(&mut inc, &row(7.0));
+        update_incumbent(&mut inc, &row(3.0));
+        assert_eq!(inc["m@7nm/3D/embodied-cdp"], 3.0);
+    }
+}

@@ -1,0 +1,450 @@
+//! **Sharded campaigns**: N cooperating `carbon3d campaign --shard i/N`
+//! processes drain one grid concurrently, then `carbon3d campaign merge`
+//! folds their shard stores into the canonical schedule-order store.
+//!
+//! Division of labor: every shard builds the same deterministic
+//! [`JobSource`] and walks the full schedule sequentially. Jobs it *owns*
+//! (a pure hash of the job key — see [`super::super::source::shard_owner`])
+//! are claimed through the [`LeaseDir`] protocol and evaluated into the
+//! shard's own store; jobs owned by other shards are skipped, unless their
+//! lease has expired (the owner died mid-job), in which case the walker
+//! steals and evaluates them — that is the crash-recovery path.
+//!
+//! Why the merge is byte-identical to a single-process run: rows are pure
+//! functions of the job spec (key-derived GA seeds), the schedule order is
+//! a pure function of the spec, and the merge replays the authoritative
+//! commit-slot prune rule through the same [`CommitPipeline`]. The one
+//! subtle obligation is that a shard must never skip a job the merge turns
+//! out to need. That is why shards run under
+//! [`PruneMode::FloorOnly`](super::super::commit::PruneMode): the FPS-floor
+//! rule is a pure function of the job and its bound, so every process
+//! agrees on it — but the incumbent rule is only sound against rows
+//! committed at *earlier* schedule slots, and a resumed shard store is not
+//! a slot prefix (lease-unavailable gaps leave stored rows at later slots
+//! than a still-pending job). Incumbent pruning is left to the merge, which
+//! replays commits in schedule order and so applies it soundly; a shard at
+//! worst evaluates a job the merge then discards.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::runtime::EvalService;
+use crate::util::Json;
+
+use super::super::commit::{CommitPipeline, JobOutcome, PruneMode};
+use super::super::lease::{Claim, LeaseDir};
+use super::super::source::{shard_owner, JobCtx, JobSource};
+use super::super::store::{ResultStore, KEY_FIELD};
+use super::{job_context, run_job, Executor};
+
+/// Which shard of how many this process is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardId {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardId {
+    /// Parse the CLI form `i/N` (0-based index).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("--shard expects i/N (e.g. 0/3), got {s:?}"))?;
+        let index: usize =
+            i.trim().parse().with_context(|| format!("bad shard index in {s:?}"))?;
+        let count: usize =
+            n.trim().parse().with_context(|| format!("bad shard count in {s:?}"))?;
+        ensure!(count >= 1, "shard count must be >= 1, got {count}");
+        ensure!(index < count, "shard index {index} out of range for count {count}");
+        Ok(Self { index, count })
+    }
+
+    /// Does this shard primarily own a job (by key hash)?
+    pub fn owns(&self, key: &str) -> bool {
+        shard_owner(key, self.count) == self.index
+    }
+}
+
+impl fmt::Display for ShardId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// The per-shard store beside the canonical one
+/// (`campaign.jsonl` -> `campaign.shard0of3.jsonl`).
+pub fn shard_store_path(canonical: &Path, shard: ShardId) -> PathBuf {
+    canonical.with_extension(format!("shard{}of{}.jsonl", shard.index, shard.count))
+}
+
+/// One of N cooperating shard processes: sequential (parallelism comes
+/// from running N processes), lease-claimed, writing its own shard store.
+pub struct ShardedExecutor {
+    pub shard: ShardId,
+    pub leases: LeaseDir,
+}
+
+impl Executor for ShardedExecutor {
+    fn describe(&self) -> String {
+        format!("shard {} (lease-claimed, sequential)", self.shard)
+    }
+
+    fn prune_mode(&self) -> PruneMode {
+        // Incumbent pruning against a shard store is unsound once the store
+        // stops being a slot prefix (module docs): floor rule only.
+        PruneMode::FloorOnly
+    }
+
+    fn drain(
+        &self,
+        ctx: &JobCtx,
+        source: &JobSource,
+        service: &EvalService,
+        pipeline: &mut CommitPipeline<'_>,
+    ) -> Result<()> {
+        let client = service.client();
+        let front = pipeline.front();
+        let mode = pipeline.mode();
+        for job in source.schedule() {
+            // Dispatch-side prune (floor rule — a pure function of the job
+            // and its bound, so every shard agrees without coordination).
+            // No lease is taken: other shards decide identically.
+            let pruned = mode.fires(job, source.bound(job.id), || front.incumbent(&job.family()));
+            if pruned {
+                pipeline.offer(job.id, JobOutcome::Pruned)?;
+                continue;
+            }
+            let key = job.key();
+            let claim = if self.shard.owns(&key) {
+                self.leases.try_claim(&key)?
+            } else {
+                // Not ours — only steal it if its owner abandoned it.
+                self.leases.steal_expired(&key)?
+            };
+            match claim {
+                Claim::Acquired => {
+                    let row = run_job(job, ctx, &client).with_context(|| job_context(job))?;
+                    pipeline.offer(job.id, JobOutcome::Row(row))?;
+                    self.leases.mark_done(&key)?;
+                }
+                Claim::Unavailable => pipeline.offer(job.id, JobOutcome::Skipped)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Resolves jobs from already-written shard stores instead of running the
+/// GA. Replaying the lookup through the shared commit pipeline is what
+/// produces the canonical store: schedule order, authoritative prune
+/// decisions, archive and sidecar — all byte-identical to a single-process
+/// run of the same spec.
+pub struct MergeExecutor {
+    rows: HashMap<String, Json>,
+}
+
+impl MergeExecutor {
+    /// Load every shard store beside `canonical`. Duplicate keys across
+    /// shard stores (a presumed-dead shard that finished anyway) must be
+    /// byte-identical — anything else means the shards ran different specs
+    /// and the merge refuses.
+    pub fn from_shard_stores(canonical: &Path, count: usize) -> Result<Self> {
+        ensure!(count >= 1, "shard count must be >= 1, got {count}");
+        let mut rows: HashMap<String, Json> = HashMap::new();
+        for index in 0..count {
+            let shard = ShardId { index, count };
+            let path = shard_store_path(canonical, shard);
+            ensure!(
+                path.exists(),
+                "missing shard store {} — run `carbon3d campaign --shard {shard}` \
+                 to completion first",
+                path.display()
+            );
+            let store = ResultStore::open(&path)
+                .with_context(|| format!("open shard store {}", path.display()))?;
+            for row in store.rows() {
+                let key = row
+                    .get(KEY_FIELD)
+                    .and_then(|k| k.as_str())
+                    .with_context(|| format!("shard store {} row without key", path.display()))?
+                    .to_string();
+                match rows.get(&key) {
+                    None => {
+                        rows.insert(key, row.clone());
+                    }
+                    Some(prev) => ensure!(
+                        prev.dumps() == row.dumps(),
+                        "shard stores disagree on job {key:?}: rows are seeded by key and \
+                         must be byte-identical — were the shards run with different specs?"
+                    ),
+                }
+            }
+        }
+        Ok(Self { rows })
+    }
+
+    /// Number of distinct rows collected from the shard stores.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+impl Executor for MergeExecutor {
+    fn describe(&self) -> String {
+        format!("merge of {} shard-store rows", self.rows.len())
+    }
+
+    fn drain(
+        &self,
+        _ctx: &JobCtx,
+        source: &JobSource,
+        _service: &EvalService,
+        pipeline: &mut CommitPipeline<'_>,
+    ) -> Result<()> {
+        for job in source.schedule() {
+            match self.rows.get(&job.key()) {
+                Some(row) => {
+                    // The campaign seed is not part of job keys, so only the
+                    // row's recorded seed can catch a merge invoked with a
+                    // different --seed than the shards ran under.
+                    let got = row.get("seed").ok().and_then(|s| s.as_str().ok());
+                    let want = format!("{:#018x}", job.seed);
+                    ensure!(
+                        got == Some(want.as_str()),
+                        "shard row for {} was evaluated with seed {} but this spec \
+                         derives {want} — were the shards run with a different --seed \
+                         or GA flags?",
+                        job.key(),
+                        got.unwrap_or("<missing>"),
+                    );
+                    pipeline.offer(job.id, JobOutcome::Row(row.clone()))?
+                }
+                // No shard evaluated it: legitimate only if the
+                // authoritative rule prunes this slot — the pipeline
+                // errors loudly otherwise.
+                None => pipeline.offer(job.id, JobOutcome::Pruned).with_context(|| {
+                    format!(
+                        "no shard store has a row for {} — was every shard run to \
+                         completion?",
+                        job.key()
+                    )
+                })?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::TechNode;
+    use crate::campaign::exec::{run_campaign, run_campaign_with, SurrogateBackend};
+    use crate::campaign::pareto::CampaignArchive;
+    use crate::campaign::spec::CampaignSpec;
+    use crate::ga::GaParams;
+
+    #[test]
+    fn shard_executors_restrict_themselves_to_floor_pruning() {
+        let d = std::env::temp_dir()
+            .join(format!("carbon3d-sharded-mode-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        let leases = LeaseDir::open(d.clone(), "t".to_string(), 600).unwrap();
+        let ex = ShardedExecutor { shard: ShardId { index: 0, count: 2 }, leases };
+        // Incumbent pruning against a shard store is unsound (module docs):
+        // only the merge — which commits in schedule order — may apply it.
+        assert_eq!(ex.prune_mode(), PruneMode::FloorOnly);
+        assert_eq!(MergeExecutor { rows: HashMap::new() }.prune_mode(), PruneMode::Full);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn shard_id_parses_and_rejects() {
+        let s = ShardId::parse("1/3").unwrap();
+        assert_eq!((s.index, s.count), (1, 3));
+        assert_eq!(s.to_string(), "1/3");
+        assert!(ShardId::parse("3/3").is_err());
+        assert!(ShardId::parse("0/0").is_err());
+        assert!(ShardId::parse("nope").is_err());
+        assert!(ShardId::parse("1").is_err());
+    }
+
+    #[test]
+    fn shard_store_paths_are_distinct_siblings() {
+        let canonical = Path::new("results/campaign.jsonl");
+        let p0 = shard_store_path(canonical, ShardId { index: 0, count: 2 });
+        let p1 = shard_store_path(canonical, ShardId { index: 1, count: 2 });
+        assert_eq!(p0, Path::new("results/campaign.shard0of2.jsonl"));
+        assert_ne!(p0, p1);
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("carbon3d-sharded-{}-{name}.jsonl", std::process::id()))
+    }
+
+    /// 2 models x 2 nodes x 2 deltas x 2 fps floors = 16 jobs, half of
+    /// them prunable (absurd FPS floor), tiny GA budget.
+    fn shard_spec() -> CampaignSpec {
+        let mut s = CampaignSpec::new(
+            vec!["vgg16".to_string(), "resnet50".to_string()],
+            vec![TechNode::N45, TechNode::N7],
+            vec![1.0, 3.0],
+        );
+        s.fps_floors = vec![None, Some(1e9)];
+        s.ga = GaParams {
+            population: 8,
+            generations: 4,
+            patience: 2,
+            elites: 1,
+            ..Default::default()
+        };
+        s
+    }
+
+    fn cleanup_campaign(canonical: &Path, count: usize) {
+        let _ = std::fs::remove_file(canonical);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(canonical));
+        let _ = std::fs::remove_dir_all(LeaseDir::for_store(canonical));
+        for index in 0..count {
+            let p = shard_store_path(canonical, ShardId { index, count });
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(&p));
+        }
+    }
+
+    fn run_shard(spec: &CampaignSpec, canonical: &Path, shard: ShardId) -> ResultStore {
+        let mut store = ResultStore::open(&shard_store_path(canonical, shard)).unwrap();
+        let leases = LeaseDir::open(
+            LeaseDir::for_store(canonical),
+            format!("test-shard-{shard}"),
+            600,
+        )
+        .unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        run_campaign_with(spec, &ShardedExecutor { shard, leases }, &mut store, &svc).unwrap();
+        svc.shutdown();
+        store
+    }
+
+    #[test]
+    fn three_shard_run_plus_merge_matches_single_process_byte_for_byte() {
+        let spec = shard_spec();
+        let (single, canonical) = (tmp("single"), tmp("merged"));
+        let _ = std::fs::remove_file(&single);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(&single));
+        cleanup_campaign(&canonical, 3);
+
+        // Reference: one process, 4 worker threads.
+        let mut ref_store = ResultStore::open(&single).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let ref_report = run_campaign(&spec, 4, &mut ref_store, &svc).unwrap();
+        svc.shutdown();
+        assert_eq!(ref_report.jobs_pruned, 8, "{}", ref_report.line());
+
+        // Three shards drain the same grid (sequentially here; processes
+        // in production — the lease protocol is the same either way).
+        for index in 0..3 {
+            run_shard(&spec, &canonical, ShardId { index, count: 3 });
+        }
+
+        // Merge the shard stores into the canonical store.
+        let merge = MergeExecutor::from_shard_stores(&canonical, 3).unwrap();
+        assert_eq!(merge.n_rows(), 8, "every runnable job evaluated exactly once");
+        let mut merged_store = ResultStore::open(&canonical).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let merged_report =
+            run_campaign_with(&spec, &merge, &mut merged_store, &svc).unwrap();
+        svc.shutdown();
+
+        // Store, front sidecar, and report counters: byte-identical.
+        let bytes = |p: &Path| std::fs::read_to_string(p).unwrap();
+        assert_eq!(bytes(&single), bytes(&canonical), "merged store diverged");
+        assert_eq!(
+            bytes(&CampaignArchive::checkpoint_path(&single)),
+            bytes(&CampaignArchive::checkpoint_path(&canonical)),
+            "merged front sidecar diverged"
+        );
+        assert_eq!(
+            ref_report.deterministic_json().dumps(),
+            merged_report.deterministic_json().dumps(),
+            "merged report counters diverged"
+        );
+
+        let _ = std::fs::remove_file(&single);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(&single));
+        cleanup_campaign(&canonical, 3);
+    }
+
+    #[test]
+    fn abandoned_lease_is_stolen_and_the_job_runs_exactly_once() {
+        let mut spec = shard_spec();
+        spec.fps_floors = vec![None]; // 8 jobs
+        spec.prune = false; // lease mechanics only — keep every job runnable
+        let canonical = tmp("steal");
+        cleanup_campaign(&canonical, 2);
+
+        // A shard-1 job was claimed by a now-dead incarnation: plant its
+        // expired lease before any shard runs.
+        let leases =
+            LeaseDir::open(LeaseDir::for_store(&canonical), "planter".to_string(), 600)
+                .unwrap();
+        let victim = spec
+            .jobs()
+            .into_iter()
+            .map(|j| j.key())
+            .find(|k| shard_owner(k, 2) == 1)
+            .expect("some job hashes to shard 1");
+        leases.plant_for_test(&victim, 9_999, false);
+
+        // Shard 0 walks the schedule: it owns its own half and steals the
+        // abandoned job.
+        let store0 = run_shard(&spec, &canonical, ShardId { index: 0, count: 2 });
+        assert!(store0.contains(&victim), "expired lease was not stolen");
+
+        // Shard 1 then runs: the stolen job is done — not re-evaluated.
+        let store1 = run_shard(&spec, &canonical, ShardId { index: 1, count: 2 });
+        assert!(!store1.contains(&victim), "stolen job was re-evaluated");
+
+        // Between them the shards cover the full grid exactly once, and
+        // the merge accepts the result.
+        assert_eq!(store0.len() + store1.len(), 8);
+        let merge = MergeExecutor::from_shard_stores(&canonical, 2).unwrap();
+        assert_eq!(merge.n_rows(), 8);
+
+        cleanup_campaign(&canonical, 2);
+    }
+
+    #[test]
+    fn merge_refuses_shard_rows_from_a_different_seed() {
+        let mut spec = shard_spec();
+        spec.fps_floors = vec![None];
+        spec.models.truncate(1);
+        spec.deltas.truncate(1); // 1 model x 2 nodes x 1 delta = 2 jobs
+        let canonical = tmp("seed-mismatch");
+        cleanup_campaign(&canonical, 1);
+        run_shard(&spec, &canonical, ShardId { index: 0, count: 1 });
+        let merge = MergeExecutor::from_shard_stores(&canonical, 1).unwrap();
+        let mut merged_store = ResultStore::open(&canonical).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let mut reseeded = spec.clone();
+        reseeded.seed ^= 1;
+        let err =
+            run_campaign_with(&reseeded, &merge, &mut merged_store, &svc).unwrap_err();
+        svc.shutdown();
+        assert!(format!("{err:#}").contains("--seed"), "{err:#}");
+        cleanup_campaign(&canonical, 1);
+    }
+
+    #[test]
+    fn merge_refuses_missing_shard_stores() {
+        let canonical = tmp("missing");
+        cleanup_campaign(&canonical, 2);
+        let err = MergeExecutor::from_shard_stores(&canonical, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("missing shard store"), "{err:#}");
+        cleanup_campaign(&canonical, 2);
+    }
+}

@@ -1,0 +1,88 @@
+//! The in-process thread-pool executor: N std-threads drain the schedule
+//! through an atomic cursor, all sharing the process-wide `EvalService`;
+//! results flow back over a channel and the single writer feeds them to
+//! the commit pipeline, whose reorder buffer restores schedule order.
+//!
+//! Workers run the pipeline's own [`PruneMode`](super::super::commit::PruneMode)
+//! predicate as a dispatch-side early-out against the shared front cell — sound because
+//! incumbents only ever improve as rows commit, so a prune visible at
+//! dispatch still holds when the pipeline re-checks authoritatively at the
+//! commit slot.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use anyhow::{Context as _, Result};
+
+use crate::runtime::EvalService;
+
+use super::super::commit::{CommitPipeline, JobOutcome};
+use super::super::source::{JobCtx, JobSource};
+use super::{job_context, run_job, Executor};
+
+/// The classic worker pool. `workers` is clamped to at least 1 and at most
+/// the number of scheduled jobs.
+pub struct ThreadPoolExecutor {
+    pub workers: usize,
+}
+
+impl ThreadPoolExecutor {
+    pub fn new(workers: usize) -> Self {
+        Self { workers }
+    }
+}
+
+impl Executor for ThreadPoolExecutor {
+    fn describe(&self) -> String {
+        format!("{} worker threads", self.workers.max(1))
+    }
+
+    fn drain(
+        &self,
+        ctx: &JobCtx,
+        source: &JobSource,
+        service: &EvalService,
+        pipeline: &mut CommitPipeline<'_>,
+    ) -> Result<()> {
+        let schedule = source.schedule();
+        let n_workers = self.workers.max(1).min(schedule.len().max(1));
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<Result<(usize, JobOutcome)>>();
+        let front = pipeline.front();
+        let mode = pipeline.mode();
+
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..n_workers {
+                let tx = tx.clone();
+                let client = service.client();
+                let (ctx, source, front, next, schedule) = (ctx, source, front, &next, schedule);
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= schedule.len() {
+                        break;
+                    }
+                    let job = &schedule[i];
+                    let pruned = mode
+                        .fires(job, source.bound(job.id), || front.incumbent(&job.family()));
+                    let out = if pruned {
+                        Ok((job.id, JobOutcome::Pruned))
+                    } else {
+                        run_job(job, ctx, &client)
+                            .with_context(|| job_context(job))
+                            .map(|row| (job.id, JobOutcome::Row(row)))
+                    };
+                    if tx.send(out).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+
+            for msg in rx {
+                let (id, out) = msg?;
+                pipeline.offer(id, out)?;
+            }
+            Ok(())
+        })
+    }
+}

@@ -1,0 +1,268 @@
+//! Front **presentation and cross-campaign merging**: the printable
+//! Pareto/aggregate tables for one archive, and the `carbon3d front merge`
+//! view that folds the fronts of several stores — possibly run under
+//! different objectives or deployments — into one non-dominated set, each
+//! point tagged with its source store and objective.
+
+use std::collections::BTreeMap;
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::util::{table, Table};
+
+use super::pareto::{dominates, ArchivePoint, CampaignArchive, CarbonAxis, GroupBy};
+use super::store::ResultStore;
+
+impl CampaignArchive {
+    /// The cross-scenario Pareto front as a printable table.
+    pub fn pareto_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "scenario", "mult", "carbon_g", "lifetime_g", "delay_ms", "drop_pp", "cdp",
+        ]);
+        for &i in &self.front {
+            let p = &self.points[i];
+            t.row(vec![
+                p.key.clone(),
+                p.mult.clone(),
+                table::fmt(p.carbon_g),
+                table::fmt(p.lifetime_gco2),
+                format!("{:.3}", p.delay_s * 1e3),
+                format!("{:.2}", p.drop_pct),
+                format!("{:.4}", p.cdp),
+            ]);
+        }
+        t
+    }
+
+    /// Aggregate summary per node or per workload: scenario count, how many
+    /// sit on the cross-scenario front, carbon/cdp extremes and means.
+    pub fn aggregate_table(&self, by: GroupBy) -> Table {
+        let label = match by {
+            GroupBy::Node => "node",
+            GroupBy::Model => "model",
+        };
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, p) in self.points.iter().enumerate() {
+            let g = match by {
+                GroupBy::Node => p.node.clone(),
+                GroupBy::Model => p.model.clone(),
+            };
+            groups.entry(g).or_default().push(i);
+        }
+        let mut t = Table::new(vec![
+            label, "jobs", "on_front", "min_carbon_g", "mean_carbon_g", "best_cdp", "min_delay_ms",
+        ]);
+        for (g, idxs) in &groups {
+            let carbons: Vec<f64> = idxs.iter().map(|&i| self.points[i].carbon_g).collect();
+            let min_c = carbons.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mean_c = carbons.iter().sum::<f64>() / carbons.len() as f64;
+            let best_cdp =
+                idxs.iter().map(|&i| self.points[i].cdp).fold(f64::INFINITY, f64::min);
+            let min_delay =
+                idxs.iter().map(|&i| self.points[i].delay_s).fold(f64::INFINITY, f64::min);
+            let on_front = idxs.iter().filter(|&&i| self.front.contains(&i)).count();
+            t.row(vec![
+                g.clone(),
+                idxs.len().to_string(),
+                on_front.to_string(),
+                table::fmt(min_c),
+                table::fmt(mean_c),
+                format!("{:.4}", best_cdp),
+                format!("{:.3}", min_delay * 1e3),
+            ]);
+        }
+        t
+    }
+}
+
+/// One point of a merged cross-campaign front, tagged with the store it
+/// came from (its objective travels inside the [`ArchivePoint`]).
+#[derive(Debug, Clone)]
+pub struct MergedPoint {
+    pub point: ArchivePoint,
+    pub store: String,
+}
+
+/// The cross-campaign front: the union of several stores' fronts with
+/// dominance re-resolved on one shared carbon axis.
+#[derive(Debug, Clone)]
+pub struct MergedFront {
+    pub axis: CarbonAxis,
+    /// Union of the source fronts (every candidate, tagged by store).
+    pub points: Vec<MergedPoint>,
+    /// Indices into `points` that survive cross-campaign dominance.
+    pub front: Vec<usize>,
+}
+
+/// Merge the fronts of several archives into one non-dominated set on
+/// `axis`. Each source archive's front must already be computed on the
+/// same axis (use [`CampaignArchive::from_rows_on`]; a mismatch is a loud
+/// error): a point dominated within its own store on that axis can never
+/// resurface in the union, so merging fronts — rather than full stores —
+/// loses nothing.
+pub fn merge_fronts(
+    sources: &[(String, CampaignArchive)],
+    axis: CarbonAxis,
+) -> Result<MergedFront> {
+    let mut points: Vec<MergedPoint> = Vec::new();
+    for (label, arch) in sources {
+        ensure!(
+            arch.axis == axis,
+            "front of {label} was computed on the {} carbon axis, not {} — rebuild it \
+             with CampaignArchive::from_rows_on",
+            arch.axis.name(),
+            axis.name()
+        );
+        for &i in &arch.front {
+            points.push(MergedPoint { point: arch.points[i].clone(), store: label.clone() });
+        }
+    }
+    let front = (0..points.len())
+        .filter(|&i| {
+            points
+                .iter()
+                .enumerate()
+                .all(|(j, other)| j == i || !dominates(axis, &other.point, &points[i].point))
+        })
+        .collect();
+    Ok(MergedFront { axis, points, front })
+}
+
+/// Load each store's rows and merge their fronts on `axis` — the
+/// `carbon3d front merge` entry point. Store labels are the file names.
+pub fn merge_store_fronts(paths: &[String], axis: CarbonAxis) -> Result<MergedFront> {
+    let mut sources = Vec::new();
+    for path in paths {
+        ensure!(Path::new(path).exists(), "store {path} does not exist");
+        let store = ResultStore::open(Path::new(path))?;
+        let arch = CampaignArchive::from_rows_on(store.rows(), axis)?;
+        sources.push((path.clone(), arch));
+    }
+    merge_fronts(&sources, axis)
+}
+
+impl MergedFront {
+    /// The merged front as a printable table, one row per surviving point,
+    /// tagged with source store and objective.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "scenario", "store", "objective", "mult", "carbon_g", "lifetime_g", "delay_ms",
+            "drop_pp",
+        ]);
+        for &i in &self.front {
+            let mp = &self.points[i];
+            let p = &mp.point;
+            t.row(vec![
+                p.key.clone(),
+                mp.store.clone(),
+                p.objective.clone(),
+                p.mult.clone(),
+                table::fmt(p.carbon_g),
+                table::fmt(p.lifetime_gco2),
+                format!("{:.3}", p.delay_s * 1e3),
+                format!("{:.2}", p.drop_pct),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::pareto::tests::row;
+    use crate::util::Json;
+
+    fn tagged(key: &str, objective: &str, c: f64, life: f64, d: f64, a: f64) -> Json {
+        let mut r = row(key, "m", "14nm", c, d, a);
+        if let Json::Obj(map) = &mut r {
+            map.insert("objective".to_string(), Json::from(objective));
+            map.insert("lifetime_gco2".to_string(), Json::from(life));
+        }
+        r
+    }
+
+    #[test]
+    fn aggregates_group_and_count() {
+        let rows = vec![
+            row("a", "vgg16", "14nm", 10.0, 1.0, 1.0),
+            row("b", "resnet50", "14nm", 20.0, 2.0, 1.0),
+            row("c", "vgg16", "7nm", 8.0, 3.0, 1.0),
+        ];
+        let arch = CampaignArchive::from_rows(&rows).unwrap();
+        let t = arch.aggregate_table(GroupBy::Node);
+        assert_eq!(t.n_rows(), 2); // 14nm, 7nm
+        let t = arch.aggregate_table(GroupBy::Model);
+        assert_eq!(t.n_rows(), 2); // vgg16, resnet50
+    }
+
+    #[test]
+    fn merged_front_resolves_dominance_across_stores() {
+        // Store A (embodied campaign): one strong, one weak point.
+        let a = vec![
+            tagged("a1", "embodied-cdp", 5.0, 50.0, 1.0, 1.0),
+            tagged("a2", "embodied-cdp", 9.0, 90.0, 3.0, 3.0),
+        ];
+        // Store B (lifetime campaign): trades against a1 on the lifetime
+        // axis (a2 is already dominated by a1 inside store A).
+        let b = vec![tagged("b1", "lifetime-cdp", 6.0, 40.0, 2.0, 0.5)];
+        let axis = CarbonAxis::Lifetime;
+        let sources = vec![
+            ("a.jsonl".to_string(), CampaignArchive::from_rows_on(&a, axis).unwrap()),
+            ("b.jsonl".to_string(), CampaignArchive::from_rows_on(&b, axis).unwrap()),
+        ];
+        // A source front computed on the wrong axis is refused loudly.
+        let e = merge_fronts(&sources, CarbonAxis::Embodied).unwrap_err();
+        assert!(format!("{e:#}").contains("carbon axis"), "{e:#}");
+        let merged = merge_fronts(&sources, axis).unwrap();
+        let mut keys: Vec<&str> =
+            merged.front.iter().map(|&i| merged.points[i].point.key.as_str()).collect();
+        keys.sort();
+        // a2 fell inside store A's own front; a1 and b1 trade across stores.
+        assert_eq!(keys, vec!["a1", "b1"]);
+        // Tags survive the merge: each survivor knows its store+objective.
+        for &i in &merged.front {
+            let mp = &merged.points[i];
+            match mp.point.key.as_str() {
+                "a1" => {
+                    assert_eq!(mp.store, "a.jsonl");
+                    assert_eq!(mp.point.objective, "embodied-cdp");
+                }
+                "b1" => {
+                    assert_eq!(mp.store, "b.jsonl");
+                    assert_eq!(mp.point.objective, "lifetime-cdp");
+                }
+                other => panic!("unexpected survivor {other}"),
+            }
+        }
+        let rendered = merged.table().render();
+        assert!(rendered.contains("lifetime-cdp"), "{rendered}");
+        assert!(rendered.contains("a.jsonl"), "{rendered}");
+    }
+
+    #[test]
+    fn merge_store_fronts_reads_stores_from_disk() {
+        let dir = std::env::temp_dir();
+        let pa = dir.join(format!("carbon3d-front-merge-a-{}.jsonl", std::process::id()));
+        let pb = dir.join(format!("carbon3d-front-merge-b-{}.jsonl", std::process::id()));
+        for (p, rows) in [
+            (&pa, vec![tagged("a1", "embodied-cdp", 5.0, 50.0, 1.0, 1.0)]),
+            (&pb, vec![tagged("b1", "lifetime-cdp", 6.0, 40.0, 2.0, 0.5)]),
+        ] {
+            let _ = std::fs::remove_file(p);
+            let text: String =
+                rows.iter().map(|r| format!("{}\n", r.dumps())).collect();
+            std::fs::write(p, text).unwrap();
+        }
+        let merged = merge_store_fronts(
+            &[pa.display().to_string(), pb.display().to_string()],
+            CarbonAxis::Lifetime,
+        )
+        .unwrap();
+        assert_eq!(merged.front.len(), 2);
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+}

@@ -1,0 +1,292 @@
+//! File-based **claim/lease protocol** for sharded campaigns: a
+//! `<store>.leases/` directory shared by every `--shard i/N` process, one
+//! small JSON file per claimed job.
+//!
+//! Protocol:
+//! - **Claim** — atomic `create_new` of the job's lease file. Exactly one
+//!   process can win; everyone else sees the file and moves on.
+//! - **Done** — after committing the row, the holder rewrites the lease
+//!   with `done: true` (temp file + rename). Done leases are permanent:
+//!   they are never reclaimed, so finished work is never redone.
+//! - **Expiry** — a lease that is not done and older than the TTL marks a
+//!   crashed holder. Reclaim renames the stale file away (rename is
+//!   atomic, so exactly one contender wins) and re-claims fresh.
+//!
+//! Correctness never rests on the leases alone: jobs are idempotent (GA
+//! seeds derive from the job *key*), so if a presumed-dead holder was
+//! merely slow and finishes anyway, both processes commit byte-identical
+//! rows to their own shard stores and the merge step deduplicates them.
+//! Leases only prevent *systematic* duplicate work; the TTL should exceed
+//! the worst-case single-job time.
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::spec::fnv1a64;
+
+/// Outcome of a claim attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Claim {
+    /// This process now holds the lease and must evaluate the job.
+    Acquired,
+    /// Another holder has it (live or done) — skip the job.
+    Unavailable,
+}
+
+/// Handle to a shared lease directory.
+pub struct LeaseDir {
+    dir: PathBuf,
+    holder: String,
+    ttl_s: u64,
+}
+
+impl LeaseDir {
+    /// The lease directory companion of a canonical store path
+    /// (`campaign.jsonl` -> `campaign.jsonl.leases/`).
+    pub fn for_store(canonical: &Path) -> PathBuf {
+        let mut os = canonical.as_os_str().to_os_string();
+        os.push(".leases");
+        PathBuf::from(os)
+    }
+
+    /// Open (creating if needed) a lease directory as `holder`. Holder ids
+    /// should be unique per process (e.g. include the pid): expiry tells
+    /// crashed incarnations apart by age, not by name.
+    pub fn open(dir: PathBuf, holder: String, ttl_s: u64) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create lease directory {}", dir.display()))?;
+        Ok(Self { dir, holder, ttl_s })
+    }
+
+    /// Lease file for a job key. The key is hashed — keys contain path
+    /// separators — and stored inside the file for human inspection.
+    fn lease_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.lease", fnv1a64(key.as_bytes())))
+    }
+
+    fn now_s() -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0)
+    }
+
+    fn lease_doc(&self, key: &str, done: bool) -> Json {
+        obj([
+            ("key", Json::from(key)),
+            ("holder", Json::from(self.holder.clone())),
+            ("created_s", Json::from(Self::now_s() as usize)),
+            ("done", Json::from(done)),
+        ])
+    }
+
+    /// Try to claim `key`: atomic create wins; an existing lease blocks
+    /// unless it is expired (not done + older than the TTL), in which case
+    /// it is evicted and re-claimed — exactly one contender can win the
+    /// eviction because it goes through an atomic rename.
+    pub fn try_claim(&self, key: &str) -> Result<Claim> {
+        let path = self.lease_path(key);
+        // Two attempts: the second runs only after this process evicted an
+        // expired lease; losing the re-create race then means another
+        // claimant got in first, which is a valid Unavailable.
+        for _ in 0..2 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    f.write_all(self.lease_doc(key, false).dumps().as_bytes())
+                        .with_context(|| format!("write lease {}", path.display()))?;
+                    return Ok(Claim::Acquired);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if !self.expired(&path)? || !self.evict(&path) {
+                        return Ok(Claim::Unavailable);
+                    }
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("claim lease {}", path.display()))
+                }
+            }
+        }
+        Ok(Claim::Unavailable)
+    }
+
+    /// Steal `key` only if an *expired* lease exists — the recovery path
+    /// for jobs abandoned by a killed shard. A missing lease means the job
+    /// belongs to a shard that has not reached it yet: not stealable.
+    pub fn steal_expired(&self, key: &str) -> Result<Claim> {
+        let path = self.lease_path(key);
+        if !path.exists() || !self.expired(&path)? || !self.evict(&path) {
+            return Ok(Claim::Unavailable);
+        }
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                f.write_all(self.lease_doc(key, false).dumps().as_bytes())
+                    .with_context(|| format!("write lease {}", path.display()))?;
+                Ok(Claim::Acquired)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(Claim::Unavailable),
+            Err(e) => Err(e).with_context(|| format!("steal lease {}", path.display())),
+        }
+    }
+
+    /// Mark a held lease done (called after the row is committed). Done
+    /// leases are permanent — no later process will redo the job. Written
+    /// via temp file + atomic rename so a reader never sees a torn flag.
+    pub fn mark_done(&self, key: &str) -> Result<()> {
+        let path = self.lease_path(key);
+        let tmp = PathBuf::from(format!("{}.tmp-{}", path.display(), std::process::id()));
+        std::fs::write(&tmp, self.lease_doc(key, true).dumps())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("finalize lease {}", path.display()))
+    }
+
+    /// Is the lease at `path` expired? Done leases never expire. A lease
+    /// whose content is unreadable (a claimant crashed inside the initial
+    /// write, or a concurrent reader caught it torn) ages by file mtime
+    /// instead of the recorded timestamp.
+    fn expired(&self, path: &Path) -> Result<bool> {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(doc) = Json::parse(&text) {
+                if matches!(doc.get("done"), Ok(Json::Bool(true))) {
+                    return Ok(false);
+                }
+                if let Ok(created) = doc.get("created_s").and_then(|v| v.as_usize()) {
+                    return Ok(Self::now_s().saturating_sub(created as u64) > self.ttl_s);
+                }
+            }
+        }
+        // Torn or vanished: fall back to mtime; a vanished file (eviction
+        // race) reads as fresh, which safely resolves to Unavailable.
+        let age = std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Ok(age > self.ttl_s)
+    }
+
+    /// Test hook: plant a lease as a (possibly long-dead) foreign holder
+    /// would have left it — `age_s` seconds old, done or not.
+    #[cfg(test)]
+    pub(crate) fn plant_for_test(&self, key: &str, age_s: u64, done: bool) {
+        let doc = obj([
+            ("key", Json::from(key)),
+            ("holder", Json::from("dead-shard")),
+            ("created_s", Json::from((Self::now_s().saturating_sub(age_s)) as usize)),
+            ("done", Json::from(done)),
+        ]);
+        std::fs::write(self.lease_path(key), doc.dumps()).unwrap();
+    }
+
+    /// Atomically move an expired lease out of the way. Exactly one
+    /// contender's rename succeeds; losers report `false` and back off.
+    fn evict(&self, path: &Path) -> bool {
+        let stale = PathBuf::from(format!("{}.stale-{}", path.display(), std::process::id()));
+        if std::fs::rename(path, &stale).is_ok() {
+            let _ = std::fs::remove_file(&stale);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("carbon3d-leases-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn open(dir: &Path, holder: &str, ttl_s: u64) -> LeaseDir {
+        LeaseDir::open(dir.to_path_buf(), holder.to_string(), ttl_s).unwrap()
+    }
+
+    /// Plant a lease file as a dead holder would have left it.
+    fn plant(dir: &LeaseDir, key: &str, age_s: u64, done: bool) {
+        dir.plant_for_test(key, age_s, done);
+    }
+
+    #[test]
+    fn claim_is_exclusive() {
+        let d = tmp_dir("exclusive");
+        let a = open(&d, "a", 600);
+        let b = open(&d, "b", 600);
+        assert_eq!(a.try_claim("job1").unwrap(), Claim::Acquired);
+        assert_eq!(b.try_claim("job1").unwrap(), Claim::Unavailable);
+        assert_eq!(b.try_claim("job2").unwrap(), Claim::Acquired);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn expired_lease_is_reclaimed_exactly_once() {
+        let d = tmp_dir("reclaim");
+        let a = open(&d, "a", 600);
+        let b = open(&d, "b", 600);
+        plant(&a, "job", 9_999, false);
+        // First claimant wins the reclaim; the second sees a fresh lease.
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Acquired);
+        assert_eq!(b.try_claim("job").unwrap(), Claim::Unavailable);
+        assert_eq!(b.steal_expired("job").unwrap(), Claim::Unavailable);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn done_leases_are_permanent() {
+        let d = tmp_dir("done");
+        let a = open(&d, "a", 600);
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Acquired);
+        a.mark_done("job").unwrap();
+        // Even a holder whose clock says everything expired cannot reclaim
+        // a done lease (planting an ancient done lease proves the same).
+        let b = open(&d, "b", 0);
+        assert_eq!(b.try_claim("job").unwrap(), Claim::Unavailable);
+        assert_eq!(b.steal_expired("job").unwrap(), Claim::Unavailable);
+        plant(&b, "old", 9_999, true);
+        assert_eq!(b.steal_expired("old").unwrap(), Claim::Unavailable);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn steal_requires_an_existing_expired_lease() {
+        let d = tmp_dir("steal");
+        let a = open(&d, "a", 600);
+        // No lease: the owning shard has not reached the job — not ours.
+        assert_eq!(a.steal_expired("job").unwrap(), Claim::Unavailable);
+        // Fresh lease: holder presumed alive.
+        let b = open(&d, "b", 600);
+        assert_eq!(b.try_claim("job").unwrap(), Claim::Acquired);
+        assert_eq!(a.steal_expired("job").unwrap(), Claim::Unavailable);
+        // Expired lease: stolen.
+        plant(&a, "crashed", 9_999, false);
+        assert_eq!(a.steal_expired("crashed").unwrap(), Claim::Acquired);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_lease_content_ages_by_mtime() {
+        let d = tmp_dir("torn");
+        let a = open(&d, "a", 600);
+        std::fs::write(a.lease_path("job"), "{\"key\": \"job\", \"hold").unwrap();
+        // Freshly torn: treated as live (mtime age ~0), not reclaimable.
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Unavailable);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn lease_dir_path_derives_from_store() {
+        let p = LeaseDir::for_store(Path::new("results/campaign.jsonl"));
+        assert_eq!(p, Path::new("results/campaign.jsonl.leases"));
+    }
+}

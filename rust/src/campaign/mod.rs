@@ -1,47 +1,56 @@
 //! Design-space-exploration **campaign engine**: run an entire scenario
-//! grid — {workload} x {TechNode} x {Integration} x {δ} x {FPS floor} — as
-//! a job queue drained by a pool of std-thread workers, instead of one
-//! GA invocation at a time.
+//! grid — {workload} x {TechNode} x {Integration} x {δ} x {FPS floor} —
+//! as a job queue, instead of one GA invocation at a time.
 //!
-//! The pieces:
-//! - [`spec`]: grid definition plus the campaign objective
-//!   ([`CampaignObjective`]: embodied CDP, operational-only, or lifetime
-//!   CDP under a configurable [`crate::carbon::operational::Deployment`]).
-//!   Per-job GA seeds derive from the campaign seed + the job *key*, so
-//!   results are reproducible for any worker count and stable under grid
-//!   growth; non-default objectives are part of the key.
-//! - [`scheduler`]: the worker pool. All workers share ONE
-//!   [`crate::runtime::EvalService`], so multiplier-accuracy evaluations are
-//!   cached campaign-globally. The queue is ordered most-promising-first by
-//!   an analytic optimistic bound ([`scheduler::JobBound`]) and jobs whose
-//!   bound provably cannot beat the best committed *objective value* in
-//!   their scenario family are pruned — deterministically, so the store
-//!   stays byte-reproducible (`--no-prune` for exhaustive grids; see
-//!   [`scheduler::prune_reason`] for the exact semantics). Results are
-//!   committed in schedule order through a reorder buffer.
-//! - [`store`]: append-only JSONL with checkpoint/resume — on restart,
-//!   completed jobs are detected by key and skipped; a torn final line from
-//!   an interrupted write (no trailing newline) is dropped and its job
-//!   redone, while any other corruption is a loud error.
-//! - [`pareto`]: cross-scenario Pareto archive over (carbon, task delay,
-//!   accuracy drop) — embodied or lifetime carbon depending on the
-//!   objective — maintained *incrementally* as rows commit and
-//!   checkpointed/restored beside the store.
+//! The engine is three explicit layers (DESIGN.md §6):
+//! - [`source`] — **JobSource**: deterministic grid enumeration, per-job
+//!   optimistic bounds ([`source::JobBound`]), and the schedule order
+//!   (ascending bound; commits follow it). Pure function of the spec and
+//!   the rows already committed — identical for any worker count, shard
+//!   count, or resume boundary.
+//! - [`exec`] — **Executor**: who evaluates jobs. The in-process
+//!   [`exec::ThreadPoolExecutor`], the multi-process
+//!   [`exec::sharded::ShardedExecutor`] (file-based [`lease`] claims, one
+//!   store per shard), and [`exec::sharded::MergeExecutor`] (folds shard
+//!   stores into the canonical store). All executors in a process share
+//!   ONE [`crate::runtime::EvalService`], so accuracy evaluations are
+//!   cached campaign-globally.
+//! - [`commit`] — **CommitPipeline**: reorder buffer, the writer-
+//!   authoritative prune decision ([`source::prune_reason`]; `--no-prune`
+//!   for exhaustive grids), the JSONL append, and the incremental Pareto
+//!   archive with its atomically-written sidecar checkpoint.
 //!
-//! Invariant the tests pin down: for a fixed campaign seed, the final store
-//! bytes are identical whether the campaign ran uninterrupted with any
-//! number of workers or was killed and resumed.
+//! Around them: [`spec`] (grid + [`CampaignObjective`] + key-derived
+//! per-job seeds), [`store`] (append-only JSONL with checkpoint/resume;
+//! torn final lines dropped, anything else loud), [`pareto`] +
+//! [`checkpoint`] + [`front`] (archive core, sidecar I/O, presentation and
+//! cross-campaign front merging).
+//!
+//! Invariant the tests pin down: for a fixed campaign seed, the final
+//! store bytes are identical whether the campaign ran uninterrupted with
+//! any number of workers, was killed and resumed, or was sharded across N
+//! processes and merged.
 
+pub mod checkpoint;
+pub mod commit;
+pub mod exec;
+pub mod front;
+pub mod lease;
 pub mod pareto;
-pub mod scheduler;
+pub mod source;
 pub mod spec;
 pub mod store;
 
-pub use pareto::{CampaignArchive, CarbonAxis, GroupBy};
-pub use scheduler::{
-    job_bound, prune_reason, run_campaign, start_service, CampaignReport, JobBound,
-    SurrogateBackend,
+pub use commit::{CommitPipeline, CommitTotals, FrontCell, JobOutcome};
+pub use exec::sharded::{shard_store_path, MergeExecutor, ShardId, ShardedExecutor};
+pub use exec::{
+    run_campaign, run_campaign_with, start_service, CampaignReport, Executor,
+    SurrogateBackend, ThreadPoolExecutor,
 };
+pub use front::{merge_fronts, merge_store_fronts, MergedFront, MergedPoint};
+pub use lease::{Claim, LeaseDir};
+pub use pareto::{ArchivePoint, CampaignArchive, CarbonAxis, GroupBy};
+pub use source::{job_bound, prune_reason, shard_owner, JobBound, JobCtx, JobSource};
 pub use spec::{CampaignObjective, CampaignSpec, JobSpec};
 pub use store::ResultStore;
 

@@ -2,23 +2,18 @@
 //! in (carbon, task delay, accuracy drop) space — where "carbon" is the
 //! campaign objective's metric (embodied gCO2, or lifetime gCO2 for the
 //! lifetime objectives) — and the archive keeps the non-dominated set
-//! across ALL scenarios plus per-node and per-workload aggregate summaries.
+//! across ALL scenarios.
 //!
-//! The archive is **incremental**: the scheduler calls [`CampaignArchive::
-//! insert_row`] as each row commits, so the front is maintained in O(|front|)
-//! per insert instead of recomputed O(n^2) from the full store. It is also
-//! **checkpointed** alongside the JSONL store (a small sidecar JSON with the
-//! front indices); [`CampaignArchive::load_or_rebuild`] restores it on
-//! resume and falls back to an incremental rebuild whenever the sidecar is
-//! missing, stale, or corrupt — the store rows remain the source of truth.
-
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+//! The archive is **incremental**: the commit pipeline calls the method
+//! [`CampaignArchive::insert_row`] as each row commits, so the front is
+//! maintained in O(|front|) per insert instead of recomputed O(n^2) from
+//! the full store. It is also **checkpointed** beside the JSONL store (see
+//! [`crate::campaign::checkpoint`]) and rendered into summary tables and
+//! cross-campaign merged fronts (see [`crate::campaign::front`]).
 
 use anyhow::{Context, Result};
 
-use crate::util::json::obj;
-use crate::util::{table, Json, Table};
+use crate::util::Json;
 
 /// Which carbon metric spans the archive's first objective axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,6 +48,9 @@ pub struct ArchivePoint {
     pub model: String,
     pub node: String,
     pub mult: String,
+    /// The objective the row's campaign optimized (cross-campaign merges
+    /// tag points with it; legacy rows default to the paper's objective).
+    pub objective: String,
     pub carbon_g: f64,
     /// Embodied + lifetime operational carbon; equals `carbon_g` for rows
     /// written before lifetime accounting existed.
@@ -63,7 +61,7 @@ pub struct ArchivePoint {
 }
 
 impl ArchivePoint {
-    fn from_row(row: &Json) -> Result<Self> {
+    pub(crate) fn from_row(row: &Json) -> Result<Self> {
         let s = |k: &str| -> Result<String> {
             row.get(k).and_then(|v| v.as_str().map(str::to_string)).context(format!("field {k}"))
         };
@@ -76,6 +74,7 @@ impl ArchivePoint {
             model: s("model")?,
             node: s("node")?,
             mult: s("mult")?,
+            objective: s("objective").unwrap_or_else(|_| "embodied-cdp".to_string()),
             carbon_g,
             lifetime_gco2: f("lifetime_gco2").unwrap_or(carbon_g),
             delay_s: f("delay_s")?,
@@ -84,7 +83,7 @@ impl ArchivePoint {
         })
     }
 
-    fn carbon_on(&self, axis: CarbonAxis) -> f64 {
+    pub(crate) fn carbon_on(&self, axis: CarbonAxis) -> f64 {
         match axis {
             CarbonAxis::Embodied => self.carbon_g,
             CarbonAxis::Lifetime => self.lifetime_gco2,
@@ -93,7 +92,7 @@ impl ArchivePoint {
 }
 
 /// 3-objective dominance (<= everywhere, < somewhere; minimize all).
-fn dominates(axis: CarbonAxis, a: &ArchivePoint, b: &ArchivePoint) -> bool {
+pub(crate) fn dominates(axis: CarbonAxis, a: &ArchivePoint, b: &ArchivePoint) -> bool {
     let (ca, cb) = (a.carbon_on(axis), b.carbon_on(axis));
     let le = ca <= cb && a.delay_s <= b.delay_s && a.drop_pct <= b.drop_pct;
     let lt = ca < cb || a.delay_s < b.delay_s || a.drop_pct < b.drop_pct;
@@ -181,136 +180,15 @@ impl CampaignArchive {
         }
         Ok(arch)
     }
-
-    /// Sidecar path for a store at `store_path` (e.g. `campaign.jsonl` ->
-    /// `campaign.front.json`).
-    pub fn checkpoint_path(store_path: &Path) -> PathBuf {
-        store_path.with_extension("front.json")
-    }
-
-    /// The checkpoint document: enough to validate freshness and restore
-    /// the front without re-running dominance checks.
-    pub fn checkpoint(&self) -> Json {
-        obj([
-            ("axis", Json::from(self.axis.name())),
-            ("n_points", Json::from(self.points.len() as f64)),
-            (
-                "front",
-                Json::Arr(self.front.iter().map(|&i| Json::from(i as f64)).collect()),
-            ),
-        ])
-    }
-
-    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.checkpoint().dumps())
-            .with_context(|| format!("write archive checkpoint {}", path.display()))
-    }
-
-    /// Restore from a checkpoint if it matches the store (same axis, same
-    /// row count, well-formed front); otherwise rebuild incrementally from
-    /// the rows. Never fails because of a bad sidecar — the store is the
-    /// source of truth and the checkpoint is just a warm start.
-    pub fn load_or_rebuild(rows: &[Json], axis: CarbonAxis, ckpt_path: &Path) -> Result<Self> {
-        if let Some(arch) = Self::try_restore(rows, axis, ckpt_path) {
-            return Ok(arch);
-        }
-        Self::from_rows_incremental(rows, axis)
-    }
-
-    fn try_restore(rows: &[Json], axis: CarbonAxis, ckpt_path: &Path) -> Option<Self> {
-        let text = std::fs::read_to_string(ckpt_path).ok()?;
-        let ck = Json::parse(&text).ok()?;
-        let ck_axis = CarbonAxis::from_name(ck.get("axis").ok()?.as_str().ok()?)?;
-        if ck_axis != axis {
-            return None;
-        }
-        let n = ck.get("n_points").ok()?.as_usize().ok()?;
-        if n != rows.len() {
-            return None; // stale: rows were appended since the checkpoint
-        }
-        let mut front = Vec::new();
-        let mut prev: Option<usize> = None;
-        for v in ck.get("front").ok()?.as_arr().ok()? {
-            let i = v.as_usize().ok()?;
-            if i >= n || prev.is_some_and(|p| p >= i) {
-                return None; // malformed: out of range or not ascending
-            }
-            front.push(i);
-            prev = Some(i);
-        }
-        let points: Vec<ArchivePoint> =
-            rows.iter().map(ArchivePoint::from_row).collect::<Result<_>>().ok()?;
-        Some(Self { axis, points, front })
-    }
-
-    /// The cross-scenario Pareto front as a printable table.
-    pub fn pareto_table(&self) -> Table {
-        let mut t = Table::new(vec![
-            "scenario", "mult", "carbon_g", "lifetime_g", "delay_ms", "drop_pp", "cdp",
-        ]);
-        for &i in &self.front {
-            let p = &self.points[i];
-            t.row(vec![
-                p.key.clone(),
-                p.mult.clone(),
-                table::fmt(p.carbon_g),
-                table::fmt(p.lifetime_gco2),
-                format!("{:.3}", p.delay_s * 1e3),
-                format!("{:.2}", p.drop_pct),
-                format!("{:.4}", p.cdp),
-            ]);
-        }
-        t
-    }
-
-    /// Aggregate summary per node or per workload: scenario count, how many
-    /// sit on the cross-scenario front, carbon/cdp extremes and means.
-    pub fn aggregate_table(&self, by: GroupBy) -> Table {
-        let label = match by {
-            GroupBy::Node => "node",
-            GroupBy::Model => "model",
-        };
-        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
-        for (i, p) in self.points.iter().enumerate() {
-            let g = match by {
-                GroupBy::Node => p.node.clone(),
-                GroupBy::Model => p.model.clone(),
-            };
-            groups.entry(g).or_default().push(i);
-        }
-        let mut t = Table::new(vec![
-            label, "jobs", "on_front", "min_carbon_g", "mean_carbon_g", "best_cdp", "min_delay_ms",
-        ]);
-        for (g, idxs) in &groups {
-            let carbons: Vec<f64> = idxs.iter().map(|&i| self.points[i].carbon_g).collect();
-            let min_c = carbons.iter().cloned().fold(f64::INFINITY, f64::min);
-            let mean_c = carbons.iter().sum::<f64>() / carbons.len() as f64;
-            let best_cdp =
-                idxs.iter().map(|&i| self.points[i].cdp).fold(f64::INFINITY, f64::min);
-            let min_delay =
-                idxs.iter().map(|&i| self.points[i].delay_s).fold(f64::INFINITY, f64::min);
-            let on_front = idxs.iter().filter(|&&i| self.front.contains(&i)).count();
-            t.row(vec![
-                g.clone(),
-                idxs.len().to_string(),
-                on_front.to_string(),
-                table::fmt(min_c),
-                table::fmt(mean_c),
-                format!("{:.4}", best_cdp),
-                format!("{:.3}", min_delay * 1e3),
-            ]);
-        }
-        t
-    }
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::util::json::obj;
     use crate::util::Rng;
 
-    fn row(key: &str, model: &str, node: &str, c: f64, d: f64, a: f64) -> Json {
+    pub(crate) fn row(key: &str, model: &str, node: &str, c: f64, d: f64, a: f64) -> Json {
         obj([
             ("key", Json::from(key)),
             ("model", Json::from(model)),
@@ -361,29 +239,27 @@ mod tests {
     }
 
     #[test]
-    fn aggregates_group_and_count() {
-        let rows = vec![
-            row("a", "vgg16", "14nm", 10.0, 1.0, 1.0),
-            row("b", "resnet50", "14nm", 20.0, 2.0, 1.0),
-            row("c", "vgg16", "7nm", 8.0, 3.0, 1.0),
-        ];
-        let arch = CampaignArchive::from_rows(&rows).unwrap();
-        let t = arch.aggregate_table(GroupBy::Node);
-        assert_eq!(t.n_rows(), 2); // 14nm, 7nm
-        let t = arch.aggregate_table(GroupBy::Model);
-        assert_eq!(t.n_rows(), 2); // vgg16, resnet50
-    }
-
-    #[test]
     fn missing_fields_error_with_row_number() {
         let rows = vec![obj([("key", Json::from("a"))])];
         let e = CampaignArchive::from_rows(&rows).unwrap_err();
         assert!(format!("{e:#}").contains("store row 1"), "{e:#}");
     }
 
+    #[test]
+    fn objective_tag_defaults_for_legacy_rows() {
+        let p = ArchivePoint::from_row(&row("a", "m", "14nm", 1.0, 1.0, 1.0)).unwrap();
+        assert_eq!(p.objective, "embodied-cdp");
+        let mut tagged = row("b", "m", "14nm", 1.0, 1.0, 1.0);
+        if let Json::Obj(m) = &mut tagged {
+            m.insert("objective".to_string(), Json::from("lifetime-cdp"));
+        }
+        let p = ArchivePoint::from_row(&tagged).unwrap();
+        assert_eq!(p.objective, "lifetime-cdp");
+    }
+
     /// A pseudo-random row set with plenty of dominance structure (values
     /// drawn from a small menu so ties and duplicates occur too).
-    fn random_rows(rng: &mut Rng, n: usize) -> Vec<Json> {
+    pub(crate) fn random_rows(rng: &mut Rng, n: usize) -> Vec<Json> {
         let menu = [1.0, 2.0, 3.0, 5.0, 8.0];
         (0..n)
             .map(|i| {
@@ -465,46 +341,5 @@ mod tests {
         let legacy = vec![row("x", "m", "14nm", 3.0, 1.0, 1.0)];
         let arch = CampaignArchive::from_rows_on(&legacy, CarbonAxis::Lifetime).unwrap();
         assert_eq!(arch.points[0].lifetime_gco2, 3.0);
-    }
-
-    #[test]
-    fn checkpoint_roundtrip_and_staleness() {
-        let mut rng = Rng::new(0xCAFE);
-        let rows = random_rows(&mut rng, 12);
-        let arch = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
-        let path = std::env::temp_dir().join(format!(
-            "carbon3d-pareto-ckpt-{}.front.json",
-            std::process::id()
-        ));
-        arch.save_checkpoint(&path).unwrap();
-
-        // Fresh checkpoint restores the exact front.
-        let restored =
-            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
-        assert_eq!(restored.front, arch.front);
-
-        // Stale checkpoint (more rows than it covers) -> rebuilt, not trusted.
-        let mut more = rows.clone();
-        more.push(row("extra", "m", "14nm", 0.5, 0.5, 0.5));
-        let rebuilt =
-            CampaignArchive::load_or_rebuild(&more, CarbonAxis::Embodied, &path).unwrap();
-        let full = CampaignArchive::from_rows(&more).unwrap();
-        assert_eq!(rebuilt.front, full.front);
-
-        // Axis mismatch -> rebuilt on the requested axis.
-        let other = CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Lifetime, &path).unwrap();
-        assert_eq!(other.axis, CarbonAxis::Lifetime);
-
-        // Corrupt checkpoint -> rebuilt.
-        std::fs::write(&path, "not json at all").unwrap();
-        let rebuilt2 =
-            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
-        assert_eq!(rebuilt2.front, arch.front);
-
-        // Missing checkpoint -> rebuilt.
-        let _ = std::fs::remove_file(&path);
-        let rebuilt3 =
-            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
-        assert_eq!(rebuilt3.front, arch.front);
     }
 }

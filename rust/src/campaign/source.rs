@@ -1,0 +1,441 @@
+//! **JobSource** — the deterministic front half of a campaign: flatten the
+//! grid into pending jobs, compute each job's analytic optimistic bound
+//! ([`JobBound`]), and fix the schedule order (ascending bound, ties by
+//! grid id). Everything downstream — the [`crate::campaign::commit`]
+//! pipeline and every [`crate::campaign::exec::Executor`] — consumes the
+//! schedule read-only, so the slot sequence is a pure function of the spec
+//! and the rows already in the store, identical across worker counts,
+//! shard counts, and resume boundaries.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::accuracy::model::feasible_multipliers;
+use crate::accuracy::AccuracyTable;
+use crate::approx::{library, Multiplier, EXACT_ID};
+use crate::area::mac::mac_power_uw;
+use crate::carbon::embodied_carbon;
+use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::workloads::{workload, Workload};
+use crate::ga::{GaParams, Objective, SearchSpace};
+use crate::runtime::{EvalClient, EvalService};
+
+use super::spec::{CampaignSpec, JobSpec};
+use super::store::ResultStore;
+
+/// Everything shared by the bound pre-pass and by job evaluation: the
+/// multiplier library, preloaded workloads, the calibration workload, and
+/// the fitness-level objective the campaign optimizes. Built once per
+/// campaign and handed to the source and the executor by reference.
+pub struct JobCtx {
+    pub lib: Vec<Multiplier>,
+    pub workloads: HashMap<String, Workload>,
+    pub tiny: Workload,
+    pub objective: Objective,
+    pub ga: GaParams,
+    /// Whether provably-hopeless jobs may be skipped (spec `prune`).
+    pub prune: bool,
+}
+
+impl JobCtx {
+    pub fn new(spec: &CampaignSpec) -> Result<Self> {
+        let mut workloads = HashMap::new();
+        for m in &spec.models {
+            workloads
+                .insert(m.clone(), workload(m).ok_or_else(|| anyhow!("unknown model {m}"))?);
+        }
+        Ok(Self {
+            lib: library(),
+            workloads,
+            tiny: workload("tinycnn").expect("tinycnn workload exists"),
+            objective: spec.objective.to_fitness(spec.deployment),
+            ga: spec.ga,
+            prune: spec.prune,
+        })
+    }
+
+    pub fn workload(&self, model: &str) -> Result<&Workload> {
+        self.workloads
+            .get(model)
+            .ok_or_else(|| anyhow!("workload {model} not preloaded"))
+    }
+}
+
+/// Fetch the campaign-global accuracy table through the shared service and
+/// calibrate the ΔA model's K against it. Used identically by the bound
+/// pre-pass and by every job — a single definition is what guarantees the
+/// pre-pass δ-feasible sets (and therefore the prune bounds) agree exactly
+/// with the sets the GA searches.
+pub(crate) fn calibrated_k(
+    client: &EvalClient,
+    lib: &[Multiplier],
+    tiny: &Workload,
+) -> Result<f64> {
+    let mult_refs: Vec<&Multiplier> = lib.iter().collect();
+    let accs = client
+        .eval_all(&mult_refs)
+        .map_err(|e| anyhow!("accuracy service: {e}"))?;
+    let mut table = AccuracyTable { exact: accs[EXACT_ID], ..Default::default() };
+    for (m, &a) in lib.iter().zip(&accs) {
+        table.accuracy.insert(m.id, a);
+    }
+    Ok(crate::accuracy::model::calibrate_k(lib, tiny, &table))
+}
+
+/// Analytic optimistic bounds for one pending job: component-wise lower
+/// bounds over the job's *entire* search space, so no achievable design can
+/// beat them. Used to order the queue (most promising first) and to prune
+/// jobs that provably cannot improve the committed front.
+#[derive(Debug, Clone, Copy)]
+pub struct JobBound {
+    /// Lower bound on embodied carbon (g): the min-area corner of the
+    /// search space with the cheapest δ-feasible multiplier.
+    pub carbon_lb_g: f64,
+    /// Lower bound on task delay (s): compute-bound at the largest array.
+    pub delay_lb_s: f64,
+    /// Lower bound on energy/inference (J): MAC energy only, at the most
+    /// frugal δ-feasible multiplier (memory traffic ignored).
+    pub energy_lb_j: f64,
+    /// Upper bound on achievable FPS (`1 / delay_lb_s`).
+    pub fps_ub: f64,
+    /// Lower bound on the campaign objective value.
+    pub objective_lb: f64,
+}
+
+/// Compute the optimistic bound for a job over its δ-feasible multiplier
+/// set. Every component combines best-cases that no single design attains
+/// simultaneously, which is exactly what makes it a valid lower bound.
+pub fn job_bound(
+    job: &JobSpec,
+    w: &Workload,
+    lib: &[Multiplier],
+    feasible: &[usize],
+    objective: &Objective,
+) -> JobBound {
+    let space = SearchSpace::standard(feasible.to_vec());
+    let (px_min, py_min) = (space.px[0], space.py[0]);
+    let (px_max, py_max) = (*space.px.last().unwrap(), *space.py.last().unwrap());
+    let (rf_min, sram_min) = (space.rf_bytes[0], space.sram_bytes[0]);
+    let mut carbon_lb_g = f64::INFINITY;
+    let mut mac_pj_min = f64::INFINITY;
+    for &mid in feasible {
+        let cfg = AccelConfig {
+            px: px_min,
+            py: py_min,
+            rf_bytes: rf_min,
+            sram_bytes: sram_min,
+            node: job.node,
+            integration: job.integration,
+            mult_id: mid,
+        };
+        let areas = cfg.die_areas(&lib[mid]);
+        let c = embodied_carbon(&areas, job.node, job.integration).total_g();
+        carbon_lb_g = carbon_lb_g.min(c);
+        mac_pj_min = mac_pj_min.min(mac_power_uw(&lib[mid], job.node) / job.node.freq_mhz());
+    }
+    let macs = w.total_macs() as f64;
+    let freq_hz = job.node.freq_mhz() * 1e6;
+    let delay_lb_s = macs / ((px_max * py_max) as f64 * freq_hz);
+    let energy_lb_j = macs * mac_pj_min * 1e-12;
+    let objective_lb = objective.lower_bound(carbon_lb_g, energy_lb_j, delay_lb_s);
+    JobBound { carbon_lb_g, delay_lb_s, energy_lb_j, fps_ub: 1.0 / delay_lb_s, objective_lb }
+}
+
+/// Why a job may be skipped without running, given its bound and the best
+/// committed objective value in its family (None = no incumbent yet).
+/// Returns `None` when the job must run.
+///
+/// Note the exact semantics: rule (b) prunes on the *scalar objective*
+/// projected per (model, node, integration) family — a pruned scenario can
+/// never improve the family's best objective value, but its row might have
+/// contributed to the 3-axis (carbon, delay, drop) archive through a lower
+/// accuracy drop alone. Pruning trades that per-scenario completeness for
+/// speed; campaigns that need every grid point exhaustively set
+/// `CampaignSpec::prune = false` (CLI `--no-prune`).
+pub fn prune_reason(
+    job: &JobSpec,
+    bound: &JobBound,
+    incumbent: Option<f64>,
+) -> Option<&'static str> {
+    if let Some(floor) = job.fps_floor {
+        if bound.fps_ub < floor {
+            // Even the compute-bound best case misses the floor: every
+            // design in the space is infeasible.
+            return Some("fps floor exceeds the reachable bound");
+        }
+    }
+    if let Some(best) = incumbent {
+        if bound.objective_lb >= best {
+            // The optimistic bound already loses to a committed result in
+            // this (model, node, integration) family.
+            return Some("objective bound cannot beat the committed front");
+        }
+    }
+    None
+}
+
+/// The deterministic job front-end: pending jobs in schedule order plus
+/// their bounds. Schedule order is ascending optimistic objective bound,
+/// ties broken by grid id — commits follow this order, so the ordering
+/// itself is part of the byte-determinism contract.
+pub struct JobSource {
+    jobs_total: usize,
+    jobs_skipped: usize,
+    schedule: Vec<JobSpec>,
+    bounds: HashMap<usize, JobBound>,
+}
+
+impl JobSource {
+    /// Enumerate the grid, drop jobs whose key is already in `store`
+    /// (checkpoint/resume), compute bounds through the shared service's
+    /// accuracy table, and sort into schedule order.
+    pub fn build(
+        spec: &CampaignSpec,
+        ctx: &JobCtx,
+        store: &ResultStore,
+        service: &EvalService,
+    ) -> Result<Self> {
+        let jobs = spec.jobs();
+        let jobs_total = jobs.len();
+        let mut pending: Vec<JobSpec> =
+            jobs.into_iter().filter(|j| !store.contains(&j.key())).collect();
+        let jobs_skipped = jobs_total - pending.len();
+        let mut bounds: HashMap<usize, JobBound> = HashMap::new();
+        if !pending.is_empty() {
+            let client = service.client();
+            let k = calibrated_k(&client, &ctx.lib, &ctx.tiny)?;
+            let mut feasible_sets: HashMap<(String, u64), Vec<usize>> = HashMap::new();
+            for job in &pending {
+                let w = ctx.workload(&job.model)?;
+                let f = feasible_sets
+                    .entry((job.model.clone(), job.delta_pct.to_bits()))
+                    .or_insert_with(|| feasible_multipliers(&ctx.lib, w, job.delta_pct, k));
+                ensure!(
+                    !f.is_empty(),
+                    "no multiplier satisfies δ={}% for {}",
+                    job.delta_pct,
+                    job.model
+                );
+                bounds.insert(job.id, job_bound(job, w, &ctx.lib, f, &ctx.objective));
+            }
+            pending.sort_by(|a, b| {
+                bounds[&a.id]
+                    .objective_lb
+                    .partial_cmp(&bounds[&b.id].objective_lb)
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            });
+        }
+        Ok(Self { jobs_total, jobs_skipped, schedule: pending, bounds })
+    }
+
+    /// Grid size before resume filtering.
+    pub fn jobs_total(&self) -> usize {
+        self.jobs_total
+    }
+
+    /// Jobs dropped because the store already had their row.
+    pub fn jobs_skipped(&self) -> usize {
+        self.jobs_skipped
+    }
+
+    /// Pending jobs in schedule (commit) order.
+    pub fn schedule(&self) -> &[JobSpec] {
+        &self.schedule
+    }
+
+    /// The optimistic bound for a job id (None for jobs without a bound,
+    /// which can only happen for ids outside this campaign).
+    pub fn bound(&self, job_id: usize) -> Option<&JobBound> {
+        self.bounds.get(&job_id)
+    }
+
+    /// The schedule slots shard `index` of `count` primarily owns. The
+    /// slices partition the schedule — union is the full slot range, no
+    /// slot owned twice (pinned by a property test) — and because
+    /// ownership hashes the job *key* (never the slot), it is stable under
+    /// resume: a shard whose store already holds some rows sees a shorter
+    /// schedule, yet every job still maps to the same owner. Test-only:
+    /// the executors decide ownership per job via the same [`shard_owner`]
+    /// (a shard must visit *every* slot to steal abandoned foreign jobs),
+    /// so this slicing exists to state the partition property, not to
+    /// drive dispatch.
+    #[cfg(test)]
+    pub(crate) fn shard_slots(&self, index: usize, count: usize) -> Vec<usize> {
+        assert!(count > 0 && index < count, "shard {index}/{count} out of range");
+        self.schedule
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| shard_owner(&j.key(), count) == index)
+            .map(|(slot, _)| slot)
+            .collect()
+    }
+}
+
+/// Which shard (of `count`) primarily owns a job: a pure function of the
+/// job key, so every process — whatever its store or resume state — agrees
+/// on the assignment without coordination.
+pub fn shard_owner(key: &str, count: usize) -> usize {
+    (super::spec::fnv1a64(key.as_bytes()) % count as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::die::Integration;
+    use crate::area::TechNode;
+    use crate::campaign::exec::SurrogateBackend;
+    use crate::campaign::spec::CampaignObjective;
+    use crate::ga::evaluate_objective;
+    use crate::util::Rng;
+
+    fn test_job(fps_floor: Option<f64>) -> JobSpec {
+        let mut j = JobSpec {
+            id: 0,
+            model: "vgg16".to_string(),
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            delta_pct: 3.0,
+            fps_floor,
+            objective: CampaignObjective::EmbodiedCdp,
+            seed: 0,
+        };
+        j.seed = super::super::spec::job_seed(1, &j.key());
+        j
+    }
+
+    #[test]
+    fn prune_rules_fire_on_bound_violations_only() {
+        let bound = JobBound {
+            carbon_lb_g: 1.0,
+            delay_lb_s: 0.5,
+            energy_lb_j: 0.01,
+            fps_ub: 2.0,
+            objective_lb: 5.0,
+        };
+        let free = test_job(None);
+        // No incumbent, no floor: must run.
+        assert_eq!(prune_reason(&free, &bound, None), None);
+        // Incumbent worse than the bound: still must run (could beat it).
+        assert_eq!(prune_reason(&free, &bound, Some(6.0)), None);
+        // Incumbent at/below the bound: provably cannot beat it.
+        assert!(prune_reason(&free, &bound, Some(5.0)).is_some());
+        assert!(prune_reason(&free, &bound, Some(4.0)).is_some());
+        // FPS floor above the compute-bound best case: infeasible.
+        assert!(prune_reason(&test_job(Some(3.0)), &bound, None).is_some());
+        assert_eq!(prune_reason(&test_job(Some(1.0)), &bound, None), None);
+    }
+
+    #[test]
+    fn job_bound_is_a_true_lower_bound_on_sampled_designs() {
+        // Property: the analytic bound never exceeds any achievable design's
+        // metrics, across objectives and random chromosomes.
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let feasible: Vec<usize> = (0..lib.len()).collect();
+        let dep = crate::carbon::operational::Deployment::default();
+        for objective in [
+            Objective::EmbodiedCdp(dep),
+            Objective::OperationalCarbon(dep),
+            Objective::LifetimeCdp(dep),
+        ] {
+            let job = test_job(None);
+            let b = job_bound(&job, &w, &lib, &feasible, &objective);
+            let space = SearchSpace::standard(feasible.clone());
+            let mut rng = Rng::new(42);
+            for _ in 0..25 {
+                let c = space.sample(&mut rng);
+                let e = evaluate_objective(
+                    &c,
+                    &w,
+                    job.node,
+                    job.integration,
+                    &lib,
+                    None,
+                    &objective,
+                );
+                assert!(b.carbon_lb_g <= e.carbon_g + 1e-9, "{objective:?}");
+                assert!(b.delay_lb_s <= e.delay_s + 1e-12, "{objective:?}");
+                assert!(b.energy_lb_j <= e.energy_per_inference_j + 1e-15, "{objective:?}");
+                assert!(b.fps_ub >= e.fps - 1e-9, "{objective:?}");
+                assert!(
+                    b.objective_lb <= objective.value(&e) * (1.0 + 1e-9),
+                    "{objective:?}: bound {} vs value {}",
+                    b.objective_lb,
+                    objective.value(&e)
+                );
+            }
+        }
+    }
+
+    fn quick_source(path: &std::path::Path) -> JobSource {
+        let mut spec = CampaignSpec::new(
+            vec!["vgg16".to_string(), "resnet50".to_string()],
+            vec![TechNode::N45, TechNode::N7],
+            vec![1.0, 3.0],
+        );
+        spec.fps_floors = vec![None, Some(30.0)];
+        let ctx = JobCtx::new(&spec).unwrap();
+        let store = ResultStore::open(path).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let source = JobSource::build(&spec, &ctx, &store, &svc).unwrap();
+        svc.shutdown();
+        source
+    }
+
+    #[test]
+    fn shard_slots_partition_the_schedule_for_every_count() {
+        // Property: for any shard count, the ownership slices are
+        // disjoint, cover every slot, and the underlying schedule is the
+        // same regardless of how it is sliced — sharding can never change
+        // *what* runs, only *who* runs it.
+        let path = std::env::temp_dir().join(format!(
+            "carbon3d-source-shard-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let source = quick_source(&path);
+        let n = source.schedule().len();
+        assert_eq!(n, 16);
+        for count in 1..=5usize {
+            let mut seen = vec![false; n];
+            for index in 0..count {
+                for slot in source.shard_slots(index, count) {
+                    assert!(slot < n, "slot {slot} out of range");
+                    assert!(!seen[slot], "slot {slot} owned by two shards at count {count}");
+                    seen[slot] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "count {count} left slots unowned");
+        }
+        // And a rebuilt source over the same spec/store yields the same
+        // schedule: enumeration is stable across processes (each shard
+        // builds its own source and must agree on the slot map).
+        let again = quick_source(&path);
+        let keys = |s: &JobSource| -> Vec<String> {
+            s.schedule().iter().map(|j| j.key()).collect()
+        };
+        assert_eq!(keys(&source), keys(&again));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn schedule_orders_by_bound_and_skips_stored_rows() {
+        let path = std::env::temp_dir().join(format!(
+            "carbon3d-source-order-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let source = quick_source(&path);
+        assert_eq!(source.jobs_total(), 16);
+        assert_eq!(source.jobs_skipped(), 0);
+        let mut prev = f64::NEG_INFINITY;
+        for job in source.schedule() {
+            let b = source.bound(job.id).expect("every pending job has a bound");
+            assert!(b.objective_lb >= prev, "schedule not sorted by bound");
+            prev = b.objective_lb;
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

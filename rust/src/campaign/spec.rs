@@ -7,6 +7,8 @@
 //! interleaving, and adding scenarios to a grid never reshuffles the seeds
 //! of the scenarios already present.
 
+use anyhow::{bail, Result};
+
 use crate::area::die::Integration;
 use crate::area::node::ALL_NODES;
 use crate::area::TechNode;
@@ -15,8 +17,8 @@ use crate::ga::{GaParams, Objective};
 
 /// What a campaign optimizes per scenario. A thin, nameable layer over
 /// [`crate::ga::Objective`]: the CLI and the job keys speak these names,
-/// the scheduler combines them with the campaign's [`Deployment`] into the
-/// fitness-level objective it hands the GA.
+/// the job context combines them with the campaign's [`Deployment`] into
+/// the fitness-level objective it hands the GA.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum CampaignObjective {
     /// The paper's objective: embodied carbon x task delay.
@@ -106,7 +108,7 @@ pub struct CampaignSpec {
     /// Skip jobs whose optimistic objective bound provably cannot beat the
     /// best committed objective value in their scenario family
     /// (deterministic; trades per-scenario grid completeness for speed —
-    /// see `scheduler::prune_reason` for the exact semantics).
+    /// see `source::prune_reason` for the exact semantics).
     pub prune: bool,
 }
 
@@ -144,6 +146,50 @@ impl CampaignSpec {
             * self.integrations.len()
             * self.deltas.len()
             * self.fps_floors.len()
+    }
+
+    /// Reject grids with duplicate entries on any axis — a duplicated value
+    /// would enumerate the same scenario twice, then hit a duplicate-key
+    /// store error at the second commit. Numeric axes are compared in the
+    /// 3-decimal form [`JobSpec::key`] encodes, so near-duplicates that
+    /// would collide in the store are caught too; the error names the
+    /// duplicate.
+    pub fn validate(&self) -> Result<()> {
+        fn dup_at<T: PartialEq>(vals: &[T]) -> Option<usize> {
+            (1..vals.len()).find(|&i| vals[..i].contains(&vals[i]))
+        }
+        if let Some(i) = dup_at(&self.models) {
+            bail!("duplicate model {:?} in campaign grid", self.models[i]);
+        }
+        if let Some(i) = dup_at(&self.nodes) {
+            bail!("duplicate node {:?} in campaign grid", self.nodes[i].name());
+        }
+        if let Some(i) = dup_at(&self.integrations) {
+            bail!(
+                "duplicate integration {:?} in campaign grid",
+                integration_name(self.integrations[i])
+            );
+        }
+        let delta_keys: Vec<String> = self.deltas.iter().map(|d| format!("{d:.3}")).collect();
+        if let Some(i) = dup_at(&delta_keys) {
+            bail!(
+                "duplicate δ={}% in campaign grid (δ values are identified to 3 decimals \
+                 in job keys)",
+                self.deltas[i]
+            );
+        }
+        let fps_keys: Vec<Option<String>> =
+            self.fps_floors.iter().map(|f| f.map(|v| format!("{v:.3}"))).collect();
+        if let Some(i) = dup_at(&fps_keys) {
+            match self.fps_floors[i] {
+                Some(f) => bail!(
+                    "duplicate fps floor {f} in campaign grid (fps floors are identified \
+                     to 3 decimals in job keys)"
+                ),
+                None => bail!("duplicate unconstrained fps entry in campaign grid"),
+            }
+        }
+        Ok(())
     }
 
     /// Flatten the grid into jobs, in deterministic model-major order.
@@ -223,18 +269,24 @@ impl JobSpec {
     /// prune bound compares a job against the best committed result in its
     /// family ("the archive's current front", projected on the objective).
     pub fn family(&self) -> String {
-        format!(
-            "{}@{}/{}/{}",
-            self.model,
+        family_of(
+            &self.model,
             self.node.name(),
             integration_name(self.integration),
-            self.objective.name()
+            self.objective.name(),
         )
     }
 }
 
-/// FNV-1a 64-bit hash of a byte string.
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// The family string — ONE definition shared by [`JobSpec::family`] and
+/// the commit pipeline's row parsing, so the two can never drift apart.
+pub(crate) fn family_of(model: &str, node: &str, integration: &str, objective: &str) -> String {
+    format!("{model}@{node}/{integration}/{objective}")
+}
+
+/// FNV-1a 64-bit hash of a byte string (also keys lease-file names and
+/// shard ownership — see `campaign::lease` / `campaign::source`).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -318,6 +370,15 @@ mod tests {
     #[test]
     fn paper_grid_is_at_least_45_jobs() {
         assert_eq!(CampaignSpec::paper_grid().n_jobs(), 5 * 3 * 3);
+    }
+
+    #[test]
+    fn validate_accepts_the_paper_grid() {
+        assert!(small().validate().is_ok());
+        assert!(CampaignSpec::paper_grid().validate().is_ok());
+        // Duplicate-axis rejection (including 3-decimal key-encoding
+        // near-duplicates) is covered in tests/integration.rs: validation
+        // is part of the public CLI contract.
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Append-only JSONL result store with checkpoint/resume.
 //!
-//! One line per completed job, written in schedule order by the scheduler's
-//! single writer. On open, existing rows are parsed and their job keys
-//! indexed, so a restarted campaign skips completed scenarios. A torn final
-//! line (interrupted mid-write, so no trailing newline) is dropped and its
-//! job redone; corruption anywhere else — including an unparseable but
-//! newline-*terminated* final line, which an interrupted append can never
-//! produce — is a loud error rather than silent data loss.
+//! One line per completed job, written in schedule order by the commit
+//! pipeline's single writer. On open, existing rows are parsed and their
+//! job keys indexed, so a restarted campaign skips completed scenarios. A
+//! torn final line (interrupted mid-write, so no trailing newline) is
+//! dropped and its job redone; corruption anywhere else — including an
+//! unparseable but newline-*terminated* final line, which an interrupted
+//! append can never produce — is a loud error rather than silent data
+//! loss. Sharded campaigns coordinate through the sibling
+//! [`crate::campaign::lease`] directory; each shard writes its own store
+//! of this same format.
 
 use std::collections::HashSet;
 use std::fs::{File, OpenOptions};
@@ -66,7 +69,7 @@ impl ResultStore {
                 }
                 Err(e) if i + 1 == lines.len() && !ends_with_newline => {
                     // Torn tail from an interrupted append: drop it; the
-                    // scheduler will redo that job.
+                    // campaign will redo that job.
                     eprintln!(
                         "store {}: ignoring torn final line ({e:#})",
                         path.display()

@@ -43,7 +43,7 @@ pub fn ga_appx_cdp(
 }
 
 /// GA-APPX-CDP over an explicit feasible-multiplier set and integration
-/// style. The `campaign` scheduler uses this with feasibility derived from
+/// style. The campaign executors use this with feasibility derived from
 /// the campaign-global `EvalService` accuracy table (measured or surrogate)
 /// instead of the `DEFAULT_K` analytical model, so accuracy evaluations are
 /// shared across every run in the grid.
@@ -71,9 +71,11 @@ pub fn ga_appx_cdp_with_feasible(
 
 /// The fully-general search entry point: explicit feasible set, integration
 /// style, and objective (embodied CDP, operational-only, or lifetime CDP
-/// under a deployment). The campaign scheduler threads its
+/// under a deployment). `campaign::exec::run_job` threads the campaign's
 /// `CampaignObjective` through here so every candidate the GA evaluates is
-/// scored on lifetime carbon when the campaign asks for it.
+/// scored on lifetime carbon when the campaign asks for it — and because
+/// the GA seed derives from the job key, the result row is a pure function
+/// of the job spec whichever executor (threads or shard process) calls in.
 #[allow(clippy::too_many_arguments)]
 pub fn ga_appx_with_feasible_objective(
     workload: &Workload,

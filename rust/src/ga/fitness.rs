@@ -65,6 +65,23 @@ impl Objective {
             Objective::LifetimeCdp(_) => e.lifetime_cdp,
         }
     }
+
+    /// Combine component-wise lower bounds — embodied carbon, energy per
+    /// inference, task delay — into a lower bound on this objective's
+    /// value. Valid because every objective is monotone non-decreasing in
+    /// each component; the campaign's bound-ordered queue and prune rule
+    /// are built on exactly this composition, so it lives here, beside
+    /// [`Objective::value`], rather than re-deriving the objective shapes
+    /// in the scheduling layer.
+    pub fn lower_bound(&self, carbon_lb_g: f64, energy_lb_j: f64, delay_lb_s: f64) -> f64 {
+        match self {
+            Objective::EmbodiedCdp(_) => carbon_lb_g * delay_lb_s,
+            Objective::OperationalCarbon(d) => d.lifetime_gco2(energy_lb_j),
+            Objective::LifetimeCdp(d) => {
+                (carbon_lb_g + d.lifetime_gco2(energy_lb_j)) * delay_lb_s
+            }
+        }
+    }
 }
 
 /// Everything a fitness evaluation needs.
@@ -393,6 +410,40 @@ mod tests {
         assert_eq!(Objective::embodied().value(&e), e.cdp);
         assert_eq!(Objective::OperationalCarbon(dep).value(&e), e.operational_gco2);
         assert_eq!(Objective::LifetimeCdp(dep).value(&e), e.lifetime_cdp);
+    }
+
+    #[test]
+    fn lower_bound_composes_exactly_like_value() {
+        // Feeding an evaluation's own components through `lower_bound`
+        // must reproduce `value` for every objective: the bound is the
+        // same composition applied to per-component minima.
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let dep = crate::carbon::operational::Deployment {
+            inferences_per_day: 500_000.0,
+            ..Default::default()
+        };
+        let e = evaluate_objective(
+            &chrom(EXACT_ID),
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            None,
+            &Objective::LifetimeCdp(dep),
+        );
+        for obj in [
+            Objective::EmbodiedCdp(dep),
+            Objective::OperationalCarbon(dep),
+            Objective::LifetimeCdp(dep),
+        ] {
+            let composed = obj.lower_bound(e.carbon_g, e.energy_per_inference_j, e.delay_s);
+            assert!(
+                (composed - obj.value(&e)).abs() <= 1e-9 * obj.value(&e).abs(),
+                "{obj:?}: {composed} vs {}",
+                obj.value(&e)
+            );
+        }
     }
 
     #[test]

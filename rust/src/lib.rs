@@ -15,11 +15,14 @@
 //! - **L2/L1 (python/, build-time only)**: JAX CNN + Pallas LUT-matmul
 //!   kernel, lowered once to `artifacts/*.hlo.txt`.
 //! - **campaign**: the production layer on top — runs entire scenario grids
-//!   ({workload} x {node} x {integration} x {δ} x {FPS floor}) on a worker
-//!   pool with a campaign-global accuracy cache, a resumable JSONL result
-//!   store, an incremental checkpointed cross-scenario Pareto archive, and
-//!   selectable objectives (embodied CDP / operational / lifetime CDP) with
-//!   deterministic bound-based job pruning.
+//!   ({workload} x {node} x {integration} x {δ} x {FPS floor}) through
+//!   three explicit layers (JobSource / Executor / CommitPipeline) with a
+//!   campaign-global accuracy cache, a resumable JSONL result store, an
+//!   incremental checkpointed cross-scenario Pareto archive, selectable
+//!   objectives (embodied CDP / operational / lifetime CDP) with
+//!   deterministic bound-based job pruning, and sharded multi-process
+//!   execution (`--shard i/N` + `campaign merge`) whose merged output is
+//!   byte-identical to a single-process run.
 //!
 //! See DESIGN.md (repo root) for the system inventory; measured-vs-paper
 //! numbers are printed by `carbon3d report`.

@@ -46,11 +46,16 @@ fn main() {
 /// Minimal flag parser: positional subcommand + `--key value` / `--flag`.
 struct Opts {
     flags: HashMap<String, String>,
+    /// Non-flag tokens in order, excluding tokens consumed as flag values
+    /// (the rule "a token after `--flag` is its value unless it starts
+    /// with `--`" lives only here).
+    positionals: Vec<String>,
 }
 
 impl Opts {
     fn parse(args: &[String]) -> Self {
         let mut flags = HashMap::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < args.len() {
             if let Some(key) = args[i].strip_prefix("--") {
@@ -63,10 +68,11 @@ impl Opts {
                     i += 1;
                 }
             } else {
+                positionals.push(args[i].clone());
                 i += 1;
             }
         }
-        Self { flags }
+        Self { flags, positionals }
     }
 
     fn has(&self, key: &str) -> bool {
@@ -130,7 +136,14 @@ fn run(args: &[String]) -> Result<()> {
         "map" => cmd_map(&o),
         "carbon" => cmd_carbon(&o),
         "dse" => cmd_dse(&o),
-        "campaign" => cmd_campaign(&o),
+        "campaign" => {
+            if args.get(1).map(String::as_str) == Some("merge") {
+                cmd_campaign_merge(&Opts::parse(&args[2..]))
+            } else {
+                cmd_campaign(&o)
+            }
+        }
+        "front" => cmd_front(&args[1..]),
         "fig2" => cmd_fig2(&o),
         "fig3" => cmd_fig3(&o),
         "report" => cmd_report(&o),
@@ -159,12 +172,25 @@ USAGE: carbon3d <subcommand> [--flags]
            [--out FILE.jsonl] [--resume] [--seed S]
            [--objective embodied-cdp|operational|lifetime-cdp]
            [--lifetime-years Y] [--ipd N] [--grid-gco2-kwh G] [--no-prune]
+           [--shard i/N] [--lease-ttl SECS] [--report-json FILE]
                                 run the whole scenario grid on a worker pool
                                 with a campaign-global accuracy cache, an
                                 objective-aware bound-ordered queue (jobs
                                 that cannot beat the committed front are
                                 pruned), an incremental checkpointed Pareto
-                                archive, and a resumable JSONL result store
+                                archive, and a resumable JSONL result store.
+                                --shard i/N makes this process one of N
+                                lease-coordinated shards writing its own
+                                shard store beside --out
+  campaign merge --shards N [--out FILE.jsonl] <same grid flags>
+                                fold N shard stores into the canonical
+                                store — byte-identical (rows, front sidecar,
+                                report counters) to a single-process run
+  front merge <store.jsonl>... [--axis embodied|lifetime]
+                                merge the Pareto fronts of several stores
+                                (any objectives/deployments) into one
+                                cross-campaign front, each point tagged
+                                with its source store and objective
   fig2 [--quick] [--models a,b] reproduce Fig. 2 (normalized delay/carbon)
   fig3 [--quick] [--model M]    reproduce Fig. 3 (gCO2/mm^2 vs FPS)
   report [--quick]              headline paper-vs-measured claims
@@ -352,12 +378,12 @@ fn cmd_dse(o: &Opts) -> Result<()> {
     Ok(())
 }
 
-fn cmd_campaign(o: &Opts) -> Result<()> {
+/// Build the campaign spec from CLI flags — shared by `campaign`,
+/// `campaign --shard i/N`, and `campaign merge`, which must agree on the
+/// spec for shard stores to merge byte-identically.
+fn campaign_spec_from_opts(o: &Opts) -> Result<carbon3d::campaign::CampaignSpec> {
     use carbon3d::campaign::spec::integration_from_name;
-    use carbon3d::campaign::{
-        run_campaign, start_service, CampaignArchive, CampaignObjective, CampaignSpec, GroupBy,
-        ResultStore,
-    };
+    use carbon3d::campaign::{CampaignObjective, CampaignSpec};
 
     let models_arg = o.get("models", "all");
     let models: Vec<String> = if models_arg == "all" {
@@ -414,7 +440,6 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
     let objective = CampaignObjective::from_name(&obj_arg).ok_or_else(|| {
         anyhow!("unknown objective {obj_arg} (embodied-cdp|operational|lifetime-cdp)")
     })?;
-    let deployment = deployment_from_opts(o)?;
 
     let mut spec = CampaignSpec::new(models, nodes, deltas);
     spec.integrations = integrations;
@@ -422,39 +447,27 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
     spec.ga = ga_params(o)?;
     spec.seed = o.usize("seed", 0xCA4B07)? as u64;
     spec.objective = objective;
-    spec.deployment = deployment;
+    spec.deployment = deployment_from_opts(o)?;
     spec.prune = !o.has("no-prune");
-    let workers = o.usize("workers", 4)?;
-    let out = o.get("out", "results/campaign.jsonl");
-    let resume = o.has("resume");
+    spec.validate()?;
+    Ok(spec)
+}
 
-    let mut store = ResultStore::open(Path::new(&out))?;
-    if !store.is_empty() && !resume {
-        bail!(
-            "store {out} already has {} rows; pass --resume to continue it or remove the file",
-            store.len()
-        );
+/// `--report-json FILE`: persist the timing-free report counters (used by
+/// CI to byte-compare a sharded merge against a single-process run).
+fn write_report_json(o: &Opts, report: &carbon3d::campaign::CampaignReport) -> Result<()> {
+    if let Some(path) = o.flags.get("report-json") {
+        std::fs::write(path, report.deterministic_json().dumps())
+            .with_context(|| format!("write report counters {path}"))?;
     }
-    let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
-    println!(
-        "campaign: {} jobs = {} models x {} nodes x {} integrations x {} deltas x {} fps | \
-         objective {} ({}y, {:.0} inf/day, {:.0} gCO2/kWh) | {workers} workers | \
-         {backend} accuracy backend | store {out}",
-        spec.n_jobs(),
-        spec.models.len(),
-        spec.nodes.len(),
-        spec.integrations.len(),
-        spec.deltas.len(),
-        spec.fps_floors.len(),
-        objective.name(),
-        deployment.lifetime_years,
-        deployment.inferences_per_day,
-        deployment.grid_kgco2_per_kwh * 1000.0,
-    );
-    let report = run_campaign(&spec, workers, &mut store, &svc)?;
-    svc.shutdown();
+    Ok(())
+}
 
-    let axis = objective.carbon_axis();
+fn print_campaign_summary(
+    store: &carbon3d::campaign::ResultStore,
+    axis: carbon3d::campaign::CarbonAxis,
+) -> Result<()> {
+    use carbon3d::campaign::{CampaignArchive, GroupBy};
     let arch = CampaignArchive::load_or_rebuild(
         store.rows(),
         axis,
@@ -471,7 +484,145 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
         arch.points.len()
     );
     println!("{}", arch.pareto_table().render());
+    Ok(())
+}
+
+fn cmd_campaign(o: &Opts) -> Result<()> {
+    use carbon3d::campaign::{
+        run_campaign_with, shard_store_path, start_service, Executor, LeaseDir, ResultStore,
+        ShardId, ShardedExecutor, ThreadPoolExecutor,
+    };
+
+    let spec = campaign_spec_from_opts(o)?;
+    let out = o.get("out", "results/campaign.jsonl");
+    let canonical = Path::new(&out);
+    let shard = match o.flags.get("shard") {
+        Some(s) => Some(ShardId::parse(s)?),
+        None => None,
+    };
+    let store_path = match shard {
+        Some(s) => shard_store_path(canonical, s),
+        None => canonical.to_path_buf(),
+    };
+    let mut store = ResultStore::open(&store_path)?;
+    if !store.is_empty() && !o.has("resume") {
+        bail!(
+            "store {} already has {} rows; pass --resume to continue it or remove the file",
+            store_path.display(),
+            store.len()
+        );
+    }
+    let executor: Box<dyn Executor> = match shard {
+        Some(s) => {
+            let leases = LeaseDir::open(
+                LeaseDir::for_store(canonical),
+                format!("shard{}of{}-pid{}", s.index, s.count, std::process::id()),
+                o.usize("lease-ttl", 900)? as u64,
+            )?;
+            Box::new(ShardedExecutor { shard: s, leases })
+        }
+        None => Box::new(ThreadPoolExecutor::new(o.usize("workers", 4)?)),
+    };
+    let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
+    println!(
+        "campaign: {} jobs = {} models x {} nodes x {} integrations x {} deltas x {} fps | \
+         objective {} ({}y, {:.0} inf/day, {:.0} gCO2/kWh) | {} | \
+         {backend} accuracy backend | store {}",
+        spec.n_jobs(),
+        spec.models.len(),
+        spec.nodes.len(),
+        spec.integrations.len(),
+        spec.deltas.len(),
+        spec.fps_floors.len(),
+        spec.objective.name(),
+        spec.deployment.lifetime_years,
+        spec.deployment.inferences_per_day,
+        spec.deployment.grid_kgco2_per_kwh * 1000.0,
+        executor.describe(),
+        store_path.display(),
+    );
+    let report = run_campaign_with(&spec, executor.as_ref(), &mut store, &svc)?;
+    svc.shutdown();
+    write_report_json(o, &report)?;
+    match shard {
+        Some(s) => {
+            // A shard store is a partial view: skip the archive tables and
+            // point at the merge step instead.
+            println!("{}", report.line());
+            println!(
+                "shard {} done; once every shard finishes, fold the stores with \
+                 `carbon3d campaign merge --shards {} --out {out} <same grid flags>`",
+                s, s.count
+            );
+        }
+        None => {
+            print_campaign_summary(&store, spec.objective.carbon_axis())?;
+            println!("{}", report.line());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_campaign_merge(o: &Opts) -> Result<()> {
+    use carbon3d::campaign::{run_campaign_with, start_service, MergeExecutor, ResultStore};
+
+    let spec = campaign_spec_from_opts(o)?;
+    let shards = o.usize("shards", 0)?;
+    if shards == 0 {
+        bail!("campaign merge requires --shards N (the count the shards ran with)");
+    }
+    let out = o.get("out", "results/campaign.jsonl");
+    let canonical = Path::new(&out);
+    let mut store = ResultStore::open(canonical)?;
+    if !store.is_empty() && !o.has("resume") {
+        bail!(
+            "store {out} already has {} rows; pass --resume to continue it or remove the file",
+            store.len()
+        );
+    }
+    let merge = MergeExecutor::from_shard_stores(canonical, shards)?;
+    let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
+    println!(
+        "campaign merge: folding {shards} shard stores ({} rows) into {out} | \
+         {backend} accuracy backend",
+        merge.n_rows()
+    );
+    let report = run_campaign_with(&spec, &merge, &mut store, &svc)?;
+    svc.shutdown();
+    write_report_json(o, &report)?;
+    print_campaign_summary(&store, spec.objective.carbon_axis())?;
     println!("{}", report.line());
+    Ok(())
+}
+
+fn cmd_front(args: &[String]) -> Result<()> {
+    use carbon3d::campaign::{merge_store_fronts, CarbonAxis};
+
+    const USAGE: &str =
+        "usage: carbon3d front merge <store.jsonl>... [--axis embodied|lifetime]";
+    match args.first().map(String::as_str) {
+        Some("merge") => {}
+        Some(other) => bail!("unknown front subcommand {other:?}; {USAGE}"),
+        None => bail!("{USAGE}"),
+    }
+    let o = Opts::parse(&args[1..]);
+    let stores = &o.positionals;
+    if stores.is_empty() {
+        bail!("front merge needs at least one store path; {USAGE}");
+    }
+    let axis_name = o.get("axis", "lifetime");
+    let axis = CarbonAxis::from_name(&axis_name)
+        .ok_or_else(|| anyhow!("unknown axis {axis_name} (embodied|lifetime)"))?;
+    let merged = merge_store_fronts(stores, axis)?;
+    println!(
+        "== cross-campaign Pareto front ({} carbon / delay / accuracy-drop; {} of {} \
+         front candidates from {} stores) ==",
+        axis.name(),
+        merged.front.len(),
+        merged.points.len(),
+        stores.len()
+    );
+    println!("{}", merged.table().render());
     Ok(())
 }
 

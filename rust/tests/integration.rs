@@ -245,6 +245,134 @@ fn lifetime_objective_shifts_the_campaign_front() {
     }
 }
 
+#[test]
+fn sharded_campaign_merge_matches_single_process_through_public_api() {
+    use carbon3d::campaign::{
+        run_campaign, run_campaign_with, shard_store_path, CampaignArchive, CampaignSpec,
+        LeaseDir, MergeExecutor, ResultStore, ShardId, ShardedExecutor, SurrogateBackend,
+    };
+    use carbon3d::runtime::EvalService;
+
+    let mut spec = CampaignSpec::new(
+        vec!["vgg16".to_string()],
+        vec![TechNode::N45, TechNode::N7],
+        vec![1.0, 3.0],
+    );
+    spec.ga = GaParams { population: 8, generations: 4, patience: 2, ..Default::default() };
+
+    let dir = std::env::temp_dir();
+    let single = dir.join(format!("carbon3d-it-shard-single-{}.jsonl", std::process::id()));
+    let canonical = dir.join(format!("carbon3d-it-shard-merged-{}.jsonl", std::process::id()));
+    let cleanup = |p: &std::path::Path| {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(p));
+    };
+    cleanup(&single);
+    cleanup(&canonical);
+    let _ = std::fs::remove_dir_all(LeaseDir::for_store(&canonical));
+    let shard_paths: Vec<_> =
+        (0..2).map(|i| shard_store_path(&canonical, ShardId { index: i, count: 2 })).collect();
+    for p in &shard_paths {
+        cleanup(p);
+    }
+
+    // Single-process reference.
+    let mut ref_store = ResultStore::open(&single).unwrap();
+    let svc = EvalService::start(SurrogateBackend::default());
+    let ref_report = run_campaign(&spec, 3, &mut ref_store, &svc).unwrap();
+    svc.shutdown();
+    // Every grid point is accounted for (run, or deterministically pruned —
+    // either way the merge below must reproduce the exact same split).
+    assert_eq!(ref_report.jobs_run + ref_report.jobs_pruned, 4);
+    assert!(ref_report.jobs_run > 0);
+
+    // Two lease-coordinated shards, then the merge.
+    for index in 0..2usize {
+        let shard = ShardId { index, count: 2 };
+        let mut store = ResultStore::open(&shard_store_path(&canonical, shard)).unwrap();
+        let leases = LeaseDir::open(
+            LeaseDir::for_store(&canonical),
+            format!("it-shard-{index}"),
+            600,
+        )
+        .unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        run_campaign_with(&spec, &ShardedExecutor { shard, leases }, &mut store, &svc).unwrap();
+        svc.shutdown();
+    }
+    let merge = MergeExecutor::from_shard_stores(&canonical, 2).unwrap();
+    let mut merged_store = ResultStore::open(&canonical).unwrap();
+    let svc = EvalService::start(SurrogateBackend::default());
+    let merged_report = run_campaign_with(&spec, &merge, &mut merged_store, &svc).unwrap();
+    svc.shutdown();
+
+    let bytes = |p: &std::path::Path| std::fs::read_to_string(p).unwrap();
+    assert_eq!(bytes(&single), bytes(&canonical), "merged store diverged");
+    assert_eq!(
+        bytes(&CampaignArchive::checkpoint_path(&single)),
+        bytes(&CampaignArchive::checkpoint_path(&canonical)),
+        "merged front sidecar diverged"
+    );
+    assert_eq!(
+        ref_report.deterministic_json().dumps(),
+        merged_report.deterministic_json().dumps()
+    );
+
+    cleanup(&single);
+    cleanup(&canonical);
+    let _ = std::fs::remove_dir_all(LeaseDir::for_store(&canonical));
+    for p in &shard_paths {
+        cleanup(p);
+    }
+}
+
+#[test]
+fn campaign_spec_validation_names_the_duplicate_axis_entry() {
+    use carbon3d::campaign::CampaignSpec;
+
+    let small = || {
+        CampaignSpec::new(
+            vec!["vgg16".to_string(), "resnet50".to_string()],
+            vec![TechNode::N45, TechNode::N7],
+            vec![1.0, 3.0],
+        )
+    };
+    assert!(small().validate().is_ok());
+    let err = |s: &CampaignSpec| s.validate().unwrap_err().to_string();
+
+    let mut s = small();
+    s.models.push("vgg16".into());
+    assert!(err(&s).contains("vgg16"), "{}", err(&s));
+
+    let mut s = small();
+    s.deltas = vec![1.0, 3.0, 1.0];
+    assert!(err(&s).contains('1'), "{}", err(&s));
+
+    let mut s = small();
+    s.nodes.push(TechNode::N45);
+    assert!(err(&s).contains("45nm"));
+
+    let mut s = small();
+    s.integrations = vec![Integration::ThreeD, Integration::ThreeD];
+    assert!(err(&s).contains("3D"));
+
+    let mut s = small();
+    s.fps_floors = vec![None, Some(30.0), None];
+    assert!(err(&s).contains("unconstrained"));
+    s.fps_floors = vec![Some(30.0), Some(30.0)];
+    assert!(err(&s).contains("30"));
+
+    // Near-duplicates that collide in the key's 3-decimal encoding are
+    // duplicates too: they would produce identical job keys and crash the
+    // store at the second commit if allowed through.
+    let mut s = small();
+    s.deltas = vec![1.0001, 1.0002];
+    assert!(err(&s).contains("3 decimals"), "{}", err(&s));
+    let mut s = small();
+    s.fps_floors = vec![Some(30.0001), Some(30.0002)];
+    assert!(err(&s).contains("3 decimals"), "{}", err(&s));
+}
+
 // ---------------------------------------------------------------- accuracy model
 
 #[test]
