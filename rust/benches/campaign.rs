@@ -103,6 +103,8 @@ fn main() {
             ("elapsed_s", Json::from(t)),
             ("jobs_per_sec", Json::from(report.jobs_per_sec())),
             ("hit_rate", Json::from(report.stats.hit_rate())),
+            ("mapping_hit_rate", Json::from(report.mapping.hit_rate())),
+            ("memo_hit_rate", Json::from(report.memo.hit_rate())),
             ("jobs_pruned", Json::from(report.jobs_pruned)),
             (
                 "speedup_vs_serial",

@@ -1,0 +1,271 @@
+//! Bench eval: the evaluation hot path (DESIGN.md §7.6) — the table-driven
+//! native accuracy datapath vs the retained scalar reference, and the
+//! geometry-keyed mapping cache vs an uncached GA loop over the campaign
+//! smoke grid. Speedups are ratios measured on one machine, so they are
+//! comparable across runners; CI gates on them.
+//!
+//! Modes:
+//!   (default)        more timed iterations, grid repetitions, and a
+//!                    larger synthetic test set (same shapes and grid)
+//!   --smoke          reduced iteration counts — CI-sized
+//!   --json FILE      write the measurements as a JSON document
+//!                    (CI uploads this as the `BENCH_eval.json` artifact)
+//!   --check FILE     compare against a committed baseline and exit
+//!                    non-zero on a >20% speedup regression
+
+use std::sync::Arc;
+
+use carbon3d::accuracy::model::{feasible_multipliers, DEFAULT_K};
+use carbon3d::accuracy::native::{ApproxDatapath, NativeEvaluator, TestSet, Weights, IMG};
+use carbon3d::approx::{library, EXACT_ID};
+use carbon3d::area::node::ALL_NODES;
+use carbon3d::campaign::CampaignSpec;
+use carbon3d::coordinator::ga_appx_with_feasible_objective_shared;
+use carbon3d::dataflow::cache::MappingCache;
+use carbon3d::dataflow::workloads::workload;
+use carbon3d::ga::{EvalShares, GaParams, Objective};
+use carbon3d::util::json::{obj, Json};
+use carbon3d::util::timer::{bench, time_once};
+use carbon3d::util::Rng;
+
+/// The matmul shapes one batch-64 accuracy pass issues (tiny CNN: conv1,
+/// conv2, fc) — the native evaluator's entire hot path.
+const ACCURACY_SHAPES: [(usize, usize, usize); 3] =
+    [(64 * 16 * 16, 9, 8), (64 * 8 * 8, 72, 16), (64, 256, 5)];
+
+fn rand_vec(rng: &mut Rng, len: usize, scale: f64) -> Vec<f32> {
+    (0..len).map(|_| (rng.uniform(-1.0, 1.0) * scale) as f32).collect()
+}
+
+/// Synthetic evaluator: the accuracy pass does not depend on trained
+/// weights for its *timing*, so the bench runs artifact-free.
+fn synthetic_evaluator(n: usize, rng: &mut Rng) -> NativeEvaluator {
+    NativeEvaluator {
+        weights: Weights {
+            conv1_w: rand_vec(rng, 3 * 3 * 8, 0.5),
+            conv1_b: rand_vec(rng, 8, 0.1),
+            conv2_w: rand_vec(rng, 3 * 3 * 8 * 16, 0.25),
+            conv2_b: rand_vec(rng, 16, 0.1),
+            fc_w: rand_vec(rng, 256 * 5, 0.2),
+            fc_b: rand_vec(rng, 5, 0.1),
+        },
+        testset: TestSet {
+            images: rand_vec(rng, n * IMG * IMG, 1.0),
+            labels: (0..n).map(|i| (i % 5) as u8).collect(),
+            n,
+        },
+        exact_accuracy: 0.0,
+    }
+}
+
+/// The campaign bench's smoke grid (2 models x 3 nodes x 1 delta), run as
+/// a plain GA loop so the mapping cache is the only variable.
+fn smoke_spec() -> CampaignSpec {
+    let mut s = CampaignSpec::new(
+        vec!["vgg16".to_string(), "resnet50".to_string()],
+        ALL_NODES.to_vec(),
+        vec![3.0],
+    );
+    s.ga = GaParams { population: 8, generations: 4, patience: 2, elites: 1, ..Default::default() };
+    s
+}
+
+fn run_grid(spec: &CampaignSpec, shares: &EvalShares) {
+    let lib = library();
+    for job in spec.jobs() {
+        let w = workload(&job.model).unwrap();
+        let feasible = feasible_multipliers(&lib, &w, job.delta_pct, DEFAULT_K);
+        std::hint::black_box(ga_appx_with_feasible_objective_shared(
+            &w,
+            job.node,
+            job.integration,
+            &lib,
+            feasible,
+            job.fps_floor,
+            Objective::embodied(),
+            GaParams { seed: job.seed, ..spec.ga },
+            shares,
+        ));
+    }
+}
+
+/// Gate the measured speedups against a committed baseline: fail when a
+/// current ratio drops below 80% of its baseline (>20% regression).
+fn check_against(doc: &Json, path: &str) -> bool {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read baseline {path}: {e}"));
+    let base = Json::parse(&text).unwrap_or_else(|e| panic!("parse baseline {path}: {e}"));
+    let speedup = |v: &Json, section: &str| -> f64 {
+        v.get(section)
+            .and_then(|s| s.get("speedup"))
+            .and_then(|s| s.as_f64())
+            .unwrap_or_else(|e| panic!("{section}.speedup missing: {e}"))
+    };
+    let mut ok = true;
+    for section in ["native", "campaign"] {
+        let b = speedup(&base, section);
+        let c = speedup(doc, section);
+        let floor = b * 0.8;
+        println!("{section} speedup: current {c:.2}x vs baseline {b:.2}x (floor {floor:.2}x)");
+        if c < floor {
+            println!("REGRESSION: {section} speedup {c:.2}x below floor {floor:.2}x");
+            ok = false;
+        }
+    }
+    ok
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke") || std::env::var("BENCH_SMOKE").is_ok();
+    let flag_val = |name: &str| -> Option<String> {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+    };
+    let json_out = flag_val("--json");
+    let check = flag_val("--check");
+    let iters = if smoke { 3 } else { 10 };
+
+    println!("== native eval benches{} ==", if smoke { " (smoke)" } else { "" });
+    let lib = library();
+    let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+    let mut rng = Rng::new(0xBE7C);
+
+    // --- table-driven matmul vs the scalar reference, on the accuracy
+    // pass's own shapes. One correctness pass first: the bench must never
+    // report a speedup for a wrong result. The *gated* ratio is measured
+    // single-threaded — the pure table win, independent of the runner's
+    // core count — with the row-threaded number recorded beside it.
+    let mut shape_docs: Vec<Json> = Vec::new();
+    let (mut ref_total, mut table_total, mut threaded_total) = (0f64, 0f64, 0f64);
+    for &(m, k, n) in &ACCURACY_SHAPES {
+        let a = rand_vec(&mut rng, m * k, 2.0);
+        let b = rand_vec(&mut rng, k * n, 2.0);
+        let want = dp.matmul_reference(&a, &b, m, k, n);
+        let got = dp.matmul(&a, &b, m, k, n);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "table-driven matmul diverged on {m}x{k}x{n}"
+        );
+        let r_ref = bench(
+            &format!("matmul_reference {m}x{k}x{n}"),
+            1,
+            iters,
+            || dp.matmul_reference(&a, &b, m, k, n),
+        );
+        let r_table = bench(&format!("matmul (tables, 1 thread) {m}x{k}x{n}"), 1, iters, || {
+            dp.matmul_with_threads(&a, &b, m, k, n, 1)
+        });
+        let r_threaded =
+            bench(&format!("matmul (tables+threads) {m}x{k}x{n}"), 1, iters, || {
+                dp.matmul(&a, &b, m, k, n)
+            });
+        println!("{}", r_ref.line());
+        println!("{}", r_table.line());
+        println!("{}", r_threaded.line());
+        ref_total += r_ref.summary.mean;
+        table_total += r_table.summary.mean;
+        threaded_total += r_threaded.summary.mean;
+        shape_docs.push(obj([
+            ("m", Json::from(m)),
+            ("k", Json::from(k)),
+            ("n", Json::from(n)),
+            ("reference_s", Json::from(r_ref.summary.mean)),
+            ("table_1t_s", Json::from(r_table.summary.mean)),
+            ("threaded_s", Json::from(r_threaded.summary.mean)),
+        ]));
+    }
+    let native_speedup = ref_total / table_total;
+    let threaded_speedup = ref_total / threaded_total;
+    println!(
+        "native accuracy datapath: reference {:.1}ms vs tables {:.1}ms = {:.2}x \
+         (with row threads: {:.1}ms = {:.2}x)",
+        ref_total * 1e3,
+        table_total * 1e3,
+        native_speedup,
+        threaded_total * 1e3,
+        threaded_speedup
+    );
+
+    // --- full accuracy pass over a synthetic test set (trajectory metric).
+    let ne = synthetic_evaluator(if smoke { 128 } else { 512 }, &mut rng);
+    let r_acc = bench("accuracy pass (synthetic set)", 1, iters, || ne.accuracy(&dp));
+    println!("{}", r_acc.line());
+
+    // --- mapping cache on the campaign smoke grid: identical GA loop, the
+    // shared geometry cache on vs off. Best-of-N per arm: a single sample
+    // is at the mercy of a shared runner's scheduler, and this ratio gates
+    // CI. (A fresh cache per repetition keeps the arms honest.)
+    let spec = smoke_spec();
+    let n_jobs = spec.n_jobs();
+    let grid_reps = if smoke { 2 } else { 3 };
+    let best_of = |mk_shares: &dyn Fn() -> EvalShares| -> (f64, EvalShares) {
+        let mut best = f64::INFINITY;
+        let mut last = mk_shares();
+        for _ in 0..grid_reps {
+            let shares = mk_shares();
+            let (_, t) = time_once(|| run_grid(&spec, &shares));
+            if t < best {
+                best = t;
+            }
+            last = shares;
+        }
+        (best, last)
+    };
+    let (uncached_s, _) = best_of(&|| EvalShares {
+        mapping: Arc::new(MappingCache::disabled()),
+        ..Default::default()
+    });
+    let (cached_s, cached) = best_of(&EvalShares::default);
+    let campaign_speedup = uncached_s / cached_s;
+    let mc = cached.mapping.counts();
+    println!(
+        "campaign smoke grid ({n_jobs} jobs): uncached {uncached_s:.2}s vs cached {cached_s:.2}s \
+         = {campaign_speedup:.2}x | mapping {}/{} hits ({:.0}%), {} unique geometries",
+        mc.hits,
+        mc.lookups(),
+        mc.hit_rate() * 100.0,
+        cached.mapping.len(),
+    );
+
+    let doc = obj([
+        ("bench", Json::from("eval")),
+        ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+        (
+            "native",
+            obj([
+                ("shapes", Json::Arr(shape_docs)),
+                ("reference_s", Json::from(ref_total)),
+                ("table_1t_s", Json::from(table_total)),
+                ("threaded_s", Json::from(threaded_total)),
+                // The gated, core-count-independent ratio: tables vs the
+                // scalar reference, both single-threaded.
+                ("speedup", Json::from(native_speedup)),
+                ("speedup_threaded", Json::from(threaded_speedup)),
+                ("accuracy_pass_s", Json::from(r_acc.summary.mean)),
+            ]),
+        ),
+        (
+            "campaign",
+            obj([
+                ("jobs", Json::from(n_jobs)),
+                ("uncached_s", Json::from(uncached_s)),
+                ("cached_s", Json::from(cached_s)),
+                ("speedup", Json::from(campaign_speedup)),
+                ("mapping_hits", Json::from(mc.hits)),
+                ("mapping_misses", Json::from(mc.misses)),
+                ("unique_geometries", Json::from(cached.mapping.len())),
+            ]),
+        ),
+    ]);
+    if let Some(out) = json_out {
+        std::fs::write(&out, doc.pretty(2)).expect("write bench json");
+        println!("wrote {out}");
+    }
+    if let Some(baseline) = check {
+        if !check_against(&doc, &baseline) {
+            std::process::exit(1);
+        }
+        println!("baseline check passed ({baseline})");
+    }
+}

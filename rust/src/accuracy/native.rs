@@ -8,6 +8,7 @@
 //! (dy,dx,c), 'same' padding, maxpool2, fc).
 
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
@@ -34,21 +35,77 @@ fn pow2_exact(e: i32) -> f32 {
     factor(e1) * factor(e2) * factor(e3)
 }
 
+/// The shared 512-entry exponent-scale table: entry `s` — the sum of two
+/// biased bf16 exponents, so 2..=510 for non-flushed operands — holds
+/// `pow2_exact(s - 268)`, replacing the per-product `pow2_exact` chain of
+/// the scalar path with one load. Process-global: the table depends on
+/// nothing but IEEE-754, so every datapath (and the eval service's
+/// backends) shares one copy.
+fn scale_table() -> &'static [f32] {
+    static SCALE: OnceLock<Vec<f32>> = OnceLock::new();
+    SCALE.get_or_init(|| (0..512i32).map(|s| pow2_exact(s - 268)).collect())
+}
+
+/// Worker threads for row-chunked matmuls: `CARBON3D_MATMUL_THREADS` if
+/// set (0/unparsable ignored), else the machine's available parallelism.
+/// Thread count never changes results — rows are independent and per-row
+/// accumulation order is fixed — so this is purely a throughput knob.
+fn matmul_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("CARBON3D_MATMUL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Decode one operand for the table-driven path: pack `mant<<1 | signbit`
+/// (the sign-folded-LUT index half) and keep the biased exponent
+/// separately; exp == 0 marks zero/denormal (flushed).
+#[inline]
+fn decode(x: f32) -> (u32, i32) {
+    let bits = bf16_round(x).to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let key = ((bits >> 16) & 0x7F) << 1 | (bits >> 31);
+    (key, exp)
+}
+
 /// The approximate MAC datapath for one multiplier LUT.
 pub struct ApproxDatapath {
     /// 128x128 significand products (u16 range), f32 for parity with the
-    /// AOT kernel input.
+    /// AOT kernel input. Retained for `mul` / `matmul_reference`.
     lut: Vec<f32>,
+    /// 256x256 sign-folded LUT: entry `(ma<<1|sa, mb<<1|sb)` holds
+    /// `±lut[ma][mb]` with the product sign folded in, replacing the
+    /// per-product XOR branch with a straight load. Bit-exact because
+    /// IEEE-754 multiplication makes `(-sig)*scale == -(sig*scale)`.
+    slut: Vec<f32>,
 }
 
 impl ApproxDatapath {
     pub fn new(mult: &Multiplier) -> Self {
-        Self { lut: crate::approx::lut_f32(mult) }
+        Self::from_lut(crate::approx::lut_f32(mult))
     }
 
     pub fn from_lut(lut: Vec<f32>) -> Self {
         assert_eq!(lut.len(), 128 * 128);
-        Self { lut }
+        let mut slut = vec![0f32; 256 * 256];
+        for ma in 0..128usize {
+            for mb in 0..128usize {
+                let sig = lut[ma * 128 + mb];
+                for sa in 0..2usize {
+                    for sb in 0..2usize {
+                        let v = if sa != sb { -sig } else { sig };
+                        slut[((ma << 1) | sa) * 256 + ((mb << 1) | sb)] = v;
+                    }
+                }
+            }
+        }
+        Self { lut, slut }
     }
 
     /// One approximate product (ref.approx_mul_elementwise semantics).
@@ -71,42 +128,101 @@ impl ApproxDatapath {
 
     /// [M,K] x [K,N] matmul with f32 accumulation over ascending k.
     ///
-    /// Hot path of the native evaluator (EXPERIMENTS.md §Perf): operands are
-    /// decomposed to (sign|mant, exp) *once* up front instead of re-rounding
-    /// + re-decoding both scalars on every one of the M*K*N products.
+    /// Hot path of the native evaluator, table-driven (DESIGN.md §7.6):
+    /// operands are decomposed to (sign|mant, exp) *once* up front; each
+    /// product is then two loads and a fused sign (the 256x256 sign-folded
+    /// LUT) times a scale lookup (the shared 512-entry exponent table),
+    /// and rows of M are chunked across std threads. Per-row accumulation
+    /// order is unchanged, so results are bit-identical to
+    /// [`ApproxDatapath::matmul_reference`] for every thread count.
     pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        // Small problems (the tiny CNN's fc layer, unit-test shapes) don't
+        // amortize scoped-thread spawn/join; run them inline.
+        const PARALLEL_MIN_PRODUCTS: usize = 1 << 20;
+        let threads =
+            if m * k * n < PARALLEL_MIN_PRODUCTS { 1 } else { matmul_threads() };
+        self.matmul_with_threads(a, b, m, k, n, threads)
+    }
+
+    /// [`ApproxDatapath::matmul`] with an explicit worker count (the
+    /// property tests sweep this to pin thread-count independence).
+    pub fn matmul_with_threads(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        threads: usize,
+    ) -> Vec<f32> {
         assert_eq!(a.len(), m * k);
         assert_eq!(b.len(), k * n);
-        // Pre-decode: pack (mant<<1 | signbit) and keep exp separately;
-        // exp == 0 marks zero/denormal (flushed).
-        #[inline]
-        fn decode(x: f32) -> (u32, i32) {
-            let bits = bf16_round(x).to_bits();
-            let exp = ((bits >> 23) & 0xFF) as i32;
-            let key = ((bits >> 16) & 0x7F) << 1 | (bits >> 31);
-            (key, exp)
-        }
         let da: Vec<(u32, i32)> = a.iter().map(|&x| decode(x)).collect();
         let db: Vec<(u32, i32)> = b.iter().map(|&x| decode(x)).collect();
         let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            for kk in 0..k {
-                let (ka, ea) = da[i * k + kk];
+        if m == 0 || k == 0 || n == 0 {
+            return out; // no products: all-zero output, as the loops produce
+        }
+        let threads = threads.clamp(1, m.max(1));
+        if threads == 1 {
+            self.matmul_rows(&da, &db, &mut out, k, n);
+            return out;
+        }
+        let rows_per = m.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (a_rows, out_rows) in
+                da.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n))
+            {
+                let db = &db;
+                scope.spawn(move || self.matmul_rows(a_rows, db, out_rows, k, n));
+            }
+        });
+        out
+    }
+
+    /// The table-driven row kernel shared by every thread: `a_rows` and
+    /// `out_rows` are matching row chunks of the operand/output matrices.
+    fn matmul_rows(
+        &self,
+        a_rows: &[(u32, i32)],
+        db: &[(u32, i32)],
+        out_rows: &mut [f32],
+        k: usize,
+        n: usize,
+    ) {
+        let scale = scale_table();
+        for (a_row, out_row) in a_rows.chunks(k).zip(out_rows.chunks_mut(n)) {
+            for (kk, &(ka, ea)) in a_row.iter().enumerate() {
                 if ea == 0 {
                     continue;
                 }
-                let row_a_base = ((ka >> 1) * 128) as usize;
-                let sign_a = ka & 1;
-                let out_row = &mut out[i * n..(i + 1) * n];
+                let base = (ka as usize) << 8;
+                let srow = &self.slut[base..base + 256];
                 let b_row = &db[kk * n..(kk + 1) * n];
                 for (o, &(kb, eb)) in out_row.iter_mut().zip(b_row) {
                     if eb == 0 {
                         continue;
                     }
-                    let sig = self.lut[row_a_base + (kb >> 1) as usize];
-                    let scale = pow2_exact(ea + eb - 268);
-                    let v = sig * scale;
-                    *o += if (sign_a ^ (kb & 1)) != 0 { -v } else { v };
+                    *o += srow[kb as usize] * scale[(ea + eb) as usize];
+                }
+            }
+        }
+    }
+
+    /// The retained scalar reference: one `mul` per product with the same
+    /// ascending-k accumulation order. Slow by design — the bit-identity
+    /// property tests and `benches/native.rs` measure the table-driven
+    /// path against this loop.
+    pub fn matmul_reference(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                let out_row = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(&b[kk * n..(kk + 1) * n]) {
+                    *o += self.mul(av, bv);
                 }
             }
         }
@@ -213,19 +329,31 @@ impl NativeEvaluator {
             let logits = self.forward(dp, imgs, b);
             for i in 0..b {
                 let row = &logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                if pred == self.testset.labels[start + i] as usize {
+                if argmax(row) == self.testset.labels[start + i] as usize {
                     correct += 1;
                 }
             }
         }
         correct as f64 / n as f64
     }
+}
+
+/// Deterministic, NaN-safe top-1 argmax: the *first* index holding the
+/// maximum non-NaN value. NaN logits never win (a NaN incumbent is
+/// replaced by the first non-NaN candidate; `>` against NaN is false
+/// otherwise), and an all-NaN row deterministically yields 0 — where the
+/// old `partial_cmp(..).unwrap()` argmax panicked the whole evaluation.
+/// Aggressive approximate multipliers can overflow logits to ±inf and
+/// breed NaNs downstream, so this is reachable from real LUTs, not just
+/// adversarial inputs.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate().skip(1) {
+        if (row[best].is_nan() && !v.is_nan()) || v > row[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 fn relu(mut v: Vec<f32>) -> Vec<f32> {
@@ -384,6 +512,137 @@ mod tests {
                 assert!((got[i * 4 + j] - want).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn scale_table_matches_pow2_exact() {
+        let t = scale_table();
+        assert_eq!(t.len(), 512);
+        for s in 2..=510i32 {
+            assert_eq!(
+                t[s as usize].to_bits(),
+                pow2_exact(s - 268).to_bits(),
+                "exponent sum {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn sign_folded_lut_matches_mul_scalar() {
+        // Single products through the table-driven path equal `mul` bitwise,
+        // across signs, magnitudes, zeros, and denormals.
+        let lib = library();
+        for m in [&lib[EXACT_ID], &lib[5], &lib[17], lib.last().unwrap()] {
+            let dp = ApproxDatapath::new(m);
+            let vals = [
+                0.0f32, -0.0, 1.0, -1.0, 0.3, -0.7, 7.25, -100.0, 1e-3, 1e-39, -1e-39, 3e38,
+            ];
+            for &a in &vals {
+                for &b in &vals {
+                    let got = dp.matmul(&[a], &[b], 1, 1, 1)[0];
+                    let want = {
+                        // Flushed products are skipped by matmul (output
+                        // stays +0.0) and returned as +0.0 by mul; both add
+                        // to the same accumulation.
+                        let v = dp.mul(a, b);
+                        0.0f32 + v
+                    };
+                    assert_eq!(got.to_bits(), want.to_bits(), "{}: mul({a},{b})", m.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_reference_prop() {
+        // The tentpole oracle: the table-driven, row-chunked matmul must be
+        // byte-equal (`to_bits`) to the retained scalar `mul` loop across
+        // multiplier families, random shapes, zeros/denormals, and thread
+        // counts.
+        let lib = library();
+        // One design per family: exact, perforation, truncation,
+        // broken-array, OR-compress, Mitchell, DRUM, hybrid.
+        let family_ids =
+            [EXACT_ID, 1, 8, 13, 21, 28, 29, lib.len() - 1];
+        for (fi, &mid) in family_ids.iter().enumerate() {
+            let dp = ApproxDatapath::new(&lib[mid]);
+            crate::util::prop::check(&format!("matmul-bits-{mid}"), 6, |rng| {
+                let (m, k, n) = (rng.range(1, 9), rng.range(1, 20), rng.range(1, 7));
+                let mut sample = |len: usize| -> Vec<f32> {
+                    (0..len)
+                        .map(|_| match rng.below(8) {
+                            0 => 0.0,
+                            1 => -0.0,
+                            2 => 1e-39,                      // denormal: flushed
+                            3 => (rng.uniform(-3e4, 3e4)) as f32,
+                            _ => (rng.uniform(-4.0, 4.0)) as f32,
+                        })
+                        .collect()
+                };
+                let a = sample(m * k);
+                let b = sample(k * n);
+                let want = dp.matmul_reference(&a, &b, m, k, n);
+                for threads in [1usize, 2, 3, 8] {
+                    let got = dp.matmul_with_threads(&a, &b, m, k, n, threads);
+                    let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+                    let got_bits: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(
+                        got_bits, want_bits,
+                        "family #{fi} (mult {mid}), shape {m}x{k}x{n}, {threads} threads"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn matmul_empty_dims_are_safe() {
+        let lib = library();
+        let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+        assert!(dp.matmul(&[], &[0.0; 12], 0, 3, 4).is_empty());
+        assert_eq!(dp.matmul(&[], &[], 2, 0, 3), vec![0.0; 6]);
+        assert!(dp.matmul(&[1.0, 2.0], &[], 2, 1, 0).is_empty());
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_deterministic_first_max() {
+        // Regression for the `partial_cmp(..).unwrap()` panic: NaN logits
+        // must neither panic nor win, and ties resolve to the first index.
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[3.0, 3.0, 1.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::INFINITY]), 1);
+        assert_eq!(argmax(&[0.25]), 0);
+        assert_eq!(argmax(&[-0.0, 0.0]), 0); // -0.0 == 0.0: first wins
+    }
+
+    #[test]
+    fn accuracy_survives_nan_logits() {
+        // A weight set whose fc bias is NaN drives every logit to NaN; the
+        // pass must yield a deterministic accuracy, not a panic.
+        let n = 4usize;
+        let ne = NativeEvaluator {
+            weights: Weights {
+                conv1_w: vec![0.0; 72],
+                conv1_b: vec![0.0; 8],
+                conv2_w: vec![0.0; 1152],
+                conv2_b: vec![0.0; 16],
+                fc_w: vec![0.0; 1280],
+                fc_b: vec![f32::NAN; 5],
+            },
+            testset: TestSet {
+                images: vec![0.5; n * IMG * IMG],
+                labels: vec![0, 1, 0, 2],
+                n,
+            },
+            exact_accuracy: 0.0,
+        };
+        let lib = library();
+        let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+        // All-NaN rows argmax to class 0: exactly the label-0 images score.
+        let acc = ne.accuracy(&dp);
+        assert!((acc - 0.5).abs() < 1e-12, "accuracy {acc}");
     }
 
     #[test]

@@ -29,14 +29,15 @@ use crate::accuracy::model::{
     drop_pct_from_error, feasible_multipliers, predicted_drop_pct, DEFAULT_K, MEAN_SIG_PRODUCT,
 };
 use crate::accuracy::native::NativeEvaluator;
-use crate::coordinator::ga_appx_with_feasible_objective;
+use crate::coordinator::ga_appx_with_feasible_objective_shared;
+use crate::dataflow::cache::CacheCounts;
 use crate::dataflow::workloads::{workload, Workload};
 use crate::ga::GaParams;
 use crate::runtime::{Artifacts, EvalBackend, EvalClient, EvalService, NativeBackend, ServiceStats};
 use crate::util::json::{obj, Json};
 
 use super::commit::{CommitPipeline, FrontCell, PruneMode};
-use super::source::{calibrated_k, JobCtx, JobSource};
+use super::source::{JobCtx, JobSource};
 use super::spec::{integration_name, CampaignSpec, JobSpec};
 use super::store::ResultStore;
 
@@ -139,6 +140,13 @@ pub struct CampaignReport {
     pub elapsed_s: f64,
     /// Eval-service counter deltas attributable to this campaign.
     pub stats: ServiceStats,
+    /// Geometry-mapping-cache hits/misses across every GA evaluation
+    /// (DESIGN.md §7.6). Concurrency-dependent like `stats` — racing
+    /// threads can both miss one key — so it stays out of
+    /// [`CampaignReport::deterministic_json`].
+    pub mapping: CacheCounts,
+    /// Chromosome-memo hits/misses aggregated over all jobs' GA runs.
+    pub memo: CacheCounts,
 }
 
 impl CampaignReport {
@@ -159,7 +167,8 @@ impl CampaignReport {
         format!(
             "{} jobs ({} run, {} resumed, {} pruned{deferred}) in {:.2}s = {:.2} jobs/s | \
              eval service: {} served, {} evaluated, {} cache hits, {} coalesced \
-             ({:.0}% hit rate)",
+             ({:.0}% hit rate) | mapping cache: {}/{} hits ({:.0}%) | \
+             GA memo: {}/{} hits ({:.0}%)",
             self.jobs_total,
             self.jobs_run,
             self.jobs_skipped,
@@ -171,6 +180,12 @@ impl CampaignReport {
             self.stats.cache_hits,
             self.stats.coalesced,
             self.stats.hit_rate() * 100.0,
+            self.mapping.hits,
+            self.mapping.lookups(),
+            self.mapping.hit_rate() * 100.0,
+            self.memo.hits,
+            self.memo.lookups(),
+            self.memo.hit_rate() * 100.0,
         )
     }
 
@@ -238,6 +253,8 @@ pub fn run_campaign_with(
         jobs_deferred: totals.jobs_deferred,
         elapsed_s: t0.elapsed().as_secs_f64(),
         stats: stats_delta(service.stats(), before),
+        mapping: ctx.shares.mapping.counts(),
+        memo: ctx.shares.memo.counts(),
     })
 }
 
@@ -248,19 +265,18 @@ pub fn run_campaign_with(
 pub(crate) fn run_job(job: &JobSpec, ctx: &JobCtx, client: &EvalClient) -> Result<Json> {
     let w = ctx.workload(&job.model)?;
 
-    // Accuracy table via the campaign-global service. Deliberately
-    // re-derived per job rather than threaded in from the bound pre-pass:
-    // jobs stay self-contained (runnable without a pre-pass), and the
-    // shared `calibrated_k` definition + the service's result cache
-    // guarantee the values agree — the redundancy costs only cached
-    // round-trips, never re-evaluation.
-    let k = calibrated_k(client, &ctx.lib, &ctx.tiny)?;
+    // Calibrated K through the campaign-global service, memoized once per
+    // process in the job context (`JobCtx::k`): the value is a pure
+    // function of the library and the accuracy backend, so the bound
+    // pre-pass and every job agree by construction — without per-job
+    // service round-trips or LUT rebuilds.
+    let k = ctx.k(client)?;
     let feasible = feasible_multipliers(&ctx.lib, w, job.delta_pct, k);
     ensure!(!feasible.is_empty(), "no multiplier satisfies δ={}%", job.delta_pct);
     let n_feasible = feasible.len();
 
     let params = GaParams { seed: job.seed, ..ctx.ga };
-    let r = ga_appx_with_feasible_objective(
+    let r = ga_appx_with_feasible_objective_shared(
         w,
         job.node,
         job.integration,
@@ -269,6 +285,7 @@ pub(crate) fn run_job(job: &JobSpec, ctx: &JobCtx, client: &EvalClient) -> Resul
         job.fps_floor,
         ctx.objective,
         params,
+        &ctx.shares,
     );
 
     let best = &r.best;
@@ -360,12 +377,16 @@ mod tests {
             jobs_deferred: 0,
             elapsed_s: 4.0,
             stats: ServiceStats { served: 100, evaluated: 20, cache_hits: 70, coalesced: 10 },
+            mapping: CacheCounts { hits: 90, misses: 30 },
+            memo: CacheCounts { hits: 25, misses: 75 },
         };
         assert!((r.jobs_per_sec() - 2.0).abs() < 1e-12);
         let line = r.line();
         assert!(line.contains("2.00 jobs/s"), "{line}");
         assert!(line.contains("80% hit rate"), "{line}");
         assert!(line.contains("1 pruned"), "{line}");
+        assert!(line.contains("mapping cache: 90/120 hits (75%)"), "{line}");
+        assert!(line.contains("GA memo: 25/100 hits (25%)"), "{line}");
         assert!(!line.contains("other shards"), "{line}");
         // Shard runs additionally report the jobs other shards own.
         let sharded = CampaignReport { jobs_deferred: 5, ..r };
@@ -382,13 +403,23 @@ mod tests {
             jobs_deferred: 0,
             elapsed_s: 123.0,
             stats: ServiceStats { served: 9, evaluated: 9, cache_hits: 0, coalesced: 0 },
+            mapping: CacheCounts { hits: 7, misses: 3 },
+            memo: CacheCounts { hits: 2, misses: 8 },
         };
         let text = r.deterministic_json().dumps();
         assert!(text.contains("\"jobs_run\":3"), "{text}");
         assert!(!text.contains("elapsed"), "{text}");
         assert!(!text.contains("served"), "{text}");
-        // Equal counters serialize equally whatever the timing.
-        let slower = CampaignReport { elapsed_s: 999.0, ..r };
+        // Cache counters are concurrency-dependent, so they must stay out
+        // of the byte-compared report too.
+        assert!(!text.contains("mapping"), "{text}");
+        assert!(!text.contains("memo"), "{text}");
+        // Equal counters serialize equally whatever the timing or caching.
+        let slower = CampaignReport {
+            elapsed_s: 999.0,
+            mapping: CacheCounts::default(),
+            ..r
+        };
         assert_eq!(text, slower.deterministic_json().dumps());
     }
 }

@@ -8,6 +8,7 @@
 //! shard counts, and resume boundaries.
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -18,7 +19,7 @@ use crate::area::mac::mac_power_uw;
 use crate::carbon::embodied_carbon;
 use crate::dataflow::arch::AccelConfig;
 use crate::dataflow::workloads::{workload, Workload};
-use crate::ga::{GaParams, Objective, SearchSpace};
+use crate::ga::{EvalShares, GaParams, Objective, SearchSpace};
 use crate::runtime::{EvalClient, EvalService};
 
 use super::spec::{CampaignSpec, JobSpec};
@@ -36,6 +37,14 @@ pub struct JobCtx {
     pub ga: GaParams,
     /// Whether provably-hopeless jobs may be skipped (spec `prune`).
     pub prune: bool,
+    /// Evaluation caches shared by every GA run this campaign dispatches
+    /// (DESIGN.md §7.6): the geometry-keyed mapping cache plus the memo
+    /// counters, threaded through every executor's `run_job`.
+    pub shares: EvalShares,
+    /// Calibrated ΔA-model K, computed at most once per process — the
+    /// value is a pure function of the library and the accuracy backend,
+    /// so every job (and the bound pre-pass) agrees by construction.
+    k_cell: OnceLock<f64>,
 }
 
 impl JobCtx {
@@ -52,6 +61,8 @@ impl JobCtx {
             objective: spec.objective.to_fitness(spec.deployment),
             ga: spec.ga,
             prune: spec.prune,
+            shares: EvalShares::default(),
+            k_cell: OnceLock::new(),
         })
     }
 
@@ -59,6 +70,20 @@ impl JobCtx {
         self.workloads
             .get(model)
             .ok_or_else(|| anyhow!("workload {model} not preloaded"))
+    }
+
+    /// The campaign's calibrated K, fetched through the shared accuracy
+    /// service on first use and memoized for the life of the process.
+    /// Previously every job re-derived it (36 cached service round-trips
+    /// plus 36 LUT rebuilds per job); the value never changes, so the
+    /// redundancy bought nothing.
+    pub fn k(&self, client: &EvalClient) -> Result<f64> {
+        if let Some(&k) = self.k_cell.get() {
+            return Ok(k);
+        }
+        let k = calibrated_k(client, &self.lib, &self.tiny)?;
+        // A concurrent first use computes the same value; first set wins.
+        Ok(*self.k_cell.get_or_init(|| k))
     }
 }
 
@@ -204,7 +229,7 @@ impl JobSource {
         let mut bounds: HashMap<usize, JobBound> = HashMap::new();
         if !pending.is_empty() {
             let client = service.client();
-            let k = calibrated_k(&client, &ctx.lib, &ctx.tiny)?;
+            let k = ctx.k(&client)?;
             let mut feasible_sets: HashMap<(String, u64), Vec<usize>> = HashMap::new();
             for job in &pending {
                 let w = ctx.workload(&job.model)?;

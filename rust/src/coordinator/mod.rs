@@ -15,7 +15,7 @@ use crate::accuracy::model::{feasible_multipliers, DEFAULT_K};
 use crate::approx::Multiplier;
 use crate::dataflow::workloads::Workload;
 use crate::ga::{Ga, GaParams, GaResult, SearchSpace};
-use crate::ga::fitness::FitnessCtx;
+use crate::ga::fitness::{EvalShares, FitnessCtx};
 use crate::area::die::Integration;
 use crate::area::TechNode;
 
@@ -87,10 +87,43 @@ pub fn ga_appx_with_feasible_objective(
     objective: crate::ga::Objective,
     params: GaParams,
 ) -> GaResult {
+    ga_appx_with_feasible_objective_shared(
+        workload,
+        node,
+        integration,
+        library,
+        feasible,
+        fps_floor,
+        objective,
+        params,
+        &EvalShares::default(),
+    )
+}
+
+/// [`ga_appx_with_feasible_objective`] over shared evaluation caches
+/// (DESIGN.md §7.6): the campaign executors pass one [`EvalShares`] per
+/// process so every job's GA hits the same geometry-mapping cache — a
+/// geometry mapped for one scenario is free for every later scenario that
+/// shares its `(workload, node, integration)` — and the `dse` CLI passes
+/// one to report cache efficacy. Sharing never changes results: the
+/// cached mapping is the value the mapper computes.
+#[allow(clippy::too_many_arguments)]
+pub fn ga_appx_with_feasible_objective_shared(
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    feasible: Vec<usize>,
+    fps_floor: Option<f64>,
+    objective: crate::ga::Objective,
+    params: GaParams,
+    shares: &EvalShares,
+) -> GaResult {
     assert!(!feasible.is_empty(), "empty feasible-multiplier set");
     let space = SearchSpace::standard(feasible);
     let mut ctx =
-        FitnessCtx::with_objective(workload, node, integration, library, fps_floor, objective);
+        FitnessCtx::with_objective(workload, node, integration, library, fps_floor, objective)
+            .share(shares);
     let mut r = Ga::new(space, params).run(&mut ctx);
     refine_to_min_carbon(&mut r, &ctx);
     r

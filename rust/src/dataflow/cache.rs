@@ -1,0 +1,257 @@
+//! Geometry-keyed mapping cache — the central memo of the evaluation hot
+//! path (DESIGN.md §7.6).
+//!
+//! `map_network`, task delay, and the memory-side area inputs depend only
+//! on the *geometry* of a configuration — `(px, py, rf_bytes, sram_bytes,
+//! node, integration)` plus the workload — and never on the multiplier
+//! gene (`approx_multiplier_lowers_carbon_same_delay` pins `delay_s`
+//! equality across multipliers). The GA, its islands, and every campaign
+//! job therefore re-ran the same mapper search once per multiplier for
+//! each geometry they visited. [`MappingCache`] memoizes the mapping by
+//! workload name + [`GeometryDims`], turning those ~|library|-fold
+//! redundant searches into one; the cached [`NetworkMapping`] is the very
+//! value a direct `map_network` call computes (`Arc`-shared, never
+//! mutated), so evaluations are bit-identical with and without the cache.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::arch::AccelConfig;
+use super::mapper::{map_network, NetworkMapping};
+use super::workloads::Workload;
+use crate::area::die::Integration;
+use crate::area::TechNode;
+
+/// Everything the mapper's output depends on, minus the workload (which
+/// keys the outer map by name so lookups borrow instead of allocating).
+/// Deliberately excludes `mult_id`: the multiplier changes area, energy,
+/// and accuracy — never the tiling, traffic, or delay.
+pub type GeometryDims = (usize, usize, usize, usize, TechNode, Integration);
+
+/// The geometry half of a configuration.
+pub fn geometry_dims(cfg: &AccelConfig) -> GeometryDims {
+    (cfg.px, cfg.py, cfg.rf_bytes, cfg.sram_bytes, cfg.node, cfg.integration)
+}
+
+/// Shared hit/miss counters (relaxed atomics: observability, not
+/// synchronization). Also used for the fitness contexts' chromosome-memo
+/// counters, so one type serves every cache the reports surface.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl CacheStats {
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn counts(&self) -> CacheCounts {
+        CacheCounts {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time snapshot of [`CacheStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounts {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl CacheCounts {
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache; 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Thread-safe memo of `map_network` results keyed by geometry. Cheap to
+/// share (`Arc<MappingCache>` inside `ga::EvalShares`) across the GA
+/// population, island threads, and every job a campaign process runs.
+/// Two-level: workload name (probed borrowed — no allocation per lookup)
+/// over the all-`Copy` [`GeometryDims`].
+pub struct MappingCache {
+    map: RwLock<HashMap<String, HashMap<GeometryDims, Arc<NetworkMapping>>>>,
+    stats: CacheStats,
+    enabled: bool,
+}
+
+impl Default for MappingCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MappingCache {
+    pub fn new() -> Self {
+        Self { map: RwLock::new(HashMap::new()), stats: CacheStats::default(), enabled: true }
+    }
+
+    /// A cache that never stores: every lookup recomputes, reproducing the
+    /// pre-cache evaluation path. Exists so `benches/native.rs` can measure
+    /// the cache's wall-clock win on a like-for-like grid.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::new() }
+    }
+
+    /// The mapping for a configuration's geometry, computed at most once
+    /// per key. Two threads racing on a fresh key may both compute (both
+    /// counted as misses; the first insert wins) — harmless, because the
+    /// value is a pure function of the key.
+    pub fn mapping(&self, w: &Workload, cfg: &AccelConfig) -> Arc<NetworkMapping> {
+        if !self.enabled {
+            self.stats.miss();
+            return Arc::new(map_network(w, cfg));
+        }
+        let dims = geometry_dims(cfg);
+        if let Some(hit) = self
+            .map
+            .read()
+            .expect("mapping cache poisoned")
+            .get(&w.name)
+            .and_then(|per| per.get(&dims))
+        {
+            self.stats.hit();
+            return hit.clone();
+        }
+        self.stats.miss();
+        let fresh = Arc::new(map_network(w, cfg));
+        let mut map = self.map.write().expect("mapping cache poisoned");
+        map.entry(w.name.clone()).or_default().entry(dims).or_insert(fresh).clone()
+    }
+
+    /// Hit/miss counters since construction.
+    pub fn counts(&self) -> CacheCounts {
+        self.stats.counts()
+    }
+
+    /// Distinct (workload, geometry) entries cached so far.
+    pub fn len(&self) -> usize {
+        self.map
+            .read()
+            .expect("mapping cache poisoned")
+            .values()
+            .map(|per| per.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::EXACT_ID;
+    use crate::dataflow::workloads::workload;
+
+    fn cfg(mult_id: usize) -> AccelConfig {
+        AccelConfig {
+            px: 16,
+            py: 16,
+            rf_bytes: 512,
+            sram_bytes: 1 << 20,
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            mult_id,
+        }
+    }
+
+    #[test]
+    fn key_ignores_multiplier_gene() {
+        assert_eq!(geometry_dims(&cfg(EXACT_ID)), geometry_dims(&cfg(7)));
+    }
+
+    #[test]
+    fn same_geometry_different_multiplier_is_one_mapper_run() {
+        let cache = MappingCache::new();
+        let w = workload("resnet50").unwrap();
+        let a = cache.mapping(&w, &cfg(EXACT_ID));
+        let b = cache.mapping(&w, &cfg(9));
+        assert!(Arc::ptr_eq(&a, &b), "distinct mappings for one geometry");
+        let c = cache.counts();
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_mapping_equals_direct_call() {
+        let cache = MappingCache::new();
+        let w = workload("vgg16").unwrap();
+        let c = cfg(3);
+        let cached = cache.mapping(&w, &c);
+        let direct = map_network(&w, &c);
+        assert_eq!(cached.total_cycles, direct.total_cycles);
+        assert_eq!(cached.layers, direct.layers);
+        assert_eq!(cached.delay_s(&c).to_bits(), direct.delay_s(&c).to_bits());
+    }
+
+    #[test]
+    fn different_geometry_or_workload_is_a_fresh_entry() {
+        let cache = MappingCache::new();
+        let w1 = workload("vgg16").unwrap();
+        let w2 = workload("resnet50").unwrap();
+        let mut big = cfg(EXACT_ID);
+        big.px = 32;
+        cache.mapping(&w1, &cfg(EXACT_ID));
+        cache.mapping(&w1, &big);
+        cache.mapping(&w2, &cfg(EXACT_ID));
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.counts().hits, 0);
+    }
+
+    #[test]
+    fn disabled_cache_always_recomputes_but_stays_correct() {
+        let cache = MappingCache::disabled();
+        let w = workload("tinycnn").unwrap();
+        let a = cache.mapping(&w, &cfg(EXACT_ID));
+        let b = cache.mapping(&w, &cfg(EXACT_ID));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(cache.counts(), CacheCounts { hits: 0, misses: 2 });
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let cache = Arc::new(MappingCache::new());
+        let w = workload("tinycnn").unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = cache.clone();
+                let w = &w;
+                s.spawn(move || {
+                    for mult_id in 0..8 {
+                        let m = cache.mapping(w, &cfg(mult_id));
+                        assert!(m.total_cycles > 0);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), 1);
+        let c = cache.counts();
+        assert_eq!(c.lookups(), 32);
+        // At least the strictly-later lookups hit; racing first lookups may
+        // each count a miss, so only the sum is exact.
+        assert!(c.hits >= 32 - 4, "{c:?}");
+    }
+}

@@ -8,6 +8,7 @@
 //! the extension the paper added to nn-dataflow.
 
 pub mod arch;
+pub mod cache;
 pub mod energy;
 pub mod layer;
 pub mod mapper;
@@ -15,6 +16,7 @@ pub mod pipeline;
 pub mod workloads;
 
 pub use arch::AccelConfig;
+pub use cache::{geometry_dims, CacheCounts, CacheStats, GeometryDims, MappingCache};
 pub use energy::EnergyModel;
 pub use layer::{Layer, LayerKind};
 pub use mapper::{map_layer, map_network, LayerMapping, NetworkMapping};

@@ -4,6 +4,7 @@
 //! revisits configurations constantly).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::chromosome::Chromosome;
 use crate::area::die::Integration;
@@ -11,8 +12,8 @@ use crate::area::TechNode;
 use crate::carbon::operational::Deployment;
 use crate::carbon::{carbon_per_mm2, embodied_carbon, CarbonBreakdown};
 use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::cache::{CacheCounts, CacheStats, MappingCache};
 use crate::dataflow::energy::EnergyModel;
-use crate::dataflow::mapper::map_network;
 use crate::dataflow::workloads::Workload;
 use crate::approx::Multiplier;
 
@@ -84,6 +85,18 @@ impl Objective {
     }
 }
 
+/// Caches shared *across* fitness contexts: the geometry-keyed mapping
+/// cache (DESIGN.md §7.6) and the chromosome-memo hit/miss counters. One
+/// instance per campaign process (or per `dse` invocation) threads the
+/// same caches through the GA population, every island thread, and every
+/// campaign job, so a geometry mapped once is never mapped again —
+/// whichever context asks.
+#[derive(Clone, Default)]
+pub struct EvalShares {
+    pub mapping: Arc<MappingCache>,
+    pub memo: Arc<CacheStats>,
+}
+
 /// Everything a fitness evaluation needs.
 pub struct FitnessCtx<'a> {
     pub workload: &'a Workload,
@@ -95,6 +108,10 @@ pub struct FitnessCtx<'a> {
     /// What the search minimizes (embodied CDP unless stated otherwise).
     pub objective: Objective,
     cache: HashMap<Chromosome, Evaluation>,
+    /// Geometry phase memo, shareable across contexts (see [`EvalShares`]).
+    mapping: Arc<MappingCache>,
+    /// Chromosome-memo counters, aggregated across sharing contexts.
+    memo: Arc<CacheStats>,
 }
 
 impl<'a> FitnessCtx<'a> {
@@ -117,15 +134,39 @@ impl<'a> FitnessCtx<'a> {
         fps_floor: Option<f64>,
         objective: Objective,
     ) -> Self {
-        Self { workload, node, integration, library, fps_floor, objective, cache: HashMap::new() }
+        let shares = EvalShares::default();
+        Self {
+            workload,
+            node,
+            integration,
+            library,
+            fps_floor,
+            objective,
+            cache: HashMap::new(),
+            mapping: shares.mapping,
+            memo: shares.memo,
+        }
     }
 
-    /// Evaluate with memoization.
+    /// Adopt shared caches: every context built over the same
+    /// [`EvalShares`] hits one geometry-mapping cache and aggregates one
+    /// set of chromosome-memo counters. Sharing never changes results —
+    /// the cached mapping is the value a direct call computes.
+    pub fn share(mut self, shares: &EvalShares) -> Self {
+        self.mapping = shares.mapping.clone();
+        self.memo = shares.memo.clone();
+        self
+    }
+
+    /// Evaluate with memoization: the chromosome memo first, then the
+    /// geometry/multiplier split (`evaluate_objective_cached`) on a miss.
     pub fn eval(&mut self, c: &Chromosome) -> Evaluation {
         if let Some(e) = self.cache.get(c) {
+            self.memo.hit();
             return *e;
         }
-        let e = evaluate_objective(
+        self.memo.miss();
+        let e = evaluate_objective_cached(
             c,
             self.workload,
             self.node,
@@ -133,6 +174,7 @@ impl<'a> FitnessCtx<'a> {
             self.library,
             self.fps_floor,
             &self.objective,
+            &self.mapping,
         );
         self.cache.insert(c.clone(), e);
         e
@@ -140,6 +182,17 @@ impl<'a> FitnessCtx<'a> {
 
     pub fn cache_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Chromosome-memo hit/miss counters (aggregated across every context
+    /// sharing this one's [`EvalShares`]).
+    pub fn memo_counts(&self) -> CacheCounts {
+        self.memo.counts()
+    }
+
+    /// Geometry-mapping-cache hit/miss counters.
+    pub fn mapping_counts(&self) -> CacheCounts {
+        self.mapping.counts()
     }
 
     /// Lowest-carbon *feasible* design among all evaluated configurations
@@ -234,7 +287,9 @@ pub fn evaluate(
 
 /// Evaluate one chromosome: carbon model (Eq. 1-5) + dataflow delay/energy
 /// models + lifetime accounting under the objective's deployment, with an
-/// FPS-constraint penalty if requested.
+/// FPS-constraint penalty if requested. Standalone form: the geometry
+/// phase recomputes per call — the hot paths go through
+/// [`evaluate_objective_cached`] instead.
 pub fn evaluate_objective(
     c: &Chromosome,
     workload: &Workload,
@@ -244,12 +299,42 @@ pub fn evaluate_objective(
     fps_floor: Option<f64>,
     objective: &Objective,
 ) -> Evaluation {
+    evaluate_objective_cached(
+        c,
+        workload,
+        node,
+        integration,
+        library,
+        fps_floor,
+        objective,
+        &MappingCache::disabled(),
+    )
+}
+
+/// [`evaluate_objective`] with the evaluation split by what actually
+/// varies: the *geometry* phase (`map_network`, delay — a pure function of
+/// `(px, py, rf, sram, node, integration, workload)`) is served by the
+/// shared [`MappingCache`], while the *multiplier* phase (die areas,
+/// embodied carbon, MAC energy, accuracy-constrained fitness) recomputes
+/// per chromosome. Results are bit-identical to the uncached path (pinned
+/// by tests here and by the CI campaign byte-identity gates).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_objective_cached(
+    c: &Chromosome,
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    fps_floor: Option<f64>,
+    objective: &Objective,
+    mappings: &MappingCache,
+) -> Evaluation {
     let mult = &library[c.mult_id];
     let cfg = to_config(c, node, integration);
     let areas = cfg.die_areas(mult);
     let breakdown: CarbonBreakdown = embodied_carbon(&areas, node, integration);
     let carbon_g = breakdown.total_g();
-    let mapping = map_network(workload, &cfg);
+    let mapping = mappings.mapping(workload, &cfg);
     let delay_s = mapping.delay_s(&cfg);
     let fps = 1.0 / delay_s;
     let cdp_v = cdp(carbon_g, delay_s);
@@ -492,5 +577,59 @@ mod tests {
         let b = ctx.eval(&c);
         assert_eq!(a, b);
         assert_eq!(ctx.cache_len(), n);
+        let memo = ctx.memo_counts();
+        assert_eq!((memo.hits, memo.misses), (1, 1));
+    }
+
+    #[test]
+    fn cached_eval_bit_identical_to_uncached_across_multipliers() {
+        // The byte-identity oracle for the geometry/multiplier split: for
+        // designs differing only in the multiplier gene, the shared-cache
+        // path must reproduce the standalone evaluation bit-for-bit, while
+        // charging the mapper exactly once for the shared geometry.
+        let lib = library();
+        let w = workload("vgg16").unwrap();
+        let shares = EvalShares::default();
+        let mut ctx = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, Some(20.0))
+            .share(&shares);
+        let mult_ids = [EXACT_ID, 3, 9, 17, 26, lib.len() - 1];
+        for &mult_id in &mult_ids {
+            let c = chrom(mult_id);
+            let cached = ctx.eval(&c);
+            let plain =
+                evaluate(&c, &w, TechNode::N14, Integration::ThreeD, &lib, Some(20.0));
+            assert_eq!(cached.carbon_g.to_bits(), plain.carbon_g.to_bits(), "mult {mult_id}");
+            assert_eq!(cached.delay_s.to_bits(), plain.delay_s.to_bits(), "mult {mult_id}");
+            assert_eq!(
+                cached.energy_per_inference_j.to_bits(),
+                plain.energy_per_inference_j.to_bits(),
+                "mult {mult_id}"
+            );
+            assert_eq!(cached.fitness.to_bits(), plain.fitness.to_bits(), "mult {mult_id}");
+            assert_eq!(cached, plain, "mult {mult_id}");
+        }
+        // One geometry, many multipliers: exactly one mapper run.
+        let mc = shares.mapping.counts();
+        assert_eq!((mc.misses, mc.hits), (1, mult_ids.len() - 1));
+        assert_eq!(shares.mapping.len(), 1);
+    }
+
+    #[test]
+    fn shared_contexts_aggregate_counters() {
+        let lib = library();
+        let w = workload("resnet50").unwrap();
+        let shares = EvalShares::default();
+        let mut a = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, None)
+            .share(&shares);
+        let mut b = FitnessCtx::new(&w, TechNode::N14, Integration::ThreeD, &lib, None)
+            .share(&shares);
+        let c = chrom(EXACT_ID);
+        assert_eq!(a.eval(&c), b.eval(&c));
+        // Context b's geometry lookup hits the mapping a populated, even
+        // though its own chromosome memo missed.
+        let mc = shares.mapping.counts();
+        assert_eq!((mc.misses, mc.hits), (1, 1));
+        let memo = shares.memo.counts();
+        assert_eq!((memo.hits, memo.misses), (0, 2));
     }
 }

@@ -10,7 +10,7 @@ use std::sync::mpsc;
 
 use super::chromosome::{Chromosome, SearchSpace};
 use super::engine::{Ga, GaParams, GaResult};
-use super::fitness::FitnessCtx;
+use super::fitness::{EvalShares, FitnessCtx};
 use crate::approx::Multiplier;
 use crate::area::die::Integration;
 use crate::area::TechNode;
@@ -35,8 +35,7 @@ impl Default for IslandParams {
     }
 }
 
-/// Run the island GA. The fitness context is rebuilt per island/thread
-/// (models are cheap and pure; the memo cache is per-island).
+/// Run the island GA with fresh caches (see [`run_islands_shared`]).
 #[allow(clippy::too_many_arguments)]
 pub fn run_islands(
     space: &SearchSpace,
@@ -46,6 +45,34 @@ pub fn run_islands(
     integration: Integration,
     library: &[Multiplier],
     fps_floor: Option<f64>,
+) -> GaResult {
+    run_islands_shared(
+        space,
+        params,
+        workload,
+        node,
+        integration,
+        library,
+        fps_floor,
+        &EvalShares::default(),
+    )
+}
+
+/// Run the island GA. The fitness context is rebuilt per island/thread
+/// (models are cheap and pure; the chromosome memo is per-island), but
+/// every island shares `shares`' geometry-mapping cache — islands revisit
+/// the same geometries constantly, differing mostly in the multiplier
+/// gene, so one island's mapper run serves them all.
+#[allow(clippy::too_many_arguments)]
+pub fn run_islands_shared(
+    space: &SearchSpace,
+    params: IslandParams,
+    workload: &Workload,
+    node: TechNode,
+    integration: Integration,
+    library: &[Multiplier],
+    fps_floor: Option<f64>,
+    shares: &EvalShares,
 ) -> GaResult {
     assert!(params.islands >= 1);
     let mut seeds: Vec<Vec<Chromosome>> = vec![Vec::new(); params.islands];
@@ -64,7 +91,8 @@ pub fn run_islands(
                 let space = space.clone();
                 s.spawn(move || {
                     let mut ctx =
-                        FitnessCtx::new(workload, node, integration, library, fps_floor);
+                        FitnessCtx::new(workload, node, integration, library, fps_floor)
+                            .share(shares);
                     let ga_params = GaParams {
                         generations: params.epoch_generations,
                         // Deterministic per (island, epoch) stream.
@@ -220,6 +248,40 @@ mod tests {
             multi.best_eval.fitness,
             single.best_eval.fitness
         );
+    }
+
+    #[test]
+    fn shared_mapping_cache_leaves_results_unchanged() {
+        let (lib, space) = setup();
+        let w = workload("resnet50").unwrap();
+        let p = IslandParams {
+            islands: 3,
+            epoch_generations: 4,
+            epochs: 2,
+            migrants: 1,
+            base: quick_base(),
+        };
+        let shares = EvalShares::default();
+        let shared = run_islands_shared(
+            &space,
+            p,
+            &w,
+            TechNode::N14,
+            Integration::ThreeD,
+            &lib,
+            None,
+            &shares,
+        );
+        let fresh = run_islands(&space, p, &w, TechNode::N14, Integration::ThreeD, &lib, None);
+        assert_eq!(shared.best, fresh.best);
+        assert_eq!(shared.best_eval.fitness.to_bits(), fresh.best_eval.fitness.to_bits());
+        // The islands actually went through the shared cache, and the
+        // cross-island/cross-epoch redundancy shows up as hits (each epoch
+        // re-evaluates its migrants through a fresh per-island memo, so the
+        // shared geometry cache is guaranteed repeat lookups).
+        let mc = shares.mapping.counts();
+        assert!(mc.lookups() > 0);
+        assert!(mc.hits > 0, "{mc:?}");
     }
 
     #[test]

@@ -16,6 +16,9 @@ pub mod nsga;
 
 pub use chromosome::{Chromosome, SearchSpace};
 pub use engine::{Ga, GaParams, GaResult};
-pub use islands::{run_islands, IslandParams};
-pub use fitness::{cdp, evaluate, evaluate_objective, Evaluation, FitnessCtx, Objective};
+pub use islands::{run_islands, run_islands_shared, IslandParams};
+pub use fitness::{
+    cdp, evaluate, evaluate_objective, evaluate_objective_cached, EvalShares, Evaluation,
+    FitnessCtx, Objective,
+};
 pub use nsga::{crowding_distance, non_dominated_sort, pareto_front};

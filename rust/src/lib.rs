@@ -22,7 +22,11 @@
 //!   objectives (embodied CDP / operational / lifetime CDP) with
 //!   deterministic bound-based job pruning, and sharded multi-process
 //!   execution (`--shard i/N` + `campaign merge`) whose merged output is
-//!   byte-identical to a single-process run.
+//!   byte-identical to a single-process run. The evaluation hot path is
+//!   memoized by what actually varies (DESIGN.md §7.6): a geometry-keyed
+//!   mapping cache shared across the GA/islands/jobs and a table-driven
+//!   bit-faithful native datapath — both bit-identical to their direct
+//!   counterparts and CI-gated against perf regressions.
 //!
 //! See DESIGN.md (repo root) for the system inventory; measured-vs-paper
 //! numbers are printed by `carbon3d report`.

@@ -15,9 +15,9 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use carbon3d::accuracy::model::{calibrate_k, predicted_drop_pct, DEFAULT_K};
+use carbon3d::accuracy::model::{calibrate_k, feasible_multipliers, predicted_drop_pct, DEFAULT_K};
 use carbon3d::accuracy::native::{ApproxDatapath, NativeEvaluator};
 use carbon3d::approx::{library, lut_f32, EXACT_ID};
 use carbon3d::area::die::Integration;
@@ -25,7 +25,7 @@ use carbon3d::area::node::ALL_NODES;
 use carbon3d::area::TechNode;
 use carbon3d::carbon::embodied_carbon;
 use carbon3d::coordinator::{
-    ga_appx_cdp, ga_cdp_exact, headline_report, run_fig2, run_fig3,
+    ga_appx_with_feasible_objective_shared, ga_cdp_exact, headline_report, run_fig2, run_fig3,
 };
 use carbon3d::coordinator::fig2::FIG2_MODELS;
 use carbon3d::dataflow::arch::AccelConfig;
@@ -335,10 +335,13 @@ fn cmd_dse(o: &Opts) -> Result<()> {
     );
     let base = ga_cdp_exact(&w, node, &lib, fps_floor, params);
     let islands = o.usize("islands", 0)?;
+    let feasible = feasible_multipliers(&lib, &w, delta, DEFAULT_K);
+    ensure!(!feasible.is_empty(), "no multiplier satisfies δ={delta}%");
+    // One set of shared evaluation caches for the whole search, so the
+    // cache-efficacy line below reflects the run that was just printed.
+    let shares = carbon3d::ga::EvalShares::default();
     let r = if islands > 1 {
-        use carbon3d::accuracy::model::{feasible_multipliers, DEFAULT_K};
-        use carbon3d::ga::{run_islands, IslandParams, SearchSpace};
-        let feasible = feasible_multipliers(&lib, &w, delta, DEFAULT_K);
+        use carbon3d::ga::{run_islands_shared, IslandParams, SearchSpace};
         let space = SearchSpace::standard(feasible);
         let ip = IslandParams {
             islands,
@@ -348,9 +351,19 @@ fn cmd_dse(o: &Opts) -> Result<()> {
             base: params,
         };
         println!("island-model GA: {islands} islands x {} epochs", ip.epochs);
-        run_islands(&space, ip, &w, node, Integration::ThreeD, &lib, fps_floor)
+        run_islands_shared(&space, ip, &w, node, Integration::ThreeD, &lib, fps_floor, &shares)
     } else {
-        ga_appx_cdp(&w, node, &lib, delta, fps_floor, params)
+        ga_appx_with_feasible_objective_shared(
+            &w,
+            node,
+            Integration::ThreeD,
+            &lib,
+            feasible,
+            fps_floor,
+            carbon3d::ga::Objective::embodied(),
+            params,
+            &shares,
+        )
     };
     println!(
         "baseline (GA-CDP-EXACT): {}  carbon {:.1} g, delay {:.2} ms, CDP {:.3}",
@@ -374,6 +387,18 @@ fn cmd_dse(o: &Opts) -> Result<()> {
         (r.best_eval.delay_s / base.best_eval.delay_s - 1.0) * 100.0,
         r.evaluations,
         r.generations_run
+    );
+    let (mc, gm) = (shares.mapping.counts(), shares.memo.counts());
+    println!(
+        "eval caches: {} unique geometries, mapping {}/{} hits ({:.0}%) | \
+         GA memo {}/{} hits ({:.0}%)",
+        shares.mapping.len(),
+        mc.hits,
+        mc.lookups(),
+        mc.hit_rate() * 100.0,
+        gm.hits,
+        gm.lookups(),
+        gm.hit_rate() * 100.0,
     );
     Ok(())
 }

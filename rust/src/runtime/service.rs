@@ -25,6 +25,12 @@ pub trait EvalBackend: Send + 'static {
 }
 
 /// Native bit-faithful backend (no PJRT; used in tests and as fallback).
+///
+/// Each request builds a table-driven [`ApproxDatapath`] (sign-folded
+/// significand LUT + the process-global exponent-scale table, DESIGN.md
+/// §7.6) whose matmul row-chunks across std threads — so the service's
+/// single worker thread still saturates the machine during the one fresh
+/// evaluation per multiplier its result cache admits.
 pub struct NativeBackend(pub NativeEvaluator);
 
 impl EvalBackend for NativeBackend {
@@ -377,6 +383,25 @@ mod tests {
         let svc = EvalService::start(Stub(Arc::new(AtomicUsize::new(0))));
         let stats = svc.shutdown();
         assert_eq!(stats, ServiceStats::default());
+    }
+
+    #[test]
+    fn native_backend_datapath_parity() {
+        // The backend's table-driven datapath must agree with the scalar
+        // reference loop on the exact LUT it is handed — the service-level
+        // view of the bit-identity invariant.
+        let lib = mults();
+        for m in [&lib[0], &lib[9], lib.last().unwrap()] {
+            let dp = ApproxDatapath::from_lut(crate::approx::lut_f32(m));
+            let a: Vec<f32> = (0..48).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+            let b: Vec<f32> = (0..60).map(|i| (i as f32 * 0.61).cos() * 2.0).collect();
+            let got = dp.matmul(&a, &b, 4, 12, 5);
+            let want = dp.matmul_reference(&a, &b, 4, 12, 5);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            );
+        }
     }
 
     #[test]

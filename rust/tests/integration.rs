@@ -141,6 +141,11 @@ fn campaign_runs_a_grid_through_the_public_api() {
         stats.cache_hits + stats.coalesced > 0,
         "second job should reuse the shared service's work: {stats:?}"
     );
+    // The shared geometry-mapping cache served the GA runs and its
+    // counters surface in the report beside the prune/service stats.
+    assert!(report.mapping.lookups() > 0, "{:?}", report.mapping);
+    assert!(report.memo.lookups() > 0, "{:?}", report.memo);
+    assert!(report.line().contains("mapping cache:"), "{}", report.line());
 
     let arch = CampaignArchive::from_rows(store.rows()).unwrap();
     assert_eq!(arch.points.len(), 2);
