@@ -15,6 +15,7 @@ use carbon3d::campaign::{run_campaign, CampaignSpec, ResultStore, SurrogateBacke
 use carbon3d::coordinator::ga_appx_cdp;
 use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::GaParams;
+use carbon3d::obs::{Merge, MetricsSnapshot};
 use carbon3d::runtime::EvalService;
 use carbon3d::util::json::{obj, Json};
 use carbon3d::util::timer::time_once;
@@ -47,6 +48,7 @@ fn main() {
     let n = s.n_jobs();
     let lib = library();
     let mut measurements: Vec<Json> = Vec::new();
+    let metrics_before = MetricsSnapshot::collect();
 
     // Serial baseline: one GA-APPX-CDP invocation per scenario, nothing
     // shared across runs (the pre-campaign workflow). Skipped in smoke
@@ -132,6 +134,9 @@ fn main() {
                 },
             ),
             ("runs", Json::Arr(measurements)),
+            // Process metrics over the whole bench (phase histograms,
+            // cache counters) so the perf trajectory keeps the internals.
+            ("metrics", MetricsSnapshot::collect().diff(&metrics_before).to_json()),
         ]);
         std::fs::write(&out, doc.pretty(2)).expect("write bench json");
         println!("wrote {out}");

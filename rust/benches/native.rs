@@ -24,6 +24,7 @@ use carbon3d::coordinator::ga_appx_with_feasible_objective_shared;
 use carbon3d::dataflow::cache::MappingCache;
 use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::{EvalShares, GaParams, Objective};
+use carbon3d::obs::{Merge, MetricsSnapshot};
 use carbon3d::util::json::{obj, Json};
 use carbon3d::util::timer::{bench, time_once};
 use carbon3d::util::Rng;
@@ -126,6 +127,7 @@ fn main() {
     let iters = if smoke { 3 } else { 10 };
 
     println!("== native eval benches{} ==", if smoke { " (smoke)" } else { "" });
+    let metrics_before = MetricsSnapshot::collect();
     let lib = library();
     let dp = ApproxDatapath::new(&lib[EXACT_ID]);
     let mut rng = Rng::new(0xBE7C);
@@ -257,6 +259,9 @@ fn main() {
                 ("unique_geometries", Json::from(cached.mapping.len())),
             ]),
         ),
+        // Process metrics over the whole bench (native.matmul histograms,
+        // mapper counters) so the perf trajectory keeps the internals.
+        ("metrics", MetricsSnapshot::collect().diff(&metrics_before).to_json()),
     ]);
     if let Some(out) = json_out {
         std::fs::write(&out, doc.pretty(2)).expect("write bench json");

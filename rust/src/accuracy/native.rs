@@ -155,6 +155,7 @@ impl ApproxDatapath {
         n: usize,
         threads: usize,
     ) -> Vec<f32> {
+        let _span = crate::obs::span("native.matmul");
         assert_eq!(a.len(), m * k);
         assert_eq!(b.len(), k * n);
         let da: Vec<(u32, i32)> = a.iter().map(|&x| decode(x)).collect();
@@ -165,6 +166,7 @@ impl ApproxDatapath {
         }
         let threads = threads.clamp(1, m.max(1));
         if threads == 1 {
+            let _chunk = crate::obs::span("native.matmul_chunk");
             self.matmul_rows(&da, &db, &mut out, k, n);
             return out;
         }
@@ -174,7 +176,10 @@ impl ApproxDatapath {
                 da.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n))
             {
                 let db = &db;
-                scope.spawn(move || self.matmul_rows(a_rows, db, out_rows, k, n));
+                scope.spawn(move || {
+                    let _chunk = crate::obs::span("native.matmul_chunk");
+                    self.matmul_rows(a_rows, db, out_rows, k, n)
+                });
             }
         });
         out

@@ -11,6 +11,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
@@ -173,6 +174,20 @@ pub struct CommitPipeline<'a> {
     buffer: BTreeMap<usize, JobOutcome>,
     cursor: usize,
     totals: CommitTotals,
+    t0: Instant,
+    last_heartbeat: Instant,
+    heartbeat_every: Duration,
+}
+
+/// Heartbeat cadence: `CARBON3D_HEARTBEAT_SECS` (fractional seconds; 0
+/// means every commit), default 5s. Only consulted while tracing is on.
+fn heartbeat_interval() -> Duration {
+    std::env::var("CARBON3D_HEARTBEAT_SECS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|s| s.is_finite() && *s >= 0.0)
+        .map(Duration::from_secs_f64)
+        .unwrap_or(Duration::from_secs(5))
 }
 
 impl<'a> CommitPipeline<'a> {
@@ -183,6 +198,7 @@ impl<'a> CommitPipeline<'a> {
         mode: PruneMode,
     ) -> Self {
         let ckpt_path = CampaignArchive::checkpoint_path(store.path());
+        let now = Instant::now();
         Self {
             store,
             front,
@@ -192,6 +208,9 @@ impl<'a> CommitPipeline<'a> {
             buffer: BTreeMap::new(),
             cursor: 0,
             totals: CommitTotals { jobs_run: 0, jobs_pruned: 0, jobs_deferred: 0 },
+            t0: now,
+            last_heartbeat: now,
+            heartbeat_every: heartbeat_interval(),
         }
     }
 
@@ -212,6 +231,9 @@ impl<'a> CommitPipeline<'a> {
     /// cursor, every ready slot is committed immediately.
     pub fn offer(&mut self, job_id: usize, outcome: JobOutcome) -> Result<()> {
         self.buffer.insert(job_id, outcome);
+        // Reorder-buffer occupancy right after insert: how far ahead of the
+        // commit cursor the executors have run.
+        crate::obs::metrics().gauge_set("commit_reorder_depth", self.buffer.len() as u64);
         let schedule = self.source.schedule();
         while self.cursor < schedule.len() {
             let Some(out) = self.buffer.remove(&schedule[self.cursor].id) else {
@@ -219,8 +241,27 @@ impl<'a> CommitPipeline<'a> {
             };
             self.commit_slot(&schedule[self.cursor], out)?;
             self.cursor += 1;
+            self.maybe_heartbeat();
         }
         Ok(())
+    }
+
+    /// Emit a live-progress heartbeat if tracing is on and the cadence
+    /// elapsed. Purely observational: stderr + trace sidecar, never stdout
+    /// or the store.
+    fn maybe_heartbeat(&mut self) {
+        if !crate::obs::enabled() || self.last_heartbeat.elapsed() < self.heartbeat_every {
+            return;
+        }
+        self.last_heartbeat = Instant::now();
+        crate::obs::heartbeat(&crate::obs::Heartbeat {
+            done: self.totals.jobs_run,
+            pruned: self.totals.jobs_pruned,
+            deferred: self.totals.jobs_deferred,
+            committed: self.cursor,
+            scheduled: self.source.schedule().len(),
+            elapsed_s: self.t0.elapsed().as_secs_f64(),
+        });
     }
 
     /// Commit the job at the current cursor slot: apply the authoritative
@@ -233,6 +274,7 @@ impl<'a> CommitPipeline<'a> {
             self.totals.jobs_deferred += 1;
             return Ok(());
         }
+        let _span = crate::obs::span("commit.row");
         let mut st = self.front.inner.lock().unwrap();
         let prune = self.mode.fires(job, self.source.bound(job.id), || {
             st.incumbents.get(&job.family()).copied()
@@ -257,6 +299,9 @@ impl<'a> CommitPipeline<'a> {
             Some((row, ckpt)) => {
                 self.store.append(row)?;
                 write_atomic(&self.ckpt_path, &ckpt.dumps())?;
+                // The archive checkpoint is the durability boundary; keep
+                // the trace sidecar no staler than it.
+                crate::obs::flush();
                 self.totals.jobs_run += 1;
             }
         }

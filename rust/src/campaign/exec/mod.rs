@@ -33,8 +33,10 @@ use crate::coordinator::ga_appx_with_feasible_objective_shared;
 use crate::dataflow::cache::CacheCounts;
 use crate::dataflow::workloads::{workload, Workload};
 use crate::ga::GaParams;
+use crate::obs::{Merge, MetricsSnapshot};
 use crate::runtime::{Artifacts, EvalBackend, EvalClient, EvalService, NativeBackend, ServiceStats};
 use crate::util::json::{obj, Json};
+use crate::util::timer::human_time;
 
 use super::commit::{CommitPipeline, FrontCell, PruneMode};
 use super::source::{JobCtx, JobSource};
@@ -125,7 +127,7 @@ pub fn start_service(artifacts_dir: &Path) -> Result<(EvalService, &'static str)
 }
 
 /// What a finished campaign reports.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct CampaignReport {
     pub jobs_total: usize,
     /// Jobs that ran and committed a row.
@@ -147,6 +149,10 @@ pub struct CampaignReport {
     pub mapping: CacheCounts,
     /// Chromosome-memo hits/misses aggregated over all jobs' GA runs.
     pub memo: CacheCounts,
+    /// Process-metrics delta over the run (queue-wait and per-phase
+    /// histograms feed [`CampaignReport::line`]; benches embed the whole
+    /// snapshot). Timing-dependent, so excluded from `deterministic_json`.
+    pub metrics: MetricsSnapshot,
 }
 
 impl CampaignReport {
@@ -186,7 +192,38 @@ impl CampaignReport {
             self.memo.hits,
             self.memo.lookups(),
             self.memo.hit_rate() * 100.0,
-        )
+        ) + &self.timing_suffix()
+    }
+
+    /// Queue-wait percentiles and per-phase time shares from the metrics
+    /// snapshot. Empty when the snapshot carries no timing data (e.g.
+    /// hand-built reports in tests), leaving `line()` as before.
+    fn timing_suffix(&self) -> String {
+        let mut out = String::new();
+        if let Some(h) = self.metrics.histogram("service.queue_wait") {
+            out.push_str(&format!(
+                " | queue wait p50 {} p95 {}",
+                human_time(h.p50() / 1e6),
+                human_time(h.p95() / 1e6),
+            ));
+        }
+        // Shares are of the summed phase time, not wall-clock: phases run
+        // concurrently across workers, so wall-relative shares would not
+        // add up to anything readable.
+        const PHASES: [&str; 4] = ["ga.run", "mapper.search", "service.eval", "commit.row"];
+        let sums: Vec<(&str, f64)> = PHASES
+            .iter()
+            .filter_map(|n| self.metrics.histogram(n).map(|h| (*n, h.sum as f64)))
+            .collect();
+        let total: f64 = sums.iter().map(|(_, s)| s).sum();
+        if total > 0.0 {
+            out.push_str(" | phases:");
+            for (i, (name, sum)) in sums.iter().enumerate() {
+                let sep = if i > 0 { "," } else { "" };
+                out.push_str(&format!("{sep} {name} {:.0}%", sum / total * 100.0));
+            }
+        }
+        out
     }
 
     /// The timing-free view of the report: job counters only, so an
@@ -201,15 +238,6 @@ impl CampaignReport {
             ("jobs_pruned", Json::from(self.jobs_pruned)),
             ("jobs_deferred", Json::from(self.jobs_deferred)),
         ])
-    }
-}
-
-fn stats_delta(after: ServiceStats, before: ServiceStats) -> ServiceStats {
-    ServiceStats {
-        served: after.served - before.served,
-        evaluated: after.evaluated - before.evaluated,
-        cache_hits: after.cache_hits - before.cache_hits,
-        coalesced: after.coalesced - before.coalesced,
     }
 }
 
@@ -236,10 +264,15 @@ pub fn run_campaign_with(
     service: &EvalService,
 ) -> Result<CampaignReport> {
     spec.validate()?;
+    let _campaign_span = crate::obs::span("campaign.run");
     let ctx = JobCtx::new(spec)?;
     let before = service.stats();
+    let before_metrics = MetricsSnapshot::collect();
     let t0 = Instant::now();
-    let source = JobSource::build(spec, &ctx, store, service)?;
+    let source = {
+        let _span = crate::obs::span("source.build");
+        JobSource::build(spec, &ctx, store, service)?
+    };
     let front = FrontCell::restore(store, spec.objective.carbon_axis())?;
     let mode = executor.prune_mode().gated(spec.prune);
     let mut pipeline = CommitPipeline::new(store, &front, &source, mode);
@@ -252,9 +285,12 @@ pub fn run_campaign_with(
         jobs_pruned: totals.jobs_pruned,
         jobs_deferred: totals.jobs_deferred,
         elapsed_s: t0.elapsed().as_secs_f64(),
-        stats: stats_delta(service.stats(), before),
+        // One shared counter-delta definition (obs::Merge) for every
+        // stats type — the old hand-written `stats_delta` is gone.
+        stats: service.stats().diff(&before),
         mapping: ctx.shares.mapping.counts(),
         memo: ctx.shares.memo.counts(),
+        metrics: MetricsSnapshot::collect().diff(&before_metrics),
     })
 }
 
@@ -263,6 +299,10 @@ pub fn run_campaign_with(
 /// Shared by every executor — a row is a pure function of the job spec,
 /// which is what makes shard stores mergeable byte-identically.
 pub(crate) fn run_job(job: &JobSpec, ctx: &JobCtx, client: &EvalClient) -> Result<Json> {
+    // Per-job phase span: attributes every nested span (ga.run,
+    // mapper.search, ...) on this thread to the job key.
+    let _job_scope = crate::obs::job_scope(&job.key());
+    let _span = crate::obs::span("job.eval");
     let w = ctx.workload(&job.model)?;
 
     // Calibrated K through the campaign-global service, memoized once per
@@ -379,6 +419,7 @@ mod tests {
             stats: ServiceStats { served: 100, evaluated: 20, cache_hits: 70, coalesced: 10 },
             mapping: CacheCounts { hits: 90, misses: 30 },
             memo: CacheCounts { hits: 25, misses: 75 },
+            metrics: MetricsSnapshot::default(),
         };
         assert!((r.jobs_per_sec() - 2.0).abs() < 1e-12);
         let line = r.line();
@@ -394,6 +435,34 @@ mod tests {
     }
 
     #[test]
+    fn report_line_gains_queue_wait_and_phase_shares_when_measured() {
+        let mut snap = MetricsSnapshot::default();
+        let hist = |v: u64| {
+            let h = crate::obs::Histogram::default();
+            h.record(v);
+            h.counts()
+        };
+        snap.histograms.insert("service.queue_wait".into(), hist(100));
+        snap.histograms.insert("ga.run".into(), hist(3_000_000));
+        snap.histograms.insert("mapper.search".into(), hist(1_000_000));
+        let r = CampaignReport {
+            jobs_total: 1,
+            jobs_run: 1,
+            jobs_skipped: 0,
+            jobs_pruned: 0,
+            jobs_deferred: 0,
+            elapsed_s: 1.0,
+            stats: ServiceStats::default(),
+            mapping: CacheCounts::default(),
+            memo: CacheCounts::default(),
+            metrics: snap,
+        };
+        let line = r.line();
+        assert!(line.contains("queue wait p50 100.000us p95 100.000us"), "{line}");
+        assert!(line.contains("phases: ga.run 75%, mapper.search 25%"), "{line}");
+    }
+
+    #[test]
     fn deterministic_json_excludes_timing_and_stats() {
         let r = CampaignReport {
             jobs_total: 4,
@@ -405,6 +474,7 @@ mod tests {
             stats: ServiceStats { served: 9, evaluated: 9, cache_hits: 0, coalesced: 0 },
             mapping: CacheCounts { hits: 7, misses: 3 },
             memo: CacheCounts { hits: 2, misses: 8 },
+            metrics: MetricsSnapshot::default(),
         };
         let text = r.deterministic_json().dumps();
         assert!(text.contains("\"jobs_run\":3"), "{text}");

@@ -95,24 +95,42 @@ impl LeaseDir {
         // Two attempts: the second runs only after this process evicted an
         // expired lease; losing the re-create race then means another
         // claimant got in first, which is a valid Unavailable.
+        let mut reclaimed = false;
         for _ in 0..2 {
             match OpenOptions::new().write(true).create_new(true).open(&path) {
                 Ok(mut f) => {
                     f.write_all(self.lease_doc(key, false).dumps().as_bytes())
                         .with_context(|| format!("write lease {}", path.display()))?;
+                    self.note_claim(key, reclaimed);
                     return Ok(Claim::Acquired);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
                     if !self.expired(&path)? || !self.evict(&path) {
+                        crate::obs::metrics().incr("lease_unavailable", 1);
                         return Ok(Claim::Unavailable);
                     }
+                    reclaimed = true;
                 }
                 Err(e) => {
                     return Err(e).with_context(|| format!("claim lease {}", path.display()))
                 }
             }
         }
+        crate::obs::metrics().incr("lease_unavailable", 1);
         Ok(Claim::Unavailable)
+    }
+
+    /// Observability for a won claim: the `lease.claim` event (with the
+    /// job key) and, when it went through an expired-lease eviction, the
+    /// `lease_reclaims` counter.
+    fn note_claim(&self, key: &str, reclaimed: bool) {
+        if reclaimed {
+            crate::obs::metrics().incr("lease_reclaims", 1);
+        }
+        crate::obs::event(
+            "lease.claim",
+            &[("key", Json::from(key)), ("reclaimed", Json::from(reclaimed))],
+        );
     }
 
     /// Steal `key` only if an *expired* lease exists — the recovery path
@@ -127,6 +145,7 @@ impl LeaseDir {
             Ok(mut f) => {
                 f.write_all(self.lease_doc(key, false).dumps().as_bytes())
                     .with_context(|| format!("write lease {}", path.display()))?;
+                self.note_claim(key, true);
                 Ok(Claim::Acquired)
             }
             Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(Claim::Unavailable),
@@ -143,7 +162,9 @@ impl LeaseDir {
         std::fs::write(&tmp, self.lease_doc(key, true).dumps())
             .with_context(|| format!("write {}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
-            .with_context(|| format!("finalize lease {}", path.display()))
+            .with_context(|| format!("finalize lease {}", path.display()))?;
+        crate::obs::event("lease.done", &[("key", Json::from(key))]);
+        Ok(())
     }
 
     /// Is the lease at `path` expired? Done leases never expire. A lease
@@ -235,10 +256,16 @@ mod tests {
         let a = open(&d, "a", 600);
         let b = open(&d, "b", 600);
         plant(&a, "job", 9_999, false);
+        let m = crate::obs::metrics();
+        let (reclaims0, unavail0) =
+            (m.counter("lease_reclaims"), m.counter("lease_unavailable"));
         // First claimant wins the reclaim; the second sees a fresh lease.
         assert_eq!(a.try_claim("job").unwrap(), Claim::Acquired);
         assert_eq!(b.try_claim("job").unwrap(), Claim::Unavailable);
         assert_eq!(b.steal_expired("job").unwrap(), Claim::Unavailable);
+        // The reclaim and the lost contention both land in the registry.
+        assert!(m.counter("lease_reclaims") > reclaims0);
+        assert!(m.counter("lease_unavailable") > unavail0);
         let _ = std::fs::remove_dir_all(&d);
     }
 

@@ -224,6 +224,68 @@ mod tests {
     }
 
     #[test]
+    fn tracing_never_changes_store_bytes_and_attributes_spans_to_jobs() {
+        // Serialize against other tests that install the global sink; the
+        // assertions below stay robust to spans leaking in from OTHER
+        // campaign tests running concurrently in this process (the sink is
+        // process-global) by matching on this spec's job keys.
+        let _guard = crate::obs::test_sink_guard();
+        let (pu, pt) = (tmp("untraced"), tmp("traced"));
+        for p in [&pu, &pt] {
+            cleanup(p);
+        }
+        let mut spec = quick_spec();
+        spec.models.truncate(1);
+        spec.deltas.truncate(1); // 2 jobs: vgg16 on 45nm and 7nm
+
+        let (report_u, bytes_untraced) = run_spec_to(&spec, &pu, 3);
+
+        let trace = pt.with_extension("trace.jsonl");
+        crate::obs::install(&trace, &pt, None).unwrap();
+        let (report_t, bytes_traced) = run_spec_to(&spec, &pt, 3);
+        let summary = crate::obs::uninstall().unwrap();
+
+        // The determinism contract: tracing must be invisible in the
+        // store, the front checkpoint, and the deterministic report.
+        assert_eq!(bytes_traced, bytes_untraced, "tracing perturbed the store bytes");
+        let front_u = std::fs::read(CampaignArchive::checkpoint_path(&pu)).unwrap();
+        let front_t = std::fs::read(CampaignArchive::checkpoint_path(&pt)).unwrap();
+        assert_eq!(front_u, front_t, "tracing perturbed the front checkpoint");
+        assert_eq!(
+            report_t.deterministic_json().dumps(),
+            report_u.deterministic_json().dumps()
+        );
+
+        // The sidecar validates and attributes spans: every job key gets a
+        // `job.eval` span, and GA runs nest under it even though workers
+        // are ThreadPoolExecutor threads.
+        let r = crate::obs::TraceReport::load(&trace).unwrap();
+        assert_eq!(summary.lines as usize, r.lines);
+        for job in spec.jobs() {
+            let key = job.key();
+            assert!(
+                r.spans
+                    .iter()
+                    .any(|s| s.name == "job.eval" && s.job.as_deref() == Some(key.as_str())),
+                "no job.eval span attributed to {key}"
+            );
+            assert!(
+                r.spans.iter().any(|s| s.name == "ga.run"
+                    && s.parent.as_deref() == Some("job.eval")
+                    && s.job.as_deref() == Some(key.as_str())),
+                "no ga.run span nested under job.eval for {key}"
+            );
+        }
+        assert!(r.job_span_coverage() > 0.0);
+        assert!(r.metrics_lines >= 1, "uninstall writes the final metrics snapshot");
+
+        let _ = std::fs::remove_file(&trace);
+        for p in [&pu, &pt] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
     fn lifetime_objective_changes_keys_and_reports_lifetime_carbon() {
         let p = tmp("lifetime");
         cleanup(&p);

@@ -69,10 +69,17 @@ impl ResultStore {
                 }
                 Err(e) if i + 1 == lines.len() && !ends_with_newline => {
                     // Torn tail from an interrupted append: drop it; the
-                    // campaign will redo that job.
-                    eprintln!(
-                        "store {}: ignoring torn final line ({e:#})",
-                        path.display()
+                    // campaign will redo that job. Routed through the obs
+                    // event API: warns on stderr, bumps the
+                    // `store.torn_append` counter (countable in tests), and
+                    // lands in the trace sidecar when tracing is on.
+                    crate::obs::warn_event(
+                        "store.torn_append",
+                        &format!("store {}: ignoring torn final line ({e:#})", path.display()),
+                        &[
+                            ("store", Json::from(path.display().to_string())),
+                            ("error", Json::from(format!("{e:#}"))),
+                        ],
                     );
                     torn = true;
                 }
@@ -207,9 +214,12 @@ mod tests {
         let mut f = OpenOptions::new().append(true).open(&path).unwrap();
         write!(f, "{{\"key\": \"b\", \"x\":").unwrap();
         drop(f);
+        let torn_before = crate::obs::metrics().counter("store.torn_append");
         let s = ResultStore::open(&path).unwrap();
         assert_eq!(s.len(), 1);
         assert!(!s.contains("b"));
+        // The recovery is an obs event now: countable with tracing off.
+        assert!(crate::obs::metrics().counter("store.torn_append") > torn_before);
         // The torn bytes are gone from disk after reopen.
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 1);

@@ -118,6 +118,8 @@ impl MappingCache {
     pub fn mapping(&self, w: &Workload, cfg: &AccelConfig) -> Arc<NetworkMapping> {
         if !self.enabled {
             self.stats.miss();
+            crate::obs::metrics().incr("mapper_cache_misses", 1);
+            let _span = crate::obs::span("mapper.search");
             return Arc::new(map_network(w, cfg));
         }
         let dims = geometry_dims(cfg);
@@ -129,10 +131,15 @@ impl MappingCache {
             .and_then(|per| per.get(&dims))
         {
             self.stats.hit();
+            crate::obs::metrics().incr("mapper_cache_hits", 1);
             return hit.clone();
         }
         self.stats.miss();
-        let fresh = Arc::new(map_network(w, cfg));
+        crate::obs::metrics().incr("mapper_cache_misses", 1);
+        let fresh = {
+            let _span = crate::obs::span("mapper.search");
+            Arc::new(map_network(w, cfg))
+        };
         let mut map = self.map.write().expect("mapping cache poisoned");
         map.entry(w.name.clone()).or_default().entry(dims).or_insert(fresh).clone()
     }

@@ -63,6 +63,7 @@ impl Ga {
 
     /// Run the evolutionary loop against a fitness context.
     pub fn run(&self, ctx: &mut FitnessCtx) -> GaResult {
+        let _span = crate::obs::span("ga.run");
         let p = self.params;
         let mut rng = Rng::new(p.seed);
 
@@ -75,6 +76,7 @@ impl Ga {
         let mut gens = 0usize;
 
         for _gen in 0..p.generations {
+            let _gen_span = crate::obs::span("ga.generation");
             gens += 1;
             // Step 2: fitness evaluation.
             let evals: Vec<Evaluation> = pop.iter().map(|c| ctx.eval(c)).collect();

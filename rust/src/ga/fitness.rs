@@ -163,9 +163,11 @@ impl<'a> FitnessCtx<'a> {
     pub fn eval(&mut self, c: &Chromosome) -> Evaluation {
         if let Some(e) = self.cache.get(c) {
             self.memo.hit();
+            crate::obs::metrics().incr("ga_memo_hits", 1);
             return *e;
         }
         self.memo.miss();
+        crate::obs::metrics().incr("ga_memo_misses", 1);
         let e = evaluate_objective_cached(
             c,
             self.workload,

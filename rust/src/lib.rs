@@ -39,6 +39,7 @@ pub mod carbon;
 pub mod coordinator;
 pub mod dataflow;
 pub mod ga;
+pub mod obs;
 pub mod runtime;
 pub mod util;
 

@@ -144,6 +144,7 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         "front" => cmd_front(&args[1..]),
+        "trace" => cmd_trace(&args[1..]),
         "fig2" => cmd_fig2(&o),
         "fig3" => cmd_fig3(&o),
         "report" => cmd_report(&o),
@@ -172,7 +173,7 @@ USAGE: carbon3d <subcommand> [--flags]
            [--out FILE.jsonl] [--resume] [--seed S]
            [--objective embodied-cdp|operational|lifetime-cdp]
            [--lifetime-years Y] [--ipd N] [--grid-gco2-kwh G] [--no-prune]
-           [--shard i/N] [--lease-ttl SECS] [--report-json FILE]
+           [--shard i/N] [--lease-ttl SECS] [--report-json FILE] [--trace]
                                 run the whole scenario grid on a worker pool
                                 with a campaign-global accuracy cache, an
                                 objective-aware bound-ordered queue (jobs
@@ -186,6 +187,14 @@ USAGE: carbon3d <subcommand> [--flags]
                                 fold N shard stores into the canonical
                                 store — byte-identical (rows, front sidecar,
                                 report counters) to a single-process run
+  trace report <trace.jsonl> [--top K] [--check]
+                                per-phase breakdown + top-K slowest jobs from
+                                a `<store>.trace.jsonl` sidecar; --check only
+                                validates the schema and prints a summary.
+                                Sidecars come from `campaign --trace` (or
+                                CARBON3D_TRACE=1); tracing never changes the
+                                store/front bytes. CARBON3D_HEARTBEAT_SECS
+                                tunes live-progress cadence (default 5)
   front merge <store.jsonl>... [--axis embodied|lifetime]
                                 merge the Pareto fronts of several stores
                                 (any objectives/deployments) into one
@@ -512,6 +521,68 @@ fn print_campaign_summary(
     Ok(())
 }
 
+/// Tracing is requested by `--trace` or a non-empty, non-"0"
+/// `CARBON3D_TRACE` environment variable.
+fn trace_enabled(o: &Opts) -> bool {
+    o.has("trace")
+        || matches!(std::env::var("CARBON3D_TRACE"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// Install the trace sidecar writer next to `store_path` (so the sidecar
+/// of `campaign.shard0of3.jsonl` is `campaign.shard0of3.trace.jsonl`).
+/// Installed *before* the store opens so recovery events land in the
+/// trace too. Returns the sidecar path for the closing message.
+fn install_tracer(store_path: &Path, shard: Option<&str>) -> Result<std::path::PathBuf> {
+    let trace_path = store_path.with_extension("trace.jsonl");
+    carbon3d::obs::install(&trace_path, store_path, shard)?;
+    eprintln!("[trace] writing sidecar {}", trace_path.display());
+    Ok(trace_path)
+}
+
+/// Close the sidecar (final metrics snapshot, flush) and tell the user
+/// where it went and how to read it.
+fn finish_tracer() {
+    if let Some(s) = carbon3d::obs::uninstall() {
+        println!(
+            "trace: {} lines -> {} (inspect with `carbon3d trace report {}`)",
+            s.lines,
+            s.path.display(),
+            s.path.display()
+        );
+    }
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    use carbon3d::obs::TraceReport;
+
+    const USAGE: &str = "usage: carbon3d trace report <trace.jsonl> [--top K] [--check]";
+    match args.first().map(String::as_str) {
+        Some("report") => {}
+        Some(other) => bail!("unknown trace subcommand {other:?}; {USAGE}"),
+        None => bail!("{USAGE}"),
+    }
+    let o = Opts::parse(&args[1..]);
+    let path = o
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("trace report needs a sidecar path; {USAGE}"))?;
+    let r = TraceReport::load(Path::new(path))?;
+    if o.has("check") {
+        println!(
+            "{path}: OK ({}, {} lines: {} spans, {} events, {} heartbeats, {} metrics)",
+            r.schema,
+            r.lines,
+            r.spans.len(),
+            r.events.len(),
+            r.heartbeats,
+            r.metrics_lines
+        );
+    } else {
+        println!("{}", r.render(o.usize("top", 5)?));
+    }
+    Ok(())
+}
+
 fn cmd_campaign(o: &Opts) -> Result<()> {
     use carbon3d::campaign::{
         run_campaign_with, shard_store_path, start_service, Executor, LeaseDir, ResultStore,
@@ -529,6 +600,10 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
         Some(s) => shard_store_path(canonical, s),
         None => canonical.to_path_buf(),
     };
+    if trace_enabled(o) {
+        let label = shard.map(|s| s.to_string());
+        install_tracer(&store_path, label.as_deref())?;
+    }
     let mut store = ResultStore::open(&store_path)?;
     if !store.is_empty() && !o.has("resume") {
         bail!(
@@ -585,6 +660,7 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
             println!("{}", report.line());
         }
     }
+    finish_tracer();
     Ok(())
 }
 
@@ -598,6 +674,9 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
     }
     let out = o.get("out", "results/campaign.jsonl");
     let canonical = Path::new(&out);
+    if trace_enabled(o) {
+        install_tracer(canonical, Some("merge"))?;
+    }
     let mut store = ResultStore::open(canonical)?;
     if !store.is_empty() && !o.has("resume") {
         bail!(
@@ -617,6 +696,7 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
     write_report_json(o, &report)?;
     print_campaign_summary(&store, spec.objective.carbon_axis())?;
     println!("{}", report.line());
+    finish_tracer();
     Ok(())
 }
 

@@ -1,0 +1,570 @@
+//! Process-wide metrics registry: named atomic counters, gauges, and
+//! fixed-bucket histograms, snapshotted behind one [`MetricsSnapshot`].
+//!
+//! The registry is always on — recording is a read-locked map probe plus
+//! relaxed atomic adds, cheap enough for every instrumentation site the
+//! evaluation stack carries — and it never touches deterministic outputs:
+//! snapshots surface in `CampaignReport::line()`, bench `--json`
+//! artifacts, and the trace sidecar's final `metrics` line, all of which
+//! stay outside the byte-compared store/front/`deterministic_json`.
+//!
+//! Naming convention (DESIGN.md §8): standalone counters and gauges are
+//! `snake_case` (`mapper_cache_hits`, `lease_reclaims`,
+//! `commit_reorder_depth`); histograms are named after the span that
+//! feeds them (`job.eval`, `mapper.search`) and record microseconds.
+//! Value histograms (non-durations) share the same bucket ladder.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Duration;
+
+use crate::util::json::{obj, Json};
+
+/// Histogram bucket upper bounds (inclusive), a 1-2-5 ladder from 1 to
+/// 60e6. For duration histograms the unit is microseconds, so the ladder
+/// spans 1µs..60s; one overflow bucket catches everything above.
+pub const BUCKET_BOUNDS: [u64; 24] = [
+    1,
+    2,
+    5,
+    10,
+    20,
+    50,
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    30_000_000,
+    60_000_000,
+];
+
+/// Bucket count: one per bound plus the overflow bucket.
+pub const N_BUCKETS: usize = BUCKET_BOUNDS.len() + 1;
+
+/// A fixed-bucket histogram over `u64` values (relaxed atomics:
+/// observability, not synchronization — the same contract as
+/// [`crate::dataflow::cache::CacheStats`]).
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for a value: the first bound >= `v`, else overflow.
+    pub fn bucket_index(v: u64) -> usize {
+        BUCKET_BOUNDS.partition_point(|&b| b < v)
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn counts(&self) -> HistogramCounts {
+        HistogramCounts {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time snapshot of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramCounts {
+    pub buckets: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistogramCounts {
+    fn default() -> Self {
+        Self { buckets: [0; N_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistogramCounts {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate at bucket resolution: the upper bound of the
+    /// bucket where the cumulative count crosses `q` (the overflow bucket
+    /// reports the last finite bound — an underestimate, by design, so
+    /// JSON output never carries non-finite numbers).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return BUCKET_BOUNDS.get(i).copied().unwrap_or(BUCKET_BOUNDS[23]) as f64;
+            }
+        }
+        BUCKET_BOUNDS[23] as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    fn to_json(&self) -> Json {
+        obj([
+            ("count", Json::from(self.count as f64)),
+            ("sum", Json::from(self.sum as f64)),
+            ("mean", Json::from(self.mean())),
+            ("p50", Json::from(self.p50())),
+            ("p95", Json::from(self.p95())),
+        ])
+    }
+}
+
+/// Last-written + high-water gauge.
+#[derive(Default)]
+pub struct Gauge {
+    last: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.last.store(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn counts(&self) -> GaugeCounts {
+        GaugeCounts {
+            last: self.last.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time snapshot of a [`Gauge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GaugeCounts {
+    pub last: u64,
+    pub max: u64,
+}
+
+/// The process-wide registry. Instrumentation sites record by `&'static
+/// str` name; names register lazily (one write-lock insert on first use,
+/// read-locked probes — no allocation — after).
+#[derive(Default)]
+pub struct Metrics {
+    counters: RwLock<HashMap<&'static str, Arc<AtomicU64>>>,
+    gauges: RwLock<HashMap<&'static str, Arc<Gauge>>>,
+    hists: RwLock<HashMap<&'static str, Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn incr(&self, name: &'static str, by: u64) {
+        if let Some(c) = self.counters.read().expect("metrics poisoned").get(name) {
+            c.fetch_add(by, Ordering::Relaxed);
+            return;
+        }
+        self.counters
+            .write()
+            .expect("metrics poisoned")
+            .entry(name)
+            .or_default()
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .read()
+            .expect("metrics poisoned")
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn gauge_set(&self, name: &'static str, v: u64) {
+        if let Some(g) = self.gauges.read().expect("metrics poisoned").get(name) {
+            g.set(v);
+            return;
+        }
+        self.gauges.write().expect("metrics poisoned").entry(name).or_default().set(v);
+    }
+
+    /// Record a raw value into the named histogram.
+    pub fn record(&self, name: &'static str, v: u64) {
+        if let Some(h) = self.hists.read().expect("metrics poisoned").get(name) {
+            h.record(v);
+            return;
+        }
+        self.hists.write().expect("metrics poisoned").entry(name).or_default().record(v);
+    }
+
+    /// Record a duration (microsecond resolution) into the named histogram.
+    pub fn record_duration(&self, name: &'static str, d: Duration) {
+        self.record(name, d.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .read()
+                .expect("metrics poisoned")
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: self
+                .gauges
+                .read()
+                .expect("metrics poisoned")
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.counts()))
+                .collect(),
+            histograms: self
+                .hists
+                .read()
+                .expect("metrics poisoned")
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.counts()))
+                .collect(),
+        }
+    }
+}
+
+/// The process-wide registry instance.
+pub fn metrics() -> &'static Metrics {
+    static M: OnceLock<Metrics> = OnceLock::new();
+    M.get_or_init(Metrics::default)
+}
+
+/// Counter-set arithmetic shared by every stats type the reports surface
+/// — the ONE definition of "add two snapshots" / "what happened between
+/// two snapshots", so shard merges, report deltas, and bench embeddings
+/// can never drift apart in how they sum fields.
+pub trait Merge: Sized {
+    /// Fold `other`'s counts into `self` (field-wise add).
+    fn merge(&mut self, other: &Self);
+
+    /// Counts accumulated since `earlier` (field-wise saturating subtract
+    /// — both sides must come from the same monotone source).
+    fn diff(&self, earlier: &Self) -> Self;
+}
+
+/// Fold any number of counter sets into one.
+pub fn merged<T: Merge + Default>(parts: impl IntoIterator<Item = T>) -> T {
+    let mut out = T::default();
+    for p in parts {
+        out.merge(&p);
+    }
+    out
+}
+
+impl Merge for crate::runtime::ServiceStats {
+    fn merge(&mut self, other: &Self) {
+        self.served += other.served;
+        self.evaluated += other.evaluated;
+        self.cache_hits += other.cache_hits;
+        self.coalesced += other.coalesced;
+    }
+
+    fn diff(&self, earlier: &Self) -> Self {
+        Self {
+            served: self.served.saturating_sub(earlier.served),
+            evaluated: self.evaluated.saturating_sub(earlier.evaluated),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            coalesced: self.coalesced.saturating_sub(earlier.coalesced),
+        }
+    }
+}
+
+impl Merge for crate::dataflow::cache::CacheCounts {
+    fn merge(&mut self, other: &Self) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+
+    fn diff(&self, earlier: &Self) -> Self {
+        Self {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+}
+
+impl Merge for HistogramCounts {
+    fn merge(&mut self, other: &Self) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    fn diff(&self, earlier: &Self) -> Self {
+        Self {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+        }
+    }
+}
+
+/// A point-in-time view of the whole registry: the one structure that
+/// carries observability counters between layers (report lines, bench
+/// JSON, the trace sidecar's final `metrics` line).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, GaugeCounts>,
+    pub histograms: BTreeMap<String, HistogramCounts>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot the process-wide registry.
+    pub fn collect() -> Self {
+        metrics().snapshot()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramCounts> {
+        self.histograms.get(name).filter(|h| h.count > 0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::from(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, g)| {
+                            (
+                                k.clone(),
+                                obj([
+                                    ("last", Json::from(g.last as f64)),
+                                    ("max", Json::from(g.max as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl Merge for MetricsSnapshot {
+    fn merge(&mut self, other: &Self) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, g) in &other.gauges {
+            let e = self.gauges.entry(k.clone()).or_default();
+            e.last = e.last.max(g.last);
+            e.max = e.max.max(g.max);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    fn diff(&self, earlier: &Self) -> Self {
+        Self {
+            counters: self
+                .counters
+                .iter()
+                .map(|(k, &v)| {
+                    (k.clone(), v.saturating_sub(earlier.counters.get(k).copied().unwrap_or(0)))
+                })
+                .collect(),
+            // Gauges are not monotone: a delta keeps the later values.
+            gauges: self.gauges.clone(),
+            histograms: self
+                .histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        match earlier.histograms.get(k) {
+                            Some(e) => h.diff(e),
+                            None => h.clone(),
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::cache::CacheCounts;
+    use crate::runtime::ServiceStats;
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper_bounds() {
+        // Values at a bound land in that bound's bucket; one past it spills
+        // into the next; anything above the ladder lands in overflow.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(5), 2);
+        assert_eq!(Histogram::bucket_index(6), 3);
+        assert_eq!(Histogram::bucket_index(1_000), 9);
+        assert_eq!(Histogram::bucket_index(1_001), 10);
+        assert_eq!(Histogram::bucket_index(60_000_000), 23);
+        assert_eq!(Histogram::bucket_index(60_000_001), 24);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 24);
+    }
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let h = Histogram::default();
+        for v in [1u64, 1, 2, 10, 100, 1_000, 100_000] {
+            h.record(v);
+        }
+        let c = h.counts();
+        assert_eq!(c.count, 7);
+        assert_eq!(c.sum, 101_114);
+        assert_eq!(c.buckets[0], 2); // two 1s
+        assert_eq!(c.buckets[1], 1); // the 2
+        // p50 of 7 values = 4th smallest (10) -> its bucket bound 10.
+        assert_eq!(c.p50(), 10.0);
+        // p95 -> 7th value (100_000) -> bound 100_000.
+        assert_eq!(c.p95(), 100_000.0);
+        assert!((c.mean() - 101_114.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let c = HistogramCounts::default();
+        assert_eq!(c.p50(), 0.0);
+        assert_eq!(c.p95(), 0.0);
+        assert_eq!(c.mean(), 0.0);
+    }
+
+    #[test]
+    fn overflow_bucket_reports_finite_quantile() {
+        let h = Histogram::default();
+        h.record(u64::MAX);
+        let c = h.counts();
+        assert_eq!(c.p50(), 60_000_000.0);
+        assert!(c.p50().is_finite());
+    }
+
+    #[test]
+    fn merge_and_diff_are_fieldwise() {
+        let mut a = ServiceStats { served: 10, evaluated: 4, cache_hits: 5, coalesced: 1 };
+        let b = ServiceStats { served: 3, evaluated: 1, cache_hits: 2, coalesced: 0 };
+        a.merge(&b);
+        assert_eq!(a, ServiceStats { served: 13, evaluated: 5, cache_hits: 7, coalesced: 1 });
+        let d = a.diff(&b);
+        assert_eq!(d, ServiceStats { served: 10, evaluated: 4, cache_hits: 5, coalesced: 1 });
+
+        let merged_counts = merged([
+            CacheCounts { hits: 1, misses: 2 },
+            CacheCounts { hits: 10, misses: 20 },
+        ]);
+        assert_eq!(merged_counts, CacheCounts { hits: 11, misses: 22 });
+        assert_eq!(
+            merged_counts.diff(&CacheCounts { hits: 1, misses: 2 }),
+            CacheCounts { hits: 10, misses: 20 }
+        );
+    }
+
+    #[test]
+    fn snapshot_diff_isolates_an_interval() {
+        let m = Metrics::default();
+        m.incr("snap_test_counter", 5);
+        m.record("snap_test_hist", 100);
+        let before = m.snapshot();
+        m.incr("snap_test_counter", 2);
+        m.record("snap_test_hist", 200);
+        m.gauge_set("snap_test_gauge", 7);
+        let delta = m.snapshot().diff(&before);
+        assert_eq!(delta.counter("snap_test_counter"), 2);
+        let h = delta.histogram("snap_test_hist").unwrap();
+        assert_eq!(h.count, 1);
+        assert_eq!(h.sum, 200);
+        assert_eq!(delta.gauges["snap_test_gauge"].max, 7);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_through_the_parser() {
+        let m = Metrics::default();
+        m.incr("json_test_counter", 3);
+        m.record("json.test.hist", 42);
+        m.gauge_set("json_test_gauge", 9);
+        let text = m.snapshot().to_json().dumps();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("counters").unwrap().get("json_test_counter").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        assert_eq!(
+            back.get("histograms").unwrap().get("json.test.hist").unwrap().get("count").unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Structured observability: spans, a process-wide metrics registry, and
+//! a JSONL trace sidecar (DESIGN.md §8).
+//!
+//! Three layers with different costs and different gates:
+//!
+//! 1. **Metrics** ([`metrics`], [`MetricsSnapshot`]) — always on. Named
+//!    atomic counters/gauges/histograms; recording is lock-free on the
+//!    steady state and never touches deterministic outputs.
+//! 2. **Spans** ([`span`], [`job_scope`]) — the timing histogram feed is
+//!    always on; nesting bookkeeping and sidecar lines only happen while
+//!    a sink is installed. Disabled spans allocate nothing.
+//! 3. **Sink** ([`install`], [`uninstall`], [`flush`]) — opt-in via
+//!    `carbon3d campaign --trace` / `CARBON3D_TRACE=1`; writes the
+//!    `<store>.trace.jsonl` sidecar read back by `carbon3d trace report`.
+//!
+//! Determinism contract: nothing in this module writes to the result
+//! store, the `.front.json` checkpoint, or `deterministic_json()`; the
+//! sidecar is a separate file keyed off the store path. CI's
+//! `trace-smoke` job byte-compares traced vs. untraced runs.
+
+pub mod metrics;
+pub mod report;
+pub mod sink;
+pub mod span;
+
+pub use metrics::{merged, metrics, Histogram, HistogramCounts, Merge, Metrics, MetricsSnapshot};
+pub use report::TraceReport;
+pub use sink::{enabled, flush, heartbeat, install, uninstall, Heartbeat, TraceSummary};
+pub use span::{job_scope, span, JobScope, Span};
+
+use crate::util::json::Json;
+
+/// Record a point event: always bumps the counter named `name` in the
+/// metrics registry (so events are countable with tracing off — e.g.
+/// `store.torn_append` in tests), and writes a sidecar `event` line when
+/// a sink is installed.
+pub fn event(name: &'static str, fields: &[(&str, Json)]) {
+    metrics().incr(name, 1);
+    sink::write_event(name, fields);
+}
+
+/// [`event`] plus an unconditional human-readable warning on stderr —
+/// for recovery paths that must stay visible on untraced runs (the
+/// store's torn-append warning).
+pub fn warn_event(name: &'static str, human: &str, fields: &[(&str, Json)]) {
+    eprintln!("{human}");
+    event(name, fields);
+}
+
+/// Serializes tests that install the process-global trace sink (cargo
+/// runs tests of one binary concurrently in one process).
+#[cfg(test)]
+pub(crate) fn test_sink_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use std::path::{Path, PathBuf};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("carbon3d-obs-{tag}-{}.trace.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn sink_schema_round_trips_through_the_report_loader() {
+        let _guard = test_sink_guard();
+        let path = tmp("roundtrip");
+        install(&path, Path::new("/tmp/demo.jsonl"), Some("0/2")).unwrap();
+        {
+            let _job = job_scope("vgg16|7nm|d3");
+            let _outer = span("job.eval");
+            {
+                let _inner = span("ga.run");
+            }
+        }
+        event("lease.claim", &[("key", Json::from("vgg16|7nm|d3"))]);
+        heartbeat(&Heartbeat {
+            done: 3,
+            pruned: 1,
+            deferred: 0,
+            committed: 4,
+            scheduled: 8,
+            elapsed_s: 2.0,
+        });
+        let summary = uninstall().unwrap();
+        assert_eq!(summary.path, path);
+
+        let r = TraceReport::load(&path).unwrap();
+        assert_eq!(r.schema, sink::SCHEMA);
+        assert_eq!(r.store, "/tmp/demo.jsonl");
+        assert_eq!(r.shard.as_deref(), Some("0/2"));
+        assert_eq!(r.heartbeats, 1);
+        assert_eq!(r.metrics_lines, 1);
+        assert_eq!(r.events, vec!["lease.claim".to_string()]);
+        // header + 2 spans + event + heartbeat + metrics
+        assert_eq!(r.lines, 6);
+        assert_eq!(summary.lines, 6);
+
+        // Nesting: ga.run closed under job.eval, both attributed to the job.
+        let inner = r.spans.iter().find(|s| s.name == "ga.run").unwrap();
+        assert_eq!(inner.parent.as_deref(), Some("job.eval"));
+        assert_eq!(inner.depth, 1);
+        assert_eq!(inner.job.as_deref(), Some("vgg16|7nm|d3"));
+        let outer = r.spans.iter().find(|s| s.name == "job.eval").unwrap();
+        assert_eq!(outer.parent, None);
+        assert_eq!(outer.depth, 0);
+
+        // Render paths don't panic and mention the phases.
+        let text = r.render(5);
+        assert!(text.contains("job.eval"));
+        assert!(text.contains("slowest jobs"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn loader_rejects_bad_lines() {
+        let _guard = test_sink_guard();
+        let path = tmp("invalid");
+        // No header.
+        std::fs::write(&path, "{\"kind\":\"span\"}\n").unwrap();
+        assert!(TraceReport::load(&path).is_err());
+        // Wrong schema version.
+        std::fs::write(
+            &path,
+            "{\"kind\":\"header\",\"schema\":\"carbon3d-trace/999\",\"pid\":1,\
+             \"store\":\"s\",\"shard\":null}\n",
+        )
+        .unwrap();
+        assert!(TraceReport::load(&path).is_err());
+        // Valid header, span missing dur_us.
+        let header = obj([
+            ("kind", Json::from("header")),
+            ("schema", Json::from(sink::SCHEMA)),
+            ("pid", Json::from(1.0)),
+            ("store", Json::from("s")),
+            ("shard", Json::Null),
+        ]);
+        std::fs::write(
+            &path,
+            format!("{}\n{{\"kind\":\"span\",\"name\":\"x\",\"t_us\":0}}\n", header.dumps()),
+        )
+        .unwrap();
+        let err = TraceReport::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains(":2"), "error should cite the line: {err:#}");
+        // Unknown kind.
+        std::fs::write(&path, format!("{}\n{{\"kind\":\"mystery\"}}\n", header.dumps())).unwrap();
+        assert!(TraceReport::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn events_count_with_tracing_off_but_write_no_sidecar() {
+        let _guard = test_sink_guard();
+        assert!(!enabled());
+        let before = metrics().snapshot();
+        event("obs.test.event", &[("k", Json::from(1.0))]);
+        event("obs.test.event", &[]);
+        let delta = metrics().snapshot().diff(&before);
+        assert_eq!(delta.counter("obs.test.event"), 2);
+    }
+
+    #[test]
+    fn job_span_coverage_merges_overlaps() {
+        let _guard = test_sink_guard();
+        let path = tmp("coverage");
+        let header = obj([
+            ("kind", Json::from("header")),
+            ("schema", Json::from(sink::SCHEMA)),
+            ("pid", Json::from(1.0)),
+            ("store", Json::from("s")),
+            ("shard", Json::Null),
+        ]);
+        let span_line = |t: f64, d: f64| {
+            obj([
+                ("kind", Json::from("span")),
+                ("name", Json::from("job.eval")),
+                ("t_us", Json::from(t)),
+                ("dur_us", Json::from(d)),
+                ("depth", Json::from(0.0)),
+                ("parent", Json::Null),
+                ("job", Json::from("j")),
+                ("thread", Json::from(0.0)),
+            ])
+            .dumps()
+        };
+        // Two overlapping worker spans [0,60] + [40,100] and a gap to 200.
+        std::fs::write(
+            &path,
+            format!(
+                "{}\n{}\n{}\n{}\n",
+                header.dumps(),
+                span_line(0.0, 60.0),
+                span_line(40.0, 60.0),
+                span_line(150.0, 50.0)
+            ),
+        )
+        .unwrap();
+        let r = TraceReport::load(&path).unwrap();
+        assert_eq!(r.wall_us(), 200);
+        assert!((r.job_span_coverage() - 0.75).abs() < 1e-9);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,264 @@
+//! Trace sidecar reader: strict schema validation (`trace report
+//! --check`) plus the per-phase breakdown and top-K-slowest-jobs tables
+//! behind `carbon3d trace report`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::timer::human_time;
+
+use super::sink::SCHEMA;
+
+/// One closed span parsed from a sidecar line.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    pub name: String,
+    pub parent: Option<String>,
+    pub depth: usize,
+    pub job: Option<String>,
+    pub t_us: u64,
+    pub dur_us: u64,
+    pub thread: u64,
+}
+
+/// A fully parsed + validated trace sidecar.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub schema: String,
+    pub store: String,
+    pub shard: Option<String>,
+    pub spans: Vec<SpanRec>,
+    pub events: Vec<String>,
+    pub heartbeats: usize,
+    pub metrics_lines: usize,
+    pub lines: usize,
+}
+
+fn req_num(v: &Json, key: &str) -> Result<f64> {
+    v.get(key).with_context(|| format!("field {key:?}"))?.as_f64()
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key).with_context(|| format!("field {key:?}"))?.as_str()?.to_string())
+}
+
+fn opt_str(v: &Json, key: &str) -> Result<Option<String>> {
+    match v.get(key).with_context(|| format!("field {key:?}"))? {
+        Json::Null => Ok(None),
+        Json::Str(s) => Ok(Some(s.clone())),
+        other => bail!("field {key:?}: expected string or null, got {other:?}"),
+    }
+}
+
+impl TraceReport {
+    /// Parse and strictly validate a sidecar. Every line must be a JSON
+    /// object of a known `kind` with all required fields; the first line
+    /// must be a `header` carrying the expected schema version.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let mut report: Option<TraceReport> = None;
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let v = Json::parse(line)
+                .with_context(|| format!("{}:{lineno}: invalid JSON", path.display()))?;
+            (|| -> Result<()> {
+                let kind = req_str(&v, "kind")?;
+                match (kind.as_str(), &mut report) {
+                    ("header", r @ None) => {
+                        let schema = req_str(&v, "schema")?;
+                        if schema != SCHEMA {
+                            bail!("schema {schema:?} != expected {SCHEMA:?}");
+                        }
+                        req_num(&v, "pid")?;
+                        *r = Some(TraceReport {
+                            schema,
+                            store: req_str(&v, "store")?,
+                            shard: opt_str(&v, "shard")?,
+                            spans: Vec::new(),
+                            events: Vec::new(),
+                            heartbeats: 0,
+                            metrics_lines: 0,
+                            lines: 0,
+                        });
+                    }
+                    ("header", Some(_)) => bail!("duplicate header line"),
+                    (_, None) => bail!("first line must be a header"),
+                    ("span", Some(r)) => r.spans.push(SpanRec {
+                        name: req_str(&v, "name")?,
+                        parent: opt_str(&v, "parent")?,
+                        depth: req_num(&v, "depth")? as usize,
+                        job: opt_str(&v, "job")?,
+                        t_us: req_num(&v, "t_us")? as u64,
+                        dur_us: req_num(&v, "dur_us")? as u64,
+                        thread: req_num(&v, "thread")? as u64,
+                    }),
+                    ("event", Some(r)) => {
+                        req_num(&v, "t_us")?;
+                        v.get("fields")?.as_obj()?;
+                        r.events.push(req_str(&v, "name")?);
+                    }
+                    ("heartbeat", Some(r)) => {
+                        for k in [
+                            "t_us",
+                            "done",
+                            "pruned",
+                            "deferred",
+                            "committed",
+                            "scheduled",
+                            "jobs_per_s",
+                            "eta_s",
+                            "mapper_hit_rate",
+                            "service_hit_rate",
+                        ] {
+                            req_num(&v, k)?;
+                        }
+                        r.heartbeats += 1;
+                    }
+                    ("metrics", Some(r)) => {
+                        req_num(&v, "t_us")?;
+                        let snap = v.get("snapshot")?;
+                        snap.get("counters")?.as_obj()?;
+                        snap.get("gauges")?.as_obj()?;
+                        snap.get("histograms")?.as_obj()?;
+                        r.metrics_lines += 1;
+                    }
+                    (k, Some(_)) => bail!("unknown line kind {k:?}"),
+                }
+                Ok(())
+            })()
+            .with_context(|| format!("{}:{lineno}", path.display()))?;
+        }
+        let mut r = match report {
+            Some(r) => r,
+            None => bail!("{}: empty trace (no header line)", path.display()),
+        };
+        r.lines = text.lines().count();
+        Ok(r)
+    }
+
+    /// Wall clock covered by the trace in microseconds: the latest span
+    /// end offset.
+    pub fn wall_us(&self) -> u64 {
+        self.spans.iter().map(|s| s.t_us + s.dur_us).max().unwrap_or(0)
+    }
+
+    /// Per-phase aggregation (by span name, sorted by total time desc):
+    /// `(name, count, total_us, p50_us, p95_us)`.
+    pub fn phases(&self) -> Vec<(String, usize, u64, f64, f64)> {
+        let mut by_name: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+        for s in &self.spans {
+            by_name.entry(&s.name).or_default().push(s.dur_us as f64);
+        }
+        let mut out: Vec<_> = by_name
+            .into_iter()
+            .map(|(name, durs)| {
+                let total = durs.iter().sum::<f64>() as u64;
+                let s = crate::util::stats::Summary::of(&durs);
+                (name.to_string(), durs.len(), total, s.p50, s.p95)
+            })
+            .collect();
+        out.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+        out
+    }
+
+    /// The `k` slowest per-job spans (`job.eval`), slowest first:
+    /// `(job key, dur_us)`.
+    pub fn slowest_jobs(&self, k: usize) -> Vec<(String, u64)> {
+        let mut jobs: Vec<(String, u64)> = self
+            .spans
+            .iter()
+            .filter(|s| s.name == "job.eval")
+            .map(|s| (s.job.clone().unwrap_or_else(|| "<unattributed>".into()), s.dur_us))
+            .collect();
+        jobs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        jobs.truncate(k);
+        jobs
+    }
+
+    /// Fraction of trace wall-clock covered by per-job `job.eval` spans,
+    /// merging overlaps across worker threads (the acceptance gate's
+    /// ">= 95% of campaign wall-clock" number).
+    pub fn job_span_coverage(&self) -> f64 {
+        let wall = self.wall_us();
+        if wall == 0 {
+            return 0.0;
+        }
+        let mut ivals: Vec<(u64, u64)> = self
+            .spans
+            .iter()
+            .filter(|s| s.name == "job.eval")
+            .map(|s| (s.t_us, s.t_us + s.dur_us))
+            .collect();
+        ivals.sort_unstable();
+        let mut covered = 0u64;
+        let mut cur: Option<(u64, u64)> = None;
+        for (a, b) in ivals {
+            match &mut cur {
+                Some((_, e)) if a <= *e => *e = (*e).max(b),
+                _ => {
+                    if let Some((s, e)) = cur {
+                        covered += e - s;
+                    }
+                    cur = Some((a, b));
+                }
+            }
+        }
+        if let Some((s, e)) = cur {
+            covered += e - s;
+        }
+        covered as f64 / wall as f64
+    }
+
+    /// Render the human report: summary line, per-phase table, top-K
+    /// slowest jobs.
+    pub fn render(&self, top: usize) -> String {
+        let wall_s = self.wall_us() as f64 / 1e6;
+        let mut out = format!(
+            "trace of {} ({}schema {})\nwall clock {} | {} spans, {} events, {} heartbeats | \
+             job span coverage {:.0}%\n\n",
+            self.store,
+            match &self.shard {
+                Some(s) => format!("shard {s}, "),
+                None => String::new(),
+            },
+            self.schema,
+            human_time(wall_s),
+            self.spans.len(),
+            self.events.len(),
+            self.heartbeats,
+            self.job_span_coverage() * 100.0,
+        );
+        let mut t = Table::new(vec!["phase", "count", "total", "p50", "p95", "% wall"]);
+        for (name, count, total_us, p50, p95) in self.phases() {
+            let pct = if self.wall_us() > 0 {
+                100.0 * total_us as f64 / self.wall_us() as f64
+            } else {
+                0.0
+            };
+            t.row(vec![
+                name,
+                count.to_string(),
+                human_time(total_us as f64 / 1e6),
+                human_time(p50 / 1e6),
+                human_time(p95 / 1e6),
+                // Can exceed 100%: phase totals sum across worker threads.
+                format!("{pct:.1}"),
+            ]);
+        }
+        out.push_str(&t.render());
+        let slow = self.slowest_jobs(top);
+        if !slow.is_empty() {
+            out.push_str(&format!("\ntop {} slowest jobs:\n", slow.len()));
+            let mut t = Table::new(vec!["job", "time"]);
+            for (job, dur_us) in slow {
+                t.row(vec![job, human_time(dur_us as f64 / 1e6)]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+}

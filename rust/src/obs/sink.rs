@@ -1,0 +1,248 @@
+//! The JSONL trace sink: a process-global, mutex-guarded buffered writer
+//! producing the `<store>.trace.jsonl` sidecar.
+//!
+//! Layout per line (schema `carbon3d-trace/1`, one JSON object per line):
+//!
+//! - `header` — first line; schema version, pid, store path, shard label.
+//! - `span` — a closed timed span: name, start offset + duration (µs),
+//!   nesting depth, parent span name, owning job key, thread ordinal.
+//! - `event` — a point event (lease claim, torn-append recovery, ...).
+//! - `heartbeat` — periodic live progress (jobs done/pruned/deferred,
+//!   jobs/s, cache hit-rates, ETA).
+//! - `metrics` — final [`MetricsSnapshot`] written at uninstall.
+//!
+//! Install/uninstall bracket one campaign run; `enabled()` is a single
+//! relaxed atomic load, which is what keeps the disabled hot path free.
+//! The sidecar is a separate file from the store and is never read back
+//! by the campaign engine, so tracing cannot perturb deterministic
+//! outputs.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::metrics::{metrics, MetricsSnapshot};
+
+/// Sidecar schema identifier; bump the suffix on breaking line-format
+/// changes so `trace report --check` can refuse mismatched files.
+pub const SCHEMA: &str = "carbon3d-trace/1";
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<SinkState>> = Mutex::new(None);
+
+struct SinkState {
+    out: BufWriter<File>,
+    epoch: Instant,
+    path: PathBuf,
+    lines: u64,
+}
+
+/// Whether a trace sink is currently installed. One relaxed load — this
+/// is the gate every span/event site checks first.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Summary returned by [`uninstall`] for the CLI's closing message.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub path: PathBuf,
+    pub lines: u64,
+}
+
+/// Install the process trace sink, truncating `path` and writing the
+/// schema header. Fails if a sink is already installed (one campaign per
+/// process; tests serialize on a shared lock).
+pub fn install(path: &Path, store: &Path, shard: Option<&str>) -> Result<()> {
+    let mut st = STATE.lock().expect("trace sink poisoned");
+    ensure!(st.is_none(), "trace sink already installed");
+    let file = File::create(path)
+        .with_context(|| format!("creating trace sidecar {}", path.display()))?;
+    let mut state = SinkState {
+        out: BufWriter::new(file),
+        epoch: Instant::now(),
+        path: path.to_path_buf(),
+        lines: 0,
+    };
+    let header = obj([
+        ("kind", Json::from("header")),
+        ("schema", Json::from(SCHEMA)),
+        ("pid", Json::from(std::process::id() as f64)),
+        ("store", Json::from(store.display().to_string())),
+        ("shard", shard.map(Json::from).unwrap_or(Json::Null)),
+    ]);
+    state.write_line(&header)?;
+    *st = Some(state);
+    ENABLED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Tear down the sink: write the final `metrics` line (a full registry
+/// snapshot), flush, and close. Returns `None` if no sink was installed.
+pub fn uninstall() -> Option<TraceSummary> {
+    // Drop the gate first so concurrently-finishing spans stop enqueueing.
+    ENABLED.store(false, Ordering::Release);
+    let mut st = STATE.lock().expect("trace sink poisoned");
+    let mut state = st.take()?;
+    let line = obj([
+        ("kind", Json::from("metrics")),
+        ("t_us", Json::from(state.epoch.elapsed().as_micros() as f64)),
+        ("snapshot", MetricsSnapshot::collect().to_json()),
+    ]);
+    let _ = state.write_line(&line);
+    let _ = state.out.flush();
+    Some(TraceSummary { path: state.path.clone(), lines: state.lines })
+}
+
+/// Flush buffered trace lines to disk. Called by the commit pipeline on
+/// every archive checkpoint so the sidecar never trails the store by
+/// more than one commit.
+pub fn flush() {
+    if !enabled() {
+        return;
+    }
+    if let Some(state) = STATE.lock().expect("trace sink poisoned").as_mut() {
+        let _ = state.out.flush();
+    }
+}
+
+impl SinkState {
+    fn write_line(&mut self, line: &Json) -> Result<()> {
+        writeln!(self.out, "{}", line.dumps())?;
+        self.lines += 1;
+        Ok(())
+    }
+}
+
+/// Small monotone ordinal for the current thread (ThreadId has no stable
+/// numeric form); only consulted on traced span close.
+fn thread_ordinal() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    thread_local! {
+        static ID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id)
+}
+
+/// Record a closed span. Called from `Span::drop` only when the span was
+/// created with tracing enabled.
+pub(super) fn write_span(
+    name: &'static str,
+    parent: Option<&'static str>,
+    depth: usize,
+    job: Option<&str>,
+    t0: Instant,
+    dur: Duration,
+) {
+    let mut st = STATE.lock().expect("trace sink poisoned");
+    let Some(state) = st.as_mut() else { return };
+    let t_us = t0.saturating_duration_since(state.epoch).as_micros() as f64;
+    let line = obj([
+        ("kind", Json::from("span")),
+        ("name", Json::from(name)),
+        ("t_us", Json::from(t_us)),
+        ("dur_us", Json::from(dur.as_micros() as f64)),
+        ("depth", Json::from(depth as f64)),
+        ("parent", parent.map(Json::from).unwrap_or(Json::Null)),
+        ("job", job.map(Json::from).unwrap_or(Json::Null)),
+        ("thread", Json::from(thread_ordinal() as f64)),
+    ]);
+    let _ = state.write_line(&line);
+}
+
+/// Write a point event line (no-op when tracing is off — the companion
+/// counter in the metrics registry is what stays always-on).
+pub(super) fn write_event(name: &'static str, fields: &[(&str, Json)]) {
+    if !enabled() {
+        return;
+    }
+    let mut st = STATE.lock().expect("trace sink poisoned");
+    let Some(state) = st.as_mut() else { return };
+    let mut f = std::collections::BTreeMap::new();
+    for (k, v) in fields {
+        f.insert((*k).to_string(), v.clone());
+    }
+    let line = obj([
+        ("kind", Json::from("event")),
+        ("name", Json::from(name)),
+        ("t_us", Json::from(state.epoch.elapsed().as_micros() as f64)),
+        ("fields", Json::Obj(f)),
+    ]);
+    let _ = state.write_line(&line);
+}
+
+/// Live-progress snapshot emitted periodically by the commit pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Heartbeat {
+    /// Rows committed so far.
+    pub done: usize,
+    pub pruned: usize,
+    pub deferred: usize,
+    /// Schedule slots committed (done + pruned + deferred + skipped).
+    pub committed: usize,
+    /// Total schedule slots.
+    pub scheduled: usize,
+    pub elapsed_s: f64,
+}
+
+/// Emit a heartbeat: one sidecar line plus a human line on stderr
+/// (stdout carries the report and stays clean). Cache hit-rates come
+/// from the process metrics registry.
+pub fn heartbeat(h: &Heartbeat) {
+    if !enabled() {
+        return;
+    }
+    let rate = if h.elapsed_s > 0.0 { h.committed as f64 / h.elapsed_s } else { 0.0 };
+    let remaining = h.scheduled.saturating_sub(h.committed);
+    let eta_s = if rate > 0.0 { remaining as f64 / rate } else { 0.0 };
+    let hit_rate = |hits: u64, total: u64| {
+        if total > 0 {
+            hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    };
+    let m = metrics();
+    let mapper_hits = m.counter("mapper_cache_hits");
+    let mapper_rate = hit_rate(mapper_hits, mapper_hits + m.counter("mapper_cache_misses"));
+    let service_rate = hit_rate(m.counter("service_cache_hits"), m.counter("service_served"));
+    {
+        let mut st = STATE.lock().expect("trace sink poisoned");
+        let Some(state) = st.as_mut() else { return };
+        let line = obj([
+            ("kind", Json::from("heartbeat")),
+            ("t_us", Json::from(state.epoch.elapsed().as_micros() as f64)),
+            ("done", Json::from(h.done)),
+            ("pruned", Json::from(h.pruned)),
+            ("deferred", Json::from(h.deferred)),
+            ("committed", Json::from(h.committed)),
+            ("scheduled", Json::from(h.scheduled)),
+            ("jobs_per_s", Json::from(rate)),
+            ("eta_s", Json::from(eta_s)),
+            ("mapper_hit_rate", Json::from(mapper_rate)),
+            ("service_hit_rate", Json::from(service_rate)),
+        ]);
+        let _ = state.write_line(&line);
+        let _ = state.out.flush();
+    }
+    eprintln!(
+        "[trace] {}/{} slots ({} rows, {} pruned, {} deferred) | {:.2} jobs/s | \
+         mapper {:.0}% hits | eval svc {:.0}% hits | ETA {}",
+        h.committed,
+        h.scheduled,
+        h.done,
+        h.pruned,
+        h.deferred,
+        rate,
+        mapper_rate * 100.0,
+        service_rate * 100.0,
+        crate::util::timer::human_time(eta_s),
+    );
+}

@@ -1,0 +1,128 @@
+//! Timed spans with thread-local nesting and per-job attribution.
+//!
+//! `span(name)` always feeds the duration histogram named after the span
+//! (that is what `CampaignReport::line()`'s phase percentages read, so it
+//! works on untraced runs too); the thread-local stack bookkeeping and the
+//! sidecar line only happen when a trace sink is installed. With tracing
+//! off the guard is inert: no allocation, no thread-local touch beyond
+//! one atomic load — the property the `obs_alloc` test binary pins down.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::metrics;
+use super::sink;
+
+thread_local! {
+    /// Names of the open spans on this thread, outermost first.
+    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    /// The job key the current thread is working on (set by executors).
+    static JOB: RefCell<Option<Arc<str>>> = const { RefCell::new(None) };
+}
+
+/// RAII guard for one timed span. Closes (and records) on drop.
+#[must_use = "a span measures the scope it is alive for"]
+pub struct Span {
+    name: &'static str,
+    t0: Instant,
+    /// Captured at open: whether this span participates in the sidecar.
+    /// Keeps open/close symmetric even if the sink is (un)installed
+    /// mid-span.
+    traced: bool,
+}
+
+/// Open a timed span. The name doubles as the duration histogram name —
+/// use the dotted `layer.verb` taxonomy from DESIGN.md §8.
+pub fn span(name: &'static str) -> Span {
+    let traced = sink::enabled();
+    if traced {
+        STACK.with(|s| s.borrow_mut().push(name));
+    }
+    Span { name, t0: Instant::now(), traced }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur = self.t0.elapsed();
+        metrics().record_duration(self.name, dur);
+        if self.traced {
+            let (depth, parent) = STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                s.pop();
+                (s.len(), s.last().copied())
+            });
+            let job = JOB.with(|j| j.borrow().clone());
+            sink::write_span(self.name, parent, depth, job.as_deref(), self.t0, dur);
+        }
+    }
+}
+
+/// RAII guard attributing spans on this thread to one job.
+#[must_use = "a job scope attributes spans for the scope it is alive for"]
+pub struct JobScope {
+    prev: Option<Arc<str>>,
+    active: bool,
+}
+
+/// Attribute subsequent spans on this thread to `key` until the guard
+/// drops (restores the previous attribution, so scopes nest). Inert —
+/// no allocation — when tracing is off.
+pub fn job_scope(key: &str) -> JobScope {
+    if !sink::enabled() {
+        return JobScope { prev: None, active: false };
+    }
+    let prev = JOB.with(|j| j.borrow_mut().replace(Arc::from(key)));
+    JobScope { prev, active: true }
+}
+
+impl Drop for JobScope {
+    fn drop(&mut self) {
+        if self.active {
+            let prev = self.prev.take();
+            JOB.with(|j| *j.borrow_mut() = prev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_skip_the_stack_but_feed_histograms() {
+        let _guard = crate::obs::test_sink_guard();
+        assert!(!sink::enabled());
+        let before = metrics().snapshot();
+        {
+            let _outer = span("obs.test.outer");
+            let _scope = job_scope("k");
+            let _inner = span("obs.test.inner");
+            STACK.with(|s| assert!(s.borrow().is_empty()));
+            JOB.with(|j| assert!(j.borrow().is_none()));
+        }
+        let delta = metrics().snapshot().diff(&before);
+        assert_eq!(delta.histogram("obs.test.outer").unwrap().count, 1);
+        assert_eq!(delta.histogram("obs.test.inner").unwrap().count, 1);
+    }
+
+    #[test]
+    fn job_scopes_nest_and_restore() {
+        let _guard = crate::obs::test_sink_guard();
+        let tmp = std::env::temp_dir()
+            .join(format!("carbon3d-obs-scope-{}.trace.jsonl", std::process::id()));
+        sink::install(&tmp, std::path::Path::new("test.jsonl"), None).unwrap();
+        {
+            let _a = job_scope("outer-job");
+            JOB.with(|j| assert_eq!(j.borrow().as_deref(), Some("outer-job")));
+            {
+                let _b = job_scope("inner-job");
+                JOB.with(|j| assert_eq!(j.borrow().as_deref(), Some("inner-job")));
+            }
+            JOB.with(|j| assert_eq!(j.borrow().as_deref(), Some("outer-job")));
+        }
+        JOB.with(|j| assert!(j.borrow().is_none()));
+        sink::uninstall();
+        let _ = std::fs::remove_file(&tmp);
+    }
+}

@@ -44,6 +44,9 @@ pub struct EvalRequest {
     pub mult_id: usize,
     pub lut: Vec<f32>,
     pub reply: Sender<Result<f64, String>>,
+    /// Submission time — the worker records queue wait (`service.queue_wait`
+    /// histogram) when it picks the request up.
+    pub queued: std::time::Instant,
 }
 
 /// Worker mailbox message. `Stop` is sent by `shutdown` so the worker exits
@@ -152,7 +155,12 @@ impl EvalClient {
     pub fn eval(&self, m: &Multiplier) -> Result<f64, String> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Eval(EvalRequest { mult_id: m.id, lut: lut_f32(m), reply }))
+            .send(Msg::Eval(EvalRequest {
+                mult_id: m.id,
+                lut: lut_f32(m),
+                reply,
+                queued: std::time::Instant::now(),
+            }))
             .map_err(|_| "service stopped".to_string())?;
         rx.recv().map_err(|_| "service dropped request".to_string())?
     }
@@ -164,7 +172,12 @@ impl EvalClient {
         for m in mults {
             let (reply, rx) = mpsc::channel();
             self.tx
-                .send(Msg::Eval(EvalRequest { mult_id: m.id, lut: lut_f32(m), reply }))
+                .send(Msg::Eval(EvalRequest {
+                    mult_id: m.id,
+                    lut: lut_f32(m),
+                    reply,
+                    queued: std::time::Instant::now(),
+                }))
                 .map_err(|_| "service stopped".to_string())?;
             replies.push(rx);
         }
@@ -207,13 +220,22 @@ fn worker_loop<B: EvalBackend>(backend: B, rx: Receiver<Msg>, counters: &Counter
         ids.sort_unstable(); // deterministic service order
         for id in ids {
             let reqs = groups.remove(&id).unwrap();
+            let m = crate::obs::metrics();
+            for req in &reqs {
+                m.record_duration("service.queue_wait", req.queued.elapsed());
+            }
             counters.served.fetch_add(reqs.len(), Ordering::Release);
             counters.coalesced.fetch_add(reqs.len() - 1, Ordering::Release);
+            m.incr("service_served", reqs.len() as u64);
+            m.incr("service_coalesced", reqs.len() as u64 - 1);
             let acc = if let Some(&hit) = cache.get(&id) {
                 counters.cache_hits.fetch_add(reqs.len(), Ordering::Release);
+                m.incr("service_cache_hits", reqs.len() as u64);
                 Ok(hit)
             } else {
                 counters.evaluated.fetch_add(1, Ordering::Release);
+                m.incr("service_evaluated", 1);
+                let _span = crate::obs::span("service.eval");
                 match backend.accuracy_of_lut(&reqs[0].lut) {
                     Ok(a) => {
                         cache.insert(id, a);

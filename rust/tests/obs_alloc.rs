@@ -1,0 +1,70 @@
+//! Property: with no trace sink installed, the span/metrics hot path
+//! allocates nothing on the heap. This is the "near-zero-cost when off"
+//! half of the observability contract (DESIGN.md §8) — counters and
+//! histograms are pre-registered atomics, and disabled spans skip the
+//! thread-local stack entirely.
+//!
+//! Lives in its own test binary because it swaps in a counting global
+//! allocator, which would skew any other test sharing the process.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_tracing_hot_path_allocates_nothing() {
+    assert!(!carbon3d::obs::enabled(), "no sink must be installed in this binary");
+
+    // Warm-up: first use of each name registers its atomic in the registry
+    // maps (one-time allocations by design), and the first span on this
+    // thread initializes the thread-locals.
+    {
+        let _scope = carbon3d::obs::job_scope("warmup|job");
+        let _span = carbon3d::obs::span("obs.alloc.test");
+        carbon3d::obs::metrics().incr("obs_alloc_test_counter", 1);
+        carbon3d::obs::metrics().gauge_set("obs_alloc_test_gauge", 1);
+    }
+
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for i in 0..1000u64 {
+        let _scope = carbon3d::obs::job_scope("steady|job");
+        let _span = carbon3d::obs::span("obs.alloc.test");
+        carbon3d::obs::metrics().incr("obs_alloc_test_counter", 1);
+        carbon3d::obs::metrics().gauge_set("obs_alloc_test_gauge", i);
+    }
+    let after = ALLOCATIONS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled spans/counters/gauges must not allocate on the steady state"
+    );
+
+    // Sanity: the instruments did record.
+    let m = carbon3d::obs::metrics();
+    assert_eq!(m.counter("obs_alloc_test_counter"), 1001);
+    let snap = m.snapshot();
+    let h = snap.histogram("obs.alloc.test").expect("span histogram fed");
+    assert_eq!(h.count, 1001);
+}
