@@ -18,7 +18,7 @@ use carbon3d::ga::GaParams;
 use carbon3d::obs::{Merge, MetricsSnapshot};
 use carbon3d::runtime::EvalService;
 use carbon3d::util::json::{obj, Json};
-use carbon3d::util::timer::time_once;
+use carbon3d::obs::bench::time_once;
 
 /// 2 models x 3 nodes x 2 deltas = 12 jobs at a reduced GA budget.
 fn spec(smoke: bool) -> CampaignSpec {
@@ -120,6 +120,7 @@ fn main() {
         let _ = std::fs::remove_file(
             carbon3d::campaign::CampaignArchive::checkpoint_path(&path),
         );
+        let _ = std::fs::remove_file(carbon3d::obs::status::status_path(&path));
     }
 
     if let Some(out) = json_out {

@@ -6,7 +6,7 @@ use carbon3d::area::die::Integration;
 use carbon3d::area::TechNode;
 use carbon3d::carbon::embodied_carbon;
 use carbon3d::dataflow::arch::AccelConfig;
-use carbon3d::util::timer::{bench, time_once};
+use carbon3d::obs::bench::{bench, time_once};
 
 fn main() {
     println!("== CARBON model benches ==");

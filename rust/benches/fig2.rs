@@ -9,7 +9,7 @@ use carbon3d::approx::library;
 use carbon3d::area::node::ALL_NODES;
 use carbon3d::coordinator::fig2::{run_fig2, FIG2_MODELS};
 use carbon3d::ga::GaParams;
-use carbon3d::util::timer::{bench, time_once};
+use carbon3d::obs::bench::{bench, time_once};
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");

@@ -11,7 +11,7 @@ use carbon3d::coordinator::fig3::run_fig3;
 use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::GaParams;
 use carbon3d::util::stats::pct_change;
-use carbon3d::util::timer::{bench, time_once};
+use carbon3d::obs::bench::{bench, time_once};
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");

@@ -8,7 +8,7 @@ use carbon3d::coordinator::ga_appx_cdp;
 use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::fitness::FitnessCtx;
 use carbon3d::ga::{GaParams, SearchSpace};
-use carbon3d::util::timer::bench;
+use carbon3d::obs::bench::bench;
 use carbon3d::util::Rng;
 
 fn main() {

@@ -11,7 +11,7 @@ use carbon3d::area::TechNode;
 use carbon3d::dataflow::arch::AccelConfig;
 use carbon3d::dataflow::mapper::map_network;
 use carbon3d::dataflow::workloads::{workload, workload_names};
-use carbon3d::util::timer::bench;
+use carbon3d::obs::bench::bench;
 
 fn cfg(integration: Integration) -> AccelConfig {
     AccelConfig {

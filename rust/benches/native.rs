@@ -26,7 +26,7 @@ use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::{EvalShares, GaParams, Objective};
 use carbon3d::obs::{Merge, MetricsSnapshot};
 use carbon3d::util::json::{obj, Json};
-use carbon3d::util::timer::{bench, time_once};
+use carbon3d::obs::bench::{bench, time_once};
 use carbon3d::util::Rng;
 
 /// The matmul shapes one batch-64 accuracy pass issues (tiny CNN: conv1,

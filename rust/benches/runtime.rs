@@ -6,7 +6,7 @@ use std::path::Path;
 
 use carbon3d::approx::{library, lut_f32, EXACT_ID};
 use carbon3d::runtime::{Artifacts, Engine};
-use carbon3d::util::timer::{bench, time_once};
+use carbon3d::obs::bench::{bench, time_once};
 
 fn main() {
     println!("== RUNTIME (PJRT) benches ==");

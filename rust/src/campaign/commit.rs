@@ -115,6 +115,11 @@ impl FrontCell {
     pub fn incumbent(&self, family: &str) -> Option<f64> {
         self.inner.lock().unwrap().incumbents.get(family).copied()
     }
+
+    /// Current committed Pareto-front size (for the status snapshot).
+    pub fn front_size(&self) -> usize {
+        self.inner.lock().unwrap().archive.front.len()
+    }
 }
 
 /// Family + objective value of a committed row, if it carries the
@@ -177,10 +182,12 @@ pub struct CommitPipeline<'a> {
     t0: Instant,
     last_heartbeat: Instant,
     heartbeat_every: Duration,
+    status: Option<crate::obs::StatusWriter>,
 }
 
 /// Heartbeat cadence: `CARBON3D_HEARTBEAT_SECS` (fractional seconds; 0
-/// means every commit), default 5s. Only consulted while tracing is on.
+/// means every commit), default 5s. Consulted while tracing is on and
+/// for the status-snapshot tick (`<store>.status.json`).
 fn heartbeat_interval() -> Duration {
     std::env::var("CARBON3D_HEARTBEAT_SECS")
         .ok()
@@ -211,7 +218,14 @@ impl<'a> CommitPipeline<'a> {
             t0: now,
             last_heartbeat: now,
             heartbeat_every: heartbeat_interval(),
+            status: None,
         }
+    }
+
+    /// Attach the live status-snapshot writer (built by the executor
+    /// core from the store path + the executor's shard label).
+    pub fn set_status(&mut self, status: Option<crate::obs::StatusWriter>) {
+        self.status = status;
     }
 
     /// The shared front cell, borrowed for the pipeline's full lifetime —
@@ -246,22 +260,39 @@ impl<'a> CommitPipeline<'a> {
         Ok(())
     }
 
-    /// Emit a live-progress heartbeat if tracing is on and the cadence
-    /// elapsed. Purely observational: stderr + trace sidecar, never stdout
-    /// or the store.
-    fn maybe_heartbeat(&mut self) {
-        if !crate::obs::enabled() || self.last_heartbeat.elapsed() < self.heartbeat_every {
-            return;
-        }
-        self.last_heartbeat = Instant::now();
-        crate::obs::heartbeat(&crate::obs::Heartbeat {
+    /// The current progress snapshot — one definition feeds the trace
+    /// heartbeat and the status sidecar, so they always agree.
+    fn progress(&self) -> crate::obs::Heartbeat {
+        crate::obs::Heartbeat {
             done: self.totals.jobs_run,
             pruned: self.totals.jobs_pruned,
             deferred: self.totals.jobs_deferred,
             committed: self.cursor,
             scheduled: self.source.schedule().len(),
             elapsed_s: self.t0.elapsed().as_secs_f64(),
-        });
+        }
+    }
+
+    /// Emit a live-progress heartbeat (trace sidecar + stderr, when
+    /// tracing is on) and refresh the status snapshot, if the cadence
+    /// elapsed. Purely observational: never stdout or the store.
+    fn maybe_heartbeat(&mut self) {
+        let traced = crate::obs::enabled();
+        if !traced && self.status.is_none() {
+            return;
+        }
+        if self.last_heartbeat.elapsed() < self.heartbeat_every {
+            return;
+        }
+        self.last_heartbeat = Instant::now();
+        let h = self.progress();
+        if traced {
+            crate::obs::heartbeat(&h);
+        }
+        if let Some(status) = &self.status {
+            // Status write failures must never kill a campaign.
+            let _ = status.write("running", &h, self.front.front_size());
+        }
     }
 
     /// Commit the job at the current cursor slot: apply the authoritative
@@ -300,12 +331,25 @@ impl<'a> CommitPipeline<'a> {
                 self.store.append(row)?;
                 write_atomic(&self.ckpt_path, &ckpt.dumps())?;
                 // The archive checkpoint is the durability boundary; keep
-                // the trace sidecar no staler than it.
+                // the trace sidecar and status snapshot no staler than it.
                 crate::obs::flush();
                 self.totals.jobs_run += 1;
+                if let Some(status) = &self.status {
+                    let _ = status.write(
+                        "running",
+                        &self.progress_at(self.cursor + 1),
+                        self.front.front_size(),
+                    );
+                }
             }
         }
         Ok(())
+    }
+
+    /// [`Self::progress`] with an explicit committed count — `commit_slot`
+    /// runs before `offer` advances the cursor past the slot.
+    fn progress_at(&self, committed: usize) -> crate::obs::Heartbeat {
+        crate::obs::Heartbeat { committed, ..self.progress() }
     }
 
     /// Verify every scheduled slot was committed and return the counters.
@@ -316,6 +360,9 @@ impl<'a> CommitPipeline<'a> {
             self.cursor,
             self.source.schedule().len()
         );
+        if let Some(status) = &self.status {
+            let _ = status.write("done", &self.progress(), self.front.front_size());
+        }
         Ok(self.totals)
     }
 }

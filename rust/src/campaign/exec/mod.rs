@@ -36,7 +36,7 @@ use crate::ga::GaParams;
 use crate::obs::{Merge, MetricsSnapshot};
 use crate::runtime::{Artifacts, EvalBackend, EvalClient, EvalService, NativeBackend, ServiceStats};
 use crate::util::json::{obj, Json};
-use crate::util::timer::human_time;
+use crate::obs::fmt::human_time;
 
 use super::commit::{CommitPipeline, FrontCell, PruneMode};
 use super::source::{JobCtx, JobSource};
@@ -58,6 +58,14 @@ pub trait Executor {
     /// themselves to [`PruneMode::FloorOnly`] — see its docs for why.
     fn prune_mode(&self) -> PruneMode {
         PruneMode::Full
+    }
+
+    /// Lane label for this run's status snapshot (`<store>.status.json`):
+    /// `None` for single-process runs, the shard label for shard workers,
+    /// `"merge"` for the merge pass. Purely observational — never feeds
+    /// back into scheduling or commits.
+    fn status_shard(&self) -> Option<String> {
+        None
     }
 
     /// Drain the schedule into the pipeline.
@@ -210,8 +218,7 @@ impl CampaignReport {
         // Shares are of the summed phase time, not wall-clock: phases run
         // concurrently across workers, so wall-relative shares would not
         // add up to anything readable.
-        const PHASES: [&str; 4] = ["ga.run", "mapper.search", "service.eval", "commit.row"];
-        let sums: Vec<(&str, f64)> = PHASES
+        let sums: Vec<(&str, f64)> = crate::obs::status::PHASES
             .iter()
             .filter_map(|n| self.metrics.histogram(n).map(|h| (*n, h.sum as f64)))
             .collect();
@@ -275,7 +282,12 @@ pub fn run_campaign_with(
     };
     let front = FrontCell::restore(store, spec.objective.carbon_axis())?;
     let mode = executor.prune_mode().gated(spec.prune);
+    // Status snapshots are pure observability: the writer is built before
+    // the pipeline mutably borrows the store, and dropped errors inside
+    // the pipeline never fail the campaign.
+    let status = crate::obs::StatusWriter::create(store.path(), executor.status_shard());
     let mut pipeline = CommitPipeline::new(store, &front, &source, mode);
+    pipeline.set_status(status);
     executor.drain(&ctx, &source, service, &mut pipeline)?;
     let totals = pipeline.finish()?;
     Ok(CampaignReport {

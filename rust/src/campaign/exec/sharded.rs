@@ -98,6 +98,10 @@ impl Executor for ShardedExecutor {
         PruneMode::FloorOnly
     }
 
+    fn status_shard(&self) -> Option<String> {
+        Some(self.shard.to_string())
+    }
+
     fn drain(
         &self,
         ctx: &JobCtx,
@@ -195,6 +199,10 @@ impl MergeExecutor {
 impl Executor for MergeExecutor {
     fn describe(&self) -> String {
         format!("merge of {} shard-store rows", self.rows.len())
+    }
+
+    fn status_shard(&self) -> Option<String> {
+        Some("merge".to_string())
     }
 
     fn drain(
@@ -308,11 +316,13 @@ mod tests {
     fn cleanup_campaign(canonical: &Path, count: usize) {
         let _ = std::fs::remove_file(canonical);
         let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(canonical));
+        let _ = std::fs::remove_file(crate::obs::status::status_path(canonical));
         let _ = std::fs::remove_dir_all(LeaseDir::for_store(canonical));
         for index in 0..count {
             let p = shard_store_path(canonical, ShardId { index, count });
             let _ = std::fs::remove_file(&p);
             let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(&p));
+            let _ = std::fs::remove_file(crate::obs::status::status_path(&p));
         }
     }
 

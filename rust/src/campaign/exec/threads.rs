@@ -37,6 +37,12 @@ impl Executor for ThreadPoolExecutor {
         format!("{} worker threads", self.workers.max(1))
     }
 
+    // Single-process runs write the canonical `<store>.status.json` with
+    // no lane label.
+    fn status_shard(&self) -> Option<String> {
+        None
+    }
+
     fn drain(
         &self,
         ctx: &JobCtx,

@@ -73,6 +73,7 @@ mod tests {
     fn cleanup(path: &std::path::Path) {
         let _ = std::fs::remove_file(path);
         let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(path));
+        let _ = std::fs::remove_file(crate::obs::status::status_path(path));
     }
 
     /// 2 models x 2 nodes x 2 deltas = 8 jobs, tiny GA budget.
@@ -255,6 +256,19 @@ mod tests {
             report_t.deterministic_json().dumps(),
             report_u.deterministic_json().dumps()
         );
+
+        // The always-on status snapshot landed beside the store, closed
+        // out as "done", and agrees with the report's counters.
+        let status = crate::util::Json::parse(
+            &std::fs::read_to_string(crate::obs::status::status_path(&pt)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done");
+        assert_eq!(
+            status.get("jobs_done").unwrap().as_usize().unwrap(),
+            report_t.jobs_run
+        );
+        assert!(status.get("front_size").unwrap().as_usize().unwrap() > 0);
 
         // The sidecar validates and attributes spans: every job key gets a
         // `job.eval` span, and GA runs nest under it even though workers

@@ -174,6 +174,7 @@ USAGE: carbon3d <subcommand> [--flags]
            [--objective embodied-cdp|operational|lifetime-cdp]
            [--lifetime-years Y] [--ipd N] [--grid-gco2-kwh G] [--no-prune]
            [--shard i/N] [--lease-ttl SECS] [--report-json FILE] [--trace]
+           [--no-status]
                                 run the whole scenario grid on a worker pool
                                 with a campaign-global accuracy cache, an
                                 objective-aware bound-ordered queue (jobs
@@ -182,19 +183,38 @@ USAGE: carbon3d <subcommand> [--flags]
                                 archive, and a resumable JSONL result store.
                                 --shard i/N makes this process one of N
                                 lease-coordinated shards writing its own
-                                shard store beside --out
+                                shard store beside --out. Every run keeps an
+                                atomically-updated live snapshot at
+                                `<store>.status.json` (disable with
+                                --no-status or CARBON3D_STATUS=0)
   campaign merge --shards N [--out FILE.jsonl] <same grid flags>
                                 fold N shard stores into the canonical
                                 store — byte-identical (rows, front sidecar,
                                 report counters) to a single-process run
   trace report <trace.jsonl> [--top K] [--check]
-                                per-phase breakdown + top-K slowest jobs from
-                                a `<store>.trace.jsonl` sidecar; --check only
-                                validates the schema and prints a summary.
-                                Sidecars come from `campaign --trace` (or
-                                CARBON3D_TRACE=1); tracing never changes the
-                                store/front bytes. CARBON3D_HEARTBEAT_SECS
-                                tunes live-progress cadence (default 5)
+                                per-phase breakdown, per-shard lanes, and
+                                top-K slowest jobs from a `<store>.trace.jsonl`
+                                sidecar; --check only validates the schema and
+                                prints a summary. Sidecars come from
+                                `campaign --trace` (or CARBON3D_TRACE=1);
+                                tracing never changes the store/front bytes.
+                                CARBON3D_HEARTBEAT_SECS tunes live-progress
+                                cadence (default 5)
+  trace merge <shard.trace.jsonl>... --out MERGED.trace.jsonl
+                                fold N shard sidecars into one stream on a
+                                unified time base, one lane per shard; the
+                                output re-validates under `trace report`
+  trace diff <old> <new> [--json [FILE]] [--gate PCT]
+                                phase-by-phase attribution of wall-clock and
+                                counter deltas between two records (trace
+                                sidecars or bench --json files); --gate exits
+                                non-zero naming the worst regressed phase
+  trace export <trace.jsonl> --chrome OUT.json
+                                Chrome trace-event JSON for ui.perfetto.dev /
+                                chrome://tracing (lanes -> processes, worker
+                                threads -> threads, heartbeats -> counters)
+  trace metrics <status.json>   render a `<store>.status.json` snapshot in
+                                Prometheus text exposition format
   front merge <store.jsonl>... [--axis embodied|lifetime]
                                 merge the Pareto fronts of several stores
                                 (any objectives/deployments) into one
@@ -553,15 +573,23 @@ fn finish_tracer() {
 }
 
 fn cmd_trace(args: &[String]) -> Result<()> {
-    use carbon3d::obs::TraceReport;
-
-    const USAGE: &str = "usage: carbon3d trace report <trace.jsonl> [--top K] [--check]";
+    const USAGE: &str = "usage: carbon3d trace <report|merge|diff|export|metrics> ...";
     match args.first().map(String::as_str) {
-        Some("report") => {}
+        Some("report") => cmd_trace_report(&args[1..]),
+        Some("merge") => cmd_trace_merge(&args[1..]),
+        Some("diff") => cmd_trace_diff(&args[1..]),
+        Some("export") => cmd_trace_export(&args[1..]),
+        Some("metrics") => cmd_trace_metrics(&args[1..]),
         Some(other) => bail!("unknown trace subcommand {other:?}; {USAGE}"),
         None => bail!("{USAGE}"),
     }
-    let o = Opts::parse(&args[1..]);
+}
+
+fn cmd_trace_report(args: &[String]) -> Result<()> {
+    use carbon3d::obs::TraceReport;
+
+    const USAGE: &str = "usage: carbon3d trace report <trace.jsonl> [--top K] [--check]";
+    let o = Opts::parse(args);
     let path = o
         .positionals
         .first()
@@ -569,17 +597,122 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     let r = TraceReport::load(Path::new(path))?;
     if o.has("check") {
         println!(
-            "{path}: OK ({}, {} lines: {} spans, {} events, {} heartbeats, {} metrics)",
+            "{path}: OK ({}, {} lines: {} spans, {} events, {} heartbeats, {} metrics, \
+             {} lanes)",
             r.schema,
             r.lines,
             r.spans.len(),
             r.events.len(),
-            r.heartbeats,
-            r.metrics_lines
+            r.beats.len(),
+            r.metrics_lines,
+            r.lanes().len()
         );
     } else {
         println!("{}", r.render(o.usize("top", 5)?));
     }
+    Ok(())
+}
+
+fn cmd_trace_merge(args: &[String]) -> Result<()> {
+    const USAGE: &str =
+        "usage: carbon3d trace merge <shard.trace.jsonl>... --out MERGED.trace.jsonl";
+    let o = Opts::parse(args);
+    let inputs: Vec<std::path::PathBuf> =
+        o.positionals.iter().map(std::path::PathBuf::from).collect();
+    if inputs.is_empty() {
+        bail!("trace merge needs at least one input sidecar; {USAGE}");
+    }
+    let out = o
+        .flags
+        .get("out")
+        .ok_or_else(|| anyhow!("trace merge needs --out FILE; {USAGE}"))?;
+    let s = carbon3d::obs::merge_traces(&inputs, Path::new(out))?;
+    println!(
+        "merged {} sidecars ({} lanes: {}) -> {} ({} lines, epoch {} ms; inspect with \
+         `carbon3d trace report {}`)",
+        s.inputs,
+        s.lanes.len(),
+        s.lanes.join(", "),
+        s.path.display(),
+        s.lines,
+        s.epoch_ms,
+        s.path.display()
+    );
+    Ok(())
+}
+
+fn cmd_trace_diff(args: &[String]) -> Result<()> {
+    use carbon3d::obs::diff::DiffReport;
+    use carbon3d::obs::ObsRecord;
+
+    const USAGE: &str =
+        "usage: carbon3d trace diff <old> <new> [--json [FILE]] [--gate PCT]";
+    let o = Opts::parse(args);
+    let [old_path, new_path] = o.positionals.as_slice() else {
+        bail!("trace diff needs exactly two records (trace sidecars or bench --json files); {USAGE}");
+    };
+    let d = DiffReport::new(
+        ObsRecord::load(Path::new(old_path))?,
+        ObsRecord::load(Path::new(new_path))?,
+    );
+    let gate = match o.flags.get("gate") {
+        Some(_) => Some(o.f64("gate", 0.0)?),
+        None => None,
+    };
+    match o.flags.get("json") {
+        // Bare `--json` prints to stdout; `--json FILE` writes the file.
+        Some(v) if v == "true" => println!("{}", d.to_json(gate).pretty(2)),
+        Some(path) => std::fs::write(path, format!("{}\n", d.to_json(gate).pretty(2)))
+            .with_context(|| format!("write diff json {path}"))?,
+        None => print!("{}", d.render()),
+    }
+    if let Some(gate_pct) = gate {
+        let regressions = d.regressions(gate_pct);
+        if let Some(worst) = regressions.first() {
+            bail!(
+                "{} phase(s) regressed past the {gate_pct}% gate; worst: {} \
+                 ({:+.1}% total, p50 {} -> {})",
+                regressions.len(),
+                worst.name,
+                worst.total_pct().unwrap_or(0.0),
+                carbon3d::obs::human_time(worst.old.p50 / 1e6),
+                carbon3d::obs::human_time(worst.new.p50 / 1e6),
+            );
+        }
+        println!("gate: no phase regressed past {gate_pct}%");
+    }
+    Ok(())
+}
+
+fn cmd_trace_export(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: carbon3d trace export <trace.jsonl> --chrome OUT.json";
+    let o = Opts::parse(args);
+    let trace = o
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("trace export needs a sidecar path; {USAGE}"))?;
+    let out = o
+        .flags
+        .get("chrome")
+        .ok_or_else(|| anyhow!("trace export needs --chrome OUT.json; {USAGE}"))?;
+    let n = carbon3d::obs::export::export_chrome(Path::new(trace), Path::new(out))?;
+    println!(
+        "wrote {n} trace events -> {out} (open in ui.perfetto.dev or chrome://tracing)"
+    );
+    Ok(())
+}
+
+fn cmd_trace_metrics(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: carbon3d trace metrics <status.json>";
+    let o = Opts::parse(args);
+    let path = o
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("trace metrics needs a status snapshot path; {USAGE}"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = carbon3d::util::Json::parse(&text)
+        .with_context(|| format!("{path}: not a JSON document"))?;
+    print!("{}", carbon3d::obs::status::prometheus_text(&doc)?);
     Ok(())
 }
 
@@ -600,6 +733,9 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
         Some(s) => shard_store_path(canonical, s),
         None => canonical.to_path_buf(),
     };
+    if o.has("no-status") {
+        carbon3d::obs::status::set_enabled(false);
+    }
     if trace_enabled(o) {
         let label = shard.map(|s| s.to_string());
         install_tracer(&store_path, label.as_deref())?;
@@ -674,6 +810,9 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
     }
     let out = o.get("out", "results/campaign.jsonl");
     let canonical = Path::new(&out);
+    if o.has("no-status") {
+        carbon3d::obs::status::set_enabled(false);
+    }
     if trace_enabled(o) {
         install_tracer(canonical, Some("merge"))?;
     }

@@ -1,11 +1,14 @@
-//! Bench timing helpers (criterion is unavailable offline).
+//! Bench timing harness (criterion is unavailable offline).
 //!
-//! `bench(name, iters, f)` runs a warmup, then `iters` timed invocations and
-//! prints mean/p50/p95 — the shared harness for everything in rust/benches/.
+//! `bench(name, warmup, iters, f)` runs a warmup, then `iters` timed
+//! invocations and summarizes mean/p50/p95 — the shared harness for
+//! everything in rust/benches/. Lives in `obs` so the bench path shares
+//! one timing/formatting stack with the tracer (see [`super::fmt`]).
 
 use std::time::Instant;
 
-use super::stats::Summary;
+use super::fmt::human_time;
+use crate::util::stats::Summary;
 
 /// Result of a timed benchmark.
 #[derive(Debug, Clone)]
@@ -26,19 +29,6 @@ impl BenchResult {
             human_time(self.summary.p95),
             self.iters
         )
-    }
-}
-
-/// Format seconds in engineering units.
-pub fn human_time(secs: f64) -> String {
-    if secs >= 1.0 {
-        format!("{secs:.3}s")
-    } else if secs >= 1e-3 {
-        format!("{:.3}ms", secs * 1e3)
-    } else if secs >= 1e-6 {
-        format!("{:.3}us", secs * 1e6)
-    } else {
-        format!("{:.1}ns", secs * 1e9)
     }
 }
 
@@ -76,14 +66,6 @@ mod tests {
         assert_eq!(counter.get(), 7); // 2 warmup + 5 timed
         assert_eq!(r.iters, 5);
         assert!(r.summary.mean >= 0.0);
-    }
-
-    #[test]
-    fn human_time_units() {
-        assert!(human_time(2.0).ends_with('s'));
-        assert!(human_time(2e-3).ends_with("ms"));
-        assert!(human_time(2e-6).ends_with("us"));
-        assert!(human_time(2e-9).ends_with("ns"));
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! `carbon3d trace diff`: phase-by-phase attribution of wall-clock and
+//! counter deltas between two observability records (DESIGN.md §8.5).
+//!
+//! Both sides load through [`ObsRecord::load`], which accepts either a
+//! trace sidecar (`<store>.trace.jsonl`, including `trace merge` output
+//! — the folded final `metrics` line carries the campaign-wide totals)
+//! or a bench `--json` artifact (`BENCH_campaign.json` /
+//! `BENCH_eval.json`, which embed the same [`MetricsSnapshot`] delta
+//! under a top-level `"metrics"` key) — so the CI bench trajectory files
+//! double as diffable observability records.
+//!
+//! The comparison basis is the snapshot's phase histograms: per-phase
+//! total/p50/p95 shifts, cache hit-rate drift, and queue-wait growth.
+//! A phase counts as a regression under `--gate PCT` only when its
+//! total grew past the gate *and* its p50 bucket moved — the 1-2-5
+//! bucket ladder absorbs sub-bucket timing noise, and two identical
+//! records trivially report zero regressions.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+use crate::util::table::Table;
+
+use super::fmt::human_time;
+use super::metrics::{HistogramCounts, Merge, MetricsSnapshot};
+use super::report::TraceReport;
+use super::sink::hit_rate;
+
+/// One observability record: where it came from, its counter snapshot,
+/// and (for trace sidecars) the wall clock it covered.
+#[derive(Debug, Clone)]
+pub struct ObsRecord {
+    pub source: String,
+    pub wall_us: Option<u64>,
+    pub metrics: MetricsSnapshot,
+}
+
+/// Per-phase timing stats lifted from a snapshot histogram.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseStats {
+    pub count: u64,
+    pub total_us: u64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl From<&HistogramCounts> for PhaseStats {
+    fn from(h: &HistogramCounts) -> Self {
+        Self { count: h.count, total_us: h.sum, p50: h.p50(), p95: h.p95() }
+    }
+}
+
+/// One phase's old-vs-new comparison.
+#[derive(Debug, Clone)]
+pub struct PhaseDelta {
+    pub name: String,
+    pub old: PhaseStats,
+    pub new: PhaseStats,
+}
+
+impl PhaseDelta {
+    /// Total-time change in percent; `None` when the phase is new (no
+    /// old baseline to compare against).
+    pub fn total_pct(&self) -> Option<f64> {
+        if self.old.total_us == 0 {
+            return None;
+        }
+        Some(100.0 * (self.new.total_us as f64 - self.old.total_us as f64)
+            / self.old.total_us as f64)
+    }
+
+    /// Regression under `gate_pct`: total grew past the gate AND the p50
+    /// bucket moved up (bucket resolution absorbs timing noise).
+    pub fn regressed(&self, gate_pct: f64) -> bool {
+        match self.total_pct() {
+            Some(pct) => pct > gate_pct && self.new.p50 > self.old.p50,
+            None => false,
+        }
+    }
+}
+
+impl ObsRecord {
+    /// Load a record, sniffing the format: a first line that is a trace
+    /// `header` object means a JSONL sidecar; otherwise the whole file
+    /// must be one bench `--json` document with a `"metrics"` key.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let first = text.lines().next().unwrap_or("");
+        let is_trace = Json::parse(first)
+            .ok()
+            .and_then(|v| v.get("kind").ok().map(|k| k == &Json::from("header")))
+            .unwrap_or(false);
+        if is_trace {
+            let r = TraceReport::load(path)?;
+            let metrics = r.final_metrics.clone().with_context(|| {
+                format!("{}: trace carries no metrics line to diff", path.display())
+            })?;
+            return Ok(Self {
+                source: path.display().to_string(),
+                wall_us: Some(r.wall_us()),
+                metrics,
+            });
+        }
+        let doc = Json::parse(&text)
+            .with_context(|| format!("{}: neither a trace sidecar nor JSON", path.display()))?;
+        let metrics = MetricsSnapshot::from_json(
+            doc.get("metrics")
+                .with_context(|| format!("{}: no top-level \"metrics\" key", path.display()))?,
+        )?;
+        Ok(Self { source: path.display().to_string(), wall_us: None, metrics })
+    }
+
+    fn mapper_hit_rate(&self) -> f64 {
+        let hits = self.metrics.counter("mapper_cache_hits");
+        hit_rate(hits, hits + self.metrics.counter("mapper_cache_misses"))
+    }
+
+    fn service_hit_rate(&self) -> f64 {
+        hit_rate(self.metrics.counter("service_cache_hits"), self.metrics.counter("service_served"))
+    }
+
+    fn memo_hit_rate(&self) -> f64 {
+        let hits = self.metrics.counter("ga_memo_hits");
+        hit_rate(hits, hits + self.metrics.counter("ga_memo_misses"))
+    }
+}
+
+/// The old-vs-new comparison behind `carbon3d trace diff`.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub old: ObsRecord,
+    pub new: ObsRecord,
+}
+
+impl DiffReport {
+    pub fn new(old: ObsRecord, new: ObsRecord) -> Self {
+        Self { old, new }
+    }
+
+    /// Old-vs-new stats for every phase histogram either side carries,
+    /// sorted by new total desc then name (deterministic output order).
+    pub fn phase_deltas(&self) -> Vec<PhaseDelta> {
+        let names: BTreeSet<&String> =
+            self.old.metrics.histograms.keys().chain(self.new.metrics.histograms.keys()).collect();
+        let stats = |m: &MetricsSnapshot, name: &str| {
+            m.histograms.get(name).map(PhaseStats::from).unwrap_or_default()
+        };
+        let mut out: Vec<PhaseDelta> = names
+            .into_iter()
+            .map(|name| PhaseDelta {
+                name: name.clone(),
+                old: stats(&self.old.metrics, name),
+                new: stats(&self.new.metrics, name),
+            })
+            .collect();
+        out.sort_by(|a, b| b.new.total_us.cmp(&a.new.total_us).then(a.name.cmp(&b.name)));
+        out
+    }
+
+    /// Phases regressed past `gate_pct`, worst (largest growth) first.
+    pub fn regressions(&self, gate_pct: f64) -> Vec<PhaseDelta> {
+        let mut out: Vec<PhaseDelta> =
+            self.phase_deltas().into_iter().filter(|d| d.regressed(gate_pct)).collect();
+        out.sort_by(|a, b| {
+            b.total_pct()
+                .unwrap_or(0.0)
+                .partial_cmp(&a.total_pct().unwrap_or(0.0))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.name.cmp(&b.name))
+        });
+        out
+    }
+
+    /// Counter drift rows: `(name, old, new)` in displayable units.
+    pub fn counter_drift(&self) -> Vec<(&'static str, f64, f64)> {
+        vec![
+            ("mapper cache hit rate", self.old.mapper_hit_rate(), self.new.mapper_hit_rate()),
+            ("eval service hit rate", self.old.service_hit_rate(), self.new.service_hit_rate()),
+            ("ga memo hit rate", self.old.memo_hit_rate(), self.new.memo_hit_rate()),
+        ]
+    }
+
+    /// Machine-readable diff. `"metrics"` is `new - old` in the same
+    /// serialized-snapshot format the benches embed, so diff outputs are
+    /// themselves diffable records.
+    pub fn to_json(&self, gate_pct: Option<f64>) -> Json {
+        let phase_json = |d: &PhaseDelta| {
+            obj([
+                ("name", Json::from(d.name.as_str())),
+                (
+                    "old",
+                    obj([
+                        ("count", Json::from(d.old.count as f64)),
+                        ("total_us", Json::from(d.old.total_us as f64)),
+                        ("p50", Json::from(d.old.p50)),
+                        ("p95", Json::from(d.old.p95)),
+                    ]),
+                ),
+                (
+                    "new",
+                    obj([
+                        ("count", Json::from(d.new.count as f64)),
+                        ("total_us", Json::from(d.new.total_us as f64)),
+                        ("p50", Json::from(d.new.p50)),
+                        ("p95", Json::from(d.new.p95)),
+                    ]),
+                ),
+                ("total_pct", d.total_pct().map(Json::from).unwrap_or(Json::Null)),
+            ])
+        };
+        let side = |r: &ObsRecord| {
+            obj([
+                ("source", Json::from(r.source.as_str())),
+                ("wall_us", r.wall_us.map(|w| Json::from(w as f64)).unwrap_or(Json::Null)),
+            ])
+        };
+        let mut fields = vec![
+            ("old", side(&self.old)),
+            ("new", side(&self.new)),
+            ("phases", Json::Arr(self.phase_deltas().iter().map(phase_json).collect())),
+            (
+                "counters",
+                Json::Obj(
+                    self.counter_drift()
+                        .into_iter()
+                        .map(|(name, old, new)| {
+                            (
+                                name.to_string(),
+                                obj([("old", Json::from(old)), ("new", Json::from(new))]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("metrics", self.new.metrics.diff(&self.old.metrics).to_json()),
+        ];
+        if let Some(gate) = gate_pct {
+            fields.push(("gate_pct", Json::from(gate)));
+            fields.push((
+                "regressions",
+                Json::Arr(
+                    self.regressions(gate)
+                        .iter()
+                        .map(|d| Json::from(d.name.as_str()))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render the human comparison: wall delta, phase table, counter
+    /// drift lines.
+    pub fn render(&self) -> String {
+        let mut out = format!("trace diff: {} -> {}\n", self.old.source, self.new.source);
+        if let (Some(a), Some(b)) = (self.old.wall_us, self.new.wall_us) {
+            let pct = if a > 0 { 100.0 * (b as f64 - a as f64) / a as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "wall clock {} -> {} ({:+.1}%)\n",
+                human_time(a as f64 / 1e6),
+                human_time(b as f64 / 1e6),
+                pct
+            ));
+        }
+        out.push('\n');
+        let mut t = Table::new(vec![
+            "phase", "old total", "new total", "delta%", "old p50", "new p50", "old p95", "new p95",
+        ]);
+        for d in self.phase_deltas() {
+            t.row(vec![
+                d.name.clone(),
+                human_time(d.old.total_us as f64 / 1e6),
+                human_time(d.new.total_us as f64 / 1e6),
+                d.total_pct().map(|p| format!("{p:+.1}")).unwrap_or_else(|| "new".into()),
+                human_time(d.old.p50 / 1e6),
+                human_time(d.new.p50 / 1e6),
+                human_time(d.old.p95 / 1e6),
+                human_time(d.new.p95 / 1e6),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+        for (name, old, new) in self.counter_drift() {
+            out.push_str(&format!(
+                "{name}: {:.1}% -> {:.1}% ({:+.1}pp)\n",
+                old * 100.0,
+                new * 100.0,
+                (new - old) * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Metrics;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("carbon3d-diff-{tag}-{}.json", std::process::id()))
+    }
+
+    fn record(phase_values: &[(&'static str, &[u64])], mapper: (u64, u64)) -> ObsRecord {
+        let m = Metrics::default();
+        for (name, values) in phase_values {
+            for &v in *values {
+                m.record(name, v);
+            }
+        }
+        m.incr("mapper_cache_hits", mapper.0);
+        m.incr("mapper_cache_misses", mapper.1);
+        ObsRecord { source: "test".into(), wall_us: None, metrics: m.snapshot() }
+    }
+
+    #[test]
+    fn identical_records_report_zero_regressions() {
+        let a = record(&[("ga.run", &[100, 200, 300])], (8, 2));
+        let d = DiffReport::new(a.clone(), a);
+        assert!(d.regressions(1.0).is_empty());
+        let js = d.to_json(Some(1.0));
+        assert_eq!(js.get("regressions").unwrap().as_arr().unwrap().len(), 0);
+        // The embedded metrics delta is all zeros.
+        let delta = js.get("metrics").unwrap();
+        let hits =
+            delta.get("counters").unwrap().get("mapper_cache_hits").unwrap().as_f64().unwrap();
+        assert_eq!(hits, 0.0);
+    }
+
+    #[test]
+    fn doubled_phase_is_attributed_as_the_culprit() {
+        let old = record(&[("ga.run", &[100, 100]), ("mapper.search", &[50])], (5, 5));
+        let new = record(&[("ga.run", &[1_000, 1_000]), ("mapper.search", &[50])], (2, 8));
+        let d = DiffReport::new(old, new);
+        let reg = d.regressions(10.0);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg[0].name, "ga.run");
+        assert!(reg[0].total_pct().unwrap() > 100.0);
+        // Hit-rate drift surfaces in the counter rows.
+        let drift = d.counter_drift();
+        assert_eq!(drift[0].1, 0.5);
+        assert_eq!(drift[0].2, 0.2);
+        // Render paths don't panic and carry the table.
+        assert!(d.render().contains("ga.run"));
+    }
+
+    #[test]
+    fn sub_bucket_noise_does_not_regress() {
+        // 100µs vs 101µs: same 1-2-5 bucket, p50 unchanged -> total grew
+        // 1% but the gate only fires when the p50 bucket moves.
+        let old = record(&[("service.eval", &[100, 100])], (0, 0));
+        let new = record(&[("service.eval", &[101, 101])], (0, 0));
+        let d = DiffReport::new(old, new);
+        assert!(d.regressions(0.5).is_empty());
+    }
+
+    #[test]
+    fn bench_json_documents_load_as_records() {
+        let path = tmp("bench");
+        let m = Metrics::default();
+        m.record("ga.run", 500);
+        m.incr("mapper_cache_hits", 3);
+        let doc = crate::util::json::obj([
+            ("bench", Json::from("campaign")),
+            ("metrics", m.snapshot().to_json()),
+        ]);
+        std::fs::write(&path, doc.pretty(2)).unwrap();
+        let r = ObsRecord::load(&path).unwrap();
+        assert_eq!(r.wall_us, None);
+        assert_eq!(r.metrics.counter("mapper_cache_hits"), 3);
+        assert_eq!(r.metrics.histograms["ga.run"].count, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

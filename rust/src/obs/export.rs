@@ -1,0 +1,198 @@
+//! `carbon3d trace export --chrome`: convert a (possibly merged) trace
+//! sidecar into Chrome trace-event JSON, loadable by `chrome://tracing`
+//! and Perfetto (ui.perfetto.dev) with zero new dependencies
+//! (DESIGN.md §8.5).
+//!
+//! Mapping: each shard lane becomes a Chrome *process* (named via a
+//! `process_name` metadata event), each worker thread a *thread* within
+//! it; spans become complete (`ph:"X"`) events with start/duration in
+//! µs, point events become instants (`ph:"i"`), and heartbeats become
+//! counter (`ph:"C"`) series so campaign progress graphs render above
+//! the timeline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::report::TraceReport;
+
+/// Build the Chrome trace-event document for a parsed trace.
+pub fn chrome_trace(r: &TraceReport) -> Json {
+    // Lane -> synthetic pid (1-based, sorted for determinism).
+    let lane_of = |shard: &Option<String>| {
+        shard.clone().or_else(|| r.shard.clone()).unwrap_or_else(|| "main".to_string())
+    };
+    let labels: std::collections::BTreeSet<String> = r
+        .spans
+        .iter()
+        .map(|s| lane_of(&s.shard))
+        .chain(r.events.iter().map(|e| lane_of(&e.shard)))
+        .chain(r.beats.iter().map(|b| lane_of(&b.shard)))
+        .collect();
+    let pids: BTreeMap<String, u64> =
+        labels.into_iter().zip(1u64..).map(|(label, pid)| (label, pid)).collect();
+
+    let mut events: Vec<Json> = Vec::new();
+    for (label, pid) in &pids {
+        events.push(obj([
+            ("ph", Json::from("M")),
+            ("name", Json::from("process_name")),
+            ("pid", Json::from(*pid as f64)),
+            ("tid", Json::from(0.0)),
+            ("args", obj([("name", Json::from(format!("shard {label}")))])),
+        ]));
+    }
+    for s in &r.spans {
+        events.push(obj([
+            ("ph", Json::from("X")),
+            ("name", Json::from(s.name.as_str())),
+            ("cat", Json::from("span")),
+            ("ts", Json::from(s.t_us as f64)),
+            ("dur", Json::from(s.dur_us as f64)),
+            ("pid", Json::from(pids[&lane_of(&s.shard)] as f64)),
+            ("tid", Json::from(s.thread as f64)),
+            (
+                "args",
+                obj([
+                    ("job", s.job.as_deref().map(Json::from).unwrap_or(Json::Null)),
+                    ("depth", Json::from(s.depth as f64)),
+                ]),
+            ),
+        ]));
+    }
+    for e in &r.events {
+        events.push(obj([
+            ("ph", Json::from("i")),
+            ("name", Json::from(e.name.as_str())),
+            ("cat", Json::from("event")),
+            ("ts", Json::from(e.t_us as f64)),
+            ("pid", Json::from(pids[&lane_of(&e.shard)] as f64)),
+            ("tid", Json::from(0.0)),
+            ("s", Json::from("p")),
+            ("args", e.fields.clone()),
+        ]));
+    }
+    for b in &r.beats {
+        events.push(obj([
+            ("ph", Json::from("C")),
+            ("name", Json::from("campaign progress")),
+            ("ts", Json::from(b.t_us as f64)),
+            ("pid", Json::from(pids[&lane_of(&b.shard)] as f64)),
+            ("tid", Json::from(0.0)),
+            (
+                "args",
+                obj([
+                    ("done", Json::from(b.done as f64)),
+                    ("pruned", Json::from(b.pruned as f64)),
+                ]),
+            ),
+        ]));
+    }
+    obj([("displayTimeUnit", Json::from("ms")), ("traceEvents", Json::Arr(events))])
+}
+
+/// Load `trace`, convert, and write the Chrome JSON to `out`. Returns
+/// the number of trace events written (excluding metadata records).
+pub fn export_chrome(trace: &Path, out: &Path) -> Result<usize> {
+    let r = TraceReport::load(trace)?;
+    let doc = chrome_trace(&r);
+    let n = r.spans.len() + r.events.len() + r.beats.len();
+    crate::campaign::checkpoint::write_atomic(out, &doc.dumps())
+        .with_context(|| format!("writing chrome trace {}", out.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::sink::SCHEMA;
+
+    fn line(kind: &str, extra: &[(&str, Json)]) -> String {
+        let mut fields = vec![("kind", Json::from(kind))];
+        fields.extend(extra.iter().cloned());
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()).dumps()
+    }
+
+    #[test]
+    fn export_maps_lanes_to_processes_and_spans_to_complete_events() {
+        let path = std::env::temp_dir()
+            .join(format!("carbon3d-export-{}.trace.jsonl", std::process::id()));
+        let out = path.with_extension("chrome.json");
+        let lines = [
+            line(
+                "header",
+                &[
+                    ("schema", Json::from(SCHEMA)),
+                    ("pid", Json::from(1.0)),
+                    ("store", Json::from("s")),
+                    ("shard", Json::Null),
+                    ("epoch_ms", Json::from(0.0)),
+                ],
+            ),
+            line(
+                "span",
+                &[
+                    ("name", Json::from("job.eval")),
+                    ("t_us", Json::from(5.0)),
+                    ("dur_us", Json::from(20.0)),
+                    ("depth", Json::from(0.0)),
+                    ("parent", Json::Null),
+                    ("job", Json::from("j1")),
+                    ("thread", Json::from(2.0)),
+                    ("shard", Json::from("0/2")),
+                ],
+            ),
+            line(
+                "span",
+                &[
+                    ("name", Json::from("job.eval")),
+                    ("t_us", Json::from(6.0)),
+                    ("dur_us", Json::from(10.0)),
+                    ("depth", Json::from(0.0)),
+                    ("parent", Json::Null),
+                    ("job", Json::from("j2")),
+                    ("thread", Json::from(0.0)),
+                    ("shard", Json::from("1/2")),
+                ],
+            ),
+            line(
+                "event",
+                &[
+                    ("name", Json::from("lease.claim")),
+                    ("t_us", Json::from(4.0)),
+                    ("shard", Json::from("0/2")),
+                    ("fields", Json::Obj(Default::default())),
+                ],
+            ),
+        ];
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let n = export_chrome(&path, &out).unwrap();
+        assert_eq!(n, 3);
+
+        let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name metadata records + 3 payload events.
+        assert_eq!(events.len(), 5);
+        let metas: Vec<_> =
+            events.iter().filter(|e| e.get("ph").unwrap() == &Json::from("M")).collect();
+        assert_eq!(metas.len(), 2);
+        let span = events
+            .iter()
+            .find(|e| {
+                e.get("ph").unwrap() == &Json::from("X")
+                    && e.get("args").unwrap().get("job").unwrap() == &Json::from("j1")
+            })
+            .unwrap();
+        assert_eq!(span.get("ts").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(span.get("dur").unwrap().as_f64().unwrap(), 20.0);
+        assert_eq!(span.get("tid").unwrap().as_f64().unwrap(), 2.0);
+        // Lanes sort deterministically: 0/2 -> pid 1, 1/2 -> pid 2.
+        assert_eq!(span.get("pid").unwrap().as_f64().unwrap(), 1.0);
+        for p in [path, out] {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Human-readable formatting for observability output.
+//!
+//! `human_time` is the single time-formatting path: trace reports, stderr
+//! heartbeats, campaign report lines, and the bench harness all route
+//! through it.
+
+/// Format seconds in engineering units.
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with('s'));
+        assert!(human_time(2e-3).ends_with("ms"));
+        assert!(human_time(2e-6).ends_with("us"));
+        assert!(human_time(2e-9).ends_with("ns"));
+    }
+}

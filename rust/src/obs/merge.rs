@@ -1,0 +1,251 @@
+//! `carbon3d trace merge`: fold N shard trace sidecars into one unified
+//! `carbon3d-trace/1` stream (DESIGN.md §8.5).
+//!
+//! Each input is strictly validated first ([`TraceReport::load`]), then
+//! its lines are rewritten onto one time base: every `t_us` offset is
+//! shifted by the input's wall-clock epoch distance from the earliest
+//! input (`epoch_ms` in the header, ms precision), and every span /
+//! event / heartbeat line is stamped with the input's lane label (its
+//! header shard, or `pid<pid>` for unsharded runs). Per-input `metrics`
+//! lines are folded through [`super::Merge`] into a single final
+//! snapshot — the campaign-wide counter totals.
+//!
+//! The output is itself a valid sidecar: it re-validates under
+//! `trace report --check`, renders per-lane utilization and lease
+//! contention, and is byte-deterministic given the same inputs (the
+//! merged header carries pid 0, not the merging process's pid).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::metrics::{Merge, MetricsSnapshot};
+use super::report::TraceReport;
+use super::sink::SCHEMA;
+
+/// What [`merge_traces`] wrote, for the CLI's closing message.
+#[derive(Debug, Clone)]
+pub struct MergeSummary {
+    pub path: PathBuf,
+    pub inputs: usize,
+    pub lines: u64,
+    /// Lane labels in output order.
+    pub lanes: Vec<String>,
+    /// The unified wall-clock epoch (earliest input, Unix ms).
+    pub epoch_ms: u64,
+}
+
+/// Fold the sidecars at `inputs` into one merged sidecar at `out`.
+pub fn merge_traces(inputs: &[PathBuf], out: &Path) -> Result<MergeSummary> {
+    ensure!(!inputs.is_empty(), "trace merge: no input sidecars given");
+    let mut reports = Vec::with_capacity(inputs.len());
+    for path in inputs {
+        let r = TraceReport::load(path)
+            .with_context(|| format!("validating input {}", path.display()))?;
+        if r.epoch_ms.is_none() {
+            bail!(
+                "{}: header lacks epoch_ms (pre-observatory sidecar) — re-run the campaign \
+                 with this build to merge its trace",
+                path.display()
+            );
+        }
+        reports.push(r);
+    }
+    let epoch_ms = reports.iter().filter_map(|r| r.epoch_ms).min().unwrap_or(0);
+
+    // Lane label per input: the shard label, else pid; disambiguate
+    // collisions (e.g. the same unsharded store traced twice) by index.
+    let mut lanes: Vec<String> = Vec::with_capacity(reports.len());
+    for r in &reports {
+        let mut label =
+            r.shard.clone().unwrap_or_else(|| format!("pid{}", r.pid));
+        if lanes.contains(&label) {
+            label = format!("{label}#{}", lanes.len());
+        }
+        lanes.push(label);
+    }
+
+    // Re-read the raw lines, shift them onto the unified time base, and
+    // stamp lane tags. (`t_us`, input index, line index) gives a total,
+    // deterministic order.
+    let mut merged_lines: Vec<(u64, usize, usize, Json)> = Vec::new();
+    let mut snapshot = MetricsSnapshot::default();
+    for (idx, (path, r)) in inputs.iter().zip(&reports).enumerate() {
+        let offset_us = (r.epoch_ms.unwrap_or(0) - epoch_ms) * 1000;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let mut v = Json::parse(line)?;
+            let kind = v.get("kind")?.as_str()?.to_string();
+            match kind.as_str() {
+                "header" => continue,
+                "metrics" => {
+                    snapshot.merge(&MetricsSnapshot::from_json(v.get("snapshot")?)?);
+                    continue;
+                }
+                _ => {}
+            }
+            let t_us = v.get("t_us")?.as_f64()? as u64 + offset_us;
+            if let Json::Obj(m) = &mut v {
+                m.insert("t_us".into(), Json::from(t_us as f64));
+                // Keep per-line tags from already-merged inputs; stamp
+                // everything else with this input's lane.
+                m.entry("shard".to_string()).or_insert_with(|| Json::from(lanes[idx].as_str()));
+            }
+            merged_lines.push((t_us, idx, lineno, v));
+        }
+    }
+    merged_lines.sort_by_key(|(t, idx, lineno, _)| (*t, *idx, *lineno));
+
+    let header = obj([
+        ("kind", Json::from("header")),
+        ("schema", Json::from(SCHEMA)),
+        // pid 0 marks a merged stream and keeps the output byte-
+        // deterministic across merging processes.
+        ("pid", Json::from(0.0)),
+        ("store", Json::from(reports[0].store.as_str())),
+        ("shard", Json::Null),
+        ("epoch_ms", Json::from(epoch_ms as f64)),
+        ("merged_from", Json::Arr(lanes.iter().map(|l| Json::from(l.as_str())).collect())),
+    ]);
+    let last_t_us = merged_lines.last().map(|(t, ..)| *t).unwrap_or(0);
+    let metrics_line = obj([
+        ("kind", Json::from("metrics")),
+        ("t_us", Json::from(last_t_us as f64)),
+        ("snapshot", snapshot.to_json()),
+    ]);
+
+    let mut text = String::new();
+    text.push_str(&header.dumps());
+    text.push('\n');
+    for (_, _, _, v) in &merged_lines {
+        text.push_str(&v.dumps());
+        text.push('\n');
+    }
+    text.push_str(&metrics_line.dumps());
+    text.push('\n');
+    crate::campaign::checkpoint::write_atomic(out, &text)
+        .with_context(|| format!("writing merged trace {}", out.display()))?;
+
+    Ok(MergeSummary {
+        path: out.to_path_buf(),
+        inputs: inputs.len(),
+        lines: merged_lines.len() as u64 + 2,
+        lanes,
+        epoch_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Metrics;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("carbon3d-merge-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    fn shard_sidecar(path: &Path, shard: &str, epoch_ms: f64, job: &str, hits: u64) {
+        let m = Metrics::default();
+        m.incr("mapper_cache_hits", hits);
+        m.record("job.eval", 40);
+        let lines = [
+            obj([
+                ("kind", Json::from("header")),
+                ("schema", Json::from(SCHEMA)),
+                ("pid", Json::from(7.0)),
+                ("store", Json::from("/tmp/demo.jsonl")),
+                ("shard", Json::from(shard)),
+                ("epoch_ms", Json::from(epoch_ms)),
+            ]),
+            obj([
+                ("kind", Json::from("span")),
+                ("name", Json::from("job.eval")),
+                ("t_us", Json::from(10.0)),
+                ("dur_us", Json::from(40.0)),
+                ("depth", Json::from(0.0)),
+                ("parent", Json::Null),
+                ("job", Json::from(job)),
+                ("thread", Json::from(0.0)),
+            ]),
+            obj([
+                ("kind", Json::from("metrics")),
+                ("t_us", Json::from(50.0)),
+                ("snapshot", m.snapshot().to_json()),
+            ]),
+        ];
+        let text: String = lines.iter().map(|l| l.dumps() + "\n").collect();
+        std::fs::write(path, text).unwrap();
+    }
+
+    #[test]
+    fn merge_reconciles_epochs_tags_lanes_and_folds_metrics() {
+        let (a, b, out) = (tmp("in-a"), tmp("in-b"), tmp("out"));
+        shard_sidecar(&a, "0/2", 1_000.0, "job-a", 3);
+        // Shard 1 started 2ms later: its offsets shift by 2000µs.
+        shard_sidecar(&b, "1/2", 1_002.0, "job-b", 5);
+        let s = merge_traces(&[a.clone(), b.clone()], &out).unwrap();
+        assert_eq!(s.lanes, vec!["0/2".to_string(), "1/2".to_string()]);
+        assert_eq!(s.epoch_ms, 1_000);
+
+        let r = TraceReport::load(&out).unwrap();
+        assert_eq!(r.pid, 0);
+        assert_eq!(r.shard, None);
+        assert_eq!(r.epoch_ms, Some(1_000));
+        let sa = r.spans.iter().find(|x| x.job.as_deref() == Some("job-a")).unwrap();
+        let sb = r.spans.iter().find(|x| x.job.as_deref() == Some("job-b")).unwrap();
+        assert_eq!(sa.t_us, 10);
+        assert_eq!(sb.t_us, 2_010, "later epoch must shift onto the unified time base");
+        assert_eq!(sa.shard.as_deref(), Some("0/2"));
+        assert_eq!(sb.shard.as_deref(), Some("1/2"));
+        // One folded metrics line carrying campaign-wide totals.
+        assert_eq!(r.metrics_lines, 1);
+        let m = r.final_metrics.unwrap();
+        assert_eq!(m.counter("mapper_cache_hits"), 8);
+        assert_eq!(m.histograms["job.eval"].count, 2);
+        assert_eq!(r.lanes().len(), 2);
+
+        // Byte-deterministic: merging again yields the identical file.
+        let out2 = tmp("out2");
+        merge_traces(&[a.clone(), b.clone()], &out2).unwrap();
+        assert_eq!(std::fs::read(&out).unwrap(), std::fs::read(&out2).unwrap());
+        for p in [a, b, out, out2] {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn merge_rejects_epochless_inputs_and_disambiguates_lane_collisions() {
+        let old = tmp("epochless");
+        std::fs::write(
+            &old,
+            format!(
+                "{}\n",
+                obj([
+                    ("kind", Json::from("header")),
+                    ("schema", Json::from(SCHEMA)),
+                    ("pid", Json::from(1.0)),
+                    ("store", Json::from("s")),
+                    ("shard", Json::Null),
+                ])
+                .dumps()
+            ),
+        )
+        .unwrap();
+        let err = merge_traces(&[old.clone()], &tmp("never")).unwrap_err();
+        assert!(format!("{err:#}").contains("epoch_ms"), "{err:#}");
+        std::fs::remove_file(&old).unwrap();
+
+        let (a, b, out) = (tmp("dup-a"), tmp("dup-b"), tmp("dup-out"));
+        shard_sidecar(&a, "0/2", 1_000.0, "x", 0);
+        shard_sidecar(&b, "0/2", 1_000.0, "y", 0);
+        let s = merge_traces(&[a.clone(), b.clone()], &out).unwrap();
+        assert_eq!(s.lanes, vec!["0/2".to_string(), "0/2#1".to_string()]);
+        for p in [a, b, out] {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+}

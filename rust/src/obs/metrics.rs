@@ -19,6 +19,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 use std::time::Duration;
 
+use anyhow::{ensure, Context, Result};
+
 use crate::util::json::{obj, Json};
 
 /// Histogram bucket upper bounds (inclusive), a 1-2-5 ladder from 1 to
@@ -144,14 +146,42 @@ impl HistogramCounts {
         self.quantile(0.95)
     }
 
-    fn to_json(&self) -> Json {
+    /// Serialize, including the raw bucket array: the derived quantiles
+    /// are convenient for human eyeballing but only the buckets make the
+    /// snapshot losslessly mergeable (`trace merge` / `trace diff` fold
+    /// parsed snapshots through [`Merge`]).
+    pub fn to_json(&self) -> Json {
         obj([
+            ("buckets", Json::Arr(self.buckets.iter().map(|&b| Json::from(b as f64)).collect())),
             ("count", Json::from(self.count as f64)),
             ("sum", Json::from(self.sum as f64)),
             ("mean", Json::from(self.mean())),
             ("p50", Json::from(self.p50())),
             ("p95", Json::from(self.p95())),
         ])
+    }
+
+    /// Parse a serialized histogram. The `buckets` array is optional
+    /// (pre-observatory sidecars and bench files omit it) — without it
+    /// the counts still carry `count`/`sum`, but quantiles read 0.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut h = HistogramCounts {
+            buckets: [0; N_BUCKETS],
+            count: v.get("count")?.as_f64()? as u64,
+            sum: v.get("sum")?.as_f64()? as u64,
+        };
+        if let Ok(arr) = v.get("buckets") {
+            let arr = arr.as_arr()?;
+            ensure!(
+                arr.len() == N_BUCKETS,
+                "histogram buckets: expected {N_BUCKETS} entries, got {}",
+                arr.len()
+            );
+            for (i, b) in arr.iter().enumerate() {
+                h.buckets[i] = b.as_f64()? as u64;
+            }
+        }
+        Ok(h)
     }
 }
 
@@ -408,6 +438,33 @@ impl MetricsSnapshot {
             ),
         ])
     }
+
+    /// Parse a snapshot back from its [`Self::to_json`] form — the read
+    /// side of the trace sidecar's `metrics` lines and the bench `--json`
+    /// embeddings, so `trace merge`/`trace diff` can fold them through
+    /// [`Merge`].
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut s = Self::default();
+        for (k, c) in v.get("counters")?.as_obj()? {
+            s.counters.insert(k.clone(), c.as_f64()? as u64);
+        }
+        for (k, g) in v.get("gauges")?.as_obj()? {
+            s.gauges.insert(
+                k.clone(),
+                GaugeCounts {
+                    last: g.get("last")?.as_f64()? as u64,
+                    max: g.get("max")?.as_f64()? as u64,
+                },
+            );
+        }
+        for (k, h) in v.get("histograms")?.as_obj()? {
+            s.histograms.insert(
+                k.clone(),
+                HistogramCounts::from_json(h).with_context(|| format!("histogram {k:?}"))?,
+            );
+        }
+        Ok(s)
+    }
 }
 
 impl Merge for MetricsSnapshot {
@@ -566,5 +623,117 @@ mod tests {
                 .unwrap(),
             1.0
         );
+        // Lossless: buckets survive the round trip, so a re-parsed
+        // snapshot is Merge-equivalent to the original.
+        let snap = m.snapshot();
+        let reparsed = MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed, snap);
+    }
+
+    #[test]
+    fn histogram_from_json_tolerates_missing_buckets_and_rejects_bad_arity() {
+        let legacy = Json::parse("{\"count\":3,\"sum\":30}").unwrap();
+        let h = HistogramCounts::from_json(&legacy).unwrap();
+        assert_eq!((h.count, h.sum), (3, 30));
+        assert_eq!(h.buckets, [0; N_BUCKETS]);
+        let bad = Json::parse("{\"count\":1,\"sum\":1,\"buckets\":[1,2]}").unwrap();
+        assert!(HistogramCounts::from_json(&bad).is_err());
+    }
+
+    // --- Merge algebra properties: the soundness basis for `trace merge`
+    // and `trace diff`, which fold snapshots from many shards in whatever
+    // order the CLI receives them. ---
+
+    fn random_hist(rng: &mut crate::util::Rng) -> HistogramCounts {
+        let mut h = HistogramCounts::default();
+        for _ in 0..rng.range(0, 40) {
+            // Spread values across the whole ladder including overflow.
+            let v = 1u64 << rng.range(0, 40);
+            h.buckets[Histogram::bucket_index(v)] += 1;
+            h.count += 1;
+            h.sum += v;
+        }
+        h
+    }
+
+    fn random_snapshot(rng: &mut crate::util::Rng) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        for name in ["alpha", "beta", "gamma"] {
+            if rng.chance(0.7) {
+                s.counters.insert(name.into(), rng.below(1000));
+            }
+            if rng.chance(0.5) {
+                let last = rng.below(100);
+                s.gauges.insert(name.into(), GaugeCounts { last, max: last + rng.below(50) });
+            }
+            if rng.chance(0.7) {
+                s.histograms.insert(name.into(), random_hist(rng));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn prop_histogram_merge_is_commutative_and_associative() {
+        crate::util::prop::check("hist-merge-algebra", 64, |rng| {
+            let (a, b, c) = (random_hist(rng), random_hist(rng), random_hist(rng));
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "merge must commute");
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c, a_bc, "merge must associate");
+        });
+    }
+
+    #[test]
+    fn prop_snapshot_merge_is_commutative_and_associative() {
+        crate::util::prop::check("snapshot-merge-algebra", 64, |rng| {
+            let (a, b, c) = (random_snapshot(rng), random_snapshot(rng), random_snapshot(rng));
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "merge must commute");
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c, a_bc, "merge must associate");
+        });
+    }
+
+    #[test]
+    fn prop_bucket_ladder_is_stable_across_merge_order() {
+        // Recording values into one histogram, or partitioning them across
+        // shards and merging the parts in any order, must land every value
+        // in the same 1-2-5-ladder bucket and report identical quantiles.
+        crate::util::prop::check("bucket-ladder-stability", 64, |rng| {
+            let n = rng.range(1, 60);
+            let values: Vec<u64> =
+                (0..n).map(|_| rng.below(1u64 << rng.range(1, 40))).collect();
+            let whole = Histogram::default();
+            for &v in &values {
+                whole.record(v);
+            }
+            let shards: Vec<Histogram> = (0..3).map(|_| Histogram::default()).collect();
+            for &v in &values {
+                shards[rng.range(0, 2)].record(v);
+            }
+            let mut parts: Vec<HistogramCounts> = shards.iter().map(|h| h.counts()).collect();
+            rng.shuffle(&mut parts);
+            let folded = merged(parts);
+            assert_eq!(folded, whole.counts());
+            assert_eq!(folded.p50(), whole.counts().p50());
+            assert_eq!(folded.p95(), whole.counts().p95());
+        });
     }
 }

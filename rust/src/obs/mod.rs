@@ -13,20 +13,37 @@
 //!    `carbon3d campaign --trace` / `CARBON3D_TRACE=1`; writes the
 //!    `<store>.trace.jsonl` sidecar read back by `carbon3d trace report`.
 //!
+//! On top of the per-process core sits the campaign observatory
+//! (DESIGN.md §8.5): [`merge`] folds shard sidecars into one stream with
+//! per-shard lanes, [`diff`] attributes run-to-run regressions to
+//! phases, [`export`] emits Chrome/Perfetto timelines, and [`status`]
+//! keeps an atomically-updated `<store>.status.json` live snapshot
+//! (always on, `CARBON3D_STATUS=0` / `--no-status` to disable).
+//!
 //! Determinism contract: nothing in this module writes to the result
 //! store, the `.front.json` checkpoint, or `deterministic_json()`; the
 //! sidecar is a separate file keyed off the store path. CI's
 //! `trace-smoke` job byte-compares traced vs. untraced runs.
 
+pub mod bench;
+pub mod diff;
+pub mod export;
+pub mod fmt;
+pub mod merge;
 pub mod metrics;
 pub mod report;
 pub mod sink;
 pub mod span;
+pub mod status;
 
+pub use diff::ObsRecord;
+pub use fmt::human_time;
+pub use merge::merge_traces;
 pub use metrics::{merged, metrics, Histogram, HistogramCounts, Merge, Metrics, MetricsSnapshot};
 pub use report::TraceReport;
 pub use sink::{enabled, flush, heartbeat, install, uninstall, Heartbeat, TraceSummary};
 pub use span::{job_scope, span, JobScope, Span};
+pub use status::StatusWriter;
 
 use crate::util::json::Json;
 
@@ -93,9 +110,14 @@ mod tests {
         assert_eq!(r.schema, sink::SCHEMA);
         assert_eq!(r.store, "/tmp/demo.jsonl");
         assert_eq!(r.shard.as_deref(), Some("0/2"));
-        assert_eq!(r.heartbeats, 1);
+        assert_eq!(r.beats.len(), 1);
+        assert_eq!(r.beats[0].done, 3);
         assert_eq!(r.metrics_lines, 1);
-        assert_eq!(r.events, vec!["lease.claim".to_string()]);
+        assert!(r.final_metrics.is_some());
+        assert!(r.epoch_ms.is_some(), "header must carry the wall-clock epoch");
+        assert_eq!(r.events.len(), 1);
+        assert_eq!(r.events[0].name, "lease.claim");
+        assert_eq!(r.events[0].fields.get("key").unwrap().as_str().unwrap(), "vgg16|7nm|d3");
         // header + 2 spans + event + heartbeat + metrics
         assert_eq!(r.lines, 6);
         assert_eq!(summary.lines, 6);

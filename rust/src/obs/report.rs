@@ -1,15 +1,17 @@
 //! Trace sidecar reader: strict schema validation (`trace report
-//! --check`) plus the per-phase breakdown and top-K-slowest-jobs tables
-//! behind `carbon3d trace report`.
+//! --check`) plus the per-phase breakdown, per-shard lane, and
+//! top-K-slowest-jobs tables behind `carbon3d trace report`.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::fmt::human_time;
 use crate::util::json::Json;
 use crate::util::table::Table;
-use crate::util::timer::human_time;
 
+use super::metrics::MetricsSnapshot;
 use super::sink::SCHEMA;
 
 /// One closed span parsed from a sidecar line.
@@ -22,6 +24,48 @@ pub struct SpanRec {
     pub t_us: u64,
     pub dur_us: u64,
     pub thread: u64,
+    /// Lane tag stamped by `trace merge` (single-process sidecars carry
+    /// the lane on the header instead).
+    pub shard: Option<String>,
+}
+
+/// One point event parsed from a sidecar line.
+#[derive(Debug, Clone)]
+pub struct EventRec {
+    pub name: String,
+    pub t_us: u64,
+    pub shard: Option<String>,
+    pub fields: Json,
+}
+
+impl EventRec {
+    /// Whether a boolean event field is present and true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.fields.get(key), Ok(Json::Bool(true)))
+    }
+}
+
+/// One live-progress heartbeat parsed from a sidecar line.
+#[derive(Debug, Clone)]
+pub struct HeartbeatRec {
+    pub t_us: u64,
+    pub done: u64,
+    pub pruned: u64,
+    pub committed: u64,
+    pub scheduled: u64,
+    pub shard: Option<String>,
+}
+
+/// Per-lane aggregation of a (merged) trace — one row per shard worker.
+#[derive(Debug, Clone, Default)]
+pub struct LaneStats {
+    pub label: String,
+    pub spans: usize,
+    pub jobs: usize,
+    /// Interval-merged `job.eval` wall clock for this lane, in µs.
+    pub busy_us: u64,
+    pub claims: u64,
+    pub reclaims: u64,
 }
 
 /// A fully parsed + validated trace sidecar.
@@ -30,10 +74,17 @@ pub struct TraceReport {
     pub schema: String,
     pub store: String,
     pub shard: Option<String>,
+    pub pid: u64,
+    /// Wall-clock anchor of `t_us` offsets (Unix ms). Optional: sidecars
+    /// predating the observatory lack it; `trace merge` requires it.
+    pub epoch_ms: Option<u64>,
     pub spans: Vec<SpanRec>,
-    pub events: Vec<String>,
-    pub heartbeats: usize,
+    pub events: Vec<EventRec>,
+    pub beats: Vec<HeartbeatRec>,
     pub metrics_lines: usize,
+    /// All `metrics` lines folded through [`super::Merge`] — the
+    /// campaign-wide counter totals for a merged trace.
+    pub final_metrics: Option<MetricsSnapshot>,
     pub lines: usize,
 }
 
@@ -51,6 +102,40 @@ fn opt_str(v: &Json, key: &str) -> Result<Option<String>> {
         Json::Str(s) => Ok(Some(s.clone())),
         other => bail!("field {key:?}: expected string or null, got {other:?}"),
     }
+}
+
+/// Like [`opt_str`], but the field may also be absent entirely (lane
+/// tags only exist on merged sidecars, epoch only on current ones).
+fn absent_ok_str(v: &Json, key: &str) -> Result<Option<String>> {
+    match v.get(key) {
+        Err(_) => Ok(None),
+        Ok(Json::Null) => Ok(None),
+        Ok(Json::Str(s)) => Ok(Some(s.clone())),
+        Ok(other) => bail!("field {key:?}: expected string or null, got {other:?}"),
+    }
+}
+
+/// Merged total length of a set of `(start, end)` intervals in µs —
+/// overlaps (concurrent worker threads) count once.
+pub(super) fn merged_interval_us(mut ivals: Vec<(u64, u64)>) -> u64 {
+    ivals.sort_unstable();
+    let mut covered = 0u64;
+    let mut cur: Option<(u64, u64)> = None;
+    for (a, b) in ivals {
+        match &mut cur {
+            Some((_, e)) if a <= *e => *e = (*e).max(b),
+            _ => {
+                if let Some((s, e)) = cur {
+                    covered += e - s;
+                }
+                cur = Some((a, b));
+            }
+        }
+    }
+    if let Some((s, e)) = cur {
+        covered += e - s;
+    }
+    covered
 }
 
 impl TraceReport {
@@ -73,15 +158,20 @@ impl TraceReport {
                         if schema != SCHEMA {
                             bail!("schema {schema:?} != expected {SCHEMA:?}");
                         }
-                        req_num(&v, "pid")?;
                         *r = Some(TraceReport {
                             schema,
                             store: req_str(&v, "store")?,
                             shard: opt_str(&v, "shard")?,
+                            pid: req_num(&v, "pid")? as u64,
+                            epoch_ms: match v.get("epoch_ms") {
+                                Ok(e) => Some(e.as_f64()? as u64),
+                                Err(_) => None,
+                            },
                             spans: Vec::new(),
                             events: Vec::new(),
-                            heartbeats: 0,
+                            beats: Vec::new(),
                             metrics_lines: 0,
+                            final_metrics: None,
                             lines: 0,
                         });
                     }
@@ -95,35 +185,40 @@ impl TraceReport {
                         t_us: req_num(&v, "t_us")? as u64,
                         dur_us: req_num(&v, "dur_us")? as u64,
                         thread: req_num(&v, "thread")? as u64,
+                        shard: absent_ok_str(&v, "shard")?,
                     }),
-                    ("event", Some(r)) => {
-                        req_num(&v, "t_us")?;
-                        v.get("fields")?.as_obj()?;
-                        r.events.push(req_str(&v, "name")?);
-                    }
+                    ("event", Some(r)) => r.events.push(EventRec {
+                        name: req_str(&v, "name")?,
+                        t_us: req_num(&v, "t_us")? as u64,
+                        shard: absent_ok_str(&v, "shard")?,
+                        fields: {
+                            let f = v.get("fields")?;
+                            f.as_obj()?;
+                            f.clone()
+                        },
+                    }),
                     ("heartbeat", Some(r)) => {
-                        for k in [
-                            "t_us",
-                            "done",
-                            "pruned",
-                            "deferred",
-                            "committed",
-                            "scheduled",
-                            "jobs_per_s",
-                            "eta_s",
-                            "mapper_hit_rate",
-                            "service_hit_rate",
-                        ] {
+                        for k in ["deferred", "jobs_per_s", "eta_s", "mapper_hit_rate",
+                            "service_hit_rate"]
+                        {
                             req_num(&v, k)?;
                         }
-                        r.heartbeats += 1;
+                        r.beats.push(HeartbeatRec {
+                            t_us: req_num(&v, "t_us")? as u64,
+                            done: req_num(&v, "done")? as u64,
+                            pruned: req_num(&v, "pruned")? as u64,
+                            committed: req_num(&v, "committed")? as u64,
+                            scheduled: req_num(&v, "scheduled")? as u64,
+                            shard: absent_ok_str(&v, "shard")?,
+                        });
                     }
                     ("metrics", Some(r)) => {
                         req_num(&v, "t_us")?;
-                        let snap = v.get("snapshot")?;
-                        snap.get("counters")?.as_obj()?;
-                        snap.get("gauges")?.as_obj()?;
-                        snap.get("histograms")?.as_obj()?;
+                        let snap = MetricsSnapshot::from_json(v.get("snapshot")?)?;
+                        match &mut r.final_metrics {
+                            Some(m) => super::Merge::merge(m, &snap),
+                            none => *none = Some(snap),
+                        }
                         r.metrics_lines += 1;
                     }
                     (k, Some(_)) => bail!("unknown line kind {k:?}"),
@@ -146,6 +241,47 @@ impl TraceReport {
         self.spans.iter().map(|s| s.t_us + s.dur_us).max().unwrap_or(0)
     }
 
+    /// The lane a record belongs to: its own tag (merged sidecars), else
+    /// the header shard, else the single implicit lane.
+    fn lane_label(&self, rec_shard: &Option<String>) -> String {
+        rec_shard
+            .clone()
+            .or_else(|| self.shard.clone())
+            .unwrap_or_else(|| "main".to_string())
+    }
+
+    /// Per-lane aggregation, one row per shard worker, sorted by label:
+    /// span/job counts, interval-merged busy time, and lease claim /
+    /// reclaim contention from the `lease.claim` events.
+    pub fn lanes(&self) -> Vec<LaneStats> {
+        let mut lanes: BTreeMap<String, (LaneStats, Vec<(u64, u64)>)> = BTreeMap::new();
+        for s in &self.spans {
+            let (stats, ivals) = lanes.entry(self.lane_label(&s.shard)).or_default();
+            stats.spans += 1;
+            if s.name == "job.eval" {
+                stats.jobs += 1;
+                ivals.push((s.t_us, s.t_us + s.dur_us));
+            }
+        }
+        for e in &self.events {
+            let (stats, _) = lanes.entry(self.lane_label(&e.shard)).or_default();
+            if e.name == "lease.claim" {
+                stats.claims += 1;
+                if e.flag("reclaimed") {
+                    stats.reclaims += 1;
+                }
+            }
+        }
+        lanes
+            .into_iter()
+            .map(|(label, (mut stats, ivals))| {
+                stats.label = label;
+                stats.busy_us = merged_interval_us(ivals);
+                stats
+            })
+            .collect()
+    }
+
     /// Per-phase aggregation (by span name, sorted by total time desc):
     /// `(name, count, total_us, p50_us, p95_us)`.
     pub fn phases(&self) -> Vec<(String, usize, u64, f64, f64)> {
@@ -166,17 +302,18 @@ impl TraceReport {
     }
 
     /// The `k` slowest per-job spans (`job.eval`), slowest first:
-    /// `(job key, dur_us)`.
+    /// `(job key, dur_us)`. Fully deterministic under duration ties:
+    /// ordered by duration desc, then start offset, then job key.
     pub fn slowest_jobs(&self, k: usize) -> Vec<(String, u64)> {
-        let mut jobs: Vec<(String, u64)> = self
+        let mut jobs: Vec<(String, u64, u64)> = self
             .spans
             .iter()
             .filter(|s| s.name == "job.eval")
-            .map(|s| (s.job.clone().unwrap_or_else(|| "<unattributed>".into()), s.dur_us))
+            .map(|s| (s.job.clone().unwrap_or_else(|| "<unattributed>".into()), s.dur_us, s.t_us))
             .collect();
-        jobs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        jobs.sort_by(|a, b| b.1.cmp(&a.1).then(a.2.cmp(&b.2)).then(a.0.cmp(&b.0)));
         jobs.truncate(k);
-        jobs
+        jobs.into_iter().map(|(job, dur_us, _)| (job, dur_us)).collect()
     }
 
     /// Fraction of trace wall-clock covered by per-job `job.eval` spans,
@@ -187,36 +324,21 @@ impl TraceReport {
         if wall == 0 {
             return 0.0;
         }
-        let mut ivals: Vec<(u64, u64)> = self
-            .spans
-            .iter()
-            .filter(|s| s.name == "job.eval")
-            .map(|s| (s.t_us, s.t_us + s.dur_us))
-            .collect();
-        ivals.sort_unstable();
-        let mut covered = 0u64;
-        let mut cur: Option<(u64, u64)> = None;
-        for (a, b) in ivals {
-            match &mut cur {
-                Some((_, e)) if a <= *e => *e = (*e).max(b),
-                _ => {
-                    if let Some((s, e)) = cur {
-                        covered += e - s;
-                    }
-                    cur = Some((a, b));
-                }
-            }
-        }
-        if let Some((s, e)) = cur {
-            covered += e - s;
-        }
+        let covered = merged_interval_us(
+            self.spans
+                .iter()
+                .filter(|s| s.name == "job.eval")
+                .map(|s| (s.t_us, s.t_us + s.dur_us))
+                .collect(),
+        );
         covered as f64 / wall as f64
     }
 
-    /// Render the human report: summary line, per-phase table, top-K
-    /// slowest jobs.
+    /// Render the human report: summary line, per-shard lane table (when
+    /// the trace is merged), per-phase table, top-K slowest jobs.
     pub fn render(&self, top: usize) -> String {
-        let wall_s = self.wall_us() as f64 / 1e6;
+        let wall_us = self.wall_us();
+        let wall_s = wall_us as f64 / 1e6;
         let mut out = format!(
             "trace of {} ({}schema {})\nwall clock {} | {} spans, {} events, {} heartbeats | \
              job span coverage {:.0}%\n\n",
@@ -229,16 +351,35 @@ impl TraceReport {
             human_time(wall_s),
             self.spans.len(),
             self.events.len(),
-            self.heartbeats,
+            self.beats.len(),
             self.job_span_coverage() * 100.0,
         );
+        let lanes = self.lanes();
+        if lanes.len() > 1 {
+            let mut t =
+                Table::new(vec!["lane", "spans", "jobs", "busy", "util%", "claims", "reclaims"]);
+            for l in &lanes {
+                let util = if wall_us > 0 {
+                    100.0 * l.busy_us as f64 / wall_us as f64
+                } else {
+                    0.0
+                };
+                t.row(vec![
+                    l.label.clone(),
+                    l.spans.to_string(),
+                    l.jobs.to_string(),
+                    human_time(l.busy_us as f64 / 1e6),
+                    format!("{util:.0}"),
+                    l.claims.to_string(),
+                    l.reclaims.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
         let mut t = Table::new(vec!["phase", "count", "total", "p50", "p95", "% wall"]);
         for (name, count, total_us, p50, p95) in self.phases() {
-            let pct = if self.wall_us() > 0 {
-                100.0 * total_us as f64 / self.wall_us() as f64
-            } else {
-                0.0
-            };
+            let pct = if wall_us > 0 { 100.0 * total_us as f64 / wall_us as f64 } else { 0.0 };
             t.row(vec![
                 name,
                 count.to_string(),
@@ -260,5 +401,113 @@ impl TraceReport {
             out.push_str(&t.render());
         }
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("carbon3d-report-{tag}-{}.trace.jsonl", std::process::id()))
+    }
+
+    fn header(shard: Option<&str>) -> String {
+        obj([
+            ("kind", Json::from("header")),
+            ("schema", Json::from(SCHEMA)),
+            ("pid", Json::from(1.0)),
+            ("store", Json::from("s")),
+            ("shard", shard.map(Json::from).unwrap_or(Json::Null)),
+            ("epoch_ms", Json::from(1_000.0)),
+        ])
+        .dumps()
+    }
+
+    fn job_span(job: &str, t: f64, d: f64, shard: Option<&str>) -> String {
+        let mut o = obj([
+            ("kind", Json::from("span")),
+            ("name", Json::from("job.eval")),
+            ("t_us", Json::from(t)),
+            ("dur_us", Json::from(d)),
+            ("depth", Json::from(0.0)),
+            ("parent", Json::Null),
+            ("job", Json::from(job)),
+            ("thread", Json::from(0.0)),
+        ]);
+        if let (Json::Obj(m), Some(s)) = (&mut o, shard) {
+            m.insert("shard".into(), Json::from(s));
+        }
+        o.dumps()
+    }
+
+    #[test]
+    fn top_k_ordering_is_deterministic_under_duration_ties() {
+        let path = tmp("ties");
+        // Three equal-duration jobs: order must fall back to start offset,
+        // then name — never file order.
+        let lines = [
+            header(None),
+            job_span("zz-late", 300.0, 50.0, None),
+            job_span("bb-early", 100.0, 50.0, None),
+            job_span("aa-same-start", 300.0, 50.0, None),
+            job_span("slowest", 0.0, 90.0, None),
+        ];
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let r = TraceReport::load(&path).unwrap();
+        let top = r.slowest_jobs(10);
+        assert_eq!(
+            top,
+            vec![
+                ("slowest".to_string(), 90),
+                ("bb-early".to_string(), 50),
+                ("aa-same-start".to_string(), 50),
+                ("zz-late".to_string(), 50),
+            ]
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn lanes_aggregate_per_shard_busy_time_and_lease_contention() {
+        let path = tmp("lanes");
+        let claim = |shard: &str, reclaimed: bool| {
+            obj([
+                ("kind", Json::from("event")),
+                ("name", Json::from("lease.claim")),
+                ("t_us", Json::from(5.0)),
+                ("shard", Json::from(shard)),
+                (
+                    "fields",
+                    obj([("key", Json::from("j")), ("reclaimed", Json::from(reclaimed))]),
+                ),
+            ])
+            .dumps()
+        };
+        let lines = [
+            header(None),
+            // Lane 0/2: overlapping spans [0,60] + [40,100] -> busy 100.
+            job_span("a", 0.0, 60.0, Some("0/2")),
+            job_span("b", 40.0, 60.0, Some("0/2")),
+            // Lane 1/2: disjoint [0,30] + [50,80] -> busy 60.
+            job_span("c", 0.0, 30.0, Some("1/2")),
+            job_span("d", 50.0, 30.0, Some("1/2")),
+            claim("0/2", false),
+            claim("1/2", true),
+        ];
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let r = TraceReport::load(&path).unwrap();
+        let lanes = r.lanes();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!((lanes[0].label.as_str(), lanes[0].jobs, lanes[0].busy_us), ("0/2", 2, 100));
+        assert_eq!((lanes[0].claims, lanes[0].reclaims), (1, 0));
+        assert_eq!((lanes[1].label.as_str(), lanes[1].jobs, lanes[1].busy_us), ("1/2", 2, 60));
+        assert_eq!((lanes[1].claims, lanes[1].reclaims), (1, 1));
+        // The merged render shows the lane table.
+        assert!(r.render(3).contains("reclaims"));
+        std::fs::remove_file(&path).unwrap();
     }
 }

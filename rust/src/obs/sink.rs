@@ -3,7 +3,10 @@
 //!
 //! Layout per line (schema `carbon3d-trace/1`, one JSON object per line):
 //!
-//! - `header` — first line; schema version, pid, store path, shard label.
+//! - `header` — first line; schema version, pid, store path, shard
+//!   label, and the wall-clock epoch (`epoch_ms`, Unix ms) that anchors
+//!   every monotonic `t_us` offset — `trace merge` reconciles shard
+//!   sidecars onto one time base from it.
 //! - `span` — a closed timed span: name, start offset + duration (µs),
 //!   nesting depth, parent span name, owning job key, thread ordinal.
 //! - `event` — a point event (lease claim, torn-append recovery, ...).
@@ -71,12 +74,17 @@ pub fn install(path: &Path, store: &Path, shard: Option<&str>) -> Result<()> {
         path: path.to_path_buf(),
         lines: 0,
     };
+    let epoch_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
     let header = obj([
         ("kind", Json::from("header")),
         ("schema", Json::from(SCHEMA)),
         ("pid", Json::from(std::process::id() as f64)),
         ("store", Json::from(store.display().to_string())),
         ("shard", shard.map(Json::from).unwrap_or(Json::Null)),
+        ("epoch_ms", Json::from(epoch_ms as f64)),
     ]);
     state.write_line(&header)?;
     *st = Some(state);
@@ -192,6 +200,37 @@ pub struct Heartbeat {
     pub elapsed_s: f64,
 }
 
+impl Heartbeat {
+    /// Committed schedule slots per second of campaign wall clock.
+    pub fn jobs_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.committed as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Remaining-slot ETA in seconds at the current commit rate.
+    pub fn eta_s(&self) -> f64 {
+        let rate = self.jobs_per_s();
+        if rate > 0.0 {
+            self.scheduled.saturating_sub(self.committed) as f64 / rate
+        } else {
+            0.0
+        }
+    }
+}
+
+/// `hits / total`, 0 when nothing happened — shared by the heartbeat
+/// line and the status snapshot so both report identical rates.
+pub fn hit_rate(hits: u64, total: u64) -> f64 {
+    if total > 0 {
+        hits as f64 / total as f64
+    } else {
+        0.0
+    }
+}
+
 /// Emit a heartbeat: one sidecar line plus a human line on stderr
 /// (stdout carries the report and stays clean). Cache hit-rates come
 /// from the process metrics registry.
@@ -199,16 +238,8 @@ pub fn heartbeat(h: &Heartbeat) {
     if !enabled() {
         return;
     }
-    let rate = if h.elapsed_s > 0.0 { h.committed as f64 / h.elapsed_s } else { 0.0 };
-    let remaining = h.scheduled.saturating_sub(h.committed);
-    let eta_s = if rate > 0.0 { remaining as f64 / rate } else { 0.0 };
-    let hit_rate = |hits: u64, total: u64| {
-        if total > 0 {
-            hits as f64 / total as f64
-        } else {
-            0.0
-        }
-    };
+    let rate = h.jobs_per_s();
+    let eta_s = h.eta_s();
     let m = metrics();
     let mapper_hits = m.counter("mapper_cache_hits");
     let mapper_rate = hit_rate(mapper_hits, mapper_hits + m.counter("mapper_cache_misses"));
@@ -243,6 +274,6 @@ pub fn heartbeat(h: &Heartbeat) {
         rate,
         mapper_rate * 100.0,
         service_rate * 100.0,
-        crate::util::timer::human_time(eta_s),
+        super::fmt::human_time(eta_s),
     );
 }

@@ -1,0 +1,254 @@
+//! Live campaign status snapshot: `<store>.status.json`
+//! (DESIGN.md §8.5).
+//!
+//! On every heartbeat tick and archive checkpoint the commit pipeline
+//! rewrites one small JSON document — jobs done/pruned/total, commit
+//! rate and ETA, current Pareto-front size, per-phase time shares, and
+//! cache/lease counters — atomically (temp + rename, the same
+//! [`crate::campaign::checkpoint::write_atomic`] discipline as the
+//! front sidecar), so an operator can `cat`/poll it mid-run without
+//! ever seeing a torn file. It is on by default (pure observability:
+//! the store, front, and report stay byte-identical — CI-gated) and
+//! disabled with `CARBON3D_STATUS=0` or `--no-status`.
+//!
+//! `carbon3d trace metrics <status.json>` renders the same document in
+//! Prometheus text exposition format — the designed seam for the
+//! ROADMAP's future `carbon3d serve /status` endpoint, which will serve
+//! exactly this payload.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::metrics::metrics;
+use super::sink::{hit_rate, Heartbeat};
+
+/// Status document schema identifier.
+pub const STATUS_SCHEMA: &str = "carbon3d-status/1";
+
+/// The campaign phases broken out as time shares in the status document
+/// and `CampaignReport::line()` — the four layers a job's wall clock
+/// divides into.
+pub const PHASES: [&str; 4] = ["ga.run", "mapper.search", "service.eval", "commit.row"];
+
+static FORCE_OFF: AtomicBool = AtomicBool::new(false);
+
+/// Programmatic kill switch (`--no-status`); composes with the
+/// `CARBON3D_STATUS=0` environment override.
+pub fn set_enabled(on: bool) {
+    FORCE_OFF.store(!on, Ordering::Relaxed);
+}
+
+/// Whether status snapshots are enabled for this process.
+pub fn enabled() -> bool {
+    !FORCE_OFF.load(Ordering::Relaxed)
+        && std::env::var("CARBON3D_STATUS").map(|v| v != "0").unwrap_or(true)
+}
+
+/// The sidecar path for a store: `campaign.jsonl` -> `campaign.status.json`
+/// (shard stores get their own, e.g. `campaign.shard0of2.status.json`).
+pub fn status_path(store: &Path) -> PathBuf {
+    store.with_extension("status.json")
+}
+
+/// Writes `<store>.status.json` snapshots. Constructed once per campaign
+/// by the executor core; the commit pipeline drives it.
+#[derive(Debug, Clone)]
+pub struct StatusWriter {
+    path: PathBuf,
+    store: String,
+    shard: Option<String>,
+}
+
+impl StatusWriter {
+    /// Build a writer unconditionally (tests, tooling).
+    pub fn new(store: &Path, shard: Option<String>) -> Self {
+        Self { path: status_path(store), store: store.display().to_string(), shard }
+    }
+
+    /// Build a writer iff status snapshots are enabled.
+    pub fn create(store: &Path, shard: Option<String>) -> Option<Self> {
+        enabled().then(|| Self::new(store, shard))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Atomically rewrite the snapshot. `state` is `"running"` or
+    /// `"done"`. Errors are reported, not fatal — callers drop them:
+    /// status is pure observability and must never kill a campaign.
+    pub fn write(&self, state: &str, h: &Heartbeat, front_size: usize) -> Result<()> {
+        let doc = self.document(state, h, front_size);
+        crate::campaign::checkpoint::write_atomic(&self.path, &format!("{}\n", doc.pretty(2)))
+            .with_context(|| format!("writing status {}", self.path.display()))
+    }
+
+    /// Assemble the status document from a progress heartbeat plus the
+    /// process metrics registry (same sources as the stderr heartbeat,
+    /// so both always agree).
+    pub fn document(&self, state: &str, h: &Heartbeat, front_size: usize) -> Json {
+        let m = metrics();
+        let mapper = (m.counter("mapper_cache_hits"), m.counter("mapper_cache_misses"));
+        let memo = (m.counter("ga_memo_hits"), m.counter("ga_memo_misses"));
+        let (svc_hits, svc_served) =
+            (m.counter("service_cache_hits"), m.counter("service_served"));
+        let snap = m.snapshot();
+        let phase_total: u64 =
+            PHASES.iter().filter_map(|p| snap.histogram(p)).map(|h| h.sum).sum();
+        let shares = PHASES
+            .iter()
+            .map(|&p| {
+                let sum = snap.histogram(p).map(|h| h.sum).unwrap_or(0);
+                let share =
+                    if phase_total > 0 { sum as f64 / phase_total as f64 } else { 0.0 };
+                (p.to_string(), Json::from(share))
+            })
+            .collect();
+        let cache = |hits: u64, total: u64, total_key: &str, total_v: u64| {
+            obj([
+                ("hits", Json::from(hits as f64)),
+                (total_key, Json::from(total_v as f64)),
+                ("hit_rate", Json::from(hit_rate(hits, total))),
+            ])
+        };
+        obj([
+            ("schema", Json::from(STATUS_SCHEMA)),
+            ("state", Json::from(state)),
+            ("pid", Json::from(std::process::id() as f64)),
+            ("store", Json::from(self.store.as_str())),
+            ("shard", self.shard.as_deref().map(Json::from).unwrap_or(Json::Null)),
+            ("jobs_done", Json::from(h.done)),
+            ("jobs_pruned", Json::from(h.pruned)),
+            ("jobs_deferred", Json::from(h.deferred)),
+            ("slots_committed", Json::from(h.committed)),
+            ("slots_total", Json::from(h.scheduled)),
+            ("jobs_per_s", Json::from(h.jobs_per_s())),
+            ("eta_s", Json::from(h.eta_s())),
+            ("elapsed_s", Json::from(h.elapsed_s)),
+            ("front_size", Json::from(front_size)),
+            ("phase_shares", Json::Obj(shares)),
+            (
+                "caches",
+                obj([
+                    ("mapper", cache(mapper.0, mapper.0 + mapper.1, "misses", mapper.1)),
+                    ("service", cache(svc_hits, svc_served, "served", svc_served)),
+                    ("ga_memo", cache(memo.0, memo.0 + memo.1, "misses", memo.1)),
+                ]),
+            ),
+            (
+                "lease",
+                obj([
+                    ("reclaims", Json::from(m.counter("lease_reclaims") as f64)),
+                    ("unavailable", Json::from(m.counter("lease_unavailable") as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Render a status document in Prometheus text exposition format
+/// (`carbon3d trace metrics <status.json>`).
+pub fn prometheus_text(doc: &Json) -> Result<String> {
+    let schema = doc.get("schema")?.as_str()?;
+    anyhow::ensure!(
+        schema == STATUS_SCHEMA,
+        "status schema {schema:?} != expected {STATUS_SCHEMA:?}"
+    );
+    let num = |key: &str| -> Result<String> { Ok(doc.get(key)?.dumps()) };
+    let mut out = String::new();
+    let state = doc.get("state")?.as_str()?.to_string();
+    let shard = match doc.get("shard")? {
+        Json::Str(s) => s.clone(),
+        _ => String::new(),
+    };
+    out.push_str("# TYPE carbon3d_status_info gauge\n");
+    out.push_str(&format!(
+        "carbon3d_status_info{{state=\"{state}\",shard=\"{shard}\",pid=\"{}\"}} 1\n",
+        num("pid")?
+    ));
+    for (key, metric) in [
+        ("jobs_done", "carbon3d_jobs_done"),
+        ("jobs_pruned", "carbon3d_jobs_pruned"),
+        ("jobs_deferred", "carbon3d_jobs_deferred"),
+        ("slots_committed", "carbon3d_slots_committed"),
+        ("slots_total", "carbon3d_slots_total"),
+        ("jobs_per_s", "carbon3d_jobs_per_second"),
+        ("eta_s", "carbon3d_eta_seconds"),
+        ("elapsed_s", "carbon3d_elapsed_seconds"),
+        ("front_size", "carbon3d_front_size"),
+    ] {
+        out.push_str(&format!("# TYPE {metric} gauge\n{metric} {}\n", num(key)?));
+    }
+    out.push_str("# TYPE carbon3d_phase_share gauge\n");
+    for (phase, share) in doc.get("phase_shares")?.as_obj()? {
+        out.push_str(&format!(
+            "carbon3d_phase_share{{phase=\"{phase}\"}} {}\n",
+            share.dumps()
+        ));
+    }
+    out.push_str("# TYPE carbon3d_cache_hit_rate gauge\n");
+    for (cache, counts) in doc.get("caches")?.as_obj()? {
+        out.push_str(&format!(
+            "carbon3d_cache_hit_rate{{cache=\"{cache}\"}} {}\n",
+            counts.get("hit_rate")?.dumps()
+        ));
+    }
+    for (key, metric) in
+        [("reclaims", "carbon3d_lease_reclaims"), ("unavailable", "carbon3d_lease_unavailable")]
+    {
+        out.push_str(&format!(
+            "# TYPE {metric} counter\n{metric} {}\n",
+            doc.get("lease")?.get(key)?.dumps()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn beat() -> Heartbeat {
+        Heartbeat { done: 3, pruned: 1, deferred: 0, committed: 4, scheduled: 8, elapsed_s: 2.0 }
+    }
+
+    #[test]
+    fn snapshot_writes_atomically_and_round_trips() {
+        let store = std::env::temp_dir()
+            .join(format!("carbon3d-status-{}.jsonl", std::process::id()));
+        let w = StatusWriter::new(&store, Some("0/2".into()));
+        assert_eq!(w.path(), status_path(&store));
+        w.write("running", &beat(), 5).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(w.path()).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(), STATUS_SCHEMA);
+        assert_eq!(doc.get("state").unwrap().as_str().unwrap(), "running");
+        assert_eq!(doc.get("shard").unwrap().as_str().unwrap(), "0/2");
+        assert_eq!(doc.get("jobs_done").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.get("slots_total").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(doc.get("front_size").unwrap().as_usize().unwrap(), 5);
+        // jobs_per_s = 4 committed / 2s; eta = 4 remaining / 2 per s.
+        assert_eq!(doc.get("jobs_per_s").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(doc.get("eta_s").unwrap().as_f64().unwrap(), 2.0);
+        let shares = doc.get("phase_shares").unwrap().as_obj().unwrap();
+        assert_eq!(shares.len(), PHASES.len());
+        std::fs::remove_file(w.path()).unwrap();
+    }
+
+    #[test]
+    fn prometheus_rendering_carries_the_headline_series() {
+        let w = StatusWriter::new(Path::new("/tmp/x.jsonl"), None);
+        let doc = w.document("done", &beat(), 2);
+        let text = prometheus_text(&doc).unwrap();
+        assert!(text.contains("carbon3d_jobs_done 3\n"), "{text}");
+        assert!(text.contains("carbon3d_front_size 2\n"), "{text}");
+        assert!(text.contains("carbon3d_status_info{state=\"done\""), "{text}");
+        assert!(text.contains("carbon3d_phase_share{phase=\"ga.run\"}"), "{text}");
+        assert!(text.contains("carbon3d_cache_hit_rate{cache=\"mapper\"}"), "{text}");
+        // Wrong schema is refused.
+        assert!(prometheus_text(&obj([("schema", Json::from("nope/1"))])).is_err());
+    }
+}

@@ -6,7 +6,6 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
-pub mod timer;
 
 pub use json::Json;
 pub use rng::Rng;

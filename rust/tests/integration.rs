@@ -256,6 +256,8 @@ fn sharded_campaign_merge_matches_single_process_through_public_api() {
         run_campaign, run_campaign_with, shard_store_path, CampaignArchive, CampaignSpec,
         LeaseDir, MergeExecutor, ResultStore, ShardId, ShardedExecutor, SurrogateBackend,
     };
+    use carbon3d::obs::diff::DiffReport;
+    use carbon3d::obs::{merge_traces, ObsRecord, TraceReport};
     use carbon3d::runtime::EvalService;
 
     let mut spec = CampaignSpec::new(
@@ -271,6 +273,8 @@ fn sharded_campaign_merge_matches_single_process_through_public_api() {
     let cleanup = |p: &std::path::Path| {
         let _ = std::fs::remove_file(p);
         let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(p));
+        let _ = std::fs::remove_file(carbon3d::obs::status::status_path(p));
+        let _ = std::fs::remove_file(p.with_extension("trace.jsonl"));
     };
     cleanup(&single);
     cleanup(&canonical);
@@ -291,10 +295,19 @@ fn sharded_campaign_merge_matches_single_process_through_public_api() {
     assert_eq!(ref_report.jobs_run + ref_report.jobs_pruned, 4);
     assert!(ref_report.jobs_run > 0);
 
-    // Two lease-coordinated shards, then the merge.
+    // Two lease-coordinated shards (traced: each writes its own sidecar
+    // with its shard label, exactly like `campaign --shard i/N --trace`),
+    // then the merge.
     for index in 0..2usize {
         let shard = ShardId { index, count: 2 };
-        let mut store = ResultStore::open(&shard_store_path(&canonical, shard)).unwrap();
+        let store_path = shard_store_path(&canonical, shard);
+        carbon3d::obs::install(
+            &store_path.with_extension("trace.jsonl"),
+            &store_path,
+            Some(&shard.to_string()),
+        )
+        .unwrap();
+        let mut store = ResultStore::open(&store_path).unwrap();
         let leases = LeaseDir::open(
             LeaseDir::for_store(&canonical),
             format!("it-shard-{index}"),
@@ -304,6 +317,7 @@ fn sharded_campaign_merge_matches_single_process_through_public_api() {
         let svc = EvalService::start(SurrogateBackend::default());
         run_campaign_with(&spec, &ShardedExecutor { shard, leases }, &mut store, &svc).unwrap();
         svc.shutdown();
+        carbon3d::obs::uninstall().unwrap();
     }
     let merge = MergeExecutor::from_shard_stores(&canonical, 2).unwrap();
     let mut merged_store = ResultStore::open(&canonical).unwrap();
@@ -323,6 +337,60 @@ fn sharded_campaign_merge_matches_single_process_through_public_api() {
         merged_report.deterministic_json().dumps()
     );
 
+    // ---- observatory on top of the same run: fold the shard sidecars
+    // into one stream, validate its lanes, diff it against itself, export
+    // a timeline, and check the live status snapshot closed out "done".
+    let shard_traces: Vec<std::path::PathBuf> =
+        shard_paths.iter().map(|p| p.with_extension("trace.jsonl")).collect();
+    let merged_trace = dir.join(format!("carbon3d-it-merged-{}.trace.jsonl", std::process::id()));
+    let summary = merge_traces(&shard_traces, &merged_trace).unwrap();
+    assert_eq!(summary.lanes, vec!["0/2".to_string(), "1/2".to_string()]);
+
+    let r = TraceReport::load(&merged_trace).unwrap();
+    assert!(r.lanes().len() >= 2, "merged trace lost its per-shard lanes");
+    assert!(
+        r.spans.iter().any(|s| s.name == "campaign.run"),
+        "merged trace carries no campaign spans"
+    );
+    assert!(r.final_metrics.is_some());
+
+    // Two identical records diff to zero regressions under any gate.
+    let d = DiffReport::new(
+        ObsRecord::load(&merged_trace).unwrap(),
+        ObsRecord::load(&merged_trace).unwrap(),
+    );
+    assert!(d.regressions(1.0).is_empty(), "identical records regressed");
+
+    // The Chrome export maps each lane to its own synthetic process.
+    let chrome = merged_trace.with_extension("chrome.json");
+    carbon3d::obs::export::export_chrome(&merged_trace, &chrome).unwrap();
+    let doc =
+        carbon3d::util::Json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+    let metas = doc
+        .get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").unwrap() == &carbon3d::util::Json::from("M"))
+        .count();
+    assert_eq!(metas, 2, "one process_name per shard lane");
+
+    // The merge run's status snapshot agrees with its report counters.
+    let status = carbon3d::util::Json::parse(
+        &std::fs::read_to_string(carbon3d::obs::status::status_path(&canonical)).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done");
+    assert_eq!(status.get("shard").unwrap().as_str().unwrap(), "merge");
+    assert_eq!(
+        status.get("jobs_done").unwrap().as_usize().unwrap(),
+        merged_report.jobs_run
+    );
+    carbon3d::obs::status::prometheus_text(&status).unwrap();
+
+    let _ = std::fs::remove_file(&merged_trace);
+    let _ = std::fs::remove_file(&chrome);
     cleanup(&single);
     cleanup(&canonical);
     let _ = std::fs::remove_dir_all(LeaseDir::for_store(&canonical));
