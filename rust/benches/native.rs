@@ -1,8 +1,11 @@
 //! Bench eval: the evaluation hot path (DESIGN.md §7.6) — the table-driven
-//! native accuracy datapath vs the retained scalar reference, and the
-//! geometry-keyed mapping cache vs an uncached GA loop over the campaign
-//! smoke grid. Speedups are ratios measured on one machine, so they are
-//! comparable across runners; CI gates on them.
+//! native accuracy datapath vs the retained scalar reference, the lane
+//! (SIMD-shaped) matmul kernel vs the always-compiled scalar kernel, the
+//! batched evaluator entry point vs per-image calls, and the geometry-keyed
+//! mapping cache vs an uncached GA loop over the campaign smoke grid.
+//! Speedups are ratios measured on one machine, so they are comparable
+//! across runners; CI gates on them (including a `CARBON3D_SIMD=0` leg
+//! proving the scalar fallback stays healthy).
 //!
 //! Modes:
 //!   (default)        more timed iterations, grid repetitions, and a
@@ -16,7 +19,9 @@
 use std::sync::Arc;
 
 use carbon3d::accuracy::model::{feasible_multipliers, DEFAULT_K};
-use carbon3d::accuracy::native::{ApproxDatapath, NativeEvaluator, TestSet, Weights, IMG};
+use carbon3d::accuracy::native::{
+    ApproxDatapath, MatmulKernel, NativeEvaluator, TestSet, Weights, IMG,
+};
 use carbon3d::approx::{library, EXACT_ID};
 use carbon3d::area::node::ALL_NODES;
 use carbon3d::campaign::CampaignSpec;
@@ -139,16 +144,19 @@ fn main() {
     // core count — with the row-threaded number recorded beside it.
     let mut shape_docs: Vec<Json> = Vec::new();
     let (mut ref_total, mut table_total, mut threaded_total) = (0f64, 0f64, 0f64);
+    let (mut lanes_total, mut scalar_total) = (0f64, 0f64);
     for &(m, k, n) in &ACCURACY_SHAPES {
         let a = rand_vec(&mut rng, m * k, 2.0);
         let b = rand_vec(&mut rng, k * n, 2.0);
         let want = dp.matmul_reference(&a, &b, m, k, n);
-        let got = dp.matmul(&a, &b, m, k, n);
-        assert_eq!(
-            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-            "table-driven matmul diverged on {m}x{k}x{n}"
-        );
+        for kernel in [MatmulKernel::Auto, MatmulKernel::Lanes, MatmulKernel::Scalar] {
+            let got = dp.matmul_with_kernel(&a, &b, m, k, n, 1, kernel);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{kernel:?} matmul diverged on {m}x{k}x{n}"
+            );
+        }
         let r_ref = bench(
             &format!("matmul_reference {m}x{k}x{n}"),
             1,
@@ -158,15 +166,27 @@ fn main() {
         let r_table = bench(&format!("matmul (tables, 1 thread) {m}x{k}x{n}"), 1, iters, || {
             dp.matmul_with_threads(&a, &b, m, k, n, 1)
         });
+        let r_lanes =
+            bench(&format!("matmul (lane kernel, 1 thread) {m}x{k}x{n}"), 1, iters, || {
+                dp.matmul_with_kernel(&a, &b, m, k, n, 1, MatmulKernel::Lanes)
+            });
+        let r_scalar =
+            bench(&format!("matmul (scalar kernel, 1 thread) {m}x{k}x{n}"), 1, iters, || {
+                dp.matmul_with_kernel(&a, &b, m, k, n, 1, MatmulKernel::Scalar)
+            });
         let r_threaded =
             bench(&format!("matmul (tables+threads) {m}x{k}x{n}"), 1, iters, || {
                 dp.matmul(&a, &b, m, k, n)
             });
         println!("{}", r_ref.line());
         println!("{}", r_table.line());
+        println!("{}", r_lanes.line());
+        println!("{}", r_scalar.line());
         println!("{}", r_threaded.line());
         ref_total += r_ref.summary.mean;
         table_total += r_table.summary.mean;
+        lanes_total += r_lanes.summary.mean;
+        scalar_total += r_scalar.summary.mean;
         threaded_total += r_threaded.summary.mean;
         shape_docs.push(obj([
             ("m", Json::from(m)),
@@ -174,11 +194,14 @@ fn main() {
             ("n", Json::from(n)),
             ("reference_s", Json::from(r_ref.summary.mean)),
             ("table_1t_s", Json::from(r_table.summary.mean)),
+            ("lanes_1t_s", Json::from(r_lanes.summary.mean)),
+            ("scalar_1t_s", Json::from(r_scalar.summary.mean)),
             ("threaded_s", Json::from(r_threaded.summary.mean)),
         ]));
     }
     let native_speedup = ref_total / table_total;
     let threaded_speedup = ref_total / threaded_total;
+    let simd_speedup = scalar_total / lanes_total;
     println!(
         "native accuracy datapath: reference {:.1}ms vs tables {:.1}ms = {:.2}x \
          (with row threads: {:.1}ms = {:.2}x)",
@@ -188,11 +211,36 @@ fn main() {
         threaded_total * 1e3,
         threaded_speedup
     );
+    println!(
+        "lane kernel vs scalar kernel (1 thread): {:.1}ms vs {:.1}ms = {:.2}x",
+        lanes_total * 1e3,
+        scalar_total * 1e3,
+        simd_speedup
+    );
 
-    // --- full accuracy pass over a synthetic test set (trajectory metric).
+    // --- full accuracy pass over a synthetic test set (trajectory metric):
+    // the batched entry point (one buffer pool, batch-64 forward passes)
+    // vs pushing the same set through image-at-a-time batches.
     let ne = synthetic_evaluator(if smoke { 128 } else { 512 }, &mut rng);
-    let r_acc = bench("accuracy pass (synthetic set)", 1, iters, || ne.accuracy(&dp));
+    let acc_batched = ne.accuracy(&dp);
+    let acc_per_image = ne.accuracy_batched(&dp, 1);
+    assert_eq!(
+        acc_batched.to_bits(),
+        acc_per_image.to_bits(),
+        "batched and per-image accuracy diverged"
+    );
+    let r_acc = bench("accuracy pass (batch 64)", 1, iters, || ne.accuracy(&dp));
+    let r_acc_1 =
+        bench("accuracy pass (per image)", 1, iters, || ne.accuracy_batched(&dp, 1));
     println!("{}", r_acc.line());
+    println!("{}", r_acc_1.line());
+    let batch_speedup = r_acc_1.summary.mean / r_acc.summary.mean;
+    println!(
+        "batched evaluator: per-image {:.1}ms vs batch-64 {:.1}ms = {:.2}x",
+        r_acc_1.summary.mean * 1e3,
+        r_acc.summary.mean * 1e3,
+        batch_speedup
+    );
 
     // --- mapping cache on the campaign smoke grid: identical GA loop, the
     // shared geometry cache on vs off. Best-of-N per arm: a single sample
@@ -244,7 +292,13 @@ fn main() {
                 // scalar reference, both single-threaded.
                 ("speedup", Json::from(native_speedup)),
                 ("speedup_threaded", Json::from(threaded_speedup)),
+                // Lane kernel vs the always-compiled scalar kernel, both
+                // single-threaded (informational: LLVM's auto-vectorizer
+                // decides how much of the lane shape becomes SIMD).
+                ("speedup_simd", Json::from(simd_speedup)),
                 ("accuracy_pass_s", Json::from(r_acc.summary.mean)),
+                ("accuracy_per_image_s", Json::from(r_acc_1.summary.mean)),
+                ("speedup_batched", Json::from(batch_speedup)),
             ]),
         ),
         (

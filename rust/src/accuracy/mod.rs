@@ -14,7 +14,7 @@ pub mod model;
 pub mod native;
 
 pub use model::{feasible_multipliers, predicted_drop_pct};
-pub use native::{ApproxDatapath, NativeEvaluator};
+pub use native::{ApproxDatapath, BatchBuffers, MatmulKernel, NativeEvaluator};
 
 use std::collections::BTreeMap;
 

@@ -63,6 +63,64 @@ fn matmul_threads() -> usize {
     })
 }
 
+/// Lane width of the explicit-width row kernel. Eight f32 lanes fill one
+/// AVX2 register (or two NEON quads); the kernel is written as
+/// fixed-length `[f32; LANES]` loops with no cross-lane dependencies, so
+/// LLVM lowers the multiply and the masked accumulate to vector ops on
+/// stable Rust without `std::simd`.
+const LANES: usize = 8;
+
+/// Whether the lane kernel is the default row kernel: on unless
+/// `CARBON3D_SIMD` is `0`/`off`/`false`. Cached once per process (like
+/// [`matmul_threads`]); both kernels are always compiled and bit-identical
+/// to [`ApproxDatapath::matmul_reference`], so this is purely a throughput
+/// knob — tests and benches pin a specific kernel via [`MatmulKernel`]
+/// instead of the environment.
+fn simd_enabled() -> bool {
+    static SIMD: OnceLock<bool> = OnceLock::new();
+    *SIMD.get_or_init(|| {
+        !matches!(
+            std::env::var("CARBON3D_SIMD").ok().as_deref(),
+            Some("0") | Some("off") | Some("false")
+        )
+    })
+}
+
+/// Row-kernel selection for the table-driven matmul (DESIGN.md §9.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatmulKernel {
+    /// The runtime default: [`MatmulKernel::Lanes`] unless `CARBON3D_SIMD`
+    /// disables it.
+    Auto,
+    /// Force the explicit-width lane kernel (identity-padded tail).
+    Lanes,
+    /// Force the scalar row kernel — the always-compiled fallback.
+    Scalar,
+}
+
+impl MatmulKernel {
+    /// Resolve `Auto` against the process environment.
+    fn lanes(self) -> bool {
+        match self {
+            MatmulKernel::Auto => simd_enabled(),
+            MatmulKernel::Lanes => true,
+            MatmulKernel::Scalar => false,
+        }
+    }
+}
+
+/// The inline-vs-threaded heuristic shared by every auto-threaded entry
+/// point: small problems (the tiny CNN's fc layer, unit-test shapes) don't
+/// amortize scoped-thread spawn/join, so they run inline.
+fn auto_threads(m: usize, k: usize, n: usize) -> usize {
+    const PARALLEL_MIN_PRODUCTS: usize = 1 << 20;
+    if m * k * n < PARALLEL_MIN_PRODUCTS {
+        1
+    } else {
+        matmul_threads()
+    }
+}
+
 /// Decode one operand for the table-driven path: pack `mant<<1 | signbit`
 /// (the sign-folded-LUT index half) and keep the biased exponent
 /// separately; exp == 0 marks zero/denormal (flushed).
@@ -136,12 +194,7 @@ impl ApproxDatapath {
     /// order is unchanged, so results are bit-identical to
     /// [`ApproxDatapath::matmul_reference`] for every thread count.
     pub fn matmul(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-        // Small problems (the tiny CNN's fc layer, unit-test shapes) don't
-        // amortize scoped-thread spawn/join; run them inline.
-        const PARALLEL_MIN_PRODUCTS: usize = 1 << 20;
-        let threads =
-            if m * k * n < PARALLEL_MIN_PRODUCTS { 1 } else { matmul_threads() };
-        self.matmul_with_threads(a, b, m, k, n, threads)
+        self.matmul_with_threads(a, b, m, k, n, auto_threads(m, k, n))
     }
 
     /// [`ApproxDatapath::matmul`] with an explicit worker count (the
@@ -155,20 +208,77 @@ impl ApproxDatapath {
         n: usize,
         threads: usize,
     ) -> Vec<f32> {
+        self.matmul_with_kernel(a, b, m, k, n, threads, MatmulKernel::Auto)
+    }
+
+    /// [`ApproxDatapath::matmul`] with an explicit worker count *and* row
+    /// kernel — the form the bit-identity property tests and
+    /// `benches/native.rs` use to pin both datapaths regardless of the
+    /// process environment.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_with_kernel(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        threads: usize,
+        kernel: MatmulKernel,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        self.matmul_into(a, b, &mut out, m, k, n, threads, kernel);
+        out
+    }
+
+    /// The batched entry point: compute `[M,K] x [K,N]` into a
+    /// caller-owned buffer (`out.len() == m * n`), allocating nothing but
+    /// the decode scratch. [`NativeEvaluator::forward_into`] drives whole
+    /// image batches through this with a preallocated [`BatchBuffers`]
+    /// pool, so an accuracy pass performs one set of allocations total.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_into(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        threads: usize,
+        kernel: MatmulKernel,
+    ) {
         let _span = crate::obs::span("native.matmul");
         assert_eq!(a.len(), m * k);
         assert_eq!(b.len(), k * n);
-        let da: Vec<(u32, i32)> = a.iter().map(|&x| decode(x)).collect();
-        let db: Vec<(u32, i32)> = b.iter().map(|&x| decode(x)).collect();
-        let mut out = vec![0f32; m * n];
+        assert_eq!(out.len(), m * n);
+        out.fill(0.0);
         if m == 0 || k == 0 || n == 0 {
-            return out; // no products: all-zero output, as the loops produce
+            return; // no products: all-zero output, as the loops produce
         }
-        let threads = threads.clamp(1, m.max(1));
+        let lanes = kernel.lanes();
+        let da: Vec<(u32, i32)> = a.iter().map(|&x| decode(x)).collect();
+        // The lane kernel reads B rows padded to a LANES multiple; the
+        // identity element (key 0, exp 0) is flushed by the accumulate
+        // mask, so tail lanes never touch the result. When n is already a
+        // multiple (or the scalar kernel runs), the plain decode IS the
+        // padded layout.
+        let np = if lanes { n.div_ceil(LANES) * LANES } else { n };
+        let db: Vec<(u32, i32)> = if np == n {
+            b.iter().map(|&x| decode(x)).collect()
+        } else {
+            let mut padded = vec![(0u32, 0i32); k * np];
+            for (row, b_row) in padded.chunks_mut(np).zip(b.chunks(n)) {
+                for (d, &x) in row.iter_mut().zip(b_row) {
+                    *d = decode(x);
+                }
+            }
+            padded
+        };
+        let threads = threads.clamp(1, m);
         if threads == 1 {
-            let _chunk = crate::obs::span("native.matmul_chunk");
-            self.matmul_rows(&da, &db, &mut out, k, n);
-            return out;
+            self.matmul_chunk(lanes, &da, &db, out, k, n, np);
+            return;
         }
         let rows_per = m.div_ceil(threads);
         std::thread::scope(|scope| {
@@ -177,16 +287,36 @@ impl ApproxDatapath {
             {
                 let db = &db;
                 scope.spawn(move || {
-                    let _chunk = crate::obs::span("native.matmul_chunk");
-                    self.matmul_rows(a_rows, db, out_rows, k, n)
+                    self.matmul_chunk(lanes, a_rows, db, out_rows, k, n, np)
                 });
             }
         });
-        out
     }
 
-    /// The table-driven row kernel shared by every thread: `a_rows` and
-    /// `out_rows` are matching row chunks of the operand/output matrices.
+    /// One worker's share of the matmul: dispatch the selected row kernel
+    /// over a matching (`a_rows`, `out_rows`) chunk pair.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_chunk(
+        &self,
+        lanes: bool,
+        a_rows: &[(u32, i32)],
+        db: &[(u32, i32)],
+        out_rows: &mut [f32],
+        k: usize,
+        n: usize,
+        np: usize,
+    ) {
+        let _chunk = crate::obs::span("native.matmul_chunk");
+        if lanes {
+            self.matmul_rows_lanes(a_rows, db, out_rows, k, n, np);
+        } else {
+            self.matmul_rows(a_rows, db, out_rows, k, n);
+        }
+    }
+
+    /// The scalar table-driven row kernel — the always-compiled fallback:
+    /// `a_rows` and `out_rows` are matching row chunks of the
+    /// operand/output matrices.
     fn matmul_rows(
         &self,
         a_rows: &[(u32, i32)],
@@ -211,6 +341,57 @@ impl ApproxDatapath {
                     *o += srow[kb as usize] * scale[(ea + eb) as usize];
                 }
             }
+        }
+    }
+
+    /// The explicit-width lane row kernel (DESIGN.md §9.1): B rows arrive
+    /// padded to `np` (a LANES multiple) with the identity element, each
+    /// LANES-wide group performs the two table loads and the multiply for
+    /// all lanes, and a *masked select* folds the products into a padded
+    /// per-row accumulator. The mask must select, never add `+0.0`: slut
+    /// entries can be `-0.0`, and `-0.0 + 0.0 == +0.0` would flip the
+    /// accumulator's sign bit where the scalar kernel's `continue` leaves
+    /// it untouched. Ascending-k order is unchanged, so every lane matches
+    /// [`ApproxDatapath::matmul_reference`] bit for bit.
+    #[allow(clippy::needless_range_loop)]
+    fn matmul_rows_lanes(
+        &self,
+        a_rows: &[(u32, i32)],
+        db: &[(u32, i32)],
+        out_rows: &mut [f32],
+        k: usize,
+        n: usize,
+        np: usize,
+    ) {
+        debug_assert_eq!(np % LANES, 0);
+        let scale = scale_table();
+        let mut acc = vec![0f32; np];
+        for (a_row, out_row) in a_rows.chunks(k).zip(out_rows.chunks_mut(n)) {
+            acc.fill(0.0);
+            for (kk, &(ka, ea)) in a_row.iter().enumerate() {
+                if ea == 0 {
+                    continue;
+                }
+                let base = (ka as usize) << 8;
+                let srow = &self.slut[base..base + 256];
+                let b_row = &db[kk * np..(kk + 1) * np];
+                for (acc_l, b_l) in
+                    acc.chunks_exact_mut(LANES).zip(b_row.chunks_exact(LANES))
+                {
+                    let mut prod = [0f32; LANES];
+                    for l in 0..LANES {
+                        let (kb, eb) = b_l[l];
+                        // Padding/flushed lanes load srow[0] * scale[ea]:
+                        // finite garbage the mask below discards.
+                        prod[l] = srow[kb as usize] * scale[(ea + eb) as usize];
+                    }
+                    for l in 0..LANES {
+                        acc_l[l] =
+                            if b_l[l].1 != 0 { acc_l[l] + prod[l] } else { acc_l[l] };
+                    }
+                }
+            }
+            out_row.copy_from_slice(&acc[..n]);
         }
     }
 
@@ -304,34 +485,105 @@ impl NativeEvaluator {
 
     /// Forward pass for a batch of images through the approximate datapath.
     /// `images` is [b,16,16,1] row-major. Returns logits [b,NUM_CLASSES].
+    /// Convenience wrapper over [`NativeEvaluator::forward_into`] that
+    /// allocates a one-shot [`BatchBuffers`] pool.
     pub fn forward(&self, dp: &ApproxDatapath, images: &[f32], b: usize) -> Vec<f32> {
+        let mut buf = BatchBuffers::new(b.max(1));
+        self.forward_into(dp, images, b, &mut buf).to_vec()
+    }
+
+    /// The batched forward pass: push one image batch through the network
+    /// using `buf`'s preallocated im2col and intermediate buffers, and
+    /// return the logits slice `[b, NUM_CLASSES]` borrowed from the pool.
+    /// Results are bit-identical for every batch split — image rows are
+    /// independent matmul rows — which the batching property test pins.
+    pub fn forward_into<'a>(
+        &self,
+        dp: &ApproxDatapath,
+        images: &[f32],
+        b: usize,
+        buf: &'a mut BatchBuffers,
+    ) -> &'a [f32] {
+        assert!(b <= buf.max_b, "batch {b} exceeds buffer capacity {}", buf.max_b);
+        assert_eq!(images.len(), b * IMG * IMG);
         let w = &self.weights;
         // conv1: 16x16x1 -> 16x16x8, relu, pool -> 8x8x8
-        let c1 = conv2d_same(dp, images, b, IMG, IMG, 1, &w.conv1_w, &w.conv1_b, 8);
-        let p1 = maxpool2(&relu(c1), b, IMG, IMG, 8);
+        let c1 = &mut buf.c1[..b * IMG * IMG * 8];
+        conv2d_same_into(
+            dp,
+            images,
+            b,
+            IMG,
+            IMG,
+            1,
+            &w.conv1_w,
+            &w.conv1_b,
+            8,
+            &mut buf.cols1[..b * IMG * IMG * 9],
+            c1,
+        );
+        relu_in_place(c1);
+        maxpool2_into(c1, b, IMG, IMG, 8, &mut buf.p1[..b * 8 * 8 * 8]);
         // conv2: 8x8x8 -> 8x8x16, relu, pool -> 4x4x16
-        let c2 = conv2d_same(dp, &p1, b, 8, 8, 8, &w.conv2_w, &w.conv2_b, 16);
-        let p2 = maxpool2(&relu(c2), b, 8, 8, 16);
+        let c2 = &mut buf.c2[..b * 8 * 8 * 16];
+        conv2d_same_into(
+            dp,
+            &buf.p1[..b * 8 * 8 * 8],
+            b,
+            8,
+            8,
+            8,
+            &w.conv2_w,
+            &w.conv2_b,
+            16,
+            &mut buf.cols2[..b * 8 * 8 * 72],
+            c2,
+        );
+        relu_in_place(c2);
+        maxpool2_into(c2, b, 8, 8, 16, &mut buf.p2[..b * 256]);
         // fc: 256 -> 5
-        let mut logits = dp.matmul(&p2, &w.fc_w, b, 256, NUM_CLASSES);
+        let logits = &mut buf.logits[..b * NUM_CLASSES];
+        dp.matmul_into(
+            &buf.p2[..b * 256],
+            &w.fc_w,
+            logits,
+            b,
+            256,
+            NUM_CLASSES,
+            auto_threads(b, 256, NUM_CLASSES),
+            MatmulKernel::Auto,
+        );
         for row in logits.chunks_mut(NUM_CLASSES) {
             for (x, bias) in row.iter_mut().zip(&w.fc_b) {
                 *x += bias;
             }
         }
-        logits
+        &buf.logits[..b * NUM_CLASSES]
     }
 
-    /// Top-1 accuracy of a multiplier datapath over the whole test set.
+    /// Top-1 accuracy of a multiplier datapath over the whole test set,
+    /// batched at 64 images (small enough to keep im2col buffers cachey,
+    /// large enough to amortize the per-call decode).
     pub fn accuracy(&self, dp: &ApproxDatapath) -> f64 {
+        self.accuracy_batched(dp, 64)
+    }
+
+    /// [`NativeEvaluator::accuracy`] with an explicit batch size: one
+    /// [`BatchBuffers`] pool is allocated up front and every batch flows
+    /// through a single [`NativeEvaluator::forward_into`] call. Accuracy
+    /// is identical for every batch size (pinned by test).
+    pub fn accuracy_batched(&self, dp: &ApproxDatapath, batch: usize) -> f64 {
         let n = self.testset.n;
+        if n == 0 {
+            return 0.0;
+        }
+        let bs = batch.clamp(1, n);
+        let mut buf = BatchBuffers::new(bs);
         let mut correct = 0usize;
-        // Batch to keep im2col buffers small.
-        let bs = 64;
         for start in (0..n).step_by(bs) {
             let b = bs.min(n - start);
             let imgs = &self.testset.images[start * IMG * IMG..(start + b) * IMG * IMG];
-            let logits = self.forward(dp, imgs, b);
+            let logits = self.forward_into(dp, imgs, b, &mut buf);
             for i in 0..b {
                 let row = &logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
                 if argmax(row) == self.testset.labels[start + i] as usize {
@@ -340,6 +592,43 @@ impl NativeEvaluator {
             }
         }
         correct as f64 / n as f64
+    }
+}
+
+/// Preallocated scratch for [`NativeEvaluator::forward_into`]: the im2col
+/// patch buffers, the conv/pool intermediates, and the logits for a batch
+/// of up to `max_b` images, so an accuracy pass allocates once instead of
+/// seven times per batch. Contents are overwritten in full by each
+/// forward pass — reuse can never leak one batch into the next.
+pub struct BatchBuffers {
+    max_b: usize,
+    cols1: Vec<f32>,
+    c1: Vec<f32>,
+    p1: Vec<f32>,
+    cols2: Vec<f32>,
+    c2: Vec<f32>,
+    p2: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl BatchBuffers {
+    /// Size every buffer for batches of up to `max_b` images.
+    pub fn new(max_b: usize) -> Self {
+        Self {
+            max_b,
+            cols1: vec![0f32; max_b * IMG * IMG * 9],
+            c1: vec![0f32; max_b * IMG * IMG * 8],
+            p1: vec![0f32; max_b * 8 * 8 * 8],
+            cols2: vec![0f32; max_b * 8 * 8 * 72],
+            c2: vec![0f32; max_b * 8 * 8 * 16],
+            p2: vec![0f32; max_b * 256],
+            logits: vec![0f32; max_b * NUM_CLASSES],
+        }
+    }
+
+    /// The largest batch this pool can carry.
+    pub fn capacity(&self) -> usize {
+        self.max_b
     }
 }
 
@@ -361,17 +650,17 @@ pub fn argmax(row: &[f32]) -> usize {
     best
 }
 
-fn relu(mut v: Vec<f32>) -> Vec<f32> {
-    for x in &mut v {
+fn relu_in_place(v: &mut [f32]) {
+    for x in v {
         if *x < 0.0 {
             *x = 0.0;
         }
     }
-    v
 }
 
 /// 'same' 3x3 conv via im2col + approx matmul; patch order (dy,dx,c) matches
-/// model.im2col.
+/// model.im2col. Allocating wrapper over [`conv2d_same_into`] (tests).
+#[cfg(test)]
 #[allow(clippy::too_many_arguments)]
 fn conv2d_same(
     dp: &ApproxDatapath,
@@ -384,10 +673,33 @@ fn conv2d_same(
     bias: &[f32],
     cout: usize,
 ) -> Vec<f32> {
+    let mut cols = vec![0f32; b * h * wd * 9 * cin];
+    let mut out = vec![0f32; b * h * wd * cout];
+    conv2d_same_into(dp, x, b, h, wd, cin, weights, bias, cout, &mut cols, &mut out);
+    out
+}
+
+/// 'same' 3x3 conv into caller-owned buffers: `cols` is the im2col scratch
+/// (`b*h*wd*9*cin`, every cell written), `out` receives `[b*h*wd, cout]`.
+/// Patch order (dy,dx,c) matches model.im2col.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_same_into(
+    dp: &ApproxDatapath,
+    x: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    weights: &[f32], // [3,3,cin,cout]
+    bias: &[f32],
+    cout: usize,
+    cols: &mut [f32],
+    out: &mut [f32],
+) {
     let k = 3usize;
     let pad = 1usize;
     let patch = k * k * cin;
-    let mut cols = vec![0f32; b * h * wd * patch];
+    assert_eq!(cols.len(), b * h * wd * patch);
     for bi in 0..b {
         for y in 0..h {
             for xx in 0..wd {
@@ -416,19 +728,37 @@ fn conv2d_same(
     }
     // weights [3,3,cin,cout] flatten to [patch, cout] in the same (dy,dx,c)
     // order — the natural row-major flattening.
-    let mut out = dp.matmul(&cols, weights, b * h * wd, patch, cout);
+    let m = b * h * wd;
+    dp.matmul_into(
+        cols,
+        weights,
+        out,
+        m,
+        patch,
+        cout,
+        auto_threads(m, patch, cout),
+        MatmulKernel::Auto,
+    );
     for row in out.chunks_mut(cout) {
         for (v, bb) in row.iter_mut().zip(bias) {
             *v += bb;
         }
     }
+}
+
+/// 2x2 max pooling, NHWC. Allocating wrapper over [`maxpool2_into`].
+#[cfg(test)]
+fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0f32; b * (h / 2) * (w / 2) * c];
+    maxpool2_into(x, b, h, w, c, &mut out);
     out
 }
 
-/// 2x2 max pooling, NHWC.
-fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// 2x2 max pooling, NHWC, into a caller-owned `[b, h/2, w/2, c]` buffer
+/// (every cell written).
+fn maxpool2_into(x: &[f32], b: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![f32::NEG_INFINITY; b * oh * ow * c];
+    assert_eq!(out.len(), b * oh * ow * c);
     for bi in 0..b {
         for y in 0..oh {
             for xx in 0..ow {
@@ -447,7 +777,6 @@ fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 fn read_f32(path: &Path) -> Result<Vec<f32>> {
@@ -560,10 +889,11 @@ mod tests {
 
     #[test]
     fn matmul_bit_identical_to_reference_prop() {
-        // The tentpole oracle: the table-driven, row-chunked matmul must be
-        // byte-equal (`to_bits`) to the retained scalar `mul` loop across
-        // multiplier families, random shapes, zeros/denormals, and thread
-        // counts.
+        // The tentpole oracle: BOTH row kernels — the explicit-width lane
+        // kernel and the scalar fallback — must be byte-equal (`to_bits`)
+        // to the retained scalar `mul` loop across multiplier families,
+        // random shapes (n sweeps through every tail length), zeros,
+        // denormals, and thread counts.
         let lib = library();
         // One design per family: exact, perforation, truncation,
         // broken-array, OR-compress, Mitchell, DRUM, hybrid.
@@ -572,7 +902,7 @@ mod tests {
         for (fi, &mid) in family_ids.iter().enumerate() {
             let dp = ApproxDatapath::new(&lib[mid]);
             crate::util::prop::check(&format!("matmul-bits-{mid}"), 6, |rng| {
-                let (m, k, n) = (rng.range(1, 9), rng.range(1, 20), rng.range(1, 7));
+                let (m, k, n) = (rng.range(1, 9), rng.range(1, 20), rng.range(1, 12));
                 let mut sample = |len: usize| -> Vec<f32> {
                     (0..len)
                         .map(|_| match rng.below(8) {
@@ -587,16 +917,99 @@ mod tests {
                 let a = sample(m * k);
                 let b = sample(k * n);
                 let want = dp.matmul_reference(&a, &b, m, k, n);
+                let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
                 for threads in [1usize, 2, 3, 8] {
-                    let got = dp.matmul_with_threads(&a, &b, m, k, n, threads);
-                    let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
-                    let got_bits: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
-                    assert_eq!(
-                        got_bits, want_bits,
-                        "family #{fi} (mult {mid}), shape {m}x{k}x{n}, {threads} threads"
-                    );
+                    for kernel in [MatmulKernel::Lanes, MatmulKernel::Scalar] {
+                        let got =
+                            dp.matmul_with_kernel(&a, &b, m, k, n, threads, kernel);
+                        let got_bits: Vec<u32> =
+                            got.iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(
+                            got_bits, want_bits,
+                            "family #{fi} (mult {mid}), shape {m}x{k}x{n}, \
+                             {threads} threads, {kernel:?} kernel"
+                        );
+                    }
                 }
             });
+        }
+    }
+
+    #[test]
+    fn lane_kernel_zero_sign_semantics_match_reference() {
+        // Crafted rows mixing exact cancellation (3.0 + -3.0 -> +0.0),
+        // signed zeros, and flushed operands: the lane kernel's masked
+        // select must leave flushed lanes' accumulators byte-untouched,
+        // exactly like the scalar kernel's `continue`, so the result sign
+        // bit agrees with the reference in every case.
+        let lib = library();
+        let dp = ApproxDatapath::new(&lib[EXACT_ID]);
+        let cases: [(&[f32], &[f32]); 3] = [
+            (&[1.5, -1.5, 0.0], &[2.0, 2.0, 7.0]),   // cancel then flush
+            (&[-0.0, -2.0, 1e-39], &[4.0, 0.0, 3.0]), // every product flushes
+            (&[-1.0, 0.0], &[0.25, -0.0]),            // lone negative + flush
+        ];
+        for (a, b) in cases {
+            let k = a.len();
+            let want = dp.matmul_reference(a, b, 1, k, 1);
+            for kernel in [MatmulKernel::Lanes, MatmulKernel::Scalar] {
+                let got = dp.matmul_with_kernel(a, b, 1, k, 1, 1, kernel);
+                assert_eq!(got[0].to_bits(), want[0].to_bits(), "{kernel:?} {a:?}x{b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_forward_is_bit_identical_to_per_image() {
+        // The batched entry point may change allocation strategy, never
+        // results: logits for a 7-image batch equal the 7 single-image
+        // forwards bitwise, and a reused pool equals a fresh pool.
+        let mut rng = crate::util::Rng::new(0xBA7C4);
+        let mut sample = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.uniform(-0.5, 0.5) as f32).collect()
+        };
+        let ne = NativeEvaluator {
+            weights: Weights {
+                conv1_w: sample(72),
+                conv1_b: sample(8),
+                conv2_w: sample(1152),
+                conv2_b: sample(16),
+                fc_w: sample(1280),
+                fc_b: sample(5),
+            },
+            testset: TestSet { images: sample(7 * IMG * IMG), labels: vec![0; 7], n: 7 },
+            exact_accuracy: 0.0,
+        };
+        let lib = library();
+        for mid in [EXACT_ID, 8, lib.len() - 1] {
+            let dp = ApproxDatapath::new(&lib[mid]);
+            let mut buf = BatchBuffers::new(7);
+            assert_eq!(buf.capacity(), 7);
+            let batched: Vec<u32> = ne
+                .forward_into(&dp, &ne.testset.images, 7, &mut buf)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            // Per-image through the SAME (reused, now dirty) pool.
+            let mut single = Vec::new();
+            for i in 0..7 {
+                let img = &ne.testset.images[i * IMG * IMG..(i + 1) * IMG * IMG];
+                single
+                    .extend(ne.forward_into(&dp, img, 1, &mut buf).iter().map(|x| x.to_bits()));
+            }
+            assert_eq!(batched, single, "mult {mid}: batch split changed logits");
+            // And the allocating wrapper (fresh pool per call) agrees.
+            let fresh: Vec<u32> = ne
+                .forward(&dp, &ne.testset.images, 7)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(batched, fresh, "mult {mid}: pool reuse leaked state");
+            // Accuracy is batch-size independent.
+            let a64 = ne.accuracy_batched(&dp, 64);
+            for bs in [1usize, 2, 3, 7, 100] {
+                assert_eq!(ne.accuracy_batched(&dp, bs), a64, "mult {mid} bs={bs}");
+            }
         }
     }
 

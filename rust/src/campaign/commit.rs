@@ -183,6 +183,7 @@ pub struct CommitPipeline<'a> {
     last_heartbeat: Instant,
     heartbeat_every: Duration,
     status: Option<crate::obs::StatusWriter>,
+    mapcache: Option<super::mapcache::MapCachePersist>,
 }
 
 /// Heartbeat cadence: `CARBON3D_HEARTBEAT_SECS` (fractional seconds; 0
@@ -219,6 +220,7 @@ impl<'a> CommitPipeline<'a> {
             last_heartbeat: now,
             heartbeat_every: heartbeat_interval(),
             status: None,
+            mapcache: None,
         }
     }
 
@@ -226,6 +228,15 @@ impl<'a> CommitPipeline<'a> {
     /// core from the store path + the executor's shard label).
     pub fn set_status(&mut self, status: Option<crate::obs::StatusWriter>) {
         self.status = status;
+    }
+
+    /// Attach the mapping-cache persist handle: the pipeline rewrites the
+    /// sidecar at the same archive-checkpoint boundary as the front
+    /// sidecar (plus once at [`CommitPipeline::finish`]), so everything a
+    /// crashed run learned is on disk for its resume. Pure observability:
+    /// the sidecar never feeds back into this run's results.
+    pub fn set_mapcache(&mut self, persist: Option<super::mapcache::MapCachePersist>) {
+        self.mapcache = persist;
     }
 
     /// The shared front cell, borrowed for the pipeline's full lifetime —
@@ -331,8 +342,12 @@ impl<'a> CommitPipeline<'a> {
                 self.store.append(row)?;
                 write_atomic(&self.ckpt_path, &ckpt.dumps())?;
                 // The archive checkpoint is the durability boundary; keep
-                // the trace sidecar and status snapshot no staler than it.
+                // the trace sidecar, status snapshot, and mapcache sidecar
+                // no staler than it.
                 crate::obs::flush();
+                if let Some(mc) = &mut self.mapcache {
+                    mc.persist_if_grown();
+                }
                 self.totals.jobs_run += 1;
                 if let Some(status) = &self.status {
                     let _ = status.write(
@@ -353,13 +368,16 @@ impl<'a> CommitPipeline<'a> {
     }
 
     /// Verify every scheduled slot was committed and return the counters.
-    pub fn finish(self) -> Result<CommitTotals> {
+    pub fn finish(mut self) -> Result<CommitTotals> {
         ensure!(
             self.cursor == self.source.schedule().len(),
             "campaign incomplete: committed {} of {} scheduled jobs",
             self.cursor,
             self.source.schedule().len()
         );
+        if let Some(mc) = &mut self.mapcache {
+            mc.persist_if_grown();
+        }
         if let Some(status) = &self.status {
             let _ = status.write("done", &self.progress(), self.front.front_size());
         }

@@ -178,10 +178,18 @@ impl CampaignReport {
         } else {
             String::new()
         };
+        // Sidecar attribution: how many hits were served by entries the
+        // mapcache sidecar preloaded (0 and silent when no sidecar fed
+        // this run).
+        let persisted = if self.mapping.persisted_hits > 0 {
+            format!(", {} persisted", self.mapping.persisted_hits)
+        } else {
+            String::new()
+        };
         format!(
             "{} jobs ({} run, {} resumed, {} pruned{deferred}) in {:.2}s = {:.2} jobs/s | \
              eval service: {} served, {} evaluated, {} cache hits, {} coalesced \
-             ({:.0}% hit rate) | mapping cache: {}/{} hits ({:.0}%) | \
+             ({:.0}% hit rate) | mapping cache: {}/{} hits ({:.0}%{persisted}) | \
              GA memo: {}/{} hits ({:.0}%)",
             self.jobs_total,
             self.jobs_run,
@@ -273,6 +281,16 @@ pub fn run_campaign_with(
     spec.validate()?;
     let _campaign_span = crate::obs::span("campaign.run");
     let ctx = JobCtx::new(spec)?;
+    // Warm the geometry-mapping cache from the store's sidecar before any
+    // job runs. Strictly a performance hint: mappings are pure functions
+    // of their geometry key, so a present, absent, or corrupt sidecar all
+    // produce byte-identical stores/fronts/reports (corrupt = quiet
+    // rebuild, see `mapcache`).
+    let mapcache_on = super::mapcache::enabled();
+    let mapcache_path = super::mapcache::mapcache_path(store.path());
+    if mapcache_on {
+        super::mapcache::load_into(&mapcache_path, &ctx.shares.mapping);
+    }
     let before = service.stats();
     let before_metrics = MetricsSnapshot::collect();
     let t0 = Instant::now();
@@ -288,6 +306,12 @@ pub fn run_campaign_with(
     let status = crate::obs::StatusWriter::create(store.path(), executor.status_shard());
     let mut pipeline = CommitPipeline::new(store, &front, &source, mode);
     pipeline.set_status(status);
+    if mapcache_on {
+        pipeline.set_mapcache(Some(super::mapcache::MapCachePersist::new(
+            mapcache_path,
+            ctx.shares.mapping.clone(),
+        )));
+    }
     executor.drain(&ctx, &source, service, &mut pipeline)?;
     let totals = pipeline.finish()?;
     Ok(CampaignReport {
@@ -429,8 +453,8 @@ mod tests {
             jobs_deferred: 0,
             elapsed_s: 4.0,
             stats: ServiceStats { served: 100, evaluated: 20, cache_hits: 70, coalesced: 10 },
-            mapping: CacheCounts { hits: 90, misses: 30 },
-            memo: CacheCounts { hits: 25, misses: 75 },
+            mapping: CacheCounts { hits: 90, misses: 30, ..Default::default() },
+            memo: CacheCounts { hits: 25, misses: 75, ..Default::default() },
             metrics: MetricsSnapshot::default(),
         };
         assert!((r.jobs_per_sec() - 2.0).abs() < 1e-12);
@@ -439,11 +463,19 @@ mod tests {
         assert!(line.contains("80% hit rate"), "{line}");
         assert!(line.contains("1 pruned"), "{line}");
         assert!(line.contains("mapping cache: 90/120 hits (75%)"), "{line}");
+        assert!(!line.contains("persisted"), "{line}");
         assert!(line.contains("GA memo: 25/100 hits (25%)"), "{line}");
         assert!(!line.contains("other shards"), "{line}");
         // Shard runs additionally report the jobs other shards own.
-        let sharded = CampaignReport { jobs_deferred: 5, ..r };
+        let sharded = CampaignReport { jobs_deferred: 5, ..r.clone() };
         assert!(sharded.line().contains("5 on other shards"), "{}", sharded.line());
+        // Sidecar-served hits are attributed inside the mapping segment.
+        let warmed = CampaignReport {
+            mapping: CacheCounts { hits: 90, misses: 30, persisted_hits: 12, preloaded: 40 },
+            ..r
+        };
+        let line = warmed.line();
+        assert!(line.contains("mapping cache: 90/120 hits (75%, 12 persisted)"), "{line}");
     }
 
     #[test]
@@ -484,8 +516,8 @@ mod tests {
             jobs_deferred: 0,
             elapsed_s: 123.0,
             stats: ServiceStats { served: 9, evaluated: 9, cache_hits: 0, coalesced: 0 },
-            mapping: CacheCounts { hits: 7, misses: 3 },
-            memo: CacheCounts { hits: 2, misses: 8 },
+            mapping: CacheCounts { hits: 7, misses: 3, ..Default::default() },
+            memo: CacheCounts { hits: 2, misses: 8, ..Default::default() },
             metrics: MetricsSnapshot::default(),
         };
         let text = r.deterministic_json().dumps();

@@ -1,0 +1,479 @@
+//! Persistent mapping-cache sidecar: `campaign.jsonl` ->
+//! `campaign.mapcache.json` (DESIGN.md §9.2).
+//!
+//! [`crate::dataflow::cache::MappingCache`] memoizes mapper searches
+//! within one process; this module carries the memo *across* processes —
+//! resumes, re-runs, shards, and `campaign merge` — by serializing the
+//! cache to a schema-versioned, content-keyed JSON sidecar beside the
+//! store. Every write goes through the same temp + rename discipline as
+//! the front checkpoint ([`crate::campaign::checkpoint::write_atomic`]).
+//!
+//! The sidecar is a **performance hint, never a source of truth**: a
+//! cached mapping is a pure function of its (workload, geometry) key, so
+//! preloading can only skip recomputation, never change a result — the
+//! store, front checkpoint, and deterministic report are byte-identical
+//! with the sidecar present, absent, or corrupt (CI-gated). That is why,
+//! in deliberate contrast to the front sidecar (whose corruption is loud:
+//! external damage to a source of truth), a damaged or stale mapcache
+//! sidecar is *quietly* dropped and rebuilt, logged through one
+//! [`crate::obs::warn_event`] (`mapcache.rebuild`).
+//!
+//! Staleness is detected by content keying: the header carries a
+//! fingerprint hashed from a canonical probe `map_network` result, so a
+//! sidecar written by a binary whose mapper produces different mappings
+//! is rejected as stale instead of silently poisoning results with
+//! mappings the current mapper would not compute.
+//!
+//! Lossless by construction: `u64` cycle/traffic fields serialize as
+//! decimal strings (the JSON layer's `f64` numbers lose integers above
+//! 2^53) and `utilization` as bit-exact hex, so a round-trip through the
+//! sidecar reproduces every mapping byte for byte.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::area::die::Integration;
+use crate::area::TechNode;
+use crate::dataflow::arch::AccelConfig;
+use crate::dataflow::cache::{GeometryDims, MappingCache};
+use crate::dataflow::mapper::{map_network, LayerMapping, NetworkMapping};
+use crate::dataflow::workloads::workload;
+use crate::util::json::{obj, Json};
+
+use super::checkpoint::write_atomic;
+use super::spec::{fnv1a64, integration_from_name, integration_name};
+
+/// Sidecar schema identifier; bump on any layout change.
+pub const MAPCACHE_SCHEMA: &str = "carbon3d-mapcache/1";
+
+static FORCE_OFF: AtomicBool = AtomicBool::new(false);
+
+/// Programmatic kill switch (`--no-mapcache`); composes with the
+/// `CARBON3D_MAPCACHE=0` environment override.
+pub fn set_enabled(on: bool) {
+    FORCE_OFF.store(!on, Ordering::Relaxed);
+}
+
+/// Whether mapcache sidecars are read/written by this process.
+pub fn enabled() -> bool {
+    !FORCE_OFF.load(Ordering::Relaxed)
+        && std::env::var("CARBON3D_MAPCACHE").map(|v| v != "0").unwrap_or(true)
+}
+
+/// The sidecar path for a store: `campaign.jsonl` ->
+/// `campaign.mapcache.json` (shard stores get their own, e.g.
+/// `campaign.shard0of2.mapcache.json`).
+pub fn mapcache_path(store: &Path) -> PathBuf {
+    store.with_extension("mapcache.json")
+}
+
+/// The content key guarding sidecar reuse: an FNV-1a hash of the
+/// serialized mapping the current mapper computes for one fixed probe
+/// (tinycnn on a canonical mid-size geometry). Any change to mapper
+/// semantics, the serialization layout, or the workload model changes
+/// this value, invalidating every older sidecar. Computed once per
+/// process — the probe is a single sub-millisecond `map_network` call.
+pub fn mapper_fingerprint() -> &'static str {
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| {
+        let w = workload("tinycnn").expect("tinycnn workload exists");
+        let cfg = AccelConfig {
+            px: 8,
+            py: 8,
+            rf_bytes: 512,
+            sram_bytes: 1 << 18,
+            node: TechNode::N14,
+            integration: Integration::ThreeD,
+            mult_id: 0,
+        };
+        let probe = mapping_json(&map_network(&w, &cfg)).dumps();
+        format!("{:#018x}", fnv1a64(probe.as_bytes()))
+    })
+}
+
+/// Serialize the cache to `path` atomically: entries sorted by
+/// (workload, geometry) so identical cache contents — however they were
+/// accumulated — produce identical sidecar bytes.
+pub fn save(path: &Path, cache: &MappingCache) -> Result<()> {
+    let mut entries = cache.export();
+    entries.sort_by(|a, b| entry_sort_key(&a.0, &a.1).cmp(&entry_sort_key(&b.0, &b.1)));
+    let items: Vec<Json> =
+        entries.iter().map(|(w, dims, m)| entry_json(w, dims, m)).collect();
+    let doc = obj([
+        ("schema", Json::from(MAPCACHE_SCHEMA)),
+        ("fingerprint", Json::from(mapper_fingerprint())),
+        ("entries", Json::from(items)),
+    ]);
+    write_atomic(path, &doc.dumps())
+}
+
+/// Preload `cache` from the sidecar at `path`. Missing file: a silent 0.
+/// Unreadable, unparsable, schema-mismatched, or stale-fingerprint
+/// sidecars are dropped with one `mapcache.rebuild` warn event and a 0 —
+/// the cache simply rebuilds from scratch, exactly as if the file were
+/// absent. Returns the number of entries actually injected.
+pub fn load_into(path: &Path, cache: &MappingCache) -> usize {
+    if !path.exists() {
+        return 0;
+    }
+    match read_entries(path) {
+        Ok(entries) => cache.preload(entries),
+        Err(e) => {
+            crate::obs::warn_event(
+                "mapcache.rebuild",
+                &format!("ignoring mapping-cache sidecar {}: {e}", path.display()),
+                &[
+                    ("path", Json::from(path.display().to_string())),
+                    ("reason", Json::from(e.to_string())),
+                ],
+            );
+            0
+        }
+    }
+}
+
+/// Union any readable sidecars among `sources` into one canonical sidecar
+/// at `dest` (the `campaign merge` path: shard sidecars fold into the
+/// canonical store's). Insert-if-absent per key makes the union
+/// order-independent, and the sorted serializer makes the output bytes
+/// independent of source order too. Unreadable sources are skipped via
+/// the same quiet-rebuild rule as [`load_into`]. Returns the number of
+/// entries in the merged sidecar.
+pub fn merge_sidecars(dest: &Path, sources: &[PathBuf]) -> Result<usize> {
+    let cache = MappingCache::new();
+    load_into(dest, &cache);
+    for src in sources {
+        load_into(src, &cache);
+    }
+    let n = cache.len();
+    if n > 0 {
+        save(dest, &cache)?;
+    }
+    Ok(n)
+}
+
+/// The commit pipeline's persist handle: rewrites the sidecar at archive
+/// checkpoints when (and only when) the cache grew since the last write,
+/// so a steady-state campaign pays one `len()` probe per commit and an
+/// interrupted one resumes with every mapping it had already discovered.
+/// Write failures degrade to a warn event — the sidecar is a hint, and
+/// losing it must never kill a campaign.
+pub struct MapCachePersist {
+    path: PathBuf,
+    cache: Arc<MappingCache>,
+    last_len: usize,
+}
+
+impl MapCachePersist {
+    /// A handle that writes `cache` to `path`.
+    pub fn new(path: PathBuf, cache: Arc<MappingCache>) -> Self {
+        Self { path, cache, last_len: 0 }
+    }
+
+    /// Serialize the cache to the sidecar if its entry count changed
+    /// since the last successful write.
+    pub fn persist_if_grown(&mut self) {
+        let len = self.cache.len();
+        if len == self.last_len {
+            return;
+        }
+        match save(&self.path, &self.cache) {
+            Ok(()) => self.last_len = len,
+            Err(e) => crate::obs::warn_event(
+                "mapcache.write_failed",
+                &format!(
+                    "could not write mapping-cache sidecar {}: {e}",
+                    self.path.display()
+                ),
+                &[("path", Json::from(self.path.display().to_string()))],
+            ),
+        }
+    }
+}
+
+/// Parse and validate the sidecar, returning its entries.
+fn read_entries(path: &Path) -> Result<Vec<(String, GeometryDims, NetworkMapping)>> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("parse: {e}"))?;
+    let schema = doc.get("schema")?.as_str()?;
+    ensure!(schema == MAPCACHE_SCHEMA, "schema {schema}, want {MAPCACHE_SCHEMA}");
+    let fp = doc.get("fingerprint")?.as_str()?;
+    ensure!(
+        fp == mapper_fingerprint(),
+        "stale fingerprint {fp} (current {})",
+        mapper_fingerprint()
+    );
+    let mut out = Vec::new();
+    for e in doc.get("entries")?.as_arr()? {
+        out.push(parse_entry(e)?);
+    }
+    Ok(out)
+}
+
+fn entry_sort_key(
+    w: &str,
+    dims: &GeometryDims,
+) -> (String, usize, usize, usize, usize, &'static str, &'static str) {
+    let (px, py, rf, sram, node, integ) = *dims;
+    (w.to_string(), px, py, rf, sram, node.name(), integration_name(integ))
+}
+
+fn entry_json(w: &str, dims: &GeometryDims, m: &NetworkMapping) -> Json {
+    let (px, py, rf, sram, node, integ) = *dims;
+    obj([
+        ("workload", Json::from(w)),
+        ("px", Json::from(px)),
+        ("py", Json::from(py)),
+        ("rf_bytes", Json::from(rf)),
+        ("sram_bytes", Json::from(sram)),
+        ("node", Json::from(node.name())),
+        ("integration", Json::from(integration_name(integ))),
+        ("mapping", mapping_json(m)),
+    ])
+}
+
+fn parse_entry(e: &Json) -> Result<(String, GeometryDims, NetworkMapping)> {
+    let w = e.get("workload")?.as_str()?.to_string();
+    let node_name = e.get("node")?.as_str()?;
+    let node = TechNode::from_name(node_name)
+        .ok_or_else(|| anyhow!("unknown node {node_name}"))?;
+    let integ_name = e.get("integration")?.as_str()?;
+    let integ = integration_from_name(integ_name)
+        .ok_or_else(|| anyhow!("unknown integration {integ_name}"))?;
+    let dims: GeometryDims = (
+        e.get("px")?.as_usize()?,
+        e.get("py")?.as_usize()?,
+        e.get("rf_bytes")?.as_usize()?,
+        e.get("sram_bytes")?.as_usize()?,
+        node,
+        integ,
+    );
+    Ok((w, dims, parse_mapping(e.get("mapping")?)?))
+}
+
+fn mapping_json(m: &NetworkMapping) -> Json {
+    let layers: Vec<Json> = m
+        .layers
+        .iter()
+        .map(|l| {
+            obj([
+                ("name", Json::from(l.name.as_str())),
+                ("cycles", u64_json(l.cycles)),
+                ("compute_cycles", u64_json(l.compute_cycles)),
+                ("sram_cycles", u64_json(l.sram_cycles)),
+                ("dram_cycles", u64_json(l.dram_cycles)),
+                ("utilization", f64_bits_json(l.utilization)),
+                ("macs", u64_json(l.macs)),
+                ("sram_words", u64_json(l.sram_words)),
+                ("dram_bytes", u64_json(l.dram_bytes)),
+            ])
+        })
+        .collect();
+    obj([
+        ("workload", Json::from(m.workload.as_str())),
+        ("total_cycles", u64_json(m.total_cycles)),
+        ("layers", Json::from(layers)),
+    ])
+}
+
+fn parse_mapping(j: &Json) -> Result<NetworkMapping> {
+    let mut layers = Vec::new();
+    for l in j.get("layers")?.as_arr()? {
+        layers.push(LayerMapping {
+            name: l.get("name")?.as_str()?.to_string(),
+            cycles: parse_u64(l, "cycles")?,
+            compute_cycles: parse_u64(l, "compute_cycles")?,
+            sram_cycles: parse_u64(l, "sram_cycles")?,
+            dram_cycles: parse_u64(l, "dram_cycles")?,
+            utilization: parse_f64_bits(l, "utilization")?,
+            macs: parse_u64(l, "macs")?,
+            sram_words: parse_u64(l, "sram_words")?,
+            dram_bytes: parse_u64(l, "dram_bytes")?,
+        });
+    }
+    Ok(NetworkMapping {
+        workload: j.get("workload")?.as_str()?.to_string(),
+        layers,
+        total_cycles: parse_u64(j, "total_cycles")?,
+    })
+}
+
+/// `u64` as a decimal string: the JSON layer's numbers are `f64`, which
+/// would silently round cycle counts above 2^53.
+fn u64_json(v: u64) -> Json {
+    Json::from(v.to_string())
+}
+
+fn parse_u64(j: &Json, field: &str) -> Result<u64> {
+    let s = j.get(field)?.as_str()?;
+    s.parse::<u64>().map_err(|e| anyhow!("field {field}: {e}"))
+}
+
+/// `f64` as bit-exact hex, so utilization round-trips byte-for-byte.
+fn f64_bits_json(v: f64) -> Json {
+    Json::from(format!("{:#018x}", v.to_bits()))
+}
+
+fn parse_f64_bits(j: &Json, field: &str) -> Result<f64> {
+    let s = j.get(field)?.as_str()?;
+    let hex = s
+        .strip_prefix("0x")
+        .ok_or_else(|| anyhow!("field {field}: want 0x-prefixed bits, got {s}"))?;
+    let bits =
+        u64::from_str_radix(hex, 16).map_err(|e| anyhow!("field {field}: {e}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::cache::CacheCounts;
+    use crate::dataflow::geometry_dims;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("carbon3d-mapcache-{}-{name}.jsonl", std::process::id()))
+    }
+
+    fn cfg(px: usize) -> AccelConfig {
+        AccelConfig {
+            px,
+            py: 8,
+            rf_bytes: 512,
+            sram_bytes: 1 << 18,
+            node: TechNode::N45,
+            integration: Integration::ThreeD,
+            mult_id: 0,
+        }
+    }
+
+    fn populated_cache(pxs: &[usize]) -> MappingCache {
+        let cache = MappingCache::new();
+        let w = workload("tinycnn").unwrap();
+        for &px in pxs {
+            cache.mapping(&w, &cfg(px));
+        }
+        cache
+    }
+
+    #[test]
+    fn sidecar_roundtrip_is_lossless_and_deterministic() {
+        let store = tmp("roundtrip");
+        let side = mapcache_path(&store);
+        let _ = std::fs::remove_file(&side);
+
+        let cache = populated_cache(&[4, 8, 16]);
+        save(&side, &cache).unwrap();
+        let bytes = std::fs::read(&side).unwrap();
+
+        // Reload into a fresh cache: every mapping identical, counters
+        // attribute the preload.
+        let fresh = MappingCache::new();
+        assert_eq!(load_into(&side, &fresh), 3);
+        assert_eq!(fresh.len(), 3);
+        assert_eq!(
+            fresh.counts(),
+            CacheCounts { preloaded: 3, ..Default::default() }
+        );
+        let w = workload("tinycnn").unwrap();
+        for &px in &[4usize, 8, 16] {
+            let direct = map_network(&w, &cfg(px));
+            let got = fresh.mapping(&w, &cfg(px));
+            assert_eq!(got.total_cycles, direct.total_cycles);
+            assert_eq!(got.layers, direct.layers);
+            for (a, b) in got.layers.iter().zip(&direct.layers) {
+                assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+            }
+        }
+        assert_eq!(fresh.counts().persisted_hits, 3);
+
+        // Saving the reloaded cache reproduces the sidecar byte-for-byte:
+        // serialization is canonical, independent of accumulation order.
+        save(&side, &fresh).unwrap();
+        assert_eq!(std::fs::read(&side).unwrap(), bytes);
+        let _ = std::fs::remove_file(&side);
+    }
+
+    #[test]
+    fn corrupt_stale_and_alien_sidecars_rebuild_quietly() {
+        let _guard = crate::obs::test_sink_guard();
+        let side = mapcache_path(&tmp("corrupt"));
+        let fresh = || MappingCache::new();
+
+        // Truncated JSON.
+        std::fs::write(&side, "{\"schema\":\"carbon3d-mapc").unwrap();
+        assert_eq!(load_into(&side, &fresh()), 0);
+        // Valid JSON, wrong schema.
+        std::fs::write(&side, "{\"schema\":\"carbon3d-trace/1\"}").unwrap();
+        assert_eq!(load_into(&side, &fresh()), 0);
+        // Right schema, stale fingerprint.
+        let doc = obj([
+            ("schema", Json::from(MAPCACHE_SCHEMA)),
+            ("fingerprint", Json::from("0x0000000000000000")),
+            ("entries", Json::from(Vec::<Json>::new())),
+        ]);
+        std::fs::write(&side, doc.dumps()).unwrap();
+        assert_eq!(load_into(&side, &fresh()), 0);
+        // Right header, mangled entry.
+        let doc = obj([
+            ("schema", Json::from(MAPCACHE_SCHEMA)),
+            ("fingerprint", Json::from(mapper_fingerprint())),
+            ("entries", Json::from(vec![obj([("workload", Json::from("x"))])])),
+        ]);
+        std::fs::write(&side, doc.dumps()).unwrap();
+        assert_eq!(load_into(&side, &fresh()), 0);
+        // Missing file: silent zero (no event).
+        let _ = std::fs::remove_file(&side);
+        assert_eq!(load_into(&side, &fresh()), 0);
+    }
+
+    #[test]
+    fn merge_unions_shard_sidecars_order_independently() {
+        let w = workload("tinycnn").unwrap();
+        let shard_a = mapcache_path(&tmp("merge-a"));
+        let shard_b = mapcache_path(&tmp("merge-b"));
+        save(&shard_a, &populated_cache(&[4, 8])).unwrap();
+        save(&shard_b, &populated_cache(&[8, 16])).unwrap();
+
+        let merge_to = |name: &str, sources: &[PathBuf]| -> Vec<u8> {
+            let dest = mapcache_path(&tmp(name));
+            let _ = std::fs::remove_file(&dest);
+            assert_eq!(merge_sidecars(&dest, sources).unwrap(), 3);
+            let bytes = std::fs::read(&dest).unwrap();
+            let _ = std::fs::remove_file(&dest);
+            bytes
+        };
+        let ab = merge_to("merge-ab", &[shard_a.clone(), shard_b.clone()]);
+        let ba = merge_to("merge-ba", &[shard_b.clone(), shard_a.clone()]);
+        assert_eq!(ab, ba, "sidecar union depends on source order");
+
+        // The union serves every geometry either shard saw.
+        let dest = mapcache_path(&tmp("merge-load"));
+        std::fs::write(&dest, &ab).unwrap();
+        let cache = MappingCache::new();
+        assert_eq!(load_into(&dest, &cache), 3);
+        for &px in &[4usize, 8, 16] {
+            let direct = map_network(&w, &cfg(px));
+            assert_eq!(cache.mapping(&w, &cfg(px)).layers, direct.layers);
+        }
+        for p in [&shard_a, &shard_b, &dest] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn geometry_dims_roundtrip_through_entry_json() {
+        let w = workload("tinycnn").unwrap();
+        let c = cfg(32);
+        let dims = geometry_dims(&c);
+        let m = map_network(&w, &c);
+        let (w2, dims2, m2) = parse_entry(&entry_json(&w.name, &dims, &m)).unwrap();
+        assert_eq!(w2, w.name);
+        assert_eq!(dims2, dims);
+        assert_eq!(m2.layers, m.layers);
+        assert_eq!(m2.total_cycles, m.total_cycles);
+    }
+}

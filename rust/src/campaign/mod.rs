@@ -24,7 +24,9 @@
 //! per-job seeds), [`store`] (append-only JSONL with checkpoint/resume;
 //! torn final lines dropped, anything else loud), [`pareto`] +
 //! [`checkpoint`] + [`front`] (archive core, sidecar I/O, presentation and
-//! cross-campaign front merging).
+//! cross-campaign front merging), and [`mapcache`] (the persistent
+//! mapping-cache sidecar: a pure performance hint that must never change
+//! store bytes).
 //!
 //! Invariant the tests pin down: for a fixed campaign seed, the final
 //! store bytes are identical whether the campaign ran uninterrupted with
@@ -36,12 +38,14 @@ pub mod commit;
 pub mod exec;
 pub mod front;
 pub mod lease;
+pub mod mapcache;
 pub mod pareto;
 pub mod source;
 pub mod spec;
 pub mod store;
 
 pub use commit::{CommitPipeline, CommitTotals, FrontCell, JobOutcome};
+pub use mapcache::{mapcache_path, MapCachePersist};
 pub use exec::sharded::{shard_store_path, MergeExecutor, ShardId, ShardedExecutor};
 pub use exec::{
     run_campaign, run_campaign_with, start_service, CampaignReport, Executor,
@@ -74,6 +78,7 @@ mod tests {
         let _ = std::fs::remove_file(path);
         let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(path));
         let _ = std::fs::remove_file(crate::obs::status::status_path(path));
+        let _ = std::fs::remove_file(mapcache::mapcache_path(path));
     }
 
     /// 2 models x 2 nodes x 2 deltas = 8 jobs, tiny GA budget.
@@ -295,6 +300,65 @@ mod tests {
 
         let _ = std::fs::remove_file(&trace);
         for p in [&pu, &pt] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
+    fn mapcache_sidecar_never_changes_bytes_and_warm_starts_reruns() {
+        // Serialize against other obs tests: the corrupt-sidecar leg emits
+        // a `mapcache.rebuild` warn event through the process-global sink.
+        let _guard = crate::obs::test_sink_guard();
+        let (pa, pb, pc) = (tmp("mc-fresh"), tmp("mc-warm"), tmp("mc-corrupt"));
+        for p in [&pa, &pb, &pc] {
+            cleanup(p);
+        }
+        let mut spec = quick_spec();
+        spec.models.truncate(1);
+        spec.deltas.truncate(1); // 2 jobs: vgg16 on 45nm and 7nm
+
+        // A fresh run leaves a loadable sidecar beside the store and
+        // attributes no hits to persistence (nothing was preloaded).
+        let (report_a, bytes_a) = run_spec_to(&spec, &pa, 2);
+        let side_a = mapcache::mapcache_path(&pa);
+        assert!(side_a.exists(), "campaign did not write its mapcache sidecar");
+        assert_eq!(report_a.mapping.persisted_hits, 0);
+        assert_eq!(report_a.mapping.preloaded, 0);
+
+        // Seed a second store's sidecar from the first run: the warm run
+        // must be byte-identical in the store, the front checkpoint, and
+        // the deterministic report — and the mapper searches it skipped
+        // must show up as persisted hits.
+        std::fs::copy(&side_a, mapcache::mapcache_path(&pb)).unwrap();
+        let (report_b, bytes_b) = run_spec_to(&spec, &pb, 2);
+        assert_eq!(bytes_b, bytes_a, "warm-started store diverged");
+        assert_eq!(
+            std::fs::read(CampaignArchive::checkpoint_path(&pb)).unwrap(),
+            std::fs::read(CampaignArchive::checkpoint_path(&pa)).unwrap(),
+            "warm-started front checkpoint diverged"
+        );
+        assert_eq!(
+            report_b.deterministic_json().dumps(),
+            report_a.deterministic_json().dumps()
+        );
+        assert!(report_b.mapping.preloaded > 0, "{:?}", report_b.mapping);
+        assert!(report_b.mapping.persisted_hits > 0, "{:?}", report_b.mapping);
+        assert!(report_b.line().contains("persisted"), "{}", report_b.line());
+
+        // A corrupt sidecar is quietly dropped: bytes identical to the
+        // fresh run, zero persisted attribution, and the run replaces the
+        // garbage with a loadable sidecar.
+        std::fs::write(mapcache::mapcache_path(&pc), "}{ not a sidecar").unwrap();
+        let (report_c, bytes_c) = run_spec_to(&spec, &pc, 2);
+        assert_eq!(bytes_c, bytes_a, "corrupt sidecar leaked into the store");
+        assert_eq!(report_c.mapping.persisted_hits, 0);
+        let reloaded = crate::dataflow::MappingCache::new();
+        assert!(
+            mapcache::load_into(&mapcache::mapcache_path(&pc), &reloaded) > 0,
+            "run did not rebuild the corrupt sidecar"
+        );
+
+        for p in [&pa, &pb, &pc] {
             cleanup(p);
         }
     }

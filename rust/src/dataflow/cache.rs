@@ -36,26 +36,46 @@ pub fn geometry_dims(cfg: &AccelConfig) -> GeometryDims {
 
 /// Shared hit/miss counters (relaxed atomics: observability, not
 /// synchronization). Also used for the fitness contexts' chromosome-memo
-/// counters, so one type serves every cache the reports surface.
+/// counters, so one type serves every cache the reports surface. The
+/// persistence counters (`persisted_hits`, `preloaded`) stay zero for
+/// caches that never touch a sidecar.
 #[derive(Debug, Default)]
 pub struct CacheStats {
     hits: AtomicUsize,
     misses: AtomicUsize,
+    persisted_hits: AtomicUsize,
+    preloaded: AtomicUsize,
 }
 
 impl CacheStats {
+    /// Count a lookup served from the cache.
     pub fn hit(&self) {
         self.hits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count a lookup that had to compute its value.
     pub fn miss(&self) {
         self.misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count a hit served by an entry preloaded from a persisted sidecar
+    /// (counted *in addition to* [`CacheStats::hit`]).
+    pub fn persisted_hit(&self) {
+        self.persisted_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` entries preloaded from a persisted sidecar.
+    pub fn preloaded(&self, n: usize) {
+        self.preloaded.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A point-in-time snapshot of every counter.
     pub fn counts(&self) -> CacheCounts {
         CacheCounts {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            persisted_hits: self.persisted_hits.load(Ordering::Relaxed),
+            preloaded: self.preloaded.load(Ordering::Relaxed),
         }
     }
 }
@@ -63,11 +83,20 @@ impl CacheStats {
 /// A point-in-time snapshot of [`CacheStats`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheCounts {
+    /// Lookups served from the cache.
     pub hits: usize,
+    /// Lookups that recomputed their value.
     pub misses: usize,
+    /// The subset of `hits` served by entries a persisted sidecar
+    /// preloaded — the mapper searches this process skipped outright
+    /// because an earlier process already paid for them.
+    pub persisted_hits: usize,
+    /// Entries injected from persisted sidecars before the run.
+    pub preloaded: usize,
 }
 
 impl CacheCounts {
+    /// Total lookups (hits + misses).
     pub fn lookups(&self) -> usize {
         self.hits + self.misses
     }
@@ -88,9 +117,17 @@ impl CacheCounts {
 /// Two-level: workload name (probed borrowed — no allocation per lookup)
 /// over the all-`Copy` [`GeometryDims`].
 pub struct MappingCache {
-    map: RwLock<HashMap<String, HashMap<GeometryDims, Arc<NetworkMapping>>>>,
+    map: RwLock<HashMap<String, HashMap<GeometryDims, CacheEntry>>>,
     stats: CacheStats,
     enabled: bool,
+}
+
+/// One cached mapping plus its provenance: entries preloaded from a
+/// persisted sidecar are tagged so hits on them can be attributed to the
+/// persistence layer (`persisted_hits`).
+struct CacheEntry {
+    mapping: Arc<NetworkMapping>,
+    preloaded: bool,
 }
 
 impl Default for MappingCache {
@@ -132,7 +169,11 @@ impl MappingCache {
         {
             self.stats.hit();
             crate::obs::metrics().incr("mapper_cache_hits", 1);
-            return hit.clone();
+            if hit.preloaded {
+                self.stats.persisted_hit();
+                crate::obs::metrics().incr("mapper_cache_persisted_hits", 1);
+            }
+            return hit.mapping.clone();
         }
         self.stats.miss();
         crate::obs::metrics().incr("mapper_cache_misses", 1);
@@ -141,7 +182,58 @@ impl MappingCache {
             Arc::new(map_network(w, cfg))
         };
         let mut map = self.map.write().expect("mapping cache poisoned");
-        map.entry(w.name.clone()).or_default().entry(dims).or_insert(fresh).clone()
+        map.entry(w.name.clone())
+            .or_default()
+            .entry(dims)
+            .or_insert(CacheEntry { mapping: fresh, preloaded: false })
+            .mapping
+            .clone()
+    }
+
+    /// Inject entries recovered from a persisted sidecar, insert-if-absent
+    /// (an entry computed this process wins over a preloaded duplicate, so
+    /// preloading commutes with computation). Returns how many entries
+    /// were actually added; a [`MappingCache::disabled`] cache ignores the
+    /// injection entirely. Safe because a mapping is a pure function of
+    /// its (workload, geometry) key: a preloaded value is byte-for-byte
+    /// the value this process would have computed.
+    pub fn preload<I>(&self, entries: I) -> usize
+    where
+        I: IntoIterator<Item = (String, GeometryDims, NetworkMapping)>,
+    {
+        if !self.enabled {
+            return 0;
+        }
+        let mut added = 0usize;
+        let mut map = self.map.write().expect("mapping cache poisoned");
+        for (workload, dims, mapping) in entries {
+            if let std::collections::hash_map::Entry::Vacant(slot) =
+                map.entry(workload).or_default().entry(dims)
+            {
+                slot.insert(CacheEntry { mapping: Arc::new(mapping), preloaded: true });
+                added += 1;
+            }
+        }
+        drop(map);
+        if added > 0 {
+            self.stats.preloaded(added);
+            crate::obs::metrics().incr("mapper_cache_preloaded", added as u64);
+        }
+        added
+    }
+
+    /// Snapshot every cached entry for persistence: (workload, geometry,
+    /// mapping) triples in unspecified order — the sidecar serializer
+    /// sorts by key, so the snapshot order never reaches disk.
+    pub fn export(&self) -> Vec<(String, GeometryDims, Arc<NetworkMapping>)> {
+        let map = self.map.read().expect("mapping cache poisoned");
+        let mut out = Vec::with_capacity(map.values().map(|per| per.len()).sum());
+        for (workload, per) in map.iter() {
+            for (&dims, entry) in per.iter() {
+                out.push((workload.clone(), dims, entry.mapping.clone()));
+            }
+        }
+        out
     }
 
     /// Hit/miss counters since construction.
@@ -234,8 +326,90 @@ mod tests {
         let b = cache.mapping(&w, &cfg(EXACT_ID));
         assert!(!Arc::ptr_eq(&a, &b));
         assert_eq!(a.total_cycles, b.total_cycles);
-        assert_eq!(cache.counts(), CacheCounts { hits: 0, misses: 2 });
+        assert_eq!(
+            cache.counts(),
+            CacheCounts { hits: 0, misses: 2, ..Default::default() }
+        );
         assert!(cache.is_empty());
+        // Preloading a disabled cache is a no-op, not an error.
+        let w2 = workload("tinycnn").unwrap();
+        let direct = map_network(&w2, &cfg(EXACT_ID));
+        assert_eq!(cache.preload([(w2.name.clone(), geometry_dims(&cfg(0)), direct)]), 0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn preloaded_entries_hit_and_are_attributed() {
+        let cache = MappingCache::new();
+        let w = workload("tinycnn").unwrap();
+        let direct = map_network(&w, &cfg(EXACT_ID));
+        let added = cache.preload([(w.name.clone(), geometry_dims(&cfg(0)), direct.clone())]);
+        assert_eq!(added, 1);
+        assert_eq!(cache.len(), 1);
+        // A lookup on the preloaded geometry is a hit AND a persisted hit,
+        // and returns exactly the mapping a direct call computes.
+        let got = cache.mapping(&w, &cfg(5));
+        assert_eq!(got.total_cycles, direct.total_cycles);
+        assert_eq!(got.layers, direct.layers);
+        let c = cache.counts();
+        assert_eq!(
+            c,
+            CacheCounts { hits: 1, misses: 0, persisted_hits: 1, preloaded: 1 }
+        );
+        // A fresh geometry misses and its later hits are NOT persisted.
+        let mut big = cfg(EXACT_ID);
+        big.px = 32;
+        cache.mapping(&w, &big);
+        cache.mapping(&w, &big);
+        let c = cache.counts();
+        assert_eq!(
+            c,
+            CacheCounts { hits: 2, misses: 1, persisted_hits: 1, preloaded: 1 }
+        );
+        // Preloading a key the process already computed is ignored
+        // (computed entry wins), so duplicate injection adds nothing.
+        let dup = map_network(&w, &big);
+        assert_eq!(cache.preload([(w.name.clone(), geometry_dims(&big), dup)]), 0);
+        assert_eq!(cache.counts().preloaded, 1);
+    }
+
+    #[test]
+    fn preload_merge_is_order_independent() {
+        // Property: folding sidecar entry sets into a cache in any order
+        // yields the same cached mappings — values are pure functions of
+        // their keys, and insert-if-absent makes the union idempotent.
+        let w = workload("tinycnn").unwrap();
+        let mut geoms = Vec::new();
+        for px in [4usize, 8, 16] {
+            let mut c = cfg(EXACT_ID);
+            c.px = px;
+            geoms.push(c);
+        }
+        let entries: Vec<(String, GeometryDims, NetworkMapping)> = geoms
+            .iter()
+            .map(|c| (w.name.clone(), geometry_dims(c), map_network(&w, c)))
+            .collect();
+        // Three overlapping "shards" of the entry set.
+        let shards: [Vec<usize>; 3] = [vec![0, 1], vec![1, 2], vec![2, 0]];
+        let fold = |order: &[usize]| -> Vec<u64> {
+            let cache = MappingCache::new();
+            for &si in order {
+                let batch: Vec<_> = shards[si].iter().map(|&ei| entries[ei].clone()).collect();
+                cache.preload(batch);
+            }
+            let mut snap: Vec<(String, String, u64)> = cache
+                .export()
+                .into_iter()
+                .map(|(wname, dims, m)| (wname, format!("{dims:?}"), m.total_cycles))
+                .collect();
+            snap.sort();
+            assert_eq!(snap.len(), 3);
+            snap.into_iter().map(|(_, _, cyc)| cyc).collect()
+        };
+        let want = fold(&[0, 1, 2]);
+        for order in [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+            assert_eq!(fold(&order), want, "order {order:?}");
+        }
     }
 
     #[test]

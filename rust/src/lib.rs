@@ -26,7 +26,12 @@
 //!   memoized by what actually varies (DESIGN.md §7.6): a geometry-keyed
 //!   mapping cache shared across the GA/islands/jobs and a table-driven
 //!   bit-faithful native datapath — both bit-identical to their direct
-//!   counterparts and CI-gated against perf regressions.
+//!   counterparts and CI-gated against perf regressions. On top of those
+//!   (DESIGN.md §9): an 8-wide lane matmul kernel with a runtime-selected
+//!   scalar fallback (`CARBON3D_SIMD=0`), a batched evaluator entry point
+//!   over a preallocated buffer pool, and a persistent mapping-cache
+//!   sidecar (`<store>.mapcache.json`) that warm-starts resumed, re-run,
+//!   and merged campaigns without changing a byte of their output.
 //!
 //! See DESIGN.md (repo root) for the system inventory; measured-vs-paper
 //! numbers are printed by `carbon3d report`.

@@ -174,7 +174,7 @@ USAGE: carbon3d <subcommand> [--flags]
            [--objective embodied-cdp|operational|lifetime-cdp]
            [--lifetime-years Y] [--ipd N] [--grid-gco2-kwh G] [--no-prune]
            [--shard i/N] [--lease-ttl SECS] [--report-json FILE] [--trace]
-           [--no-status]
+           [--no-status] [--no-mapcache]
                                 run the whole scenario grid on a worker pool
                                 with a campaign-global accuracy cache, an
                                 objective-aware bound-ordered queue (jobs
@@ -186,11 +186,19 @@ USAGE: carbon3d <subcommand> [--flags]
                                 shard store beside --out. Every run keeps an
                                 atomically-updated live snapshot at
                                 `<store>.status.json` (disable with
-                                --no-status or CARBON3D_STATUS=0)
+                                --no-status or CARBON3D_STATUS=0) and a
+                                persistent mapping-cache sidecar at
+                                `<store>.mapcache.json` that warm-starts
+                                resumes and re-runs (disable with
+                                --no-mapcache or CARBON3D_MAPCACHE=0; a
+                                corrupt sidecar is quietly rebuilt — store
+                                bytes never depend on it)
   campaign merge --shards N [--out FILE.jsonl] <same grid flags>
                                 fold N shard stores into the canonical
                                 store — byte-identical (rows, front sidecar,
-                                report counters) to a single-process run
+                                report counters) to a single-process run —
+                                and union the shards' mapcache sidecars
+                                into the canonical one
   trace report <trace.jsonl> [--top K] [--check]
                                 per-phase breakdown, per-shard lanes, and
                                 top-K slowest jobs from a `<store>.trace.jsonl`
@@ -736,6 +744,9 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
     if o.has("no-status") {
         carbon3d::obs::status::set_enabled(false);
     }
+    if o.has("no-mapcache") {
+        carbon3d::campaign::mapcache::set_enabled(false);
+    }
     if trace_enabled(o) {
         let label = shard.map(|s| s.to_string());
         install_tracer(&store_path, label.as_deref())?;
@@ -801,7 +812,10 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
 }
 
 fn cmd_campaign_merge(o: &Opts) -> Result<()> {
-    use carbon3d::campaign::{run_campaign_with, start_service, MergeExecutor, ResultStore};
+    use carbon3d::campaign::{
+        mapcache, run_campaign_with, shard_store_path, start_service, MergeExecutor,
+        ResultStore, ShardId,
+    };
 
     let spec = campaign_spec_from_opts(o)?;
     let shards = o.usize("shards", 0)?;
@@ -813,8 +827,29 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
     if o.has("no-status") {
         carbon3d::obs::status::set_enabled(false);
     }
+    if o.has("no-mapcache") {
+        mapcache::set_enabled(false);
+    }
     if trace_enabled(o) {
         install_tracer(canonical, Some("merge"))?;
+    }
+    // Union the shards' mapcache sidecars into the canonical one before the
+    // merge runs, so the merge itself (and every later resume) starts from
+    // everything any shard learned. A hint, not a dependency: unreadable
+    // shard sidecars are skipped quietly.
+    if mapcache::enabled() {
+        let shard_sidecars: Vec<std::path::PathBuf> = (0..shards)
+            .map(|i| {
+                mapcache::mapcache_path(&shard_store_path(
+                    canonical,
+                    ShardId { index: i, count: shards },
+                ))
+            })
+            .collect();
+        let n = mapcache::merge_sidecars(&mapcache::mapcache_path(canonical), &shard_sidecars)?;
+        if n > 0 {
+            println!("mapcache: {n} entries unioned from {shards} shard sidecars");
+        }
     }
     let mut store = ResultStore::open(canonical)?;
     if !store.is_empty() && !o.has("resume") {

@@ -13,13 +13,16 @@ use crate::util::stats::Summary;
 /// Result of a timed benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Label printed in front of the timing columns.
     pub name: String,
+    /// Number of timed (post-warmup) iterations behind `summary`.
     pub iters: usize,
     /// Per-iteration wall time in seconds.
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// One aligned human-readable result line (mean / p50 / p95 / iters).
     pub fn line(&self) -> String {
         format!(
             "{:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",

@@ -33,17 +33,24 @@ use super::sink::hit_rate;
 /// and (for trace sidecars) the wall clock it covered.
 #[derive(Debug, Clone)]
 pub struct ObsRecord {
+    /// Display path of the loaded file.
     pub source: String,
+    /// Trace wall clock in µs; `None` for bench `--json` records.
     pub wall_us: Option<u64>,
+    /// The counter/histogram snapshot the diff compares.
     pub metrics: MetricsSnapshot,
 }
 
 /// Per-phase timing stats lifted from a snapshot histogram.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PhaseStats {
+    /// Spans recorded for this phase.
     pub count: u64,
+    /// Summed duration, µs.
     pub total_us: u64,
+    /// Median duration at bucket resolution, µs.
     pub p50: f64,
+    /// 95th-percentile duration at bucket resolution, µs.
     pub p95: f64,
 }
 
@@ -56,8 +63,11 @@ impl From<&HistogramCounts> for PhaseStats {
 /// One phase's old-vs-new comparison.
 #[derive(Debug, Clone)]
 pub struct PhaseDelta {
+    /// Phase (span/histogram) name.
     pub name: String,
+    /// Stats on the baseline side.
     pub old: PhaseStats,
+    /// Stats on the candidate side.
     pub new: PhaseStats,
 }
 
@@ -132,11 +142,14 @@ impl ObsRecord {
 /// The old-vs-new comparison behind `carbon3d trace diff`.
 #[derive(Debug, Clone)]
 pub struct DiffReport {
+    /// Baseline record.
     pub old: ObsRecord,
+    /// Candidate record.
     pub new: ObsRecord,
 }
 
 impl DiffReport {
+    /// Pair a baseline and a candidate record for comparison.
     pub fn new(old: ObsRecord, new: ObsRecord) -> Self {
         Self { old, new }
     }

@@ -28,8 +28,11 @@ use super::sink::SCHEMA;
 /// What [`merge_traces`] wrote, for the CLI's closing message.
 #[derive(Debug, Clone)]
 pub struct MergeSummary {
+    /// Where the merged sidecar was written.
     pub path: PathBuf,
+    /// Number of input sidecars folded in.
     pub inputs: usize,
+    /// Line count of the merged sidecar (header + body + metrics).
     pub lines: u64,
     /// Lane labels in output order.
     pub lanes: Vec<String>,

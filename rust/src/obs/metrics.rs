@@ -81,12 +81,14 @@ impl Histogram {
         BUCKET_BOUNDS.partition_point(|&b| b < v)
     }
 
+    /// Record one value: bump its bucket, the count, and the sum.
     pub fn record(&self, v: u64) {
         self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Freeze the live atomics into a [`HistogramCounts`] snapshot.
     pub fn counts(&self) -> HistogramCounts {
         HistogramCounts {
             buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
@@ -99,8 +101,11 @@ impl Histogram {
 /// A point-in-time snapshot of a [`Histogram`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HistogramCounts {
+    /// Per-bucket observation counts, overflow bucket last.
     pub buckets: [u64; N_BUCKETS],
+    /// Total observations.
     pub count: u64,
+    /// Sum of all observed values.
     pub sum: u64,
 }
 
@@ -111,6 +116,7 @@ impl Default for HistogramCounts {
 }
 
 impl HistogramCounts {
+    /// Exact mean of the observed values (`sum / count`), 0 when empty.
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -138,10 +144,12 @@ impl HistogramCounts {
         BUCKET_BOUNDS[23] as f64
     }
 
+    /// Median at bucket resolution (see [`Self::quantile`]).
     pub fn p50(&self) -> f64 {
         self.quantile(0.5)
     }
 
+    /// 95th percentile at bucket resolution (see [`Self::quantile`]).
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
@@ -193,11 +201,13 @@ pub struct Gauge {
 }
 
 impl Gauge {
+    /// Set the current value, ratcheting the high-water mark.
     pub fn set(&self, v: u64) {
         self.last.store(v, Ordering::Relaxed);
         self.max.fetch_max(v, Ordering::Relaxed);
     }
 
+    /// Freeze the live atomics into a [`GaugeCounts`] snapshot.
     pub fn counts(&self) -> GaugeCounts {
         GaugeCounts {
             last: self.last.load(Ordering::Relaxed),
@@ -209,7 +219,9 @@ impl Gauge {
 /// A point-in-time snapshot of a [`Gauge`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct GaugeCounts {
+    /// Most recently set value.
     pub last: u64,
+    /// High-water mark over the gauge's lifetime.
     pub max: u64,
 }
 
@@ -224,6 +236,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Add `by` to the named counter (registering it on first use).
     pub fn incr(&self, name: &'static str, by: u64) {
         if let Some(c) = self.counters.read().expect("metrics poisoned").get(name) {
             c.fetch_add(by, Ordering::Relaxed);
@@ -237,6 +250,7 @@ impl Metrics {
             .fetch_add(by, Ordering::Relaxed);
     }
 
+    /// Current value of the named counter (0 if never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
             .read()
@@ -246,6 +260,7 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Set the named gauge (registering it on first use).
     pub fn gauge_set(&self, name: &'static str, v: u64) {
         if let Some(g) = self.gauges.read().expect("metrics poisoned").get(name) {
             g.set(v);
@@ -268,6 +283,7 @@ impl Metrics {
         self.record(name, d.as_micros().min(u128::from(u64::MAX)) as u64);
     }
 
+    /// Freeze every registered instrument into a [`MetricsSnapshot`].
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             counters: self
@@ -345,12 +361,16 @@ impl Merge for crate::dataflow::cache::CacheCounts {
     fn merge(&mut self, other: &Self) {
         self.hits += other.hits;
         self.misses += other.misses;
+        self.persisted_hits += other.persisted_hits;
+        self.preloaded += other.preloaded;
     }
 
     fn diff(&self, earlier: &Self) -> Self {
         Self {
             hits: self.hits.saturating_sub(earlier.hits),
             misses: self.misses.saturating_sub(earlier.misses),
+            persisted_hits: self.persisted_hits.saturating_sub(earlier.persisted_hits),
+            preloaded: self.preloaded.saturating_sub(earlier.preloaded),
         }
     }
 }
@@ -380,8 +400,11 @@ impl Merge for HistogramCounts {
 /// JSON, the trace sidecar's final `metrics` line).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Counter values by name.
     pub counters: BTreeMap<String, u64>,
+    /// Gauge last/max values by name.
     pub gauges: BTreeMap<String, GaugeCounts>,
+    /// Histogram bucket counts by name.
     pub histograms: BTreeMap<String, HistogramCounts>,
 }
 
@@ -391,14 +414,17 @@ impl MetricsSnapshot {
         metrics().snapshot()
     }
 
+    /// Counter value by name (0 if the counter never registered).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Histogram counts by name; `None` when absent or empty.
     pub fn histogram(&self, name: &str) -> Option<&HistogramCounts> {
         self.histograms.get(name).filter(|h| h.count > 0)
     }
 
+    /// Serialize the snapshot for sidecar / bench-JSON embedding.
     pub fn to_json(&self) -> Json {
         obj([
             (
@@ -577,14 +603,18 @@ mod tests {
         let d = a.diff(&b);
         assert_eq!(d, ServiceStats { served: 10, evaluated: 4, cache_hits: 5, coalesced: 1 });
 
+        let earlier = CacheCounts { hits: 1, misses: 2, persisted_hits: 1, preloaded: 4 };
         let merged_counts = merged([
-            CacheCounts { hits: 1, misses: 2 },
-            CacheCounts { hits: 10, misses: 20 },
+            earlier,
+            CacheCounts { hits: 10, misses: 20, persisted_hits: 3, preloaded: 0 },
         ]);
-        assert_eq!(merged_counts, CacheCounts { hits: 11, misses: 22 });
         assert_eq!(
-            merged_counts.diff(&CacheCounts { hits: 1, misses: 2 }),
-            CacheCounts { hits: 10, misses: 20 }
+            merged_counts,
+            CacheCounts { hits: 11, misses: 22, persisted_hits: 4, preloaded: 4 }
+        );
+        assert_eq!(
+            merged_counts.diff(&earlier),
+            CacheCounts { hits: 10, misses: 20, persisted_hits: 3, preloaded: 0 }
         );
     }
 

@@ -25,6 +25,8 @@
 //! sidecar is a separate file keyed off the store path. CI's
 //! `trace-smoke` job byte-compares traced vs. untraced runs.
 
+#![deny(missing_docs)]
+
 pub mod bench;
 pub mod diff;
 pub mod export;

@@ -17,12 +17,19 @@ use super::sink::SCHEMA;
 /// One closed span parsed from a sidecar line.
 #[derive(Debug, Clone)]
 pub struct SpanRec {
+    /// Span (and duration-histogram) name, dotted `layer.verb`.
     pub name: String,
+    /// Name of the enclosing span on the same thread, if nested.
     pub parent: Option<String>,
+    /// Nesting depth at close (0 = top-level).
     pub depth: usize,
+    /// Owning job key when closed under an `obs::job_scope`.
     pub job: Option<String>,
+    /// Start offset from the trace epoch, µs.
     pub t_us: u64,
+    /// Duration, µs.
     pub dur_us: u64,
+    /// Small per-process thread ordinal (not an OS tid).
     pub thread: u64,
     /// Lane tag stamped by `trace merge` (single-process sidecars carry
     /// the lane on the header instead).
@@ -32,9 +39,13 @@ pub struct SpanRec {
 /// One point event parsed from a sidecar line.
 #[derive(Debug, Clone)]
 pub struct EventRec {
+    /// Event (and counter) name, e.g. `lease.claim`.
     pub name: String,
+    /// Offset from the trace epoch, µs.
     pub t_us: u64,
+    /// Lane tag stamped by `trace merge`.
     pub shard: Option<String>,
+    /// Free-form event payload (always a JSON object).
     pub fields: Json,
 }
 
@@ -48,43 +59,63 @@ impl EventRec {
 /// One live-progress heartbeat parsed from a sidecar line.
 #[derive(Debug, Clone)]
 pub struct HeartbeatRec {
+    /// Offset from the trace epoch, µs.
     pub t_us: u64,
+    /// Rows committed at emission time.
     pub done: u64,
+    /// Jobs pruned at emission time.
     pub pruned: u64,
+    /// Schedule slots committed at emission time.
     pub committed: u64,
+    /// Total schedule slots.
     pub scheduled: u64,
+    /// Lane tag stamped by `trace merge`.
     pub shard: Option<String>,
 }
 
 /// Per-lane aggregation of a (merged) trace — one row per shard worker.
 #[derive(Debug, Clone, Default)]
 pub struct LaneStats {
+    /// Lane label: the shard tag, header shard, or `main`.
     pub label: String,
+    /// Spans attributed to this lane.
     pub spans: usize,
+    /// `job.eval` spans attributed to this lane.
     pub jobs: usize,
     /// Interval-merged `job.eval` wall clock for this lane, in µs.
     pub busy_us: u64,
+    /// `lease.claim` events on this lane.
     pub claims: u64,
+    /// Claims that reclaimed an expired lease (contention signal).
     pub reclaims: u64,
 }
 
 /// A fully parsed + validated trace sidecar.
 #[derive(Debug, Clone)]
 pub struct TraceReport {
+    /// Schema identifier from the header (`carbon3d-trace/1`).
     pub schema: String,
+    /// Result-store path the trace belongs to.
     pub store: String,
+    /// Shard label from the header (`0/2`, `merge`), if sharded.
     pub shard: Option<String>,
+    /// Recording process id (0 for a merged stream).
     pub pid: u64,
     /// Wall-clock anchor of `t_us` offsets (Unix ms). Optional: sidecars
     /// predating the observatory lack it; `trace merge` requires it.
     pub epoch_ms: Option<u64>,
+    /// All closed spans, in file order.
     pub spans: Vec<SpanRec>,
+    /// All point events, in file order.
     pub events: Vec<EventRec>,
+    /// All live-progress heartbeats, in file order.
     pub beats: Vec<HeartbeatRec>,
+    /// Number of `metrics` lines seen (one per contributing process).
     pub metrics_lines: usize,
     /// All `metrics` lines folded through [`super::Merge`] — the
     /// campaign-wide counter totals for a merged trace.
     pub final_metrics: Option<MetricsSnapshot>,
+    /// Total sidecar line count.
     pub lines: usize,
 }
 

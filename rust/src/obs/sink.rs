@@ -56,7 +56,9 @@ pub fn enabled() -> bool {
 /// Summary returned by [`uninstall`] for the CLI's closing message.
 #[derive(Debug, Clone)]
 pub struct TraceSummary {
+    /// Sidecar path the sink was writing to.
     pub path: PathBuf,
+    /// Total lines written, header and final metrics included.
     pub lines: u64,
 }
 
@@ -191,12 +193,15 @@ pub(super) fn write_event(name: &'static str, fields: &[(&str, Json)]) {
 pub struct Heartbeat {
     /// Rows committed so far.
     pub done: usize,
+    /// Jobs pruned by the bound rule instead of evaluated.
     pub pruned: usize,
+    /// Jobs deferred past this pass (sharded runs: lease unavailable).
     pub deferred: usize,
     /// Schedule slots committed (done + pruned + deferred + skipped).
     pub committed: usize,
     /// Total schedule slots.
     pub scheduled: usize,
+    /// Campaign wall clock behind the rates, in seconds.
     pub elapsed_s: f64,
 }
 

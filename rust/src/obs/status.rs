@@ -74,6 +74,7 @@ impl StatusWriter {
         enabled().then(|| Self::new(store, shard))
     }
 
+    /// The status-document path this writer rewrites.
     pub fn path(&self) -> &Path {
         &self.path
     }
