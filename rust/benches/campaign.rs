@@ -11,7 +11,10 @@
 
 use carbon3d::approx::library;
 use carbon3d::area::node::ALL_NODES;
-use carbon3d::campaign::{run_campaign, CampaignSpec, ResultStore, SurrogateBackend};
+use carbon3d::area::TechNode;
+use carbon3d::campaign::{
+    run_campaign, CampaignSpec, ResultStore, SamplerMode, SurrogateBackend,
+};
 use carbon3d::coordinator::ga_appx_cdp;
 use carbon3d::dataflow::workloads::workload;
 use carbon3d::ga::GaParams;
@@ -123,10 +126,74 @@ fn main() {
         let _ = std::fs::remove_file(carbon3d::obs::status::status_path(&path));
     }
 
+    // Adaptive-vs-exhaustive leg: one single-family δ ladder — the grid
+    // shape the learned surrogate is built for — run both ways with the
+    // same GA budget. The adaptive sampler should evaluate fewer jobs
+    // (surrogate prunes) for the same family-best objective.
+    let mut ladder = CampaignSpec::new(
+        vec!["vgg16".to_string()],
+        vec![TechNode::N7],
+        if smoke {
+            (1..=8).map(|i| i as f64 * 0.5).collect()
+        } else {
+            (1..=16).map(|i| i as f64 * 0.25).collect()
+        },
+    );
+    ladder.ga = s.ga.clone();
+    let ladder_jobs = ladder.n_jobs();
+    let ladder_leg = |tag: &str, sampler: SamplerMode| {
+        let path = std::env::temp_dir().join(format!(
+            "carbon3d-bench-ladder-{}-{tag}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(carbon3d::campaign::mapcache_path(&path));
+        let mut spec = ladder.clone();
+        spec.sampler = sampler;
+        let mut store = ResultStore::open(&path).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let (report, t) =
+            time_once(|| run_campaign(&spec, 4, &mut store, &svc).unwrap());
+        svc.shutdown();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(
+            carbon3d::campaign::CampaignArchive::checkpoint_path(&path),
+        );
+        let _ = std::fs::remove_file(carbon3d::obs::status::status_path(&path));
+        (report, t)
+    };
+    let (ladder_ex, t_ex) = ladder_leg("exhaustive", SamplerMode::Exhaustive);
+    let (ladder_ad, t_ad) = ladder_leg("adaptive", SamplerMode::Adaptive { batch: 2 });
+    let speedup_adaptive = t_ex / t_ad;
+    println!(
+        "δ-ladder exhaustive                          {ladder_jobs} jobs in {t_ex:.2}s \
+         ({} evaluated)",
+        ladder_ex.jobs_run
+    );
+    println!(
+        "δ-ladder adaptive (batch 2)                  {ladder_jobs} jobs in {t_ad:.2}s \
+         ({} evaluated, {} surrogate-pruned) | {speedup_adaptive:.2}x vs exhaustive",
+        ladder_ad.jobs_run, ladder_ad.jobs_pruned_surrogate
+    );
+    let adaptive_doc = obj([
+        ("jobs", Json::from(ladder_jobs)),
+        ("exhaustive_elapsed_s", Json::from(t_ex)),
+        ("adaptive_elapsed_s", Json::from(t_ad)),
+        ("speedup_adaptive", Json::from(speedup_adaptive)),
+        ("jobs_run_exhaustive", Json::from(ladder_ex.jobs_run)),
+        ("jobs_run_adaptive", Json::from(ladder_ad.jobs_run)),
+        ("jobs_pruned_surrogate", Json::from(ladder_ad.jobs_pruned_surrogate)),
+        (
+            "sampler_reranks",
+            Json::from(ladder_ad.metrics.counter("sampler_reranks") as f64),
+        ),
+    ]);
+
     if let Some(out) = json_out {
         let doc = obj([
             ("bench", Json::from("campaign")),
             ("mode", Json::from(if smoke { "smoke" } else { "full" })),
+            ("adaptive", adaptive_doc),
             (
                 "serial_jobs_per_sec",
                 match serial_t {

@@ -152,6 +152,11 @@ pub enum JobOutcome {
     /// The executor's dispatch-side check found the job provably hopeless.
     /// The writer re-decides authoritatively at the commit slot.
     Pruned,
+    /// The adaptive planner pruned the job on the surrogate-tightened
+    /// bound. Planner-authoritative — only meaningful through
+    /// [`CommitPipeline::offer_decided`]; the schedule-order path treats
+    /// it as [`JobOutcome::Pruned`].
+    PrunedSurrogate,
     /// The job belongs to another process (sharded runs): commit nothing,
     /// just advance past its slot.
     Skipped,
@@ -162,8 +167,12 @@ pub enum JobOutcome {
 pub struct CommitTotals {
     /// Jobs that committed a row.
     pub jobs_run: usize,
-    /// Jobs pruned by the authoritative commit-slot rule (no row written).
+    /// Jobs pruned with no row written (authoritative commit-slot rule,
+    /// or the adaptive planner's batch decision).
     pub jobs_pruned: usize,
+    /// The subset of `jobs_pruned` pruned by the learned surrogate bound
+    /// rather than an analytic rule (always 0 outside adaptive runs).
+    pub jobs_pruned_surrogate: usize,
     /// Jobs deferred to other shards (always 0 for single-process runs).
     pub jobs_deferred: usize,
 }
@@ -215,7 +224,12 @@ impl<'a> CommitPipeline<'a> {
             ckpt_path,
             buffer: BTreeMap::new(),
             cursor: 0,
-            totals: CommitTotals { jobs_run: 0, jobs_pruned: 0, jobs_deferred: 0 },
+            totals: CommitTotals {
+                jobs_run: 0,
+                jobs_pruned: 0,
+                jobs_pruned_surrogate: 0,
+                jobs_deferred: 0,
+            },
             t0: now,
             last_heartbeat: now,
             heartbeat_every: heartbeat_interval(),
@@ -316,49 +330,94 @@ impl<'a> CommitPipeline<'a> {
             self.totals.jobs_deferred += 1;
             return Ok(());
         }
+        let prune = {
+            let st = self.front.inner.lock().unwrap();
+            self.mode.fires(job, self.source.bound(job.id), || {
+                st.incumbents.get(&job.family()).copied()
+            })
+        };
+        if prune {
+            self.totals.jobs_pruned += 1;
+            return Ok(());
+        }
+        let JobOutcome::Row(row) = out else {
+            bail!(
+                "job {} was marked pruned by its executor but is runnable at its \
+                 commit slot",
+                job.key()
+            );
+        };
+        self.commit_row(row)
+    }
+
+    /// Append one committed row: incumbent + archive update under the
+    /// lock, file I/O (row append + checkpoint) outside it. Shared by the
+    /// schedule-order path ([`Self::offer`]) and the planner-authoritative
+    /// path ([`Self::offer_decided`]).
+    fn commit_row(&mut self, row: Json) -> Result<()> {
         let _span = crate::obs::span("commit.row");
-        let mut st = self.front.inner.lock().unwrap();
-        let prune = self.mode.fires(job, self.source.bound(job.id), || {
-            st.incumbents.get(&job.family()).copied()
-        });
-        let commit = if prune {
-            None
-        } else {
-            let JobOutcome::Row(row) = out else {
-                bail!(
-                    "job {} was marked pruned by its executor but is runnable at its \
-                     commit slot",
-                    job.key()
-                );
-            };
+        let ckpt = {
+            let mut st = self.front.inner.lock().unwrap();
             update_incumbent(&mut st.incumbents, &row);
             st.archive.insert_row(&row)?;
-            Some((row, st.archive.checkpoint()))
+            st.archive.checkpoint()
         };
-        drop(st);
-        match commit {
-            None => self.totals.jobs_pruned += 1,
-            Some((row, ckpt)) => {
-                self.store.append(row)?;
-                write_atomic(&self.ckpt_path, &ckpt.dumps())?;
-                // The archive checkpoint is the durability boundary; keep
-                // the trace sidecar, status snapshot, and mapcache sidecar
-                // no staler than it.
-                crate::obs::flush();
-                if let Some(mc) = &mut self.mapcache {
-                    mc.persist_if_grown();
-                }
-                self.totals.jobs_run += 1;
-                if let Some(status) = &self.status {
-                    let _ = status.write(
-                        "running",
-                        &self.progress_at(self.cursor + 1),
-                        self.front.front_size(),
-                    );
-                }
-            }
+        self.store.append(row)?;
+        write_atomic(&self.ckpt_path, &ckpt.dumps())?;
+        // The archive checkpoint is the durability boundary; keep the
+        // trace sidecar, status snapshot, and mapcache sidecar no staler
+        // than it.
+        crate::obs::flush();
+        if let Some(mc) = &mut self.mapcache {
+            mc.persist_if_grown();
+        }
+        self.totals.jobs_run += 1;
+        if let Some(status) = &self.status {
+            let _ = status.write(
+                "running",
+                &self.progress_at(self.cursor + 1),
+                self.front.front_size(),
+            );
         }
         Ok(())
+    }
+
+    /// Planner-authoritative ordered commit — the adaptive sampler's entry
+    /// point. The single-threaded planner has already decided this job's
+    /// fate at a deterministic batch boundary (against *virtual* incumbents
+    /// replayed from the committed rows), so the pipeline trusts the
+    /// outcome instead of re-deriving it from schedule order: surrogate
+    /// decisions are not monotone the way analytic incumbent prunes are,
+    /// and re-checking them here against different state would break the
+    /// replay contract. Commits land in call order. A drain must use this
+    /// entry point or [`Self::offer`] exclusively, never both.
+    pub fn offer_decided(&mut self, job: &JobSpec, outcome: JobOutcome) -> Result<()> {
+        ensure!(
+            self.buffer.is_empty(),
+            "offer_decided cannot interleave with buffered offer outcomes"
+        );
+        match outcome {
+            JobOutcome::Skipped => {
+                bail!("adaptive campaigns cannot defer job {}", job.key())
+            }
+            JobOutcome::Pruned => self.totals.jobs_pruned += 1,
+            JobOutcome::PrunedSurrogate => {
+                self.totals.jobs_pruned += 1;
+                self.totals.jobs_pruned_surrogate += 1;
+                crate::obs::metrics().incr("jobs_pruned_surrogate", 1);
+            }
+            JobOutcome::Row(row) => self.commit_row(row)?,
+        }
+        self.cursor += 1;
+        self.maybe_heartbeat();
+        Ok(())
+    }
+
+    /// Rows already committed to the store (the resume prefix), exposed so
+    /// the adaptive planner can replay them through its virtual state
+    /// without re-offering them.
+    pub fn stored_rows(&self) -> &[Json] {
+        self.store.rows()
     }
 
     /// [`Self::progress`] with an explicit committed count — `commit_slot`

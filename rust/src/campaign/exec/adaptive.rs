@@ -1,0 +1,255 @@
+//! The adaptive-sampler executor: a single-threaded *planner* that
+//! re-ranks the grid in seed-keyed batches by expected improvement over
+//! the virtual committed front, prunes on the surrogate-tightened bound
+//! ([`CostSurrogate`]), and evaluates each batch's survivors on a scoped
+//! worker pool.
+//!
+//! **Determinism contract.** Every planner decision happens at a batch
+//! boundary, as a pure function of the grid, the analytic bounds, and the
+//! *virtual* state (per-family incumbents + surrogate points) replayed
+//! from the rows committed so far — never of worker timing. Within a
+//! batch the prune/run decisions are frozen before any evaluation starts,
+//! evaluations run concurrently, and commits land in batch order through
+//! [`CommitPipeline::offer_decided`]. A resumed run replays the identical
+//! decision sequence: grid jobs whose rows the store already holds are
+//! consumed into the virtual state without being re-offered, so the rows
+//! a resume appends continue the fresh run's byte sequence exactly
+//! (CI-gated by `cmp`).
+//!
+//! Surrogate prunes are planner-authoritative — unlike the analytic
+//! incumbent rule, a learned bound is not monotone as more rows commit,
+//! so the commit pipeline must trust the planner's batch-boundary verdict
+//! instead of re-deriving it (`offer_decided`, not `offer`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::runtime::EvalService;
+use crate::util::Json;
+
+use super::super::commit::{CommitPipeline, JobOutcome, PruneMode};
+use super::super::source::{JobCtx, JobSource};
+use super::super::spec::{splitmix64, JobSpec, SamplerMode};
+use super::super::surrogate::{prune_rule, CostSurrogate, PruneRule};
+use super::{job_context, run_job, Executor};
+
+/// The adaptive sampler. `batch` is the spec-fixed planning granularity
+/// (recorded in the store header); `workers` only bounds evaluation
+/// concurrency inside a batch and is invisible in the output bytes.
+pub struct AdaptiveExecutor {
+    pub workers: usize,
+    pub batch: usize,
+}
+
+impl AdaptiveExecutor {
+    pub fn new(workers: usize, batch: usize) -> Self {
+        Self { workers, batch }
+    }
+}
+
+/// Best committed objective value per job family — the planner's virtual
+/// mirror of the commit pipeline's incumbent map, replayed from exactly
+/// the rows (stored or fresh) the store holds.
+type VirtualFront = HashMap<String, f64>;
+
+fn virtual_update(virt: &mut VirtualFront, job: &JobSpec, obj_value: f64) {
+    let e = virt.entry(job.family()).or_insert(obj_value);
+    if obj_value < *e {
+        *e = obj_value;
+    }
+}
+
+impl Executor for AdaptiveExecutor {
+    fn describe(&self) -> String {
+        format!(
+            "adaptive sampler (batch {}, {} worker threads)",
+            self.batch.max(1),
+            self.workers.max(1)
+        )
+    }
+
+    fn sampler(&self) -> SamplerMode {
+        SamplerMode::Adaptive { batch: self.batch }
+    }
+
+    fn drain(
+        &self,
+        ctx: &JobCtx,
+        source: &JobSource,
+        service: &EvalService,
+        pipeline: &mut CommitPipeline<'_>,
+    ) -> Result<()> {
+        if source.schedule().is_empty() {
+            // Complete store: nothing pending, and the pre-pass computed
+            // no bounds — a rerun must stay a no-op.
+            return Ok(());
+        }
+        let grid = source.grid();
+        let mode = pipeline.mode();
+        // Rows already in the store, by job key: the resume prefix the
+        // planner consumes into virtual state instead of re-offering.
+        // (Owned copy — the planner needs the pipeline mutably below.)
+        let stored: HashMap<String, Option<f64>> = pipeline
+            .stored_rows()
+            .iter()
+            .filter_map(|row| {
+                let key = row.get("key").ok()?.as_str().ok()?.to_string();
+                let obj = row.get("obj_value").ok().and_then(|v| v.as_f64().ok());
+                Some((key, obj))
+            })
+            .collect();
+
+        let mut virt: VirtualFront = HashMap::new();
+        let mut surrogate = CostSurrogate::new();
+        let batch_size = self.batch.max(1);
+        let mut remaining: Vec<usize> = (0..grid.len()).collect();
+
+        while !remaining.is_empty() {
+            // Refit at the batch boundary, then re-rank everything still
+            // undecided by expected improvement over the virtual front:
+            // score = incumbent − tightened_lb (∞ for families with no
+            // incumbent yet, so unexplored families are probed first).
+            surrogate.fit();
+            let mut scored: Vec<(usize, f64, f64)> = remaining
+                .iter()
+                .map(|&gi| {
+                    let job = &grid[gi];
+                    let analytic = source
+                        .bound(job.id)
+                        .map(|b| b.objective_lb)
+                        .unwrap_or(f64::NEG_INFINITY);
+                    let tight = surrogate.tightened_lb(job, analytic);
+                    let score = match virt.get(&job.family()) {
+                        Some(&inc) => inc - tight,
+                        None => f64::INFINITY,
+                    };
+                    (gi, score, analytic)
+                })
+                .collect();
+            // Descending score; ties by ascending analytic bound (most
+            // promising first), then a seed-derived hash, then grid id —
+            // a total order, so the plan is independent of input order.
+            scored.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1)
+                    .unwrap()
+                    .then(a.2.partial_cmp(&b.2).unwrap())
+                    .then(splitmix64(grid[a.0].seed).cmp(&splitmix64(grid[b.0].seed)))
+                    .then(grid[a.0].id.cmp(&grid[b.0].id))
+            });
+            let round: Vec<usize> = scored.iter().take(batch_size).map(|s| s.0).collect();
+            remaining = scored.iter().skip(batch_size).map(|s| s.0).collect();
+            crate::obs::metrics().incr("sampler_reranks", 1);
+
+            // Freeze the whole batch's prune/run decisions against the
+            // batch-boundary state before anything evaluates.
+            let decisions: Vec<(usize, Option<JobOutcome>)> = round
+                .iter()
+                .map(|&gi| {
+                    let job = &grid[gi];
+                    let outcome = match mode {
+                        PruneMode::Off => None,
+                        PruneMode::Full | PruneMode::FloorOnly => {
+                            // FloorOnly withholds the incumbent, which
+                            // also silences the surrogate rule (it needs
+                            // an incumbent to beat) — exactly the
+                            // analytic executors' restriction.
+                            let inc = match mode {
+                                PruneMode::Full => virt.get(&job.family()).copied(),
+                                _ => None,
+                            };
+                            match source.bound(job.id) {
+                                None => None,
+                                Some(bound) => match prune_rule(job, bound, inc, &surrogate) {
+                                    Some(PruneRule::Surrogate) => {
+                                        Some(JobOutcome::PrunedSurrogate)
+                                    }
+                                    Some(_) => Some(JobOutcome::Pruned),
+                                    None => None,
+                                },
+                            }
+                        }
+                    };
+                    (gi, outcome)
+                })
+                .collect();
+
+            // Evaluate the batch's survivors that are not already stored,
+            // on up to `workers` threads sharing the process service.
+            let to_run: Vec<usize> = decisions
+                .iter()
+                .filter(|(gi, d)| d.is_none() && !stored.contains_key(&grid[*gi].key()))
+                .map(|(gi, _)| *gi)
+                .collect();
+            let mut rows: HashMap<usize, Json> = HashMap::new();
+            if !to_run.is_empty() {
+                let n_workers = self.workers.max(1).min(to_run.len());
+                let next = AtomicUsize::new(0);
+                let (tx, rx) = mpsc::channel::<Result<(usize, Json)>>();
+                std::thread::scope(|scope| -> Result<()> {
+                    for _ in 0..n_workers {
+                        let tx = tx.clone();
+                        let client = service.client();
+                        let (ctx, grid, next, to_run) = (ctx, grid, &next, &to_run);
+                        scope.spawn(move || loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= to_run.len() {
+                                break;
+                            }
+                            let gi = to_run[i];
+                            let out = run_job(&grid[gi], ctx, &client)
+                                .with_context(|| job_context(&grid[gi]))
+                                .map(|row| (gi, row));
+                            if tx.send(out).is_err() {
+                                break;
+                            }
+                        });
+                    }
+                    drop(tx);
+                    for msg in rx {
+                        let (gi, row) = msg?;
+                        rows.insert(gi, row);
+                    }
+                    Ok(())
+                })?;
+            }
+
+            // Commit the batch in plan order. Stored jobs are consumed
+            // into the virtual state only — their rows are already in the
+            // store and they hold no schedule slot.
+            for (gi, decision) in decisions {
+                let job = &grid[gi];
+                let key = job.key();
+                match decision {
+                    Some(outcome) => {
+                        ensure!(
+                            !stored.contains_key(&key),
+                            "adaptive replay diverged: job {key} is pruned on replay \
+                             but the store holds its committed row"
+                        );
+                        pipeline.offer_decided(job, outcome)?;
+                    }
+                    None => {
+                        if let Some(&obj) = stored.get(&key) {
+                            if let Some(v) = obj {
+                                virtual_update(&mut virt, job, v);
+                                surrogate.observe(job, v);
+                            }
+                        } else {
+                            let row = rows.remove(&gi).expect("batch survivor was evaluated");
+                            let v = row.get("obj_value").ok().and_then(|x| x.as_f64().ok());
+                            pipeline.offer_decided(job, JobOutcome::Row(row))?;
+                            if let Some(v) = v {
+                                virtual_update(&mut virt, job, v);
+                                surrogate.observe(job, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

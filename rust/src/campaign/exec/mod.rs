@@ -17,6 +17,7 @@
 //! multiplier-accuracy cache stays campaign-global: after the first job
 //! primes the cache, every later job's accuracy table is pure cache hits.
 
+pub mod adaptive;
 pub mod sharded;
 pub mod threads;
 
@@ -40,9 +41,11 @@ use crate::obs::fmt::human_time;
 
 use super::commit::{CommitPipeline, FrontCell, PruneMode};
 use super::source::{JobCtx, JobSource};
-use super::spec::{integration_name, CampaignSpec, JobSpec};
+use super::spec::{integration_name, CampaignSpec, JobSpec, SamplerMode};
 use super::store::ResultStore;
+use super::surrogate::{prune_rule, CostSurrogate};
 
+pub use adaptive::AdaptiveExecutor;
 pub use threads::ThreadPoolExecutor;
 
 /// Who evaluates the scheduled jobs. Implementations read the schedule
@@ -66,6 +69,14 @@ pub trait Executor {
     /// back into scheduling or commits.
     fn status_shard(&self) -> Option<String> {
         None
+    }
+
+    /// Which sampler this executor implements. Checked against the spec by
+    /// [`run_campaign_with`] so an adaptive spec can never silently drain
+    /// through a schedule-order executor (or vice versa) — the two produce
+    /// different store byte sequences by design.
+    fn sampler(&self) -> SamplerMode {
+        SamplerMode::Exhaustive
     }
 
     /// Drain the schedule into the pipeline.
@@ -145,6 +156,9 @@ pub struct CampaignReport {
     /// Jobs skipped because their optimistic bound provably cannot beat
     /// the committed front (deterministic prune; no row written).
     pub jobs_pruned: usize,
+    /// The subset of `jobs_pruned` the adaptive planner pruned on the
+    /// learned surrogate bound (0 for exhaustive runs).
+    pub jobs_pruned_surrogate: usize,
     /// Jobs left to other shards (always 0 for single-process runs).
     pub jobs_deferred: usize,
     pub elapsed_s: f64,
@@ -178,6 +192,21 @@ impl CampaignReport {
         } else {
             String::new()
         };
+        // Surrogate attribution inside the prune share: how many of the
+        // pruned jobs the learned bound (not an analytic rule) removed.
+        let surrogate = if self.jobs_pruned_surrogate > 0 {
+            format!(", {} by surrogate", self.jobs_pruned_surrogate)
+        } else {
+            String::new()
+        };
+        // Adaptive-planner activity: batch re-rank count, from the
+        // metrics delta (0 and silent for exhaustive runs).
+        let reranks = self.metrics.counter("sampler_reranks");
+        let sampler = if reranks > 0 {
+            format!(" | sampler: {reranks} reranks")
+        } else {
+            String::new()
+        };
         // Sidecar attribution: how many hits were served by entries the
         // mapcache sidecar preloaded (0 and silent when no sidecar fed
         // this run).
@@ -187,14 +216,21 @@ impl CampaignReport {
             String::new()
         };
         format!(
-            "{} jobs ({} run, {} resumed, {} pruned{deferred}) in {:.2}s = {:.2} jobs/s | \
+            "{} jobs ({} run, {} resumed, pruned {}/{} ({:.0}%){surrogate}{deferred}) \
+             in {:.2}s = {:.2} jobs/s | \
              eval service: {} served, {} evaluated, {} cache hits, {} coalesced \
              ({:.0}% hit rate) | mapping cache: {}/{} hits ({:.0}%{persisted}) | \
-             GA memo: {}/{} hits ({:.0}%)",
+             GA memo: {}/{} hits ({:.0}%){sampler}",
             self.jobs_total,
             self.jobs_run,
             self.jobs_skipped,
             self.jobs_pruned,
+            self.jobs_total,
+            if self.jobs_total > 0 {
+                self.jobs_pruned as f64 / self.jobs_total as f64 * 100.0
+            } else {
+                0.0
+            },
             self.elapsed_s,
             self.jobs_per_sec(),
             self.stats.served,
@@ -257,14 +293,23 @@ impl CampaignReport {
 }
 
 /// Drain the campaign grid with `workers` threads — the classic
-/// single-process entry point, kept as the stable public API.
+/// single-process entry point, kept as the stable public API. Dispatches
+/// on the spec's sampler: exhaustive grids drain through the thread pool,
+/// adaptive specs through the batch planner.
 pub fn run_campaign(
     spec: &CampaignSpec,
     workers: usize,
     store: &mut ResultStore,
     service: &EvalService,
 ) -> Result<CampaignReport> {
-    run_campaign_with(spec, &ThreadPoolExecutor::new(workers), store, service)
+    match spec.sampler {
+        SamplerMode::Exhaustive => {
+            run_campaign_with(spec, &ThreadPoolExecutor::new(workers), store, service)
+        }
+        SamplerMode::Adaptive { batch } => {
+            run_campaign_with(spec, &AdaptiveExecutor::new(workers, batch), store, service)
+        }
+    }
 }
 
 /// Run a campaign through an explicit executor: build the deterministic
@@ -279,6 +324,17 @@ pub fn run_campaign_with(
     service: &EvalService,
 ) -> Result<CampaignReport> {
     spec.validate()?;
+    ensure!(
+        executor.sampler() == spec.sampler,
+        "spec sampler '{}' does not match executor sampler '{}'",
+        spec.sampler.name(),
+        executor.sampler().name()
+    );
+    // Stamp (or verify) the store's sampler header before any row lands:
+    // adaptive stores are self-describing, so a later resume — or a
+    // `campaign merge` fed a shard store — can refuse a mode mismatch
+    // instead of silently mixing byte-incompatible orderings.
+    store.ensure_sampler(spec.sampler)?;
     let _campaign_span = crate::obs::span("campaign.run");
     let ctx = JobCtx::new(spec)?;
     // Warm the geometry-mapping cache from the store's sidecar before any
@@ -319,6 +375,7 @@ pub fn run_campaign_with(
         jobs_run: totals.jobs_run,
         jobs_skipped: source.jobs_skipped(),
         jobs_pruned: totals.jobs_pruned,
+        jobs_pruned_surrogate: totals.jobs_pruned_surrogate,
         jobs_deferred: totals.jobs_deferred,
         elapsed_s: t0.elapsed().as_secs_f64(),
         // One shared counter-delta definition (obs::Merge) for every
@@ -328,6 +385,78 @@ pub fn run_campaign_with(
         memo: ctx.shares.memo.counts(),
         metrics: MetricsSnapshot::collect().diff(&before_metrics),
     })
+}
+
+/// Post-hoc prune diagnosis for a store (`carbon3d campaign
+/// --explain-prune`): rebuild the analytic bounds, fit the surrogate on
+/// every committed row — the state the adaptive planner would hold at the
+/// end of the run — and report, per grid job, the analytic vs. surrogate
+/// vs. tightened bound, the family incumbent, and which rule fires (or
+/// why the job stands). Read-only: never mutates the store.
+pub fn explain_prune(
+    spec: &CampaignSpec,
+    store: &ResultStore,
+    service: &EvalService,
+) -> Result<String> {
+    spec.validate()?;
+    let ctx = JobCtx::new(spec)?;
+    let source = JobSource::build_with_all_bounds(spec, &ctx, store, service)?;
+    let stored: std::collections::HashMap<String, f64> = store
+        .rows()
+        .iter()
+        .filter_map(|row| {
+            let key = row.get("key").ok()?.as_str().ok()?.to_string();
+            let obj = row.get("obj_value").ok()?.as_f64().ok()?;
+            Some((key, obj))
+        })
+        .collect();
+    let mut surrogate = CostSurrogate::new();
+    let mut incumbents: std::collections::HashMap<String, f64> =
+        std::collections::HashMap::new();
+    for job in source.grid() {
+        if let Some(&v) = stored.get(&job.key()) {
+            surrogate.observe(job, v);
+            let e = incumbents.entry(job.family()).or_insert(v);
+            if v < *e {
+                *e = v;
+            }
+        }
+    }
+    surrogate.fit();
+    let opt = |v: Option<f64>| match v {
+        Some(v) => format!("{v:.6}"),
+        None => "-".to_string(),
+    };
+    let mut out = format!(
+        "{} grid jobs, {} committed rows, surrogate: {} points, margin {}\n",
+        source.grid().len(),
+        stored.len(),
+        surrogate.len(),
+        opt(surrogate.margin()),
+    );
+    for job in source.grid() {
+        let key = job.key();
+        let bound = source.bound(job.id).expect("every grid job has a bound");
+        let lo = surrogate.lower_estimate(job);
+        let tight = surrogate.tightened_lb(job, bound.objective_lb);
+        let inc = incumbents.get(&job.family()).copied();
+        let verdict = if stored.contains_key(&key) {
+            "committed".to_string()
+        } else {
+            match prune_rule(job, bound, inc, &surrogate) {
+                Some(rule) => format!("pruned: {}", rule.name()),
+                None => "runnable".to_string(),
+            }
+        };
+        out.push_str(&format!(
+            "{key}: analytic {:.6} | surrogate {} | tightened {tight:.6} | \
+             incumbent {} | {verdict}\n",
+            bound.objective_lb,
+            opt(lo),
+            opt(inc),
+        ));
+    }
+    Ok(out)
 }
 
 /// Execute one scenario: measured/surrogate accuracy table through the
@@ -450,6 +579,7 @@ mod tests {
             jobs_run: 8,
             jobs_skipped: 1,
             jobs_pruned: 1,
+            jobs_pruned_surrogate: 0,
             jobs_deferred: 0,
             elapsed_s: 4.0,
             stats: ServiceStats { served: 100, evaluated: 20, cache_hits: 70, coalesced: 10 },
@@ -461,7 +591,10 @@ mod tests {
         let line = r.line();
         assert!(line.contains("2.00 jobs/s"), "{line}");
         assert!(line.contains("80% hit rate"), "{line}");
-        assert!(line.contains("1 pruned"), "{line}");
+        // Prunes report their share of the grid, not just a bare count.
+        assert!(line.contains("pruned 1/10 (10%)"), "{line}");
+        assert!(!line.contains("surrogate"), "{line}");
+        assert!(!line.contains("sampler"), "{line}");
         assert!(line.contains("mapping cache: 90/120 hits (75%)"), "{line}");
         assert!(!line.contains("persisted"), "{line}");
         assert!(line.contains("GA memo: 25/100 hits (25%)"), "{line}");
@@ -469,6 +602,18 @@ mod tests {
         // Shard runs additionally report the jobs other shards own.
         let sharded = CampaignReport { jobs_deferred: 5, ..r.clone() };
         assert!(sharded.line().contains("5 on other shards"), "{}", sharded.line());
+        // Adaptive runs attribute surrogate prunes and re-rank activity.
+        let mut snap = MetricsSnapshot::default();
+        snap.counters.insert("sampler_reranks".into(), 3);
+        let adaptive = CampaignReport {
+            jobs_pruned: 4,
+            jobs_pruned_surrogate: 3,
+            metrics: snap,
+            ..r.clone()
+        };
+        let line = adaptive.line();
+        assert!(line.contains("pruned 4/10 (40%), 3 by surrogate"), "{line}");
+        assert!(line.contains("sampler: 3 reranks"), "{line}");
         // Sidecar-served hits are attributed inside the mapping segment.
         let warmed = CampaignReport {
             mapping: CacheCounts { hits: 90, misses: 30, persisted_hits: 12, preloaded: 40 },
@@ -494,6 +639,7 @@ mod tests {
             jobs_run: 1,
             jobs_skipped: 0,
             jobs_pruned: 0,
+            jobs_pruned_surrogate: 0,
             jobs_deferred: 0,
             elapsed_s: 1.0,
             stats: ServiceStats::default(),
@@ -513,6 +659,7 @@ mod tests {
             jobs_run: 3,
             jobs_skipped: 0,
             jobs_pruned: 1,
+            jobs_pruned_surrogate: 1,
             jobs_deferred: 0,
             elapsed_s: 123.0,
             stats: ServiceStats { served: 9, evaluated: 9, cache_hits: 0, coalesced: 0 },
@@ -528,6 +675,11 @@ mod tests {
         // of the byte-compared report too.
         assert!(!text.contains("mapping"), "{text}");
         assert!(!text.contains("memo"), "{text}");
+        // Sampler instrumentation (surrogate prune share, re-rank count)
+        // follows the same convention: line() only, never the bytes an
+        // N-shard merge is compared against.
+        assert!(!text.contains("surrogate"), "{text}");
+        assert!(!text.contains("rerank"), "{text}");
         // Equal counters serialize equally whatever the timing or caching.
         let slower = CampaignReport {
             elapsed_s: 999.0,

@@ -169,6 +169,20 @@ impl MergeExecutor {
             );
             let store = ResultStore::open(&path)
                 .with_context(|| format!("open shard store {}", path.display()))?;
+            // Sharding is an exhaustive-sampler protocol: an adaptive
+            // store's row order follows its planner's batch decisions, so
+            // folding one into a schedule-order merge would silently mix
+            // byte-incompatible orderings. Refuse loudly instead.
+            if let Some(mode) = store.sampler_header() {
+                ensure!(
+                    mode == crate::campaign::spec::SamplerMode::Exhaustive,
+                    "shard store {} was written by a '{}' sampler — `campaign merge` \
+                     only accepts exhaustive shard stores (re-run the shards without \
+                     `--sampler adaptive`)",
+                    path.display(),
+                    mode.name()
+                );
+            }
             for row in store.rows() {
                 let key = row
                     .get(KEY_FIELD)

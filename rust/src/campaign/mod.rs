@@ -24,14 +24,19 @@
 //! per-job seeds), [`store`] (append-only JSONL with checkpoint/resume;
 //! torn final lines dropped, anything else loud), [`pareto`] +
 //! [`checkpoint`] + [`front`] (archive core, sidecar I/O, presentation and
-//! cross-campaign front merging), and [`mapcache`] (the persistent
+//! cross-campaign front merging), [`mapcache`] (the persistent
 //! mapping-cache sidecar: a pure performance hint that must never change
-//! store bytes).
+//! store bytes), and [`surrogate`] (the learned job-cost model behind the
+//! `--sampler adaptive` planner in [`exec::AdaptiveExecutor`]: tightened
+//! bounds with a calibrated residual margin, batch re-ranking by expected
+//! improvement, surrogate prunes counted separately).
 //!
-//! Invariant the tests pin down: for a fixed campaign seed, the final
-//! store bytes are identical whether the campaign ran uninterrupted with
-//! any number of workers, was killed and resumed, or was sharded across N
-//! processes and merged.
+//! Invariant the tests pin down: for a fixed campaign seed and sampler,
+//! the final store bytes are identical whether the campaign ran
+//! uninterrupted with any number of workers, was killed and resumed, or
+//! (exhaustive only) was sharded across N processes and merged. Adaptive
+//! stores carry a header line recording their sampler mode, so resume and
+//! `campaign merge` refuse mode mixes instead of corrupting the contract.
 
 pub mod checkpoint;
 pub mod commit;
@@ -43,20 +48,22 @@ pub mod pareto;
 pub mod source;
 pub mod spec;
 pub mod store;
+pub mod surrogate;
 
 pub use commit::{CommitPipeline, CommitTotals, FrontCell, JobOutcome};
 pub use mapcache::{mapcache_path, MapCachePersist};
 pub use exec::sharded::{shard_store_path, MergeExecutor, ShardId, ShardedExecutor};
 pub use exec::{
-    run_campaign, run_campaign_with, start_service, CampaignReport, Executor,
-    SurrogateBackend, ThreadPoolExecutor,
+    explain_prune, run_campaign, run_campaign_with, start_service, AdaptiveExecutor,
+    CampaignReport, Executor, SurrogateBackend, ThreadPoolExecutor,
 };
 pub use front::{merge_fronts, merge_store_fronts, MergedFront, MergedPoint};
 pub use lease::{Claim, LeaseDir};
 pub use pareto::{ArchivePoint, CampaignArchive, CarbonAxis, GroupBy};
 pub use source::{job_bound, prune_reason, shard_owner, JobBound, JobCtx, JobSource};
-pub use spec::{CampaignObjective, CampaignSpec, JobSpec};
+pub use spec::{CampaignObjective, CampaignSpec, JobSpec, SamplerMode};
 pub use store::ResultStore;
+pub use surrogate::{prune_rule, CostSurrogate, PruneRule};
 
 #[cfg(test)]
 mod tests {
@@ -389,5 +396,215 @@ mod tests {
             assert!((obj - lifetime * delay).abs() < 1e-9);
         }
         cleanup(&p);
+    }
+
+    #[test]
+    fn adaptive_campaign_is_deterministic_and_self_describing() {
+        // The adaptive-sampler determinism contract, in-process: for a
+        // fixed spec, the store bytes — header line included — are
+        // identical whatever the worker count and wherever a resume cuts
+        // in, and a complete store reruns as a no-op.
+        let (p4, p1, pr) = (tmp("ad-w4"), tmp("ad-w1"), tmp("ad-resume"));
+        for p in [&p4, &p1, &pr] {
+            cleanup(p);
+        }
+        let mut spec = quick_spec();
+        // batch 3 over 8 jobs: the last planning round is ragged.
+        spec.sampler = SamplerMode::Adaptive { batch: 3 };
+
+        let (report, bytes4) = run_spec_to(&spec, &p4, 4);
+        // Self-describing store: the sampler header is the first line and
+        // is not a data row.
+        let header = bytes4.lines().next().unwrap();
+        assert!(header.contains("\"schema\":\"carbon3d-store/1\""), "{header}");
+        assert!(header.contains("\"sampler\":\"adaptive\""), "{header}");
+        assert!(header.contains("\"batch\":3"), "{header}");
+        assert_eq!(bytes4.lines().count(), report.jobs_run + 1);
+        // Planner bookkeeping: every grid job is run or pruned, and
+        // surrogate prunes are a subset of all prunes.
+        assert_eq!(report.jobs_run + report.jobs_pruned, report.jobs_total);
+        assert_eq!(report.jobs_skipped, 0);
+        assert!(report.jobs_pruned_surrogate <= report.jobs_pruned, "{}", report.line());
+
+        // Worker count is invisible in the bytes: the planner decides at
+        // batch boundaries, workers only evaluate.
+        let (_, bytes1) = run_spec_to(&spec, &p1, 1);
+        assert_eq!(bytes4, bytes1, "adaptive store depends on worker interleaving");
+
+        // Kill after the header + 2 rows, resume: byte-identical replay.
+        let cut = 1 + 2.min(report.jobs_run);
+        let prefix: String =
+            bytes4.lines().take(cut).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&pr, prefix).unwrap();
+        let (resumed, bytes_r) = run_spec_to(&spec, &pr, 3);
+        assert_eq!(resumed.jobs_skipped, cut - 1);
+        assert_eq!(resumed.jobs_run, report.jobs_run - (cut - 1));
+        assert_eq!(bytes_r, bytes4, "adaptive resume diverged from the fresh run");
+
+        // Rerun of the complete store: no new rows, bytes untouched, and
+        // the replay re-derives the same prune set.
+        let (noop, bytes_again) = run_spec_to(&spec, &p4, 2);
+        assert_eq!(noop.jobs_run, 0);
+        assert_eq!(noop.jobs_skipped, report.jobs_run);
+        assert_eq!(noop.jobs_pruned, report.jobs_pruned);
+        assert_eq!(bytes_again, bytes4);
+
+        for p in [&p4, &p1, &pr] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
+    fn adaptive_sampler_preserves_family_bests_against_exhaustive() {
+        // A single-family δ ladder — the shape the surrogate is built for:
+        // one workload/node, eight δ values, smooth objective-vs-δ
+        // structure. The adaptive run may prune part of the tail; what it
+        // must never do is lose a family's best objective value, and every
+        // row it does commit must be byte-identical to the exhaustive
+        // run's row for the same job (rows are pure functions of the job).
+        let (pe, pa) = (tmp("ladder-ex"), tmp("ladder-ad"));
+        for p in [&pe, &pa] {
+            cleanup(p);
+        }
+        let mut spec = CampaignSpec::new(
+            vec!["vgg16".to_string()],
+            vec![TechNode::N7],
+            vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0],
+        );
+        spec.ga = GaParams {
+            population: 8,
+            generations: 4,
+            patience: 2,
+            elites: 1,
+            ..Default::default()
+        };
+        let (re, be) = run_spec_to(&spec, &pe, 4);
+        assert_eq!(re.jobs_pruned_surrogate, 0, "exhaustive runs never consult the surrogate");
+
+        let mut adaptive = spec.clone();
+        adaptive.sampler = SamplerMode::Adaptive { batch: 2 };
+        let (ra, ba) = run_spec_to(&adaptive, &pa, 4);
+
+        // The sampler can only save work, never add it.
+        assert!(ra.jobs_run <= re.jobs_run, "{} > {}", ra.jobs_run, re.jobs_run);
+        assert_eq!(ra.jobs_run + ra.jobs_pruned, ra.jobs_total);
+
+        // Every committed adaptive row is verbatim one of the exhaustive
+        // run's rows (the exhaustive store is headerless; the adaptive
+        // store's first line is its header).
+        if re.jobs_pruned == 0 {
+            for line in ba.lines().skip(1) {
+                assert!(
+                    be.lines().any(|l| l == line),
+                    "adaptive row not in the exhaustive store: {line}"
+                );
+            }
+        }
+
+        // Family-best preservation: the best committed objective value is
+        // bit-identical between the two stores. (The analytic incumbent
+        // rule can only prune a family's argmin when the incumbent already
+        // equals it; the surrogate margin guards the learned rule — this
+        // assertion is the soundness contract of ISSUE 9.)
+        let best = |bytes: &str| {
+            bytes
+                .lines()
+                .filter_map(|l| {
+                    crate::util::Json::parse(l)
+                        .ok()?
+                        .get("obj_value")
+                        .ok()?
+                        .as_f64()
+                        .ok()
+                })
+                .fold(f64::INFINITY, f64::min)
+        };
+        let (b_ex, b_ad) = (best(&be), best(&ba));
+        assert!(b_ex.is_finite() && b_ad.is_finite());
+        assert_eq!(
+            b_ex.to_bits(),
+            b_ad.to_bits(),
+            "adaptive pruning lost the family best: exhaustive {b_ex}, adaptive {b_ad}"
+        );
+
+        // --explain-prune replays the planner's end-of-run state: every
+        // committed row reports "committed", every missing grid job gets a
+        // rule or "runnable".
+        let svc = EvalService::start(SurrogateBackend::default());
+        let store = ResultStore::open(&pa).unwrap();
+        let explained = explain_prune(&adaptive, &store, &svc).unwrap();
+        svc.shutdown();
+        assert!(explained.contains("8 grid jobs"), "{explained}");
+        let committed =
+            explained.lines().filter(|l| l.ends_with("| committed")).count();
+        assert_eq!(committed, ra.jobs_run, "{explained}");
+        for line in explained.lines().skip(1) {
+            assert!(
+                line.ends_with("| committed")
+                    || line.contains("| pruned: ")
+                    || line.ends_with("| runnable"),
+                "{line}"
+            );
+        }
+
+        for p in [&pe, &pa] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
+    fn sampler_mode_mixes_are_refused_loudly() {
+        let (pe, pa, ps) = (tmp("mix-ex"), tmp("mix-ad"), tmp("mix-shard"));
+        cleanup(&pe);
+        cleanup(&pa);
+        let mut spec = quick_spec();
+        spec.models.truncate(1);
+        spec.deltas.truncate(1); // 2 jobs
+        let mut adaptive = spec.clone();
+        adaptive.sampler = SamplerMode::Adaptive { batch: 2 };
+
+        // An exhaustive (headerless) store with rows cannot be resumed
+        // adaptively.
+        let (_, bytes_e) = run_spec_to(&spec, &pe, 2);
+        assert!(!bytes_e.lines().next().unwrap().contains("\"schema\""));
+        let svc = EvalService::start(SurrogateBackend::default());
+        {
+            let mut store = ResultStore::open(&pe).unwrap();
+            let err = run_campaign(&adaptive, 2, &mut store, &svc).unwrap_err();
+            assert!(format!("{err:#}").contains("--sampler adaptive"), "{err:#}");
+        }
+
+        // An adaptive store refuses exhaustive resume and a different
+        // batch size (the batch is part of the byte contract).
+        let (_, _) = run_spec_to(&adaptive, &pa, 2);
+        {
+            let mut store = ResultStore::open(&pa).unwrap();
+            let err = run_campaign(&spec, 2, &mut store, &svc).unwrap_err();
+            assert!(format!("{err:#}").contains("exhaustive"), "{err:#}");
+        }
+        {
+            let mut rebatched = adaptive.clone();
+            rebatched.sampler = SamplerMode::Adaptive { batch: 3 };
+            let mut store = ResultStore::open(&pa).unwrap();
+            let err = run_campaign(&rebatched, 2, &mut store, &svc).unwrap_err();
+            assert!(format!("{err:#}").contains("batch"), "{err:#}");
+        }
+        svc.shutdown();
+
+        // `campaign merge` refuses shard stores written by an adaptive
+        // sampler: copying the adaptive store into a shard slot must fail.
+        let shard_path =
+            shard_store_path(&ps, ShardId::parse("0/1").unwrap());
+        let _ = std::fs::remove_file(&shard_path);
+        std::fs::copy(&pa, &shard_path).unwrap();
+        let err = MergeExecutor::from_shard_stores(&ps, 1).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("only accepts exhaustive shard stores"),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_file(&shard_path);
+
+        cleanup(&pe);
+        cleanup(&pa);
     }
 }

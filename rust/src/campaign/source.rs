@@ -209,6 +209,7 @@ pub struct JobSource {
     jobs_skipped: usize,
     schedule: Vec<JobSpec>,
     bounds: HashMap<usize, JobBound>,
+    grid: Vec<JobSpec>,
 }
 
 impl JobSource {
@@ -221,17 +222,44 @@ impl JobSource {
         store: &ResultStore,
         service: &EvalService,
     ) -> Result<Self> {
-        let jobs = spec.jobs();
-        let jobs_total = jobs.len();
+        Self::build_inner(spec, ctx, store, service, false)
+    }
+
+    /// [`JobSource::build`], but bounds are computed even when every job is
+    /// already in the store — `campaign --explain-prune` diagnoses complete
+    /// stores, where the normal pre-pass would have nothing to do.
+    pub fn build_with_all_bounds(
+        spec: &CampaignSpec,
+        ctx: &JobCtx,
+        store: &ResultStore,
+        service: &EvalService,
+    ) -> Result<Self> {
+        Self::build_inner(spec, ctx, store, service, true)
+    }
+
+    fn build_inner(
+        spec: &CampaignSpec,
+        ctx: &JobCtx,
+        store: &ResultStore,
+        service: &EvalService,
+        force_bounds: bool,
+    ) -> Result<Self> {
+        let grid = spec.jobs();
+        let jobs_total = grid.len();
         let mut pending: Vec<JobSpec> =
-            jobs.into_iter().filter(|j| !store.contains(&j.key())).collect();
+            grid.iter().filter(|j| !store.contains(&j.key())).cloned().collect();
         let jobs_skipped = jobs_total - pending.len();
         let mut bounds: HashMap<usize, JobBound> = HashMap::new();
-        if !pending.is_empty() {
+        if !pending.is_empty() || force_bounds {
+            // Bounds for the *whole* grid, not just the pending jobs: the
+            // adaptive planner replays its batch decisions over stored rows
+            // too, and the replay needs the same bounds the original run
+            // saw. (Pure computation after the one shared K calibration —
+            // enumerating the extra jobs costs no service round-trips.)
             let client = service.client();
             let k = ctx.k(&client)?;
             let mut feasible_sets: HashMap<(String, u64), Vec<usize>> = HashMap::new();
-            for job in &pending {
+            for job in &grid {
                 let w = ctx.workload(&job.model)?;
                 let f = feasible_sets
                     .entry((job.model.clone(), job.delta_pct.to_bits()))
@@ -252,7 +280,13 @@ impl JobSource {
                     .then(a.id.cmp(&b.id))
             });
         }
-        Ok(Self { jobs_total, jobs_skipped, schedule: pending, bounds })
+        Ok(Self { jobs_total, jobs_skipped, schedule: pending, bounds, grid })
+    }
+
+    /// Every grid job in flattened (id) order, stored or pending — the
+    /// adaptive planner's replay domain.
+    pub fn grid(&self) -> &[JobSpec] {
+        &self.grid
     }
 
     /// Grid size before resume filtering.
@@ -455,6 +489,13 @@ mod tests {
         let source = quick_source(&path);
         assert_eq!(source.jobs_total(), 16);
         assert_eq!(source.jobs_skipped(), 0);
+        // The full grid is exposed (in id order) and every grid job — not
+        // just the pending ones — has a bound, for the adaptive replay.
+        assert_eq!(source.grid().len(), 16);
+        for (i, job) in source.grid().iter().enumerate() {
+            assert_eq!(job.id, i);
+            assert!(source.bound(job.id).is_some(), "{}", job.key());
+        }
         let mut prev = f64::NEG_INFINITY;
         for job in source.schedule() {
             let b = source.bound(job.id).expect("every pending job has a bound");

@@ -72,6 +72,44 @@ impl CampaignObjective {
     }
 }
 
+/// How a campaign walks its grid.
+///
+/// `Exhaustive` is the legacy mode: every job in ascending analytic-bound
+/// order. `Adaptive` re-ranks the remaining grid in deterministic batches
+/// by expected improvement over the committed front, using the learned
+/// cost surrogate ([`crate::campaign::surrogate`]) to tighten bounds and
+/// prune — the propose → evaluate → update loop that makes huge grids
+/// tractable. The batch size is part of the determinism contract (it is
+/// recorded in the store header and must match on resume): batches, not
+/// worker counts, fix where the surrogate refits, so the committed bytes
+/// are identical for any worker count or resume boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplerMode {
+    /// Full grid in ascending analytic-bound order.
+    #[default]
+    Exhaustive,
+    /// Surrogate-guided propose → evaluate → update batches of this size.
+    Adaptive { batch: usize },
+}
+
+impl SamplerMode {
+    /// Stable name (store header, CLI flag values, banners).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerMode::Exhaustive => "exhaustive",
+            SamplerMode::Adaptive { .. } => "adaptive",
+        }
+    }
+
+    /// The batch size, for adaptive mode.
+    pub fn batch(&self) -> Option<usize> {
+        match self {
+            SamplerMode::Exhaustive => None,
+            SamplerMode::Adaptive { batch } => Some(*batch),
+        }
+    }
+}
+
 /// Human/stable name for an integration style (used in job keys and rows).
 pub fn integration_name(i: Integration) -> &'static str {
     match i {
@@ -110,6 +148,9 @@ pub struct CampaignSpec {
     /// (deterministic; trades per-scenario grid completeness for speed —
     /// see `source::prune_reason` for the exact semantics).
     pub prune: bool,
+    /// How the grid is walked (exhaustive schedule or surrogate-guided
+    /// adaptive batches).
+    pub sampler: SamplerMode,
 }
 
 impl CampaignSpec {
@@ -127,6 +168,7 @@ impl CampaignSpec {
             objective: CampaignObjective::default(),
             deployment: Deployment::default(),
             prune: true,
+            sampler: SamplerMode::Exhaustive,
         }
     }
 
@@ -157,6 +199,11 @@ impl CampaignSpec {
     pub fn validate(&self) -> Result<()> {
         fn dup_at<T: PartialEq>(vals: &[T]) -> Option<usize> {
             (1..vals.len()).find(|&i| vals[..i].contains(&vals[i]))
+        }
+        if let SamplerMode::Adaptive { batch } = self.sampler {
+            if batch == 0 {
+                bail!("adaptive sampler batch size must be >= 1");
+            }
         }
         if let Some(i) = dup_at(&self.models) {
             bail!("duplicate model {:?} in campaign grid", self.models[i]);
@@ -295,8 +342,9 @@ pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// splitmix64 finalizer — decorrelates nearby inputs.
-fn splitmix64(mut z: u64) -> u64 {
+/// splitmix64 finalizer — decorrelates nearby inputs (also the adaptive
+/// sampler's seed-keyed tie-break, see `campaign::exec::adaptive`).
+pub(crate) fn splitmix64(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -379,6 +427,26 @@ mod tests {
         // Duplicate-axis rejection (including 3-decimal key-encoding
         // near-duplicates) is covered in tests/integration.rs: validation
         // is part of the public CLI contract.
+    }
+
+    #[test]
+    fn sampler_mode_names_batch_and_validation() {
+        assert_eq!(SamplerMode::Exhaustive.name(), "exhaustive");
+        assert_eq!(SamplerMode::Adaptive { batch: 6 }.name(), "adaptive");
+        assert_eq!(SamplerMode::Exhaustive.batch(), None);
+        assert_eq!(SamplerMode::Adaptive { batch: 6 }.batch(), Some(6));
+        let mut s = small();
+        s.sampler = SamplerMode::Adaptive { batch: 0 };
+        assert!(s.validate().is_err());
+        s.sampler = SamplerMode::Adaptive { batch: 4 };
+        assert!(s.validate().is_ok());
+        // The sampler never touches job identity: keys and seeds are the
+        // same whatever walks the grid, which is what lets `--explain-prune`
+        // and the front tooling reason about stores from either mode.
+        let keys = |spec: &CampaignSpec| -> Vec<(String, u64)> {
+            spec.jobs().iter().map(|j| (j.key(), j.seed)).collect()
+        };
+        assert_eq!(keys(&s), keys(&small()));
     }
 
     #[test]

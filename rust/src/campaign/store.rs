@@ -10,18 +10,32 @@
 //! loss. Sharded campaigns coordinate through the sibling
 //! [`crate::campaign::lease`] directory; each shard writes its own store
 //! of this same format.
+//!
+//! **Header line.** Stores written by `--sampler adaptive` begin with a
+//! schema line (`{"schema":"carbon3d-store/1","sampler":"adaptive",...}`)
+//! identified by its `schema` field, so a resume or merge can detect —
+//! and loudly refuse — a sampler-mode mismatch: an adaptive store replays
+//! its batch plan from the committed rows, which an exhaustive walker
+//! would corrupt, and vice versa. Legacy / exhaustive stores carry no
+//! header, keeping every pre-existing store byte-stable and resumable.
 
 use std::collections::HashSet;
 use std::fs::{File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::util::json::obj;
 use crate::util::Json;
+
+use super::spec::SamplerMode;
 
 /// Field every row carries to identify its scenario.
 pub const KEY_FIELD: &str = "key";
+
+/// Schema tag the optional header line carries.
+pub const STORE_SCHEMA: &str = "carbon3d-store/1";
 
 /// The JSONL store.
 pub struct ResultStore {
@@ -29,6 +43,54 @@ pub struct ResultStore {
     rows: Vec<Json>,
     keys: HashSet<String>,
     file: File,
+    /// Sampler mode recorded in the header line, if the store has one
+    /// (adaptive stores always do; exhaustive/legacy stores never do).
+    header: Option<SamplerMode>,
+}
+
+/// Parse a header line's sampler mode. `None` when the line is a data row
+/// (no `schema` field); an error when it claims a schema we don't speak or
+/// a sampler we don't know.
+fn parse_header(row: &Json) -> Result<Option<SamplerMode>> {
+    let Ok(schema) = row.get("schema").and_then(|s| s.as_str().map(str::to_string)) else {
+        return Ok(None);
+    };
+    ensure!(
+        schema == STORE_SCHEMA,
+        "store header claims schema {schema:?}; this build speaks {STORE_SCHEMA:?}"
+    );
+    let sampler = row
+        .get("sampler")
+        .and_then(|s| s.as_str().map(str::to_string))
+        .context("store header has no string `sampler`")?;
+    match sampler.as_str() {
+        "exhaustive" => Ok(Some(SamplerMode::Exhaustive)),
+        "adaptive" => {
+            let batch = row
+                .get("batch")
+                .ok()
+                .and_then(|b| b.as_usize().ok())
+                .context("adaptive store header has no integer `batch`")?;
+            ensure!(batch >= 1, "adaptive store header batch must be >= 1, got {batch}");
+            Ok(Some(SamplerMode::Adaptive { batch }))
+        }
+        other => bail!("store header names unknown sampler {other:?}"),
+    }
+}
+
+/// The header line an adaptive campaign writes as its first store line.
+fn header_row(mode: SamplerMode) -> Json {
+    match mode.batch() {
+        Some(batch) => obj([
+            ("schema", Json::from(STORE_SCHEMA)),
+            ("sampler", Json::from(mode.name())),
+            ("batch", Json::from(batch)),
+        ]),
+        None => obj([
+            ("schema", Json::from(STORE_SCHEMA)),
+            ("sampler", Json::from(mode.name())),
+        ]),
+    }
 }
 
 impl ResultStore {
@@ -48,6 +110,7 @@ impl ResultStore {
         };
         let mut rows = Vec::new();
         let mut keys = HashSet::new();
+        let mut header: Option<SamplerMode> = None;
         let mut torn = false;
         // Only a *final* line with no trailing newline can be a torn append
         // (the writer always emits `row\n` in one call). Anything else that
@@ -58,6 +121,17 @@ impl ResultStore {
         for (i, line) in lines.iter().enumerate() {
             match Json::parse(line) {
                 Ok(row) => {
+                    // The header can only be the first line (the writer
+                    // emits it before any row); a `schema` field anywhere
+                    // else is treated as an ordinary (malformed) row.
+                    if i == 0 {
+                        if let Some(mode) = parse_header(&row)
+                            .with_context(|| format!("store {} header", path.display()))?
+                        {
+                            header = Some(mode);
+                            continue;
+                        }
+                    }
                     let key = row
                         .get(KEY_FIELD)
                         .and_then(|k| k.as_str().map(str::to_string))
@@ -103,6 +177,10 @@ impl ResultStore {
             let tmp = path.with_extension("jsonl.tmp");
             let mut f = File::create(&tmp)
                 .with_context(|| format!("create {}", tmp.display()))?;
+            if let Some(mode) = header {
+                writeln!(f, "{}", header_row(mode).dumps())
+                    .with_context(|| format!("rewrite store header {}", tmp.display()))?;
+            }
             for row in &rows {
                 writeln!(f, "{}", row.dumps())
                     .with_context(|| format!("rewrite store {}", tmp.display()))?;
@@ -117,7 +195,60 @@ impl ResultStore {
             .append(true)
             .open(path)
             .with_context(|| format!("open store {}", path.display()))?;
-        Ok(Self { path: path.to_path_buf(), rows, keys, file })
+        Ok(Self { path: path.to_path_buf(), rows, keys, file, header })
+    }
+
+    /// The sampler mode recorded in the store's header line, if any
+    /// (legacy and exhaustive stores have no header).
+    pub fn sampler_header(&self) -> Option<SamplerMode> {
+        self.header
+    }
+
+    /// Verify this store may be driven by a campaign in `mode`, writing
+    /// the header line when an adaptive campaign starts a fresh store.
+    ///
+    /// The rules, all loud (a wrong walker would silently produce a store
+    /// whose bytes depend on which mode wrote which rows):
+    /// - exhaustive over a headerless store: fine (the legacy format);
+    /// - exhaustive over an adaptive store, or adaptive over a store that
+    ///   already has rows but no header: refused;
+    /// - adaptive over an empty headerless store: writes the header;
+    /// - header present: the mode (including the batch size, which fixes
+    ///   the replayed batch plan) must match exactly.
+    pub fn ensure_sampler(&mut self, mode: SamplerMode) -> Result<()> {
+        match self.header {
+            None => match mode {
+                SamplerMode::Exhaustive => Ok(()),
+                SamplerMode::Adaptive { .. } => {
+                    ensure!(
+                        self.rows.is_empty(),
+                        "store {} has {} rows but no sampler header: it was written by an \
+                         exhaustive campaign and cannot be resumed with --sampler adaptive \
+                         (the adaptive batch replay would not match the committed rows)",
+                        self.path.display(),
+                        self.rows.len()
+                    );
+                    writeln!(self.file, "{}", header_row(mode).dumps())
+                        .with_context(|| format!("write header to {}", self.path.display()))?;
+                    self.file.flush()?;
+                    self.header = Some(mode);
+                    Ok(())
+                }
+            },
+            Some(have) => {
+                ensure!(
+                    have == mode,
+                    "store {} was written with sampler {}{}; this run asked for {}{} — \
+                     rerun with the matching --sampler flags or use a fresh store",
+                    self.path.display(),
+                    have.name(),
+                    have.batch().map(|b| format!(" (batch {b})")).unwrap_or_default(),
+                    mode.name(),
+                    mode.batch().map(|b| format!(" (batch {b})")).unwrap_or_default(),
+                );
+                Ok(())
+            }
+        }
     }
 
     /// Has a row for this job key already been committed?
@@ -248,6 +379,80 @@ mod tests {
         // The damaged file is left untouched for inspection.
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn adaptive_header_roundtrips_and_survives_torn_tail() {
+        let path = tmp("header");
+        let _ = std::fs::remove_file(&path);
+        let mode = SamplerMode::Adaptive { batch: 4 };
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            assert_eq!(s.sampler_header(), None);
+            s.ensure_sampler(mode).unwrap();
+            s.append(row("a", 1.0)).unwrap();
+        }
+        // Reopen: header parsed, not counted as a row.
+        {
+            let s = ResultStore::open(&path).unwrap();
+            assert_eq!(s.sampler_header(), Some(mode));
+            assert_eq!(s.len(), 1);
+            assert!(s.contains("a"));
+        }
+        // A torn final line is dropped and the rewrite keeps the header
+        // as the first line.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"key\": \"b\", \"x\":").unwrap();
+        drop(f);
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.sampler_header(), Some(mode));
+        assert_eq!(s.len(), 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"schema\":\"carbon3d-store/1\""), "{text}");
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn ensure_sampler_refuses_mixed_modes() {
+        let path = tmp("mixed");
+        let _ = std::fs::remove_file(&path);
+        // Adaptive resume over a headerless store with rows: refused.
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            s.ensure_sampler(SamplerMode::Exhaustive).unwrap();
+            s.append(row("a", 1.0)).unwrap();
+            let err = s.ensure_sampler(SamplerMode::Adaptive { batch: 4 }).unwrap_err();
+            assert!(format!("{err:#}").contains("--sampler adaptive"), "{err:#}");
+        }
+        // Exhaustive (or different-batch adaptive) over an adaptive store:
+        // refused, naming both modes.
+        let adaptive = tmp("mixed-adaptive");
+        let _ = std::fs::remove_file(&adaptive);
+        {
+            let mut s = ResultStore::open(&adaptive).unwrap();
+            s.ensure_sampler(SamplerMode::Adaptive { batch: 4 }).unwrap();
+        }
+        let mut s = ResultStore::open(&adaptive).unwrap();
+        let err = s.ensure_sampler(SamplerMode::Exhaustive).unwrap_err();
+        assert!(format!("{err:#}").contains("adaptive (batch 4)"), "{err:#}");
+        let err = s.ensure_sampler(SamplerMode::Adaptive { batch: 8 }).unwrap_err();
+        assert!(format!("{err:#}").contains("batch 8"), "{err:#}");
+        // The matching mode is accepted and idempotent.
+        s.ensure_sampler(SamplerMode::Adaptive { batch: 4 }).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&adaptive);
+    }
+
+    #[test]
+    fn unknown_store_schema_is_a_loud_error() {
+        let path = tmp("schema");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, "{\"schema\": \"carbon3d-store/9\", \"sampler\": \"adaptive\"}\n")
+            .unwrap();
+        let err = ResultStore::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("carbon3d-store/1"), "{err:#}");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -175,6 +175,8 @@ USAGE: carbon3d <subcommand> [--flags]
            [--lifetime-years Y] [--ipd N] [--grid-gco2-kwh G] [--no-prune]
            [--shard i/N] [--lease-ttl SECS] [--report-json FILE] [--trace]
            [--no-status] [--no-mapcache]
+           [--sampler exhaustive|adaptive] [--sampler-batch N]
+           [--explain-prune FILE.jsonl]
                                 run the whole scenario grid on a worker pool
                                 with a campaign-global accuracy cache, an
                                 objective-aware bound-ordered queue (jobs
@@ -192,7 +194,17 @@ USAGE: carbon3d <subcommand> [--flags]
                                 resumes and re-runs (disable with
                                 --no-mapcache or CARBON3D_MAPCACHE=0; a
                                 corrupt sidecar is quietly rebuilt — store
-                                bytes never depend on it)
+                                bytes never depend on it).
+                                --sampler adaptive re-ranks the grid in
+                                deterministic batches (--sampler-batch,
+                                default 16) by expected improvement over a
+                                learned job-cost surrogate and prunes on
+                                its margin-tightened bound; the store's
+                                header line records the mode, and resume /
+                                merge refuse a mode mix. --explain-prune
+                                FILE prints per-job analytic vs surrogate
+                                bounds for this grid against FILE's rows
+                                and which prune rule fires (read-only)
   campaign merge --shards N [--out FILE.jsonl] <same grid flags>
                                 fold N shard stores into the canonical
                                 store — byte-identical (rows, front sidecar,
@@ -503,6 +515,14 @@ fn campaign_spec_from_opts(o: &Opts) -> Result<carbon3d::campaign::CampaignSpec>
         anyhow!("unknown objective {obj_arg} (embodied-cdp|operational|lifetime-cdp)")
     })?;
 
+    let sampler = match o.get("sampler", "exhaustive").as_str() {
+        "exhaustive" => carbon3d::campaign::SamplerMode::Exhaustive,
+        "adaptive" => carbon3d::campaign::SamplerMode::Adaptive {
+            batch: o.usize("sampler-batch", 16)?,
+        },
+        other => bail!("unknown sampler {other:?} (exhaustive|adaptive)"),
+    };
+
     let mut spec = CampaignSpec::new(models, nodes, deltas);
     spec.integrations = integrations;
     spec.fps_floors = fps_floors;
@@ -511,6 +531,7 @@ fn campaign_spec_from_opts(o: &Opts) -> Result<carbon3d::campaign::CampaignSpec>
     spec.objective = objective;
     spec.deployment = deployment_from_opts(o)?;
     spec.prune = !o.has("no-prune");
+    spec.sampler = sampler;
     spec.validate()?;
     Ok(spec)
 }
@@ -726,17 +747,44 @@ fn cmd_trace_metrics(args: &[String]) -> Result<()> {
 
 fn cmd_campaign(o: &Opts) -> Result<()> {
     use carbon3d::campaign::{
-        run_campaign_with, shard_store_path, start_service, Executor, LeaseDir, ResultStore,
-        ShardId, ShardedExecutor, ThreadPoolExecutor,
+        explain_prune, run_campaign_with, shard_store_path, start_service, AdaptiveExecutor,
+        Executor, LeaseDir, ResultStore, SamplerMode, ShardId, ShardedExecutor,
+        ThreadPoolExecutor,
     };
 
     let spec = campaign_spec_from_opts(o)?;
+
+    // `--explain-prune <store>`: read-only prune diagnosis — rebuild the
+    // analytic bounds and the end-of-run surrogate state for this grid and
+    // print, per job, which rule fires (or why the job stands). No rows
+    // are written and no GA runs.
+    if let Some(store_arg) = o.flags.get("explain-prune") {
+        let store = ResultStore::open(Path::new(store_arg))?;
+        let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
+        println!(
+            "explain-prune: {} ({} rows, {backend} accuracy backend)",
+            store_arg,
+            store.len()
+        );
+        let explained = explain_prune(&spec, &store, &svc);
+        svc.shutdown();
+        print!("{}", explained?);
+        return Ok(());
+    }
+
     let out = o.get("out", "results/campaign.jsonl");
     let canonical = Path::new(&out);
     let shard = match o.flags.get("shard") {
         Some(s) => Some(ShardId::parse(s)?),
         None => None,
     };
+    if shard.is_some() && spec.sampler != SamplerMode::Exhaustive {
+        bail!(
+            "--shard cannot combine with --sampler adaptive: the adaptive planner's \
+             batch replay needs the whole grid in one process (run it unsharded, or \
+             drop --sampler for lease-coordinated shards)"
+        );
+    }
     let store_path = match shard {
         Some(s) => shard_store_path(canonical, s),
         None => canonical.to_path_buf(),
@@ -768,7 +816,14 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
             )?;
             Box::new(ShardedExecutor { shard: s, leases })
         }
-        None => Box::new(ThreadPoolExecutor::new(o.usize("workers", 4)?)),
+        None => match spec.sampler {
+            SamplerMode::Exhaustive => {
+                Box::new(ThreadPoolExecutor::new(o.usize("workers", 4)?))
+            }
+            SamplerMode::Adaptive { batch } => {
+                Box::new(AdaptiveExecutor::new(o.usize("workers", 4)?, batch))
+            }
+        },
     };
     let (svc, backend) = start_service(Path::new(&o.get("artifacts", "artifacts")))?;
     println!(
@@ -818,6 +873,12 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
     };
 
     let spec = campaign_spec_from_opts(o)?;
+    if spec.sampler != carbon3d::campaign::SamplerMode::Exhaustive {
+        bail!(
+            "campaign merge only folds exhaustive shard stores — adaptive campaigns \
+             run in one process and need no merge (drop --sampler adaptive)"
+        );
+    }
     let shards = o.usize("shards", 0)?;
     if shards == 0 {
         bail!("campaign merge requires --shards N (the count the shards ran with)");

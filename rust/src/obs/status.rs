@@ -30,9 +30,10 @@ use super::sink::{hit_rate, Heartbeat};
 pub const STATUS_SCHEMA: &str = "carbon3d-status/1";
 
 /// The campaign phases broken out as time shares in the status document
-/// and `CampaignReport::line()` — the four layers a job's wall clock
-/// divides into.
-pub const PHASES: [&str; 4] = ["ga.run", "mapper.search", "service.eval", "commit.row"];
+/// and `CampaignReport::line()` — the layers a job's wall clock divides
+/// into, plus the adaptive planner's surrogate refits.
+pub const PHASES: [&str; 5] =
+    ["ga.run", "mapper.search", "service.eval", "commit.row", "surrogate.fit"];
 
 static FORCE_OFF: AtomicBool = AtomicBool::new(false);
 

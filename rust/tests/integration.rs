@@ -161,6 +161,70 @@ fn campaign_runs_a_grid_through_the_public_api() {
 }
 
 #[test]
+fn adaptive_campaign_runs_through_the_public_api() {
+    use carbon3d::campaign::{
+        run_campaign, CampaignArchive, CampaignSpec, ResultStore, SamplerMode,
+        SurrogateBackend,
+    };
+    use carbon3d::runtime::EvalService;
+
+    let mut spec = CampaignSpec::new(
+        vec!["vgg16".to_string()],
+        vec![TechNode::N7],
+        vec![1.0, 2.0, 3.0, 4.0],
+    );
+    spec.ga = GaParams { population: 8, generations: 4, patience: 2, ..Default::default() };
+    spec.sampler = SamplerMode::Adaptive { batch: 2 };
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("carbon3d-it-adaptive-{}.jsonl", std::process::id()));
+    let pb = dir.join(format!("carbon3d-it-adaptive-b-{}.jsonl", std::process::id()));
+    let cleanup = |p: &std::path::Path| {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(CampaignArchive::checkpoint_path(p));
+        let _ = std::fs::remove_file(carbon3d::obs::status::status_path(p));
+        let _ = std::fs::remove_file(carbon3d::campaign::mapcache_path(p));
+    };
+    cleanup(&pa);
+    cleanup(&pb);
+
+    let run = |p: &std::path::Path, workers: usize| {
+        let mut store = ResultStore::open(p).unwrap();
+        let svc = EvalService::start(SurrogateBackend::default());
+        let report = run_campaign(&spec, workers, &mut store, &svc).unwrap();
+        svc.shutdown();
+        (report, std::fs::read_to_string(p).unwrap())
+    };
+    let (report, bytes) = run(&pa, 3);
+    // The adaptive store announces its sampler on the first line; data
+    // rows follow in planner-commit order.
+    let header = bytes.lines().next().unwrap();
+    assert!(header.contains("\"sampler\":\"adaptive\""), "{header}");
+    assert_eq!(bytes.lines().count(), report.jobs_run + 1);
+    assert_eq!(report.jobs_run + report.jobs_pruned, 4);
+    assert!(report.jobs_run > 0);
+    assert!(report.jobs_pruned_surrogate <= report.jobs_pruned);
+    // The planner re-ranked at least once and its activity reaches the
+    // human report line.
+    assert!(report.metrics.counter("sampler_reranks") > 0);
+    if report.jobs_pruned_surrogate > 0 {
+        assert!(report.line().contains("by surrogate"), "{}", report.line());
+    }
+
+    // A second fresh run with a different worker count is byte-identical.
+    let (_, bytes_b) = run(&pb, 1);
+    assert_eq!(bytes, bytes_b, "adaptive campaign depends on worker count");
+
+    // The archive reads over the data rows (the header is not a point).
+    let store = ResultStore::open(&pa).unwrap();
+    let arch = CampaignArchive::from_rows(store.rows()).unwrap();
+    assert_eq!(arch.points.len(), report.jobs_run);
+    assert!(!arch.front.is_empty());
+
+    cleanup(&pa);
+    cleanup(&pb);
+}
+
+#[test]
 fn lifetime_objective_shifts_the_campaign_front() {
     use carbon3d::campaign::{
         run_campaign, CampaignArchive, CampaignObjective, CampaignSpec, CarbonAxis, ResultStore,
