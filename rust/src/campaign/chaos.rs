@@ -1,0 +1,417 @@
+//! Crash-at-every-site **chaos harness** (`carbon3d campaign chaos`).
+//!
+//! Proves the crash-anywhere recovery invariant (DESIGN.md §11) end to
+//! end: for every fault site in [`super::fault::SITES`], run the same
+//! small campaign grid in a child process with
+//! `CARBON3D_FAULTS=<site>:1:crash` armed, let the child abort
+//! mid-operation, resume fault-free, and byte-compare the final store
+//! and its durable sidecars against a fault-free reference run — across
+//! all three executor shapes (thread pool, two lease-coordinated shards
+//! plus merge, adaptive sampler).
+//!
+//! The harness drives the real binary (`std::env::current_exe()`), not
+//! an in-process simulation: the abort kills the whole process exactly
+//! like a power cut would, and recovery goes through the same CLI paths
+//! an operator would run. Compared artifacts are the store itself, the
+//! `.front.json` checkpoint, and the `.mapcache.json` sidecar;
+//! `.status.json` is deliberately excluded — it is pure observability
+//! (pids, timestamps) and carries no recovery state.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::checkpoint::CampaignArchive;
+use super::fault::SITES;
+use super::mapcache::mapcache_path;
+
+/// The stderr marker the fault layer's process-terminating kinds print
+/// before aborting. The harness uses it to tell an injected crash from
+/// a genuine child failure (which must surface as an error, not a
+/// recovery scenario).
+pub const CRASH_MARKER: &str = "fault: injected";
+
+/// Lease TTL (seconds) the sharded steps run with: short, so an orphan
+/// lease left by a crash between claim and done expires within the
+/// harness's [`LEASE_LAPSE_MS`] pause instead of the production default
+/// of 900 s. Safe here because the harness runs shard steps
+/// sequentially — nothing races the short TTL.
+pub const CHAOS_LEASE_TTL_S: u64 = 1;
+
+/// How long the sharded recovery pass waits before resuming, so any
+/// lease the crashed child still held has visibly expired (timestamps
+/// are second-resolution and a lease becomes stealable at age ttl+1).
+pub const LEASE_LAPSE_MS: u64 = 2_500;
+
+/// One executor shape the harness replays the grid under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// Single process, in-process thread pool (the default executor).
+    Threads,
+    /// Two lease-coordinated shard processes, then `campaign merge`.
+    Sharded,
+    /// Single process, `--sampler adaptive`.
+    Adaptive,
+}
+
+impl ChaosMode {
+    /// Every mode, in probe order.
+    pub const ALL: [ChaosMode; 3] =
+        [ChaosMode::Threads, ChaosMode::Sharded, ChaosMode::Adaptive];
+
+    /// CLI name (`--modes threads,sharded,adaptive`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosMode::Threads => "threads",
+            ChaosMode::Sharded => "sharded",
+            ChaosMode::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a CLI mode name, inverse of [`ChaosMode::name`].
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "threads" => Ok(ChaosMode::Threads),
+            "sharded" => Ok(ChaosMode::Sharded),
+            "adaptive" => Ok(ChaosMode::Adaptive),
+            other => bail!("unknown chaos mode {other:?} (threads|sharded|adaptive)"),
+        }
+    }
+
+    /// The child invocations (argv after the binary) that run one full
+    /// campaign of this shape into `store`. `grid` is the passthrough
+    /// grid/GA flag list; every step receives it verbatim so reference,
+    /// fault, and recovery passes all describe the identical campaign.
+    fn steps(self, grid: &[String], store: &Path) -> Vec<Vec<String>> {
+        let store = store.display().to_string();
+        let campaign = |extra: &[&str]| -> Vec<String> {
+            let mut v = vec!["campaign".to_string()];
+            v.extend(grid.iter().cloned());
+            v.extend(["--out".to_string(), store.clone()]);
+            v.extend(extra.iter().map(|s| s.to_string()));
+            v
+        };
+        let ttl = CHAOS_LEASE_TTL_S.to_string();
+        match self {
+            ChaosMode::Threads => vec![campaign(&[])],
+            ChaosMode::Sharded => vec![
+                campaign(&["--shard", "0/2", "--lease-ttl", &ttl]),
+                campaign(&["--shard", "1/2", "--lease-ttl", &ttl]),
+                {
+                    let mut v =
+                        vec!["campaign".to_string(), "merge".to_string(), "--shards".to_string(), "2".to_string()];
+                    v.extend(grid.iter().cloned());
+                    v.extend(["--out".to_string(), store.clone()]);
+                    v
+                },
+            ],
+            ChaosMode::Adaptive => vec![campaign(&["--sampler", "adaptive"])],
+        }
+    }
+}
+
+/// What a single (mode, site) probe established.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SiteOutcome {
+    /// Crash injected, recovery resumed, every artifact byte-identical.
+    Identical,
+    /// The site was never reached under this mode (e.g. lease sites in a
+    /// single-process run): no crash fired and the campaign simply
+    /// completed. Not a failure per se — but a site no mode hits fails
+    /// the coverage check ([`uncovered_sites`]).
+    NotHit,
+    /// Recovery produced different bytes; the message names the
+    /// artifact(s).
+    Diverged(String),
+}
+
+impl SiteOutcome {
+    /// Short human verdict for progress lines and the summary table.
+    pub fn describe(&self) -> String {
+        match self {
+            SiteOutcome::Identical => "crash + resume -> byte-identical".to_string(),
+            SiteOutcome::NotHit => "site not hit under this mode (skipped)".to_string(),
+            SiteOutcome::Diverged(d) => format!("DIVERGED: {d}"),
+        }
+    }
+}
+
+/// Per-(mode, site) verdict.
+#[derive(Debug)]
+pub struct SiteReport {
+    /// Mode name ([`ChaosMode::name`]).
+    pub mode: &'static str,
+    /// Fault site probed (one of [`SITES`]).
+    pub site: &'static str,
+    /// What happened.
+    pub outcome: SiteOutcome,
+}
+
+/// The chaos harness: a binary to re-invoke, the grid flags every child
+/// receives, and a scratch directory (one subdirectory per probe, kept
+/// for post-mortem inspection).
+pub struct ChaosHarness {
+    /// Binary to drive (normally `std::env::current_exe()`).
+    pub exe: PathBuf,
+    /// Passthrough grid/GA flags (`--models …`, `--quick`, …).
+    pub grid: Vec<String>,
+    /// Working directory for reference and probe campaign stores.
+    pub dir: PathBuf,
+}
+
+impl ChaosHarness {
+    /// Run the probes for `modes` and return every per-site verdict.
+    /// Errors are harness malfunctions (a child failed for a reason
+    /// other than the injected crash); recovery divergence is reported
+    /// in the verdicts, not as an `Err`.
+    pub fn run(&self, modes: &[ChaosMode]) -> Result<Vec<SiteReport>> {
+        let mut reports = Vec::new();
+        for &mode in modes {
+            reports.extend(self.run_mode(mode)?);
+        }
+        Ok(reports)
+    }
+
+    fn run_mode(&self, mode: ChaosMode) -> Result<Vec<SiteReport>> {
+        let ref_dir = self.dir.join(format!("{}-reference", mode.name()));
+        std::fs::create_dir_all(&ref_dir)
+            .with_context(|| format!("creating {}", ref_dir.display()))?;
+        let ref_store = ref_dir.join("campaign.jsonl");
+        println!("chaos[{}]: fault-free reference run", mode.name());
+        for step in mode.steps(&self.grid, &ref_store) {
+            let crashed = self.child(&step, None)?;
+            ensure!(!crashed, "reference run aborted with no fault armed");
+        }
+        let mut reports = Vec::new();
+        for &site in SITES {
+            let outcome = self.probe(mode, site, &ref_store)?;
+            println!("chaos[{}] {site}: {}", mode.name(), outcome.describe());
+            reports.push(SiteReport { mode: mode.name(), site, outcome });
+        }
+        Ok(reports)
+    }
+
+    /// One probe: crash the campaign at the first hit of `site`, resume
+    /// fault-free, compare against the reference.
+    fn probe(&self, mode: ChaosMode, site: &str, ref_store: &Path) -> Result<SiteOutcome> {
+        let dir = self.dir.join(format!("{}-{}", mode.name(), site.replace('.', "-")));
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        let store = dir.join("campaign.jsonl");
+        let steps = mode.steps(&self.grid, &store);
+        let plan = format!("{site}:1:crash");
+
+        // Fault pass: run the steps with the plan armed until one aborts.
+        // Multi-step modes keep the plan armed on every step (each child
+        // process counts its own hits), so the crash lands in whichever
+        // step reaches the site first.
+        let mut crashed_at = None;
+        for (i, step) in steps.iter().enumerate() {
+            if self.child(step, Some(&plan))? {
+                crashed_at = Some(i);
+                break;
+            }
+        }
+        let Some(first) = crashed_at else {
+            return Ok(SiteOutcome::NotHit);
+        };
+
+        if mode == ChaosMode::Sharded {
+            // Let any lease the dead child still held expire, so the
+            // recovery shards can reclaim or steal its jobs.
+            std::thread::sleep(std::time::Duration::from_millis(LEASE_LAPSE_MS));
+        }
+        // Recovery pass, fault-free, from the step that died. Steps that
+        // completed before it are not re-run; the crashed step resumes
+        // its partial store, and later steps never ran at all (they
+        // tolerate the redundant --resume on their empty stores).
+        for step in &steps[first..] {
+            let mut step = step.clone();
+            step.push("--resume".to_string());
+            let crashed = self.child(&step, None)?;
+            ensure!(!crashed, "recovery step aborted with no fault armed");
+        }
+        compare_artifacts(ref_store, &store)
+    }
+
+    /// Run one child invocation to completion. `Ok(true)` means the
+    /// fault plan fired a crash (non-success exit plus [`CRASH_MARKER`]
+    /// on stderr); `Ok(false)` is a clean exit; anything else — a child
+    /// failing on its own — is a harness error.
+    fn child(&self, args: &[String], fault: Option<&str>) -> Result<bool> {
+        let mut cmd = Command::new(&self.exe);
+        cmd.args(args);
+        // The harness's own environment must not leak into the children:
+        // reference and recovery runs stay fault-free even if the
+        // operator has CARBON3D_FAULTS exported, and tracing would only
+        // slow the probes down.
+        cmd.env_remove("CARBON3D_FAULTS");
+        cmd.env_remove("CARBON3D_TRACE");
+        if let Some(plan) = fault {
+            cmd.env("CARBON3D_FAULTS", plan);
+        }
+        let out = cmd
+            .output()
+            .with_context(|| format!("spawning {} {}", self.exe.display(), args.join(" ")))?;
+        if out.status.success() {
+            return Ok(false);
+        }
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        if fault.is_some() && stderr.contains(CRASH_MARKER) {
+            return Ok(true);
+        }
+        bail!(
+            "chaos child `{}` failed ({}) without an injected crash:\n{}",
+            args.join(" "),
+            out.status,
+            stderr.trim_end()
+        );
+    }
+}
+
+/// Byte-compare the recovered campaign's durable artifacts against the
+/// fault-free reference: the store itself, the `.front.json`
+/// checkpoint, and the `.mapcache.json` sidecar. Missing on both sides
+/// is equal (sidecar disabled); missing on one side is a divergence.
+fn compare_artifacts(reference: &Path, recovered: &Path) -> Result<SiteOutcome> {
+    let pairs = [
+        ("store", reference.to_path_buf(), recovered.to_path_buf()),
+        (
+            "front checkpoint",
+            CampaignArchive::checkpoint_path(reference),
+            CampaignArchive::checkpoint_path(recovered),
+        ),
+        ("mapcache sidecar", mapcache_path(reference), mapcache_path(recovered)),
+    ];
+    let mut diverged = Vec::new();
+    for (what, a, b) in &pairs {
+        match (std::fs::read(a).ok(), std::fs::read(b).ok()) {
+            (None, None) => {}
+            (Some(x), Some(y)) if x == y => {}
+            (Some(_), None) => diverged.push(format!("{what} missing after recovery")),
+            (None, Some(_)) => diverged.push(format!("{what} missing in the reference")),
+            (Some(x), Some(y)) => {
+                diverged.push(format!("{what}: {} vs {} bytes differ", x.len(), y.len()));
+            }
+        }
+    }
+    if diverged.is_empty() {
+        Ok(SiteOutcome::Identical)
+    } else {
+        Ok(SiteOutcome::Diverged(diverged.join("; ")))
+    }
+}
+
+/// The probes whose recovery diverged — the harness's failure set.
+pub fn failures(reports: &[SiteReport]) -> Vec<&SiteReport> {
+    reports.iter().filter(|r| matches!(r.outcome, SiteOutcome::Diverged(_))).collect()
+}
+
+/// Sites that fired in no probed mode. When all three modes were probed
+/// this means a [`SITES`] entry went dead — the registry is stale or a
+/// call site lost its fault hook — which the harness treats as a
+/// failure (a dead site would silently stop being chaos-tested).
+pub fn uncovered_sites(reports: &[SiteReport]) -> Vec<&'static str> {
+    SITES
+        .iter()
+        .copied()
+        .filter(|s| {
+            let probes: Vec<_> = reports.iter().filter(|r| r.site == *s).collect();
+            !probes.is_empty() && probes.iter().all(|r| r.outcome == SiteOutcome::NotHit)
+        })
+        .collect()
+}
+
+/// One-line-per-probe summary table, modes grouped in probe order.
+pub fn render_reports(reports: &[SiteReport]) -> String {
+    let site_w = SITES.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for r in reports {
+        out.push_str(&format!(
+            "{:<10} {:<site_w$}  {}\n",
+            r.mode,
+            r.site,
+            r.outcome.describe()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("carbon3d-chaos-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in ChaosMode::ALL {
+            assert_eq!(ChaosMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert!(ChaosMode::parse("exhaustive").is_err());
+    }
+
+    #[test]
+    fn steps_share_the_grid_and_the_store() {
+        let grid = vec!["--models".to_string(), "vgg16".to_string(), "--quick".to_string()];
+        let store = Path::new("/tmp/x/campaign.jsonl");
+        for mode in ChaosMode::ALL {
+            let steps = mode.steps(&grid, store);
+            let expect = if mode == ChaosMode::Sharded { 3 } else { 1 };
+            assert_eq!(steps.len(), expect, "{}", mode.name());
+            for step in &steps {
+                assert_eq!(step[0], "campaign");
+                assert!(step.contains(&"--models".to_string()), "{step:?}");
+                assert!(step.contains(&"/tmp/x/campaign.jsonl".to_string()), "{step:?}");
+            }
+        }
+        let merge = &ChaosMode::Sharded.steps(&grid, store)[2];
+        assert_eq!(merge[1], "merge");
+        let adaptive = &ChaosMode::Adaptive.steps(&grid, store)[0];
+        assert!(adaptive.contains(&"--sampler".to_string()));
+    }
+
+    #[test]
+    fn compare_flags_each_divergent_artifact() {
+        let d = tmp("cmp");
+        let a = d.join("a.jsonl");
+        let b = d.join("b.jsonl");
+        std::fs::write(&a, "row\n").unwrap();
+        std::fs::write(&b, "row\n").unwrap();
+        // Stores equal, no sidecars on either side: identical.
+        assert_eq!(compare_artifacts(&a, &b).unwrap(), SiteOutcome::Identical);
+        // A sidecar present on one side only is a divergence.
+        std::fs::write(CampaignArchive::checkpoint_path(&a), "{}").unwrap();
+        let SiteOutcome::Diverged(msg) = compare_artifacts(&a, &b).unwrap() else {
+            panic!("one-sided sidecar must diverge");
+        };
+        assert!(msg.contains("front checkpoint"), "{msg}");
+        // Different store bytes name the store.
+        std::fs::write(CampaignArchive::checkpoint_path(&b), "{}").unwrap();
+        std::fs::write(&b, "row2\n").unwrap();
+        let SiteOutcome::Diverged(msg) = compare_artifacts(&a, &b).unwrap() else {
+            panic!("different stores must diverge");
+        };
+        assert!(msg.contains("store"), "{msg}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn coverage_check_only_flags_sites_every_mode_skipped() {
+        let reports = vec![
+            SiteReport { mode: "threads", site: "lease.claim", outcome: SiteOutcome::NotHit },
+            SiteReport { mode: "sharded", site: "lease.claim", outcome: SiteOutcome::Identical },
+            SiteReport { mode: "threads", site: "surrogate.fit", outcome: SiteOutcome::NotHit },
+            SiteReport { mode: "sharded", site: "surrogate.fit", outcome: SiteOutcome::NotHit },
+        ];
+        assert_eq!(uncovered_sites(&reports), vec!["surrogate.fit"]);
+        // Sites with no probes at all (mode subset runs) are not flagged.
+        assert!(uncovered_sites(&[]).is_empty());
+        assert!(failures(&reports).is_empty());
+    }
+}

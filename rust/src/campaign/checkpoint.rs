@@ -109,11 +109,16 @@ impl CampaignArchive {
             front.push(i);
             prev = Some(i);
         }
-        if ck_axis != axis || n != rows.len() {
+        // `n_points` counts archive points, which exclude quarantined
+        // failed rows — filter the same way here so the index spaces and
+        // the staleness check agree with the incremental writer.
+        let live: Vec<&Json> =
+            rows.iter().filter(|r| !crate::campaign::store::row_is_failed(r)).collect();
+        if ck_axis != axis || n != live.len() {
             return Ok(None); // stale, not damaged: rebuild from the rows
         }
-        let points: Vec<ArchivePoint> = rows
-            .iter()
+        let points: Vec<ArchivePoint> = live
+            .into_iter()
             .map(ArchivePoint::from_row)
             .collect::<Result<_>>()
             .context("store rows no longer parse")?;
@@ -164,6 +169,31 @@ mod tests {
         let rebuilt2 =
             CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
         assert_eq!(rebuilt2.front, arch.front);
+    }
+
+    #[test]
+    fn failed_rows_do_not_desync_the_checkpoint() {
+        // A quarantined failed row sits in the store but contributes no
+        // archive point; a checkpoint written after it must restore (not
+        // be treated as stale) and reproduce the same front.
+        let mut rows = vec![
+            row("a", "m", "14nm", 10.0, 1.0, 1.0),
+            row("b", "m", "14nm", 8.0, 2.0, 1.0),
+        ];
+        rows.push(crate::util::json::obj([
+            ("key", Json::from("poison")),
+            ("failed", Json::from(true)),
+            ("error", Json::from("injected panic")),
+        ]));
+        let arch = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+        assert_eq!(arch.points.len(), 2);
+        let path = tmp("failed-rows");
+        arch.save_checkpoint(&path).unwrap();
+        let restored =
+            CampaignArchive::load_or_rebuild(&rows, CarbonAxis::Embodied, &path).unwrap();
+        assert_eq!(restored.front, arch.front);
+        assert_eq!(restored.points.len(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

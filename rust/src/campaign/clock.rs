@@ -1,0 +1,90 @@
+//! Injectable time source for lease TTLs and heartbeat cadence.
+//!
+//! Production code uses [`Clock::System`]; tests inject a
+//! [`FakeClock`] and advance it explicitly, so TTL-expiry and
+//! reclaim behavior is exercised deterministically without `sleep`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A monotonic-enough wall clock with millisecond resolution.
+#[derive(Debug, Clone, Default)]
+pub enum Clock {
+    /// `SystemTime::now()` relative to the Unix epoch.
+    #[default]
+    System,
+    /// A test clock that only moves when told to.
+    Fake(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// Milliseconds since the Unix epoch (or since the fake clock's
+    /// origin).
+    pub fn now_ms(&self) -> u64 {
+        match self {
+            Clock::System => std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0),
+            Clock::Fake(ms) => ms.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Whole seconds since the epoch — the resolution lease documents
+    /// record.
+    pub fn now_s(&self) -> u64 {
+        self.now_ms() / 1000
+    }
+}
+
+/// Handle that owns a [`Clock::Fake`]'s time and can advance it.
+#[derive(Debug, Clone)]
+pub struct FakeClock(Arc<AtomicU64>);
+
+impl FakeClock {
+    /// A fake clock starting at `start_s` seconds.
+    pub fn new(start_s: u64) -> Self {
+        Self(Arc::new(AtomicU64::new(start_s * 1000)))
+    }
+
+    /// A [`Clock`] reading this handle's time.
+    pub fn clock(&self) -> Clock {
+        Clock::Fake(Arc::clone(&self.0))
+    }
+
+    /// Move time forward by `s` seconds.
+    pub fn advance_s(&self, s: u64) {
+        self.0.fetch_add(s * 1000, Ordering::SeqCst);
+    }
+
+    /// Move time forward by `ms` milliseconds.
+    pub fn advance_ms(&self, ms: u64) {
+        self.0.fetch_add(ms, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_clock_only_moves_when_advanced() {
+        let fake = FakeClock::new(1_000);
+        let clock = fake.clock();
+        assert_eq!(clock.now_s(), 1_000);
+        assert_eq!(clock.now_s(), 1_000);
+        fake.advance_s(30);
+        assert_eq!(clock.now_s(), 1_030);
+        fake.advance_ms(999);
+        assert_eq!(clock.now_s(), 1_030, "sub-second advance rounds down");
+        fake.advance_ms(1);
+        assert_eq!(clock.now_s(), 1_031);
+    }
+
+    #[test]
+    fn system_clock_is_sane() {
+        let clock = Clock::default();
+        // 2020-01-01 is comfortably in the past.
+        assert!(clock.now_s() > 1_577_836_800);
+    }
+}

@@ -18,10 +18,12 @@ use anyhow::{bail, ensure, Result};
 use crate::util::Json;
 
 use super::checkpoint::write_atomic;
+use super::clock::Clock;
+use super::fault;
 use super::pareto::{CampaignArchive, CarbonAxis};
 use super::source::{prune_reason, JobBound, JobSource};
 use super::spec::JobSpec;
-use super::store::ResultStore;
+use super::store::{row_is_failed, ResultStore};
 
 /// Which prune rules apply — the ONE predicate shared by every executor's
 /// dispatch-side early-out and the pipeline's authoritative commit-slot
@@ -94,6 +96,14 @@ pub struct FrontCell {
     inner: Mutex<FrontState>,
 }
 
+/// Lock a front mutex, tolerating poison: the lock only guards
+/// in-memory archive/incumbent state that is rebuilt from the store on
+/// resume, so a panicking peer (now quarantined, never fatal) must not
+/// cascade into every later commit.
+fn front_lock(m: &Mutex<FrontState>) -> std::sync::MutexGuard<'_, FrontState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl FrontCell {
     /// Restore the archive from its sidecar checkpoint (or rebuild from
     /// the rows) and seed the per-family incumbents from the rows already
@@ -113,12 +123,12 @@ impl FrontCell {
     /// incumbents only ever improve as rows commit, so a prune visible at
     /// dispatch still holds when the writer re-checks at commit time.
     pub fn incumbent(&self, family: &str) -> Option<f64> {
-        self.inner.lock().unwrap().incumbents.get(family).copied()
+        front_lock(&self.inner).incumbents.get(family).copied()
     }
 
     /// Current committed Pareto-front size (for the status snapshot).
     pub fn front_size(&self) -> usize {
-        self.inner.lock().unwrap().archive.front.len()
+        front_lock(&self.inner).archive.front.len()
     }
 }
 
@@ -175,6 +185,9 @@ pub struct CommitTotals {
     pub jobs_pruned_surrogate: usize,
     /// Jobs deferred to other shards (always 0 for single-process runs).
     pub jobs_deferred: usize,
+    /// Jobs whose evaluation panicked and were quarantined as failed
+    /// rows (never enter the archive; retryable via `--retry-failed`).
+    pub jobs_failed: usize,
 }
 
 /// The single-writer commit pipeline. `offer` accepts outcomes in any
@@ -189,8 +202,9 @@ pub struct CommitPipeline<'a> {
     cursor: usize,
     totals: CommitTotals,
     t0: Instant,
-    last_heartbeat: Instant,
-    heartbeat_every: Duration,
+    clock: Clock,
+    last_heartbeat_ms: u64,
+    heartbeat_every_ms: u64,
     status: Option<crate::obs::StatusWriter>,
     mapcache: Option<super::mapcache::MapCachePersist>,
 }
@@ -207,6 +221,18 @@ fn heartbeat_interval() -> Duration {
         .unwrap_or(Duration::from_secs(5))
 }
 
+/// Whether the heartbeat cadence elapsed on `clock`; advances `last_ms`
+/// to now when due. Clock-injected so cadence behavior is testable with
+/// a fake clock instead of sleeps.
+fn cadence_due(clock: &Clock, last_ms: &mut u64, every_ms: u64) -> bool {
+    let now = clock.now_ms();
+    if now.saturating_sub(*last_ms) < every_ms {
+        return false;
+    }
+    *last_ms = now;
+    true
+}
+
 impl<'a> CommitPipeline<'a> {
     pub fn new(
         store: &'a mut ResultStore,
@@ -215,7 +241,8 @@ impl<'a> CommitPipeline<'a> {
         mode: PruneMode,
     ) -> Self {
         let ckpt_path = CampaignArchive::checkpoint_path(store.path());
-        let now = Instant::now();
+        let clock = Clock::default();
+        let now_ms = clock.now_ms();
         Self {
             store,
             front,
@@ -229,13 +256,23 @@ impl<'a> CommitPipeline<'a> {
                 jobs_pruned: 0,
                 jobs_pruned_surrogate: 0,
                 jobs_deferred: 0,
+                jobs_failed: 0,
             },
-            t0: now,
-            last_heartbeat: now,
-            heartbeat_every: heartbeat_interval(),
+            t0: Instant::now(),
+            clock,
+            last_heartbeat_ms: now_ms,
+            heartbeat_every_ms: heartbeat_interval().as_millis() as u64,
             status: None,
             mapcache: None,
         }
+    }
+
+    /// Swap the heartbeat-cadence clock (tests inject a
+    /// [`crate::campaign::clock::FakeClock`] so cadence behavior is
+    /// deterministic without sleeping).
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.last_heartbeat_ms = clock.now_ms();
+        self.clock = clock;
     }
 
     /// Attach the live status-snapshot writer (built by the executor
@@ -306,10 +343,9 @@ impl<'a> CommitPipeline<'a> {
         if !traced && self.status.is_none() {
             return;
         }
-        if self.last_heartbeat.elapsed() < self.heartbeat_every {
+        if !cadence_due(&self.clock, &mut self.last_heartbeat_ms, self.heartbeat_every_ms) {
             return;
         }
-        self.last_heartbeat = Instant::now();
         let h = self.progress();
         if traced {
             crate::obs::heartbeat(&h);
@@ -331,7 +367,7 @@ impl<'a> CommitPipeline<'a> {
             return Ok(());
         }
         let prune = {
-            let st = self.front.inner.lock().unwrap();
+            let st = front_lock(&self.front.inner);
             self.mode.fires(job, self.source.bound(job.id), || {
                 st.incumbents.get(&job.family()).copied()
             })
@@ -356,14 +392,27 @@ impl<'a> CommitPipeline<'a> {
     /// path ([`Self::offer_decided`]).
     fn commit_row(&mut self, row: Json) -> Result<()> {
         let _span = crate::obs::span("commit.row");
+        fault::point("commit.row")?;
+        let failed = row_is_failed(&row);
         let ckpt = {
-            let mut st = self.front.inner.lock().unwrap();
-            update_incumbent(&mut st.incumbents, &row);
+            let mut st = front_lock(&self.front.inner);
+            // A quarantined-failure row occupies its store slot but never
+            // becomes an incumbent; the archive skips it internally while
+            // keeping row indices aligned.
+            if !failed {
+                update_incumbent(&mut st.incumbents, &row);
+            }
             st.archive.insert_row(&row)?;
             st.archive.checkpoint()
         };
         self.store.append(row)?;
-        write_atomic(&self.ckpt_path, &ckpt.dumps())?;
+        // The front checkpoint is atomic (temp + rename), so a retry
+        // after a transient write failure is safe; a crash here leaves a
+        // stale sidecar that the resume detects and rebuilds.
+        fault::retry_io("checkpoint.write", || -> Result<()> {
+            fault::point("checkpoint.write")?;
+            write_atomic(&self.ckpt_path, &ckpt.dumps())
+        })?;
         // The archive checkpoint is the durability boundary; keep the
         // trace sidecar, status snapshot, and mapcache sidecar no staler
         // than it.
@@ -371,7 +420,11 @@ impl<'a> CommitPipeline<'a> {
         if let Some(mc) = &mut self.mapcache {
             mc.persist_if_grown();
         }
-        self.totals.jobs_run += 1;
+        if failed {
+            self.totals.jobs_failed += 1;
+        } else {
+            self.totals.jobs_run += 1;
+        }
         if let Some(status) = &self.status {
             let _ = status.write(
                 "running",

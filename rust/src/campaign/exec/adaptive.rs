@@ -34,7 +34,7 @@ use super::super::commit::{CommitPipeline, JobOutcome, PruneMode};
 use super::super::source::{JobCtx, JobSource};
 use super::super::spec::{splitmix64, JobSpec, SamplerMode};
 use super::super::surrogate::{prune_rule, CostSurrogate, PruneRule};
-use super::{job_context, run_job, Executor};
+use super::{job_context, run_job_quarantined, Executor};
 
 /// The adaptive sampler. `batch` is the spec-fixed planning granularity
 /// (recorded in the store header); `workers` only bounds evaluation
@@ -112,6 +112,7 @@ impl Executor for AdaptiveExecutor {
             // undecided by expected improvement over the virtual front:
             // score = incumbent − tightened_lb (∞ for families with no
             // incumbent yet, so unexplored families are probed first).
+            super::super::fault::point("surrogate.fit")?;
             surrogate.fit();
             let mut scored: Vec<(usize, f64, f64)> = remaining
                 .iter()
@@ -199,7 +200,11 @@ impl Executor for AdaptiveExecutor {
                                 break;
                             }
                             let gi = to_run[i];
-                            let out = run_job(&grid[gi], ctx, &client)
+                            // Quarantined: a panicking evaluation becomes
+                            // a `failed` row the planner commits in plan
+                            // order like any other (no virtual update —
+                            // failed rows carry no obj_value).
+                            let out = run_job_quarantined(&grid[gi], ctx, &client)
                                 .with_context(|| job_context(&grid[gi]))
                                 .map(|row| (gi, row));
                             if tx.send(out).is_err() {
@@ -238,7 +243,9 @@ impl Executor for AdaptiveExecutor {
                                 surrogate.observe(job, v);
                             }
                         } else {
-                            let row = rows.remove(&gi).expect("batch survivor was evaluated");
+                            let row = rows.remove(&gi).with_context(|| {
+                                format!("batch survivor {key} was never evaluated")
+                            })?;
                             let v = row.get("obj_value").ok().and_then(|x| x.as_f64().ok());
                             pipeline.offer_decided(job, JobOutcome::Row(row))?;
                             if let Some(v) = v {

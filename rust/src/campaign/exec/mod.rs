@@ -151,6 +151,10 @@ pub struct CampaignReport {
     pub jobs_total: usize,
     /// Jobs that ran and committed a row.
     pub jobs_run: usize,
+    /// Jobs whose evaluation panicked and was quarantined as a `failed`
+    /// row (DESIGN.md §11). Deterministic — a pure function of the
+    /// committed rows — so it lives in `deterministic_json` too.
+    pub jobs_failed: usize,
     /// Jobs skipped because the store already had their row (resume).
     pub jobs_skipped: usize,
     /// Jobs skipped because their optimistic bound provably cannot beat
@@ -192,6 +196,13 @@ impl CampaignReport {
         } else {
             String::new()
         };
+        // Quarantined jobs are loud in the summary line: a failed row is
+        // replayable (`--retry-failed`) but never silent.
+        let failed = if self.jobs_failed > 0 {
+            format!(", {} failed", self.jobs_failed)
+        } else {
+            String::new()
+        };
         // Surrogate attribution inside the prune share: how many of the
         // pruned jobs the learned bound (not an analytic rule) removed.
         let surrogate = if self.jobs_pruned_surrogate > 0 {
@@ -216,7 +227,7 @@ impl CampaignReport {
             String::new()
         };
         format!(
-            "{} jobs ({} run, {} resumed, pruned {}/{} ({:.0}%){surrogate}{deferred}) \
+            "{} jobs ({} run, {} resumed{failed}, pruned {}/{} ({:.0}%){surrogate}{deferred}) \
              in {:.2}s = {:.2} jobs/s | \
              eval service: {} served, {} evaluated, {} cache hits, {} coalesced \
              ({:.0}% hit rate) | mapping cache: {}/{} hits ({:.0}%{persisted}) | \
@@ -285,6 +296,7 @@ impl CampaignReport {
         obj([
             ("jobs_total", Json::from(self.jobs_total)),
             ("jobs_run", Json::from(self.jobs_run)),
+            ("jobs_failed", Json::from(self.jobs_failed)),
             ("jobs_skipped", Json::from(self.jobs_skipped)),
             ("jobs_pruned", Json::from(self.jobs_pruned)),
             ("jobs_deferred", Json::from(self.jobs_deferred)),
@@ -373,6 +385,7 @@ pub fn run_campaign_with(
     Ok(CampaignReport {
         jobs_total: source.jobs_total(),
         jobs_run: totals.jobs_run,
+        jobs_failed: totals.jobs_failed,
         jobs_skipped: source.jobs_skipped(),
         jobs_pruned: totals.jobs_pruned,
         jobs_pruned_surrogate: totals.jobs_pruned_surrogate,
@@ -468,6 +481,7 @@ pub(crate) fn run_job(job: &JobSpec, ctx: &JobCtx, client: &EvalClient) -> Resul
     // mapper.search, ...) on this thread to the job key.
     let _job_scope = crate::obs::job_scope(&job.key());
     let _span = crate::obs::span("job.eval");
+    super::fault::point("job.eval")?;
     let w = ctx.workload(&job.model)?;
 
     // Calibrated K through the campaign-global service, memoized once per
@@ -542,6 +556,53 @@ pub(crate) fn job_context(job: &JobSpec) -> String {
     format!("job {}", job.key())
 }
 
+/// The quarantine row for a job whose evaluation panicked: the job's
+/// identity (key, scenario axes, seed — enough for `campaign merge` to
+/// verify provenance and for `--retry-failed` to replay it) plus the
+/// panic message, flagged `"failed": true` so every archive build path
+/// skips it (DESIGN.md §11).
+pub(crate) fn failed_row(job: &JobSpec, error: &str) -> Json {
+    obj([
+        ("key", Json::from(job.key())),
+        ("model", Json::from(job.model.clone())),
+        ("node", Json::from(job.node.name())),
+        ("integration", Json::from(integration_name(job.integration))),
+        ("delta_pct", Json::from(job.delta_pct)),
+        ("objective", Json::from(job.objective.name())),
+        ("seed", Json::from(format!("{:#018x}", job.seed))),
+        (super::store::FAILED_FIELD, Json::from(true)),
+        ("error", Json::from(error)),
+    ])
+}
+
+/// [`run_job`] with panic quarantine: a panicking evaluation is caught,
+/// reported loudly (`job.quarantined`), and converted into a
+/// [`failed_row`] instead of unwinding into the executor — one poison
+/// job must never kill a campaign or strand its shard peers. Genuine
+/// `Err` results still propagate; they describe infrastructure
+/// problems, not job-local poison.
+pub(crate) fn run_job_quarantined(
+    job: &JobSpec,
+    ctx: &JobCtx,
+    client: &EvalClient,
+) -> Result<Json> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(job, ctx, client))) {
+        Ok(result) => result,
+        Err(payload) => {
+            let msg = super::fault::panic_message(payload.as_ref());
+            crate::obs::warn_event(
+                "job.quarantined",
+                &format!("job {}: evaluation panicked — quarantined: {msg}", job.key()),
+                &[
+                    ("job", Json::from(job.key())),
+                    ("error", Json::from(msg.as_str())),
+                ],
+            );
+            Ok(failed_row(job, &msg))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -577,6 +638,7 @@ mod tests {
         let r = CampaignReport {
             jobs_total: 10,
             jobs_run: 8,
+            jobs_failed: 0,
             jobs_skipped: 1,
             jobs_pruned: 1,
             jobs_pruned_surrogate: 0,
@@ -637,6 +699,7 @@ mod tests {
         let r = CampaignReport {
             jobs_total: 1,
             jobs_run: 1,
+            jobs_failed: 0,
             jobs_skipped: 0,
             jobs_pruned: 0,
             jobs_pruned_surrogate: 0,
@@ -657,6 +720,7 @@ mod tests {
         let r = CampaignReport {
             jobs_total: 4,
             jobs_run: 3,
+            jobs_failed: 0,
             jobs_skipped: 0,
             jobs_pruned: 1,
             jobs_pruned_surrogate: 1,

@@ -38,7 +38,7 @@ use super::super::commit::{CommitPipeline, JobOutcome, PruneMode};
 use super::super::lease::{Claim, LeaseDir};
 use super::super::source::{shard_owner, JobCtx, JobSource};
 use super::super::store::{ResultStore, KEY_FIELD};
-use super::{job_context, run_job, Executor};
+use super::{job_context, run_job_quarantined, Executor};
 
 /// Which shard of how many this process is.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -130,7 +130,12 @@ impl Executor for ShardedExecutor {
             };
             match claim {
                 Claim::Acquired => {
-                    let row = run_job(job, ctx, &client).with_context(|| job_context(job))?;
+                    // Quarantined: a poison job becomes a `failed` row in
+                    // this shard's store (and flows through the merge like
+                    // any other row) instead of stranding the lease for
+                    // peers to re-hit.
+                    let row = run_job_quarantined(job, ctx, &client)
+                        .with_context(|| job_context(job))?;
                     pipeline.offer(job.id, JobOutcome::Row(row))?;
                     self.leases.mark_done(&key)?;
                 }

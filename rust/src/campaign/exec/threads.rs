@@ -18,7 +18,7 @@ use crate::runtime::EvalService;
 
 use super::super::commit::{CommitPipeline, JobOutcome};
 use super::super::source::{JobCtx, JobSource};
-use super::{job_context, run_job, Executor};
+use super::{job_context, run_job_quarantined, Executor};
 
 /// The classic worker pool. `workers` is clamped to at least 1 and at most
 /// the number of scheduled jobs.
@@ -73,7 +73,9 @@ impl Executor for ThreadPoolExecutor {
                     let out = if pruned {
                         Ok((job.id, JobOutcome::Pruned))
                     } else {
-                        run_job(job, ctx, &client)
+                        // Quarantined: a panicking evaluation becomes a
+                        // `failed` row instead of unwinding into the pool.
+                        run_job_quarantined(job, ctx, &client)
                             .with_context(|| job_context(job))
                             .map(|row| (job.id, JobOutcome::Row(row)))
                     };

@@ -1,0 +1,483 @@
+//! Deterministic fault injection for the campaign stack (DESIGN.md §11).
+//!
+//! A fault *plan* is a list of rules `site:nth:kind`: on the `nth` time
+//! execution reaches the named site, inject the fault of the given
+//! kind. Sites are the span-site names the observability layer already
+//! established (`commit.row`, `store.append`, `checkpoint.write`, …) —
+//! see [`SITES`]. Plans come from `CARBON3D_FAULTS` or `--fault-plan
+//! file.json` and are armed once at campaign start.
+//!
+//! Kinds:
+//!
+//! - `crash` — `std::process::abort()` at the site (simulates SIGKILL /
+//!   power loss). The process dies mid-operation; recovery is proven by
+//!   resuming and byte-comparing against a fault-free run.
+//! - `torn-write` — at buffer-write sites ([`write_all`]), write a
+//!   prefix of the buffer, flush, then abort: a crash mid-`write(2)`.
+//!   At non-buffer sites this escalates to `crash`.
+//! - `io-error` — return an injected [`std::io::Error`] from the site,
+//!   exercising the caller's retry/error path without killing the
+//!   process. Because the per-site hit counter advances on every pass,
+//!   an `nth`-scoped io-error fires exactly once and the retry then
+//!   succeeds deterministically.
+//! - `delay` — sleep a fixed 25 ms at the site (scheduling jitter).
+//! - `panic` — `panic!` at the site; used to drive the poison-job
+//!   quarantine (`job.eval` site) without touching evaluation code.
+//!
+//! Cost when disarmed: a single relaxed atomic load per site, no
+//! allocation — the same budget as a disabled trace span, preserving
+//! the traced-vs-untraced byte-identity and bench gates.
+//!
+//! Every injected fault emits a `fault.injected` obs event (counted in
+//! the metrics registry even with tracing off) before it takes effect,
+//! so chaos runs are auditable via `trace report` / `trace diff`.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Every instrumented fault site, in the order the chaos harness probes
+/// them. Adding a site here is how it becomes chaos-tested.
+pub const SITES: &[&str] = &[
+    "store.append",
+    "commit.row",
+    "checkpoint.write",
+    "mapcache.save",
+    "status.write",
+    "lease.claim",
+    "lease.done",
+    "surrogate.fit",
+    "job.eval",
+];
+
+/// Fixed, jitterless retry backoff schedule used by [`retry_io`], in
+/// milliseconds. Deterministic by construction: no randomness, no
+/// wall-clock dependence in the decision to retry.
+pub const RETRY_DELAYS_MS: [u64; 3] = [1, 5, 25];
+
+/// What to inject when a rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Abort the process at the site.
+    Crash,
+    /// Write a partial buffer, flush, then abort (buffer sites only).
+    TornWrite,
+    /// Return an injected `io::Error` from the site.
+    IoError,
+    /// Sleep 25 ms at the site.
+    Delay,
+    /// `panic!` at the site (drives the quarantine path).
+    Panic,
+}
+
+impl FaultKind {
+    /// Parse the plan-syntax kind name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "crash" => Self::Crash,
+            "torn-write" => Self::TornWrite,
+            "io-error" => Self::IoError,
+            "delay" => Self::Delay,
+            "panic" => Self::Panic,
+            other => bail!(
+                "unknown fault kind {other:?} (expected crash, torn-write, io-error, delay, panic)"
+            ),
+        })
+    }
+
+    /// The plan-syntax name, inverse of [`FaultKind::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Crash => "crash",
+            Self::TornWrite => "torn-write",
+            Self::IoError => "io-error",
+            Self::Delay => "delay",
+            Self::Panic => "panic",
+        }
+    }
+}
+
+/// One scheduled fault: fire `kind` on the `nth` (1-based) hit of
+/// `site` in this process.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// Site name, one of [`SITES`] for plans that pass validation.
+    pub site: String,
+    /// 1-based hit ordinal at which the fault fires.
+    pub nth: u64,
+    /// What to inject.
+    pub kind: FaultKind,
+}
+
+struct PlanState {
+    rules: Vec<FaultRule>,
+    hits: BTreeMap<String, u64>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<PlanState>> = Mutex::new(None);
+
+fn plan_lock() -> std::sync::MutexGuard<'static, Option<PlanState>> {
+    PLAN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm a fault plan for this process. Replaces any previous plan and
+/// resets all hit counters. Rules are taken as-is (site names are
+/// validated by the plan parsers, not here, so tests can use synthetic
+/// sites).
+pub fn arm(rules: Vec<FaultRule>) {
+    let mut guard = plan_lock();
+    *guard = Some(PlanState { rules, hits: BTreeMap::new() });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Drop the active plan; sites go back to the single-atomic-load fast
+/// path.
+pub fn disarm() {
+    let mut guard = plan_lock();
+    *guard = None;
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Whether a fault plan is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Parse the compact plan syntax `site:nth:kind[,site:nth:kind...]`
+/// (the `CARBON3D_FAULTS` format). Site names are validated against
+/// [`SITES`] so typos fail loudly instead of silently never firing.
+pub fn parse_plan(spec: &str) -> Result<Vec<FaultRule>> {
+    let mut rules = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        let [site, nth, kind] = fields[..] else {
+            bail!("fault rule {part:?}: expected site:nth:kind");
+        };
+        if !SITES.contains(&site) {
+            bail!("fault rule {part:?}: unknown site {site:?} (known: {})", SITES.join(", "));
+        }
+        let nth: u64 = nth.parse().with_context(|| format!("fault rule {part:?}: bad nth"))?;
+        if nth == 0 {
+            bail!("fault rule {part:?}: nth is 1-based");
+        }
+        rules.push(FaultRule { site: site.to_string(), nth, kind: FaultKind::parse(kind)? });
+    }
+    Ok(rules)
+}
+
+/// Parse a `--fault-plan` JSON document: `{"faults": [{"site": ...,
+/// "nth": N, "kind": ...}, ...]}`.
+pub fn plan_from_json(doc: &Json) -> Result<Vec<FaultRule>> {
+    let faults = doc.get("faults").context("fault plan: no \"faults\" key")?.as_arr()?;
+    let mut rules = Vec::new();
+    for (i, f) in faults.iter().enumerate() {
+        let ctx = || format!("fault plan entry {i}");
+        let site = f.get("site").with_context(ctx)?.as_str()?.to_string();
+        if !SITES.contains(&site.as_str()) {
+            bail!("fault plan entry {i}: unknown site {site:?} (known: {})", SITES.join(", "));
+        }
+        let nth = f.get("nth").with_context(ctx)?.as_f64()? as u64;
+        if nth == 0 {
+            bail!("fault plan entry {i}: nth is 1-based");
+        }
+        let kind = FaultKind::parse(f.get("kind").with_context(ctx)?.as_str()?)?;
+        rules.push(FaultRule { site, nth, kind });
+    }
+    Ok(rules)
+}
+
+/// Read a `--fault-plan` file and parse it.
+pub fn load_plan_file(path: &std::path::Path) -> Result<Vec<FaultRule>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading fault plan {}", path.display()))?;
+    plan_from_json(
+        &Json::parse(&text).with_context(|| format!("fault plan {}", path.display()))?,
+    )
+}
+
+/// Arm from the `CARBON3D_FAULTS` environment variable if set. Returns
+/// whether a plan was armed.
+pub fn arm_from_env() -> Result<bool> {
+    match std::env::var("CARBON3D_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            let rules = parse_plan(&spec).context("CARBON3D_FAULTS")?;
+            arm(rules);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Faults a caller must act on (the process-terminating kinds never
+/// return from [`consume`]).
+enum Injected {
+    TornWrite,
+    IoError,
+}
+
+fn fatal(site: &str, hit: u64, kind: &str) -> ! {
+    eprintln!("fault: injected {kind} at {site} (hit {hit}) — aborting");
+    std::process::abort();
+}
+
+/// Slow path: count the hit, fire a matching rule. Crash/delay/panic
+/// are handled here; torn-write and io-error are returned for the site
+/// to apply.
+fn consume(site: &'static str) -> Option<Injected> {
+    let (hit, rule) = {
+        let mut guard = plan_lock();
+        let state = guard.as_mut()?;
+        let h = state.hits.entry(site.to_string()).or_insert(0);
+        *h += 1;
+        let hit = *h;
+        let rule = state.rules.iter().find(|r| r.site == site && r.nth == hit)?.clone();
+        (hit, rule)
+    };
+    crate::obs::event(
+        "fault.injected",
+        &[
+            ("site", Json::from(site)),
+            ("nth", Json::from(hit as f64)),
+            ("kind", Json::from(rule.kind.name())),
+        ],
+    );
+    match rule.kind {
+        FaultKind::Crash => fatal(site, hit, "crash"),
+        FaultKind::Delay => {
+            std::thread::sleep(Duration::from_millis(25));
+            None
+        }
+        FaultKind::Panic => panic!("fault: injected panic at {site} (hit {hit})"),
+        FaultKind::TornWrite => Some(Injected::TornWrite),
+        FaultKind::IoError => Some(Injected::IoError),
+    }
+}
+
+fn injected_error(site: &str) -> io::Error {
+    io::Error::other(format!("fault: injected io-error at {site}"))
+}
+
+/// A non-buffer fault site. Free when disarmed (one relaxed atomic
+/// load). `crash`/`delay`/`panic` take effect inside; `io-error` is
+/// returned; `torn-write` escalates to `crash` (there is no buffer to
+/// tear).
+#[inline]
+pub fn point(site: &'static str) -> io::Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    point_slow(site)
+}
+
+#[cold]
+fn point_slow(site: &'static str) -> io::Result<()> {
+    match consume(site) {
+        None => Ok(()),
+        Some(Injected::IoError) => Err(injected_error(site)),
+        Some(Injected::TornWrite) => fatal(site, 0, "torn-write (escalated to crash)"),
+    }
+}
+
+/// A buffer-write fault site: `w.write_all(buf)` with fault injection.
+/// `torn-write` writes a prefix of `buf`, flushes, and aborts —
+/// simulating a crash mid-`write(2)` that leaves a torn tail for the
+/// reopen path to recover.
+#[inline]
+pub fn write_all(site: &'static str, w: &mut dyn Write, buf: &[u8]) -> io::Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return w.write_all(buf);
+    }
+    write_all_slow(site, w, buf)
+}
+
+#[cold]
+fn write_all_slow(site: &'static str, w: &mut dyn Write, buf: &[u8]) -> io::Result<()> {
+    match consume(site) {
+        None => w.write_all(buf),
+        Some(Injected::IoError) => Err(injected_error(site)),
+        Some(Injected::TornWrite) => {
+            let keep = buf.len() / 2;
+            let _ = w.write_all(&buf[..keep]);
+            let _ = w.flush();
+            fatal(site, 0, "torn-write");
+        }
+    }
+}
+
+/// Run a fallible IO operation with the fixed [`RETRY_DELAYS_MS`]
+/// backoff schedule. Each retry bumps the `io_retries` counter (and
+/// event); exhausting the schedule bumps `io_gave_up`, warns on stderr,
+/// and returns the last error. Safe for operations that are atomic or
+/// idempotent (temp+rename writes, full-buffer appends that wrote
+/// nothing on failure).
+pub fn retry_io<T, E: std::fmt::Display>(
+    site: &'static str,
+    mut op: impl FnMut() -> std::result::Result<T, E>,
+) -> std::result::Result<T, E> {
+    let mut last = match op() {
+        Ok(v) => return Ok(v),
+        Err(e) => e,
+    };
+    for &ms in RETRY_DELAYS_MS.iter() {
+        crate::obs::event(
+            "io_retries",
+            &[("site", Json::from(site)), ("error", Json::from(format!("{last}").as_str()))],
+        );
+        std::thread::sleep(Duration::from_millis(ms));
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => last = e,
+        }
+    }
+    crate::obs::warn_event(
+        "io_gave_up",
+        &format!("io: giving up at {site} after {} retries: {last}", RETRY_DELAYS_MS.len()),
+        &[("site", Json::from(site))],
+    );
+    Err(last)
+}
+
+/// Serializes tests that arm the process-global fault plan (cargo runs
+/// one binary's tests concurrently in one process).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Extract a human-readable message from a caught panic payload.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::test_guard as fault_test_guard;
+    use crate::obs::Merge as _;
+
+    #[test]
+    fn plan_syntax_round_trips_and_rejects_garbage() {
+        let rules = parse_plan("store.append:3:io-error, lease.claim:1:delay").unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].site, "store.append");
+        assert_eq!(rules[0].nth, 3);
+        assert_eq!(rules[0].kind, FaultKind::IoError);
+        assert_eq!(rules[1].kind, FaultKind::Delay);
+        assert!(parse_plan("store.append:3").is_err(), "missing kind");
+        assert!(parse_plan("no.such.site:1:crash").is_err(), "unknown site");
+        assert!(parse_plan("store.append:0:crash").is_err(), "nth is 1-based");
+        assert!(parse_plan("store.append:1:explode").is_err(), "unknown kind");
+        assert!(parse_plan("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_plan_parses_and_validates() {
+        let doc = Json::parse(
+            r#"{"faults":[{"site":"commit.row","nth":2,"kind":"crash"},
+                          {"site":"job.eval","nth":1,"kind":"panic"}]}"#,
+        )
+        .unwrap();
+        let rules = plan_from_json(&doc).unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].kind, FaultKind::Crash);
+        assert_eq!(rules[1].kind, FaultKind::Panic);
+        let bad = Json::parse(r#"{"faults":[{"site":"nope","nth":1,"kind":"crash"}]}"#).unwrap();
+        assert!(plan_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn io_error_fires_on_exactly_the_nth_hit() {
+        let _guard = fault_test_guard();
+        arm(vec![FaultRule { site: "t.nth".into(), nth: 3, kind: FaultKind::IoError }]);
+        assert!(point("t.nth").is_ok(), "hit 1");
+        assert!(point("t.nth").is_ok(), "hit 2");
+        let err = point("t.nth").unwrap_err();
+        assert!(err.to_string().contains("injected io-error"), "{err}");
+        assert!(point("t.nth").is_ok(), "hit 4: rule already consumed");
+        disarm();
+        assert!(point("t.nth").is_ok(), "disarmed");
+    }
+
+    #[test]
+    fn write_all_injects_io_error_without_touching_the_sink() {
+        let _guard = fault_test_guard();
+        arm(vec![FaultRule { site: "t.write".into(), nth: 1, kind: FaultKind::IoError }]);
+        let mut sink = Vec::new();
+        assert!(write_all("t.write", &mut sink, b"payload").is_err());
+        assert!(sink.is_empty(), "io-error must fire before any bytes land");
+        assert!(write_all("t.write", &mut sink, b"payload").is_ok());
+        assert_eq!(sink, b"payload");
+        disarm();
+    }
+
+    #[test]
+    fn panic_kind_panics_and_is_catchable() {
+        let _guard = fault_test_guard();
+        arm(vec![FaultRule { site: "t.panic".into(), nth: 1, kind: FaultKind::Panic }]);
+        let caught =
+            std::panic::catch_unwind(|| point("t.panic").unwrap()).expect_err("must panic");
+        assert!(panic_message(&*caught).contains("injected panic at t.panic"));
+        disarm();
+    }
+
+    #[test]
+    fn retry_recovers_from_a_single_injected_error_and_counts_it() {
+        let _guard = fault_test_guard();
+        arm(vec![FaultRule { site: "t.retry".into(), nth: 1, kind: FaultKind::IoError }]);
+        let before = crate::obs::metrics().snapshot();
+        let v = retry_io("t.retry", || point("t.retry").map(|()| 42)).unwrap();
+        assert_eq!(v, 42);
+        let delta = crate::obs::metrics().snapshot().diff(&before);
+        assert_eq!(delta.counter("io_retries"), 1);
+        assert_eq!(delta.counter("io_gave_up"), 0);
+        assert_eq!(delta.counter("fault.injected"), 1);
+        disarm();
+    }
+
+    #[test]
+    fn retry_gives_up_after_the_fixed_schedule() {
+        let _guard = fault_test_guard();
+        disarm();
+        let before = crate::obs::metrics().snapshot();
+        let mut calls = 0u64;
+        let err = retry_io("t.giveup", || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::other("persistent"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1 + RETRY_DELAYS_MS.len() as u64);
+        assert!(err.to_string().contains("persistent"));
+        let delta = crate::obs::metrics().snapshot().diff(&before);
+        assert_eq!(delta.counter("io_retries"), RETRY_DELAYS_MS.len() as u64);
+        assert_eq!(delta.counter("io_gave_up"), 1);
+    }
+
+    #[test]
+    fn disarmed_sites_are_free_and_infallible() {
+        let _guard = fault_test_guard();
+        disarm();
+        assert!(!armed());
+        for site in SITES {
+            // &'static str via SITES entries.
+            assert!(point(site).is_ok());
+        }
+        let mut sink = Vec::new();
+        assert!(write_all("store.append", &mut sink, b"x").is_ok());
+        assert_eq!(sink, b"x");
+    }
+}

@@ -22,12 +22,13 @@
 use std::fs::OpenOptions;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
-use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
 use crate::util::json::{obj, Json};
 
+use super::clock::Clock;
+use super::fault;
 use super::spec::fnv1a64;
 
 /// Outcome of a claim attempt.
@@ -44,6 +45,7 @@ pub struct LeaseDir {
     dir: PathBuf,
     holder: String,
     ttl_s: u64,
+    clock: Clock,
 }
 
 impl LeaseDir {
@@ -59,9 +61,16 @@ impl LeaseDir {
     /// should be unique per process (e.g. include the pid): expiry tells
     /// crashed incarnations apart by age, not by name.
     pub fn open(dir: PathBuf, holder: String, ttl_s: u64) -> Result<Self> {
+        Self::open_with_clock(dir, holder, ttl_s, Clock::default())
+    }
+
+    /// [`LeaseDir::open`] with an injected clock, so TTL-expiry and
+    /// reclaim tests run against a fake clock instead of sleeping or
+    /// back-dating lease files.
+    pub fn open_with_clock(dir: PathBuf, holder: String, ttl_s: u64, clock: Clock) -> Result<Self> {
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("create lease directory {}", dir.display()))?;
-        Ok(Self { dir, holder, ttl_s })
+        Ok(Self { dir, holder, ttl_s, clock })
     }
 
     /// Lease file for a job key. The key is hashed — keys contain path
@@ -70,18 +79,11 @@ impl LeaseDir {
         self.dir.join(format!("{:016x}.lease", fnv1a64(key.as_bytes())))
     }
 
-    fn now_s() -> u64 {
-        SystemTime::now()
-            .duration_since(UNIX_EPOCH)
-            .map(|d| d.as_secs())
-            .unwrap_or(0)
-    }
-
     fn lease_doc(&self, key: &str, done: bool) -> Json {
         obj([
             ("key", Json::from(key)),
             ("holder", Json::from(self.holder.clone())),
-            ("created_s", Json::from(Self::now_s() as usize)),
+            ("created_s", Json::from(self.clock.now_s() as usize)),
             ("done", Json::from(done)),
         ])
     }
@@ -91,6 +93,7 @@ impl LeaseDir {
     /// it is evicted and re-claimed — exactly one contender can win the
     /// eviction because it goes through an atomic rename.
     pub fn try_claim(&self, key: &str) -> Result<Claim> {
+        fault::point("lease.claim")?;
         let path = self.lease_path(key);
         // Two attempts: the second runs only after this process evicted an
         // expired lease; losing the re-create race then means another
@@ -159,10 +162,15 @@ impl LeaseDir {
     pub fn mark_done(&self, key: &str) -> Result<()> {
         let path = self.lease_path(key);
         let tmp = PathBuf::from(format!("{}.tmp-{}", path.display(), std::process::id()));
-        std::fs::write(&tmp, self.lease_doc(key, true).dumps())
-            .with_context(|| format!("write {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("finalize lease {}", path.display()))?;
+        // Temp + rename is atomic, so a transient failure is retryable
+        // without a reader ever seeing a torn done flag.
+        fault::retry_io("lease.done", || -> Result<()> {
+            fault::point("lease.done")?;
+            std::fs::write(&tmp, self.lease_doc(key, true).dumps())
+                .with_context(|| format!("write {}", tmp.display()))?;
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("finalize lease {}", path.display()))
+        })?;
         crate::obs::event("lease.done", &[("key", Json::from(key))]);
         Ok(())
     }
@@ -178,7 +186,7 @@ impl LeaseDir {
                     return Ok(false);
                 }
                 if let Ok(created) = doc.get("created_s").and_then(|v| v.as_usize()) {
-                    return Ok(Self::now_s().saturating_sub(created as u64) > self.ttl_s);
+                    return Ok(self.clock.now_s().saturating_sub(created as u64) > self.ttl_s);
                 }
             }
         }
@@ -200,7 +208,7 @@ impl LeaseDir {
         let doc = obj([
             ("key", Json::from(key)),
             ("holder", Json::from("dead-shard")),
-            ("created_s", Json::from((Self::now_s().saturating_sub(age_s)) as usize)),
+            ("created_s", Json::from((self.clock.now_s().saturating_sub(age_s)) as usize)),
             ("done", Json::from(done)),
         ]);
         std::fs::write(self.lease_path(key), doc.dumps()).unwrap();
@@ -308,6 +316,51 @@ mod tests {
         std::fs::write(a.lease_path("job"), "{\"key\": \"job\", \"hold").unwrap();
         // Freshly torn: treated as live (mtime age ~0), not reclaimable.
         assert_eq!(a.try_claim("job").unwrap(), Claim::Unavailable);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn ttl_expiry_is_deterministic_under_a_fake_clock() {
+        use crate::campaign::clock::FakeClock;
+        let d = tmp_dir("fake-clock");
+        let fake = FakeClock::new(1_000_000);
+        let a = LeaseDir::open_with_clock(d.clone(), "a".into(), 600, fake.clock()).unwrap();
+        let b = LeaseDir::open_with_clock(d.clone(), "b".into(), 600, fake.clock()).unwrap();
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Acquired);
+        // Inside the TTL: the holder is presumed alive, whole window long.
+        assert_eq!(b.try_claim("job").unwrap(), Claim::Unavailable);
+        fake.advance_s(600);
+        assert_eq!(b.try_claim("job").unwrap(), Claim::Unavailable, "age == ttl is not expired");
+        // One tick past the TTL: reclaimable, exactly once.
+        fake.advance_s(1);
+        assert_eq!(b.steal_expired("job").unwrap(), Claim::Acquired);
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Unavailable, "b's fresh lease blocks a");
+        // Done leases stay permanent no matter how far time advances.
+        b.mark_done("job").unwrap();
+        fake.advance_s(1_000_000);
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Unavailable);
+        assert_eq!(a.steal_expired("job").unwrap(), Claim::Unavailable);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn injected_io_error_on_mark_done_is_retried() {
+        use crate::campaign::fault;
+        let _guard = fault::test_guard();
+        let d = tmp_dir("fault-done");
+        let a = open(&d, "a", 600);
+        assert_eq!(a.try_claim("job").unwrap(), Claim::Acquired);
+        fault::arm(vec![fault::FaultRule {
+            site: "lease.done".into(),
+            nth: 1,
+            kind: fault::FaultKind::IoError,
+        }]);
+        let r = a.mark_done("job");
+        fault::disarm();
+        r.unwrap();
+        // The done flag landed despite the injected first-attempt failure.
+        let b = open(&d, "b", 0);
+        assert_eq!(b.steal_expired("job").unwrap(), Claim::Unavailable);
         let _ = std::fs::remove_dir_all(&d);
     }
 

@@ -107,7 +107,13 @@ pub fn save(path: &Path, cache: &MappingCache) -> Result<()> {
         ("fingerprint", Json::from(mapper_fingerprint())),
         ("entries", Json::from(items)),
     ]);
-    write_atomic(path, &doc.dumps())
+    let text = doc.dumps();
+    // Atomic (temp + rename), so retrying a transient failure is safe; a
+    // crash here at worst loses the hint, never store truth.
+    super::fault::retry_io("mapcache.save", || -> Result<()> {
+        super::fault::point("mapcache.save")?;
+        write_atomic(path, &text)
+    })
 }
 
 /// Preload `cache` from the sidecar at `path`. Missing file: a silent 0.

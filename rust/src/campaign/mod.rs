@@ -38,9 +38,12 @@
 //! stores carry a header line recording their sampler mode, so resume and
 //! `campaign merge` refuse mode mixes instead of corrupting the contract.
 
+pub mod chaos;
 pub mod checkpoint;
+pub mod clock;
 pub mod commit;
 pub mod exec;
+pub mod fault;
 pub mod front;
 pub mod lease;
 pub mod mapcache;
@@ -366,6 +369,148 @@ mod tests {
         );
 
         for p in [&pa, &pb, &pc] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
+    fn simultaneous_sidecar_corruption_respects_each_policy() {
+        // All three sidecars damaged before one resume (DESIGN.md §11):
+        // the front checkpoint is the only source-of-truth sidecar, so it
+        // alone is loud; the mapcache is a performance hint (quiet
+        // rebuild) and the status snapshot is pure observability
+        // (silently overwritten). Each policy must hold independently of
+        // the other two being damaged in the same resume.
+        let _guard = crate::obs::test_sink_guard();
+        use crate::obs::Merge as _;
+        let (pf, pr) = (tmp("corrupt-fresh"), tmp("corrupt-resume"));
+        for p in [&pf, &pr] {
+            cleanup(p);
+        }
+        let mut spec = quick_spec();
+        spec.models.truncate(1);
+        spec.deltas.truncate(1); // 2 jobs
+
+        let (_, bytes) = run_spec_to(&spec, &pf, 2);
+
+        // A 1-row prefix of the store, with every sidecar corrupted at once.
+        let prefix: String = bytes.lines().take(1).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&pr, prefix).unwrap();
+        let front = CampaignArchive::checkpoint_path(&pr);
+        std::fs::write(&front, "}{ torn checkpoint").unwrap();
+        std::fs::write(mapcache::mapcache_path(&pr), "}{ torn mapcache").unwrap();
+        std::fs::write(crate::obs::status::status_path(&pr), "}{ torn status").unwrap();
+
+        // The resume must refuse loudly: checkpoints are written
+        // atomically, so a garbage document means external damage.
+        let svc = EvalService::start(SurrogateBackend::default());
+        let err = {
+            let mut store = ResultStore::open(&pr).unwrap();
+            run_campaign(&spec, 2, &mut store, &svc).unwrap_err()
+        };
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        // The loud reject left the store rows untouched.
+        assert_eq!(std::fs::read_to_string(&pr).unwrap().lines().count(), 1);
+
+        // Apply the error message's remedy — delete the front sidecar —
+        // and resume with the other two still damaged: the mapcache is
+        // quietly rebuilt (one `mapcache.rebuild` warn), the status
+        // snapshot is simply overwritten, and the final bytes match the
+        // uninterrupted run.
+        std::fs::remove_file(&front).unwrap();
+        let before = crate::obs::metrics().snapshot();
+        let mut store = ResultStore::open(&pr).unwrap();
+        let report = run_campaign(&spec, 2, &mut store, &svc).unwrap();
+        svc.shutdown();
+        assert_eq!(report.jobs_skipped, 1);
+        assert_eq!(report.jobs_run, 1);
+        assert_eq!(
+            std::fs::read_to_string(&pr).unwrap(),
+            bytes,
+            "recovery diverged from the uninterrupted run"
+        );
+        let delta = crate::obs::metrics().snapshot().diff(&before);
+        assert!(
+            delta.counter("mapcache.rebuild") >= 1,
+            "quiet mapcache rebuild was not logged"
+        );
+        assert_eq!(
+            std::fs::read(CampaignArchive::checkpoint_path(&pr)).unwrap(),
+            std::fs::read(CampaignArchive::checkpoint_path(&pf)).unwrap(),
+            "front checkpoint was not rebuilt"
+        );
+        let status = crate::util::Json::parse(
+            &std::fs::read_to_string(crate::obs::status::status_path(&pr)).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done");
+
+        for p in [&pf, &pr] {
+            cleanup(p);
+        }
+    }
+
+    #[test]
+    fn panicking_job_is_quarantined_and_retryable() {
+        // A poison job must not kill the campaign: the panic is caught,
+        // the job commits as a `failed` row counted in jobs_failed, and
+        // purge_failed() + resume replaces it with the real row.
+        let _guard = crate::obs::test_sink_guard();
+        let _faults = fault::test_guard();
+        let (pc, pq) = (tmp("quar-clean"), tmp("quar"));
+        for p in [&pc, &pq] {
+            cleanup(p);
+        }
+        let mut spec = quick_spec();
+        spec.models.truncate(1);
+        spec.deltas.truncate(1); // 2 jobs
+
+        // Fault-free reference (1 worker, so evaluation order is the
+        // schedule order and nth:1 below targets a fixed job).
+        let (_, clean_bytes) = run_spec_to(&spec, &pc, 1);
+
+        fault::arm(vec![fault::FaultRule {
+            site: "job.eval".to_string(),
+            nth: 1,
+            kind: fault::FaultKind::Panic,
+        }]);
+        let (report, bytes) = run_spec_to(&spec, &pq, 1);
+        fault::disarm();
+        assert_eq!(report.jobs_failed, 1, "{}", report.line());
+        assert_eq!(report.jobs_run, 1, "{}", report.line());
+        assert!(report.line().contains("1 failed"), "{}", report.line());
+        let failed_lines: Vec<&str> = bytes
+            .lines()
+            .filter(|l| {
+                crate::util::Json::parse(l).is_ok_and(|row| store::row_is_failed(&row))
+            })
+            .collect();
+        assert_eq!(failed_lines.len(), 1, "{bytes}");
+        assert!(failed_lines[0].contains("injected panic"), "{}", failed_lines[0]);
+
+        // Failed rows never enter the Pareto archive.
+        let arch =
+            CampaignArchive::from_rows(ResultStore::open(&pq).unwrap().rows()).unwrap();
+        assert_eq!(arch.points.len(), 1);
+
+        // Retry: purge the quarantined row, resume fault-free. The store
+        // is no longer a prefix of the canonical sequence, so whole-file
+        // byte identity is not the contract here — line-set identity is:
+        // rows are pure functions of their job.
+        let mut store = ResultStore::open(&pq).unwrap();
+        assert_eq!(store.purge_failed().unwrap(), 1);
+        drop(store);
+        let (retried, retried_bytes) = run_spec_to(&spec, &pq, 1);
+        assert_eq!(retried.jobs_failed, 0);
+        assert_eq!(retried.jobs_run, 1);
+        assert_eq!(retried.jobs_skipped, 1);
+        let mut got: Vec<&str> = retried_bytes.lines().collect();
+        let mut want: Vec<&str> = clean_bytes.lines().collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "retried rows diverged from the fault-free run");
+
+        for p in [&pc, &pq] {
             cleanup(p);
         }
     }

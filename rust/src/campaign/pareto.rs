@@ -140,8 +140,16 @@ impl CampaignArchive {
         !dominated
     }
 
-    /// Parse and insert one committed store row.
+    /// Parse and insert one committed store row. Quarantined-failure
+    /// rows (see [`crate::campaign::store::row_is_failed`]) carry no
+    /// objective point: they are skipped — never inserted, never on the
+    /// front — and every archive build path applies the same skip, so
+    /// point indices stay aligned between the incremental archive, the
+    /// full recompute, and the checkpoint restore.
     pub fn insert_row(&mut self, row: &Json) -> Result<bool> {
+        if super::store::row_is_failed(row) {
+            return Ok(false);
+        }
         let p = ArchivePoint::from_row(row)
             .with_context(|| format!("store row {}", self.points.len() + 1))?;
         Ok(self.insert(p))
@@ -154,11 +162,13 @@ impl CampaignArchive {
         Self::from_rows_on(rows, CarbonAxis::Embodied)
     }
 
-    /// Full O(n^2) recompute on an explicit axis.
+    /// Full O(n^2) recompute on an explicit axis. Failed rows are
+    /// skipped, matching the incremental path.
     pub fn from_rows_on(rows: &[Json], axis: CarbonAxis) -> Result<Self> {
         let points: Vec<ArchivePoint> = rows
             .iter()
             .enumerate()
+            .filter(|(_, r)| !super::store::row_is_failed(r))
             .map(|(i, r)| ArchivePoint::from_row(r).with_context(|| format!("store row {}", i + 1)))
             .collect::<Result<_>>()?;
         let front = (0..points.len())
@@ -311,6 +321,31 @@ pub(crate) mod tests {
                 CampaignArchive::from_rows_incremental(&perm, CarbonAxis::Embodied).unwrap();
             assert_eq!(front_keys(&base), front_keys(&shuffled), "trial {trial}");
         }
+    }
+
+    #[test]
+    fn failed_rows_are_skipped_on_every_build_path() {
+        let failed = obj([
+            ("key", Json::from("poison")),
+            ("failed", Json::from(true)),
+            ("error", Json::from("injected panic")),
+        ]);
+        let rows = vec![
+            row("a", "m", "14nm", 10.0, 1.0, 1.0),
+            failed,
+            row("b", "m", "14nm", 8.0, 2.0, 1.0),
+        ];
+        let full = CampaignArchive::from_rows(&rows).unwrap();
+        let inc = CampaignArchive::from_rows_incremental(&rows, CarbonAxis::Embodied).unwrap();
+        assert_eq!(full.points.len(), 2, "failed row contributes no point");
+        assert_eq!(inc.front, full.front);
+        assert_eq!(front_keys(&inc), vec!["a".to_string(), "b".to_string()]);
+        // insert_row reports a failed row as off-front, not an error.
+        let mut arch = CampaignArchive::new(CarbonAxis::Embodied);
+        assert!(!arch
+            .insert_row(&obj([("key", Json::from("p")), ("failed", Json::from(true))]))
+            .unwrap());
+        assert!(arch.points.is_empty());
     }
 
     #[test]

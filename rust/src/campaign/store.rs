@@ -29,10 +29,23 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::util::json::obj;
 use crate::util::Json;
 
+use super::fault;
 use super::spec::SamplerMode;
 
 /// Field every row carries to identify its scenario.
 pub const KEY_FIELD: &str = "key";
+
+/// Field marking a quarantined-failure row (`true`): the job's
+/// evaluation panicked and the row records the panic instead of a
+/// result. Failed rows occupy their key (a resume does not redo them
+/// unless `--retry-failed` purges them) but never enter the Pareto
+/// archive or incumbent state.
+pub const FAILED_FIELD: &str = "failed";
+
+/// Whether a row is a quarantined-failure marker rather than a result.
+pub fn row_is_failed(row: &Json) -> bool {
+    matches!(row.get(FAILED_FIELD), Ok(Json::Bool(true)))
+}
 
 /// Schema tag the optional header line carries.
 pub const STORE_SCHEMA: &str = "carbon3d-store/1";
@@ -265,11 +278,69 @@ impl ResultStore {
         if !self.keys.insert(key.clone()) {
             bail!("duplicate result for job {key:?}");
         }
-        writeln!(self.file, "{}", row.dumps())
-            .with_context(|| format!("append to store {}", self.path.display()))?;
-        self.file.flush()?;
+        // One `line\n` buffer per row: a crash mid-write leaves a torn,
+        // newline-less tail that the reopen path drops (fault site
+        // `store.append` tears exactly here). Injected io-errors fire
+        // before any bytes land, so the retry rewrites the full line.
+        let line = format!("{}\n", row.dumps());
+        let file = &mut self.file;
+        fault::retry_io("store.append", || -> std::io::Result<()> {
+            fault::write_all("store.append", file, line.as_bytes())?;
+            file.flush()
+        })
+        .with_context(|| format!("append to store {}", self.path.display()))?;
         self.rows.push(row);
         Ok(())
+    }
+
+    /// Drop all quarantined-failure rows (`--retry-failed`): rewrite the
+    /// store without them via a sibling temp file + atomic rename, so
+    /// the jobs become eligible to rerun. Returns how many were purged.
+    pub fn purge_failed(&mut self) -> Result<usize> {
+        let failed: Vec<String> = self
+            .rows
+            .iter()
+            .filter(|r| row_is_failed(r))
+            .filter_map(|r| r.get(KEY_FIELD).ok().and_then(|k| k.as_str().ok()).map(str::to_string))
+            .collect();
+        if failed.is_empty() {
+            return Ok(0);
+        }
+        self.rows.retain(|r| !row_is_failed(r));
+        for key in &failed {
+            self.keys.remove(key);
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        let mut f =
+            File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+        if let Some(mode) = self.header {
+            writeln!(f, "{}", header_row(mode).dumps())
+                .with_context(|| format!("rewrite store header {}", tmp.display()))?;
+        }
+        for row in &self.rows {
+            writeln!(f, "{}", row.dumps())
+                .with_context(|| format!("rewrite store {}", tmp.display()))?;
+        }
+        f.flush()?;
+        drop(f);
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("replace store {}", self.path.display()))?;
+        // The old append handle points at the renamed-over inode; reopen.
+        self.file = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("reopen store {}", self.path.display()))?;
+        crate::obs::warn_event(
+            "store.retry_failed",
+            &format!(
+                "store {}: purged {} failed row(s) for retry ({})",
+                self.path.display(),
+                failed.len(),
+                failed.join(", ")
+            ),
+            &[("count", Json::from(failed.len() as f64))],
+        );
+        Ok(failed.len())
     }
 
     /// All committed rows, in file order.
@@ -453,6 +524,56 @@ mod tests {
             .unwrap();
         let err = ResultStore::open(&path).unwrap_err();
         assert!(format!("{err:#}").contains("carbon3d-store/1"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn purge_failed_frees_the_key_for_retry() {
+        let path = tmp("purge-failed");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = ResultStore::open(&path).unwrap();
+            s.append(row("a", 1.0)).unwrap();
+            s.append(obj([
+                ("key", Json::from("b")),
+                ("failed", Json::from(true)),
+                ("error", Json::from("injected panic")),
+            ]))
+            .unwrap();
+            s.append(row("c", 3.0)).unwrap();
+            assert!(row_is_failed(&s.rows()[1]));
+            assert_eq!(s.purge_failed().unwrap(), 1);
+            assert_eq!(s.len(), 2);
+            assert!(!s.contains("b"), "purged key is free again");
+            assert_eq!(s.purge_failed().unwrap(), 0, "idempotent");
+            // The reopened append handle still works.
+            s.append(row("b", 2.0)).unwrap();
+        }
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 3);
+        assert!(s.contains("b") && !row_is_failed(&s.rows()[2]));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn injected_io_error_on_append_is_retried_transparently() {
+        let path = tmp("fault-append");
+        let _ = std::fs::remove_file(&path);
+        let _guard = fault::test_guard();
+        let mut s = ResultStore::open(&path).unwrap();
+        fault::arm(vec![fault::FaultRule {
+            site: "store.append".into(),
+            nth: 1,
+            kind: fault::FaultKind::IoError,
+        }]);
+        let before = crate::obs::metrics().counter("io_retries");
+        let r = s.append(row("a", 1.0));
+        fault::disarm();
+        r.unwrap();
+        assert!(crate::obs::metrics().counter("io_retries") > before);
+        drop(s);
+        let s = ResultStore::open(&path).unwrap();
+        assert_eq!(s.len(), 1, "the retried append wrote exactly one intact row");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -136,13 +136,11 @@ fn run(args: &[String]) -> Result<()> {
         "map" => cmd_map(&o),
         "carbon" => cmd_carbon(&o),
         "dse" => cmd_dse(&o),
-        "campaign" => {
-            if args.get(1).map(String::as_str) == Some("merge") {
-                cmd_campaign_merge(&Opts::parse(&args[2..]))
-            } else {
-                cmd_campaign(&o)
-            }
-        }
+        "campaign" => match args.get(1).map(String::as_str) {
+            Some("merge") => cmd_campaign_merge(&Opts::parse(&args[2..])),
+            Some("chaos") => cmd_campaign_chaos(&Opts::parse(&args[2..])),
+            _ => cmd_campaign(&o),
+        },
         "front" => cmd_front(&args[1..]),
         "trace" => cmd_trace(&args[1..]),
         "fig2" => cmd_fig2(&o),
@@ -177,6 +175,7 @@ USAGE: carbon3d <subcommand> [--flags]
            [--no-status] [--no-mapcache]
            [--sampler exhaustive|adaptive] [--sampler-batch N]
            [--explain-prune FILE.jsonl]
+           [--fault-plan FILE.json] [--retry-failed]
                                 run the whole scenario grid on a worker pool
                                 with a campaign-global accuracy cache, an
                                 objective-aware bound-ordered queue (jobs
@@ -205,12 +204,29 @@ USAGE: carbon3d <subcommand> [--flags]
                                 FILE prints per-job analytic vs surrogate
                                 bounds for this grid against FILE's rows
                                 and which prune rule fires (read-only)
+                                A job that panics is quarantined as a
+                                `failed` row (counted in the report) instead
+                                of killing the campaign; --retry-failed (with
+                                --resume) purges those rows so their jobs
+                                re-run. --fault-plan FILE (or the compact
+                                CARBON3D_FAULTS=site:nth:kind syntax) arms
+                                the deterministic fault-injection layer for
+                                crash/torn-write/io-error/delay/panic drills
   campaign merge --shards N [--out FILE.jsonl] <same grid flags>
                                 fold N shard stores into the canonical
                                 store — byte-identical (rows, front sidecar,
                                 report counters) to a single-process run —
                                 and union the shards' mapcache sidecars
                                 into the canonical one
+  campaign chaos [--modes threads,sharded,adaptive] [--dir D] <small grid flags>
+                                crash-at-every-site recovery proof: per fault
+                                site, re-run the grid in a child process with
+                                CARBON3D_FAULTS=<site>:1:crash, let it abort
+                                mid-operation, resume fault-free, and byte-
+                                compare store + front + mapcache sidecars
+                                against a fault-free reference — for each
+                                executor shape (thread pool, 2 shards +
+                                merge, adaptive sampler)
   trace report <trace.jsonl> [--top K] [--check]
                                 per-phase breakdown, per-shard lanes, and
                                 top-K slowest jobs from a `<store>.trace.jsonl`
@@ -745,6 +761,22 @@ fn cmd_trace_metrics(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Arm the deterministic fault-injection plan from `--fault-plan FILE`
+/// or the `CARBON3D_FAULTS` environment variable (how the chaos harness
+/// arms its children). No-op when neither is present — fault sites then
+/// cost a single relaxed atomic load.
+fn arm_faults(o: &Opts) -> Result<()> {
+    use carbon3d::campaign::fault;
+    if let Some(path) = o.flags.get("fault-plan") {
+        let rules = fault::load_plan_file(Path::new(path))?;
+        eprintln!("fault: armed {} rule(s) from {path}", rules.len());
+        fault::arm(rules);
+    } else if fault::arm_from_env()? {
+        eprintln!("fault: armed plan from CARBON3D_FAULTS");
+    }
+    Ok(())
+}
+
 fn cmd_campaign(o: &Opts) -> Result<()> {
     use carbon3d::campaign::{
         explain_prune, run_campaign_with, shard_store_path, start_service, AdaptiveExecutor,
@@ -752,6 +784,7 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
         ThreadPoolExecutor,
     };
 
+    arm_faults(o)?;
     let spec = campaign_spec_from_opts(o)?;
 
     // `--explain-prune <store>`: read-only prune diagnosis — rebuild the
@@ -806,6 +839,12 @@ fn cmd_campaign(o: &Opts) -> Result<()> {
             store_path.display(),
             store.len()
         );
+    }
+    if o.has("retry-failed") {
+        // Drop quarantined rows so the resume re-runs their jobs (the
+        // guard above means this only happens under --resume).
+        let purged = store.purge_failed()?;
+        println!("retry-failed: purged {purged} quarantined row(s); their jobs will re-run");
     }
     let executor: Box<dyn Executor> = match shard {
         Some(s) => {
@@ -872,6 +911,7 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
         ResultStore, ShardId,
     };
 
+    arm_faults(o)?;
     let spec = campaign_spec_from_opts(o)?;
     if spec.sampler != carbon3d::campaign::SamplerMode::Exhaustive {
         bail!(
@@ -932,6 +972,73 @@ fn cmd_campaign_merge(o: &Opts) -> Result<()> {
     print_campaign_summary(&store, spec.objective.carbon_axis())?;
     println!("{}", report.line());
     finish_tracer();
+    Ok(())
+}
+
+fn cmd_campaign_chaos(o: &Opts) -> Result<()> {
+    use carbon3d::campaign::chaos::{
+        failures, render_reports, uncovered_sites, ChaosHarness, ChaosMode,
+    };
+
+    // Grid/GA flags forwarded verbatim to every child campaign; the
+    // harness itself owns --out, --shard, --lease-ttl, --sampler and
+    // --resume.
+    let mut grid: Vec<String> = Vec::new();
+    for key in [
+        "models", "nodes", "delta", "integrations", "fps", "objective", "lifetime-years",
+        "ipd", "grid-gco2-kwh", "seed", "pop", "gens", "workers", "sampler-batch", "artifacts",
+    ] {
+        if let Some(v) = o.flags.get(key) {
+            grid.push(format!("--{key}"));
+            grid.push(v.clone());
+        }
+    }
+    if o.has("quick") {
+        grid.push("--quick".to_string());
+    }
+    if o.has("no-prune") {
+        grid.push("--no-prune".to_string());
+    }
+    let modes: Vec<ChaosMode> = match o.flags.get("modes") {
+        None => ChaosMode::ALL.to_vec(),
+        Some(s) => s.split(',').map(ChaosMode::parse).collect::<Result<_>>()?,
+    };
+    let all_modes = ChaosMode::ALL.iter().all(|m| modes.contains(m));
+    let dir = match o.flags.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("carbon3d-chaos-{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let harness =
+        ChaosHarness { exe: std::env::current_exe()?, grid, dir: dir.clone() };
+    println!(
+        "chaos: probing {} fault sites x {} mode(s); campaign stores under {}",
+        carbon3d::campaign::fault::SITES.len(),
+        modes.len(),
+        dir.display()
+    );
+    let reports = harness.run(&modes)?;
+    println!();
+    print!("{}", render_reports(&reports));
+    let bad = failures(&reports);
+    if !bad.is_empty() {
+        bail!(
+            "chaos: {} probe(s) diverged after crash + resume (stores kept under {})",
+            bad.len(),
+            dir.display()
+        );
+    }
+    if all_modes {
+        let dead = uncovered_sites(&reports);
+        if !dead.is_empty() {
+            bail!(
+                "chaos: fault site(s) never hit by any mode: {} — stale SITES registry \
+                 or a call site lost its fault hook",
+                dead.join(", ")
+            );
+        }
+    }
+    println!("chaos: every hit site recovered to byte-identical artifacts");
     Ok(())
 }
 

@@ -197,6 +197,20 @@ impl DiffReport {
         ]
     }
 
+    /// Reliability counter rows: `(name, old, new)` raw counts of the
+    /// fault layer's activity — injected faults, IO retries, and retry
+    /// exhaustions. Zero on both sides for a healthy run; surfacing them
+    /// here makes a creeping retry rate visible in the same place as
+    /// timing drift.
+    pub fn reliability_drift(&self) -> Vec<(&'static str, u64, u64)> {
+        ["fault.injected", "io_retries", "io_gave_up"]
+            .into_iter()
+            .map(|name| {
+                (name, self.old.metrics.counter(name), self.new.metrics.counter(name))
+            })
+            .collect()
+    }
+
     /// Machine-readable diff. `"metrics"` is `new - old` in the same
     /// serialized-snapshot format the benches embed, so diff outputs are
     /// themselves diffable records.
@@ -244,6 +258,23 @@ impl DiffReport {
                             (
                                 name.to_string(),
                                 obj([("old", Json::from(old)), ("new", Json::from(new))]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "reliability",
+                Json::Obj(
+                    self.reliability_drift()
+                        .into_iter()
+                        .map(|(name, old, new)| {
+                            (
+                                name.to_string(),
+                                obj([
+                                    ("old", Json::from(old as f64)),
+                                    ("new", Json::from(new as f64)),
+                                ]),
                             )
                         })
                         .collect(),
@@ -304,6 +335,16 @@ impl DiffReport {
                 new * 100.0,
                 (new - old) * 100.0
             ));
+        }
+        // Fault-layer activity only earns a line when either side saw any
+        // — most diffs are between healthy runs.
+        for (name, old, new) in self.reliability_drift() {
+            if old > 0 || new > 0 {
+                out.push_str(&format!(
+                    "{name}: {old} -> {new} ({:+})\n",
+                    new as i64 - old as i64
+                ));
+            }
         }
         out
     }
@@ -370,6 +411,34 @@ mod tests {
         let new = record(&[("service.eval", &[101, 101])], (0, 0));
         let d = DiffReport::new(old, new);
         assert!(d.regressions(0.5).is_empty());
+    }
+
+    #[test]
+    fn retry_counters_surface_as_raw_reliability_drift() {
+        let old = record(&[("ga.run", &[100])], (1, 1));
+        let m = Metrics::default();
+        m.record("ga.run", 100);
+        m.incr("io_retries", 3);
+        m.incr("fault.injected", 1);
+        let new = ObsRecord { source: "test".into(), wall_us: None, metrics: m.snapshot() };
+        let d = DiffReport::new(old, new);
+        let drift = d.reliability_drift();
+        assert_eq!(drift.len(), 3);
+        assert!(drift.contains(&("io_retries", 0, 3)), "{drift:?}");
+        assert!(drift.contains(&("io_gave_up", 0, 0)), "{drift:?}");
+        let rendered = d.render();
+        assert!(rendered.contains("io_retries: 0 -> 3 (+3)"), "{rendered}");
+        assert!(!rendered.contains("io_gave_up"), "zero rows stay hidden: {rendered}");
+        let js = d.to_json(None);
+        let rel = js.get("reliability").unwrap();
+        assert_eq!(
+            rel.get("io_retries").unwrap().get("new").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        assert_eq!(
+            rel.get("io_gave_up").unwrap().get("new").unwrap().as_f64().unwrap(),
+            0.0
+        );
     }
 
     #[test]

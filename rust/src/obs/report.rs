@@ -365,8 +365,21 @@ impl TraceReport {
         covered as f64 / wall as f64
     }
 
+    /// Fault-layer activity in file order: every `fault.injected`,
+    /// `io_retries`, and `io_gave_up` event the trace recorded. Empty for
+    /// a healthy, fault-free run.
+    pub fn fault_events(&self) -> Vec<&EventRec> {
+        self.events
+            .iter()
+            .filter(|e| {
+                matches!(e.name.as_str(), "fault.injected" | "io_retries" | "io_gave_up")
+            })
+            .collect()
+    }
+
     /// Render the human report: summary line, per-shard lane table (when
-    /// the trace is merged), per-phase table, top-K slowest jobs.
+    /// the trace is merged), per-phase table, fault/retry activity (when
+    /// any), top-K slowest jobs.
     pub fn render(&self, top: usize) -> String {
         let wall_us = self.wall_us();
         let wall_s = wall_us as f64 / 1e6;
@@ -422,6 +435,42 @@ impl TraceReport {
             ]);
         }
         out.push_str(&t.render());
+        let faults = self.fault_events();
+        if !faults.is_empty() {
+            let str_field = |e: &EventRec, key: &str| -> String {
+                e.fields
+                    .get(key)
+                    .ok()
+                    .and_then(|v| v.as_str().ok().map(str::to_string))
+                    .unwrap_or_default()
+            };
+            out.push_str(&format!(
+                "\nfault injection / io retries ({} events):\n",
+                faults.len()
+            ));
+            let mut t = Table::new(vec!["t", "event", "site", "detail"]);
+            for e in &faults {
+                let detail = match e.name.as_str() {
+                    "fault.injected" => {
+                        let nth = e
+                            .fields
+                            .get("nth")
+                            .ok()
+                            .and_then(|v| v.as_f64().ok())
+                            .unwrap_or(0.0);
+                        format!("kind {} (hit {nth:.0})", str_field(e, "kind"))
+                    }
+                    _ => str_field(e, "error"),
+                };
+                t.row(vec![
+                    human_time(e.t_us as f64 / 1e6),
+                    e.name.clone(),
+                    str_field(e, "site"),
+                    detail,
+                ]);
+            }
+            out.push_str(&t.render());
+        }
         let slow = self.slowest_jobs(top);
         if !slow.is_empty() {
             out.push_str(&format!("\ntop {} slowest jobs:\n", slow.len()));
@@ -499,6 +548,50 @@ mod tests {
                 ("zz-late".to_string(), 50),
             ]
         );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fault_and_retry_events_surface_in_the_report() {
+        let path = tmp("faults");
+        let event = |name: &str, fields: Json| {
+            obj([
+                ("kind", Json::from("event")),
+                ("name", Json::from(name)),
+                ("t_us", Json::from(10.0)),
+                ("fields", fields),
+            ])
+            .dumps()
+        };
+        let lines = [
+            header(None),
+            job_span("a", 0.0, 50.0, None),
+            event(
+                "fault.injected",
+                obj([
+                    ("site", Json::from("store.append")),
+                    ("nth", Json::from(2.0)),
+                    ("kind", Json::from("io-error")),
+                ]),
+            ),
+            event(
+                "io_retries",
+                obj([
+                    ("site", Json::from("store.append")),
+                    ("error", Json::from("injected io-error")),
+                ]),
+            ),
+            // Unrelated events stay out of the fault section.
+            event("mapcache.rebuild", obj([("path", Json::from("x"))])),
+        ];
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let r = TraceReport::load(&path).unwrap();
+        assert_eq!(r.fault_events().len(), 2);
+        let rendered = r.render(3);
+        assert!(rendered.contains("fault injection / io retries (2 events)"), "{rendered}");
+        assert!(rendered.contains("store.append"), "{rendered}");
+        assert!(rendered.contains("kind io-error (hit 2)"), "{rendered}");
+        assert!(rendered.contains("injected io-error"), "{rendered}");
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -84,6 +84,7 @@ impl StatusWriter {
     /// `"done"`. Errors are reported, not fatal — callers drop them:
     /// status is pure observability and must never kill a campaign.
     pub fn write(&self, state: &str, h: &Heartbeat, front_size: usize) -> Result<()> {
+        crate::campaign::fault::point("status.write")?;
         let doc = self.document(state, h, front_size);
         crate::campaign::checkpoint::write_atomic(&self.path, &format!("{}\n", doc.pretty(2)))
             .with_context(|| format!("writing status {}", self.path.display()))
